@@ -1,0 +1,262 @@
+//! END-TO-END DRIVER: the full three-layer stack on a real workload.
+//!
+//! 1. Build a scaled MobileNet-style graph whose shapes match the AOT
+//!    artifact catalog (python/compile/model.py).
+//! 2. Compile it with the AGO pipeline (partition -> reformer -> tuner).
+//! 3. CODEGEN: map each tuned subgraph to AOT artifacts — intensively
+//!    fused groups select the fused Pallas-kernel artifact, everything
+//!    else the per-operator artifacts.
+//! 4. Serve batched inference requests through the PJRT runtime,
+//!    reporting per-request latency and throughput — and cross-check the
+//!    fused plan's numerics against the unfused plan.
+//!
+//! Recorded in EXPERIMENTS.md §E2E.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example compile_mobilenet
+//! ```
+
+use std::time::Instant;
+
+use ago::coordinator::{compile, CompileConfig};
+use ago::device::DeviceProfile;
+use ago::graph::{Graph, OpKind, Shape};
+use ago::runtime::{Engine, TensorData};
+use ago::tuner::schedule::GroupKind;
+use ago::util::stats;
+use ago::util::Rng;
+
+/// The E2E network: stem conv + 3 inverted-residual stages, exactly the
+/// shapes of the artifact catalog (28/16, 14/24, 7/32, expansion 2).
+fn e2e_graph() -> Graph {
+    let mut g = Graph::new("mbn_e2e");
+    let x = g.add(OpKind::Pad, "input", Shape::nhwc(1, 28, 28, 3), 0, &[]);
+    let mut cur = ago::models::blocks::conv_act(
+        &mut g, x, "stem", 3, 1, 16, Some(OpKind::ReLU));
+    for (i, (h, c, e)) in [(28usize, 16usize, 2usize), (14, 24, 2),
+                           (7, 32, 2)]
+        .into_iter()
+        .enumerate()
+    {
+        // stage transition: pw expand -> dw3x3 stride 2 -> pw project
+        // (a real MobileNet downsampling block; the tuner may intensively
+        // fuse the pw->dw pair via the stride-2 fused kernel)
+        if i > 0 {
+            let ph = 2 * h;
+            let pc = g.node(cur).out_shape.dim(3);
+            let m = 2 * pc;
+            let e1 = g.add(OpKind::Pointwise, &format!("tr{i}.expand"),
+                           Shape::nhwc(1, ph, ph, m), pc, &[cur]);
+            let d = g.add(OpKind::Depthwise { kh: 3, kw: 3, stride: 2 },
+                          &format!("tr{i}.dw"), Shape::nhwc(1, h, h, m),
+                          0, &[e1]);
+            cur = g.add(OpKind::Pointwise, &format!("tr{i}.project"),
+                        Shape::nhwc(1, h, h, c), m, &[d]);
+        }
+        cur = ago::models::blocks::inverted_residual(
+            &mut g, cur, &format!("blk{i}"), e, c, 3, 1);
+    }
+    g
+}
+
+/// One execution step of the artifact plan.
+enum Step {
+    /// program name + how the program's parameters split across semantic
+    /// operator streams (so a fused artifact draws the SAME weights as
+    /// its unfused counterpart: e.g. fused pw->dw takes [2, 2] — w1,b1
+    /// from op-stream k and w2,b2 from op-stream k+1)
+    Run(String, Vec<usize>),
+    /// residual add: run `add` program with (cur, saved input)
+    Residual(String),
+    /// remember the current activation (residual source)
+    Save,
+}
+
+/// Build fused/unfused artifact plans. `fused[i]` decides block i's
+/// expand+dw path; `fused_tr[j]` the stride-2 transition pairs.
+fn build_plan(fused: &[bool; 3], fused_tr: &[bool; 2]) -> Vec<Step> {
+    let stages = [(28usize, 16usize, 32usize), (14, 24, 48), (7, 32, 64)];
+    let mut plan =
+        vec![Step::Run("conv3_n1h28w28i3o16".into(), vec![2])];
+    for (i, (h, c, m)) in stages.into_iter().enumerate() {
+        if i == 1 {
+            // pw 16->32 + dw s2 (fused or chained), then pw 32->24
+            if fused_tr[0] {
+                plan.push(Step::Run(
+                    "fuseds2_pw_dw_n1h28w28i16a32".into(), vec![2, 2]));
+            } else {
+                plan.push(Step::Run("pw_n1h28w28i16o32".into(), vec![2]));
+                plan.push(Step::Run("dw3s2_n1h28w28c32".into(), vec![2]));
+            }
+            plan.push(Step::Run("pw_n1h14w14i32o24".into(), vec![2]));
+        }
+        if i == 2 {
+            if fused_tr[1] {
+                plan.push(Step::Run(
+                    "fuseds2_pw_dw_n1h14w14i24a48".into(), vec![2, 2]));
+            } else {
+                plan.push(Step::Run("pw_n1h14w14i24o48".into(), vec![2]));
+                plan.push(Step::Run("dw3s2_n1h14w14c48".into(), vec![2]));
+            }
+            plan.push(Step::Run("pw_n1h7w7i48o32".into(), vec![2]));
+        }
+        plan.push(Step::Save);
+        if fused[i] {
+            plan.push(Step::Run(
+                format!("fused_pw_dw_n1h{h}w{h}i{c}a{m}b{m}"),
+                vec![2, 2],
+            ));
+        } else {
+            plan.push(Step::Run(format!("pw_n1h{h}w{h}i{c}o{m}"),
+                                vec![2]));
+            plan.push(Step::Run(format!("dw3_n1h{h}w{h}c{m}"), vec![2]));
+        }
+        plan.push(Step::Run(format!("pw_n1h{h}w{h}i{m}o{c}"), vec![2]));
+        plan.push(Step::Residual(format!("add_n1h{h}w{h}c{c}")));
+    }
+    plan
+}
+
+/// Execute a plan once.
+fn run_plan(
+    e: &mut Engine,
+    plan: &[Step],
+    x0: TensorData,
+    seed: u64,
+) -> anyhow::Result<TensorData> {
+    let mut cur = x0;
+    let mut saved: Option<TensorData> = None;
+    let mut op_counter = 0u64; // one stream per semantic operator
+    for step in plan {
+        match step {
+            Step::Save => saved = Some(cur.clone()),
+            Step::Run(name, param_groups) => {
+                let meta = e.manifest.get(name)?.clone();
+                let mut inputs = vec![cur];
+                // draw each op's parameter group from its own stream so
+                // fused and unfused plans see identical weights
+                let mut taken = 0usize;
+                for &k in param_groups {
+                    op_counter += 1;
+                    let mut rng = Rng::new(seed ^ (op_counter << 8));
+                    for m in &meta.inputs[1 + taken..1 + taken + k] {
+                        inputs.push(TensorData::random(&m.shape, &mut rng));
+                    }
+                    taken += k;
+                }
+                debug_assert_eq!(taken + 1, meta.inputs.len());
+                cur = e.execute(name, &inputs)?.remove(0);
+            }
+            Step::Residual(name) => {
+                let res = saved.take().expect("Save before Residual");
+                cur = e.execute(name, &[cur, res])?.remove(0);
+            }
+        }
+    }
+    Ok(cur)
+}
+
+fn main() -> anyhow::Result<()> {
+    // ---- layer 3: compile the graph with AGO --------------------------
+    let g = e2e_graph();
+    let dev = DeviceProfile::kirin990();
+    let cfg = CompileConfig { budget: 4000, ..CompileConfig::new(dev) };
+    let compiled = compile(&g, &cfg);
+    println!(
+        "compiled {}: {} subgraphs, predicted {:.3} ms",
+        g.name,
+        compiled.partition.n_groups,
+        compiled.latency_ms()
+    );
+
+    // ---- codegen: tuned schedule -> artifact plan ----------------------
+    // a block is emitted fused iff the compiler chose an Intensive group
+    // containing a pw->dw pair at that block's shapes
+    let mut fused = [false; 3];
+    let mut fused_tr = [false; 2];
+    for s in &compiled.schedules {
+        for grp in &s.groups {
+            if grp.kind == GroupKind::Intensive {
+                for &v in &grp.ops {
+                    let n = g.node(v);
+                    if let OpKind::Depthwise { stride, .. } = n.kind {
+                        match (stride, n.out_shape.dim(1)) {
+                            (1, 28) => fused[0] = true,
+                            (1, 14) => fused[1] = true,
+                            (1, 7) => fused[2] = true,
+                            (2, 14) => fused_tr[0] = true,
+                            (2, 7) => fused_tr[1] = true,
+                            _ => {}
+                        }
+                    }
+                }
+            }
+        }
+    }
+    println!(
+        "codegen: blocks fused {fused:?}, transitions fused {fused_tr:?}"
+    );
+
+    // ---- layer 1/2 artifacts through the PJRT runtime ------------------
+    let dir = std::env::var("AGO_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into());
+    let mut engine = Engine::new(&dir)?;
+    let ago_plan = build_plan(&fused, &fused_tr);
+    let base_plan = build_plan(&[false; 3], &[false; 2]);
+
+    let mut rng = Rng::new(42);
+    let x0 = TensorData::random(&[1, 28, 28, 3], &mut rng);
+
+    // numerics cross-check: fused plan == unfused plan
+    let y_ago = run_plan(&mut engine, &ago_plan, x0.clone(), 7)?;
+    let y_base = run_plan(&mut engine, &base_plan, x0.clone(), 7)?;
+    let max_diff = y_ago
+        .data
+        .iter()
+        .zip(&y_base.data)
+        .map(|(a, b)| (a - b).abs())
+        .fold(0.0f32, f32::max);
+    println!(
+        "numerics: fused vs unfused plan max |diff| = {max_diff:.2e} \
+         (output shape {:?})",
+        y_ago.shape
+    );
+    assert!(max_diff < 2e-3, "plans disagree");
+
+    // ---- serve batched requests, report latency/throughput -------------
+    let requests = 100;
+    let mut serve = |plan: &[Step], label: &str| -> anyhow::Result<f64> {
+        // warmup
+        run_plan(&mut engine, plan, x0.clone(), 1)?;
+        let mut lat = Vec::with_capacity(requests);
+        let t0 = Instant::now();
+        for r in 0..requests {
+            let mut rq = Rng::new(1000 + r as u64);
+            let x = TensorData::random(&[1, 28, 28, 3], &mut rq);
+            let t = Instant::now();
+            run_plan(&mut engine, plan, x, 7)?;
+            lat.push(t.elapsed().as_secs_f64() * 1e3);
+        }
+        let total = t0.elapsed().as_secs_f64();
+        println!(
+            "{label}: p50 {:.3} ms, p99 {:.3} ms, throughput {:.1} req/s \
+             ({requests} requests)",
+            stats::percentile(&lat, 50.0),
+            stats::percentile(&lat, 99.0),
+            requests as f64 / total
+        );
+        Ok(stats::percentile(&lat, 50.0))
+    };
+    let base_p50 = serve(&base_plan, "unfused plan")?;
+    let ago_p50 = serve(&ago_plan, "AGO plan    ")?;
+    // and the fully-intensive plan (what the tuner converges to with a
+    // larger budget / on more bandwidth-starved devices)
+    let all_fused = build_plan(&[true; 3], &[true; 2]);
+    let all_p50 = serve(&all_fused, "all-fused   ")?;
+    println!(
+        "real-execution speedup vs unfused: AGO {:.2}x, all-fused {:.2}x",
+        base_p50 / ago_p50.max(1e-9),
+        base_p50 / all_p50.max(1e-9)
+    );
+    Ok(())
+}

@@ -1,0 +1,80 @@
+//! Partition explorer: sweep the weight threshold Td across a model and
+//! watch the partition statistics respond — the paper's §IV-A "avoid
+//! unreasonably huge subgraphs by suppressing the weight" knob, plus the
+//! AGO-vs-Relay comparison of Fig. 14 for every model in the zoo.
+//!
+//! ```sh
+//! cargo run --release --example partition_explorer -- --model mvt
+//! ```
+
+use ago::models::{build, InputShape, ModelId};
+use ago::partition::{
+    cluster, relay_partition, ClusterConfig, PartitionReport, WeightParams,
+};
+use ago::util::benchkit::Table;
+use ago::util::cli::Args;
+
+fn main() {
+    let args = Args::from_env(false);
+    let model = ModelId::parse(args.get_or("model", "mvt"))
+        .expect("unknown --model");
+    let shape = InputShape::parse(args.get_or("shape", "large"))
+        .expect("unknown --shape");
+    let g = build(model, shape);
+    let wp = WeightParams::default();
+    println!(
+        "{} @ {}: {} ops ({} complex, {} data-movement)\n",
+        model.name(),
+        shape.name(),
+        g.len(),
+        g.complex_count(),
+        g.nodes.iter().filter(|n| n.kind.is_data_movement()).count()
+    );
+
+    // Td sweep
+    let adaptive = ClusterConfig::adaptive(&g);
+    println!("adaptive Td = {:.0}\n", adaptive.td);
+    let mut t = Table::new(&[
+        "Td", "subgraphs", "avg w", "median w", "Jain", "trivial",
+        "max complex",
+    ]);
+    for factor in [0.25, 0.5, 1.0, 2.0, 4.0] {
+        let cfg = ClusterConfig { td: adaptive.td * factor, weights: wp };
+        let p = cluster(&g, cfg);
+        assert!(p.is_acyclic(&g), "acyclicity violated at Td sweep");
+        let r = PartitionReport::build(&g, &p, wp);
+        t.row(vec![
+            format!("{:.0}", cfg.td),
+            r.n_subgraphs.to_string(),
+            format!("{:.0}", r.avg_weight),
+            format!("{:.0}", r.median_weight),
+            format!("{:.2}", r.jain),
+            r.trivial.to_string(),
+            r.max_complex.to_string(),
+        ]);
+    }
+    t.print();
+
+    // Fig. 14 comparison across the whole zoo
+    println!("\nAGO (adaptive Td) vs Relay across the model zoo:");
+    let mut t = Table::new(&[
+        "model", "AGO subs", "Relay subs", "AGO Jain", "Relay Jain",
+        "AGO trivial", "Relay trivial",
+    ]);
+    for m in ModelId::all() {
+        let g = build(m, shape);
+        let ago =
+            PartitionReport::build(&g, &cluster(&g, ClusterConfig::adaptive(&g)), wp);
+        let relay = PartitionReport::build(&g, &relay_partition(&g), wp);
+        t.row(vec![
+            m.name().to_string(),
+            ago.n_subgraphs.to_string(),
+            relay.n_subgraphs.to_string(),
+            format!("{:.2}", ago.jain),
+            format!("{:.2}", relay.jain),
+            ago.trivial.to_string(),
+            relay.trivial.to_string(),
+        ]);
+    }
+    t.print();
+}

@@ -1,0 +1,60 @@
+//! Quickstart: compile MobileNet-V2 with AGO and read the results.
+//!
+//! ```sh
+//! cargo run --release --example quickstart
+//! ```
+
+use ago::coordinator::{compile, CompileConfig};
+use ago::device::DeviceProfile;
+use ago::models::{build, InputShape, ModelId};
+
+fn main() {
+    // 1. build (or import) a computational graph
+    let graph = build(ModelId::Mbn, InputShape::Small);
+    println!(
+        "graph: {} ops, {} complex, {:.0} MFLOPs",
+        graph.len(),
+        graph.complex_count(),
+        graph.total_flops() as f64 / 1e6
+    );
+
+    // 2. pick a device profile and compile
+    let device = DeviceProfile::kirin990();
+    let cfg = CompileConfig {
+        budget: 4000, // schedule evaluations (paper: 20,000)
+        ..CompileConfig::new(device)
+    };
+    let compiled = compile(&graph, &cfg);
+
+    // 3. inspect the result
+    println!(
+        "partition: {} subgraphs (max {} complex ops in one subgraph)",
+        compiled.partition.n_groups, compiled.report.max_complex
+    );
+    println!("{}", compiled.report.summary("stats"));
+    println!(
+        "predicted end-to-end latency: {:.2} ms ({} tuning evals)",
+        compiled.latency_ms(),
+        compiled.total_evals
+    );
+
+    // 4. per-subgraph detail for the three heaviest subgraphs
+    let mut by_cost: Vec<usize> = (0..compiled.partition.n_groups).collect();
+    by_cost.sort_by(|&a, &b| {
+        compiled.subgraph_latency[b]
+            .partial_cmp(&compiled.subgraph_latency[a])
+            .unwrap()
+    });
+    for &i in by_cost.iter().take(3) {
+        let kinds: Vec<String> = compiled.schedules[i]
+            .groups
+            .iter()
+            .map(|g| format!("{:?}x{}", g.kind, g.ops.len()))
+            .collect();
+        println!(
+            "  subgraph {i}: {:.3} ms, groups: {}",
+            compiled.subgraph_latency[i] * 1e3,
+            kinds.join(" ")
+        );
+    }
+}

@@ -1,0 +1,80 @@
+# AOT: lower every CATALOG program to HLO *text* + write a JSON manifest.
+#
+# HLO text, NOT `.serialize()` / serialized HloModuleProto: jax >= 0.5 emits
+# protos with 64-bit instruction ids which xla_extension 0.5.1 (the version
+# behind the rust `xla` 0.1.6 crate) rejects (`proto.id() <= INT_MAX`). The
+# HLO text parser reassigns ids, so text round-trips cleanly.
+# See /opt/xla-example/README.md.
+#
+# Usage:  cd python && python -m compile.aot --out ../artifacts
+#
+# Python runs ONLY here (build time). The rust binary is self-contained once
+# artifacts/ is populated.
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (return_tuple for rust)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_program(spec: model.ProgramSpec) -> str:
+    lowered = jax.jit(spec.fn).lower(*spec.args)
+    return to_hlo_text(lowered)
+
+
+def shape_entry(s) -> dict:
+    return {"shape": list(s.shape), "dtype": str(s.dtype)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description="AGO AOT artifact builder")
+    ap.add_argument("--out", default="../artifacts",
+                    help="output directory for *.hlo.txt + manifest.json")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated program names (default: all)")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    names = set(args.only.split(",")) if args.only else None
+    manifest = {"programs": []}
+    for spec in model.CATALOG:
+        if names and spec.name not in names:
+            continue
+        text = lower_program(spec)
+        fname = f"{spec.name}.hlo.txt"
+        path = os.path.join(args.out, fname)
+        with open(path, "w") as f:
+            f.write(text)
+        out_shapes = [shape_entry(o) for o in
+                      jax.eval_shape(spec.fn, *spec.args)]
+        manifest["programs"].append({
+            "name": spec.name,
+            "file": fname,
+            "inputs": [shape_entry(a) for a in spec.args],
+            "outputs": out_shapes,
+            "tags": spec.tags,
+            "sha256": hashlib.sha256(text.encode()).hexdigest(),
+        })
+        print(f"  {spec.name}: {len(text)} chars, "
+              f"{len(spec.args)} inputs")
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {len(manifest['programs'])} artifacts to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,2 @@
+# L1 Pallas kernels (interpret=True on CPU) + pure-jnp oracle (ref).
+from . import attention, conv, intensive, matmul, ref  # noqa: F401

@@ -1,0 +1,100 @@
+# L1 Pallas kernels for the transformer-side artifacts: single-head
+# attention (row-band online softmax) and layernorm. These replace the
+# plain-jnp L2 implementations so BT/MVT subgraphs exercise the same
+# kernel path as the conv stacks.
+#
+# TPU adaptation: attention is tiled over query row bands (the Fig. 7(b)
+# analogue — the downstream contraction's reused dimension, the full key
+# sequence, stays whole per grid step in VMEM); softmax normalization is
+# computed online per band, so the (S x S) score matrix never exists in
+# HBM. interpret=True as everywhere (see conv.py).
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import conv as convk
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, *, scale):
+    q = q_ref[...]                       # (tq, D)
+    k = k_ref[...]                       # (S, D)  — whole, VMEM-resident
+    v = v_ref[...]                       # (S, D)
+    s = jnp.dot(q, k.T, preferred_element_type=jnp.float32) * scale
+    # numerically stable softmax over the full key axis (held in VMEM)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    z = jnp.sum(p, axis=-1, keepdims=True)
+    o_ref[...] = jnp.dot(p / z, v, preferred_element_type=jnp.float32)
+
+
+def attention(q, k, v, interpret=True):
+    """Single-head scaled dot-product attention. q,k,v: (S, D).
+
+    Grid over query row bands; keys/values stay whole per step, so the
+    score tile is (tq x S) and the HBM-visible tensors are only q, k, v
+    and the output."""
+    s, d = q.shape
+    tq = convk.row_tile(s, target=32)
+    scale = 1.0 / (d ** 0.5)
+    return pl.pallas_call(
+        functools.partial(_attn_kernel, scale=scale),
+        grid=(s // tq,),
+        in_specs=[
+            pl.BlockSpec((tq, d), lambda i: (i, 0)),
+            pl.BlockSpec((s, d), lambda i: (0, 0)),
+            pl.BlockSpec((s, d), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, d), jnp.float32),
+        interpret=interpret,
+    )(q, k, v)
+
+
+def _ln_kernel(x_ref, g_ref, b_ref, o_ref, *, eps):
+    x = x_ref[...]
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean((x - mu) * (x - mu), axis=-1, keepdims=True)
+    o_ref[...] = (x - mu) * jax.lax.rsqrt(var + eps) * g_ref[...] \
+        + b_ref[...]
+
+
+def layernorm(x, gamma, beta, eps=1e-5, interpret=True):
+    """Row-band layernorm over the last axis. x: (S, D)."""
+    s, d = x.shape
+    tq = convk.row_tile(s, target=32)
+    return pl.pallas_call(
+        functools.partial(_ln_kernel, eps=eps),
+        grid=(s // tq,),
+        in_specs=[
+            pl.BlockSpec((tq, d), lambda i: (i, 0)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+            pl.BlockSpec((d,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tq, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, d), jnp.float32),
+        interpret=interpret,
+    )(x, gamma, beta)
+
+
+def _softmax_kernel(x_ref, o_ref):
+    x = x_ref[...]
+    m = jnp.max(x, axis=-1, keepdims=True)
+    p = jnp.exp(x - m)
+    o_ref[...] = p / jnp.sum(p, axis=-1, keepdims=True)
+
+
+def softmax(x, interpret=True):
+    """Row-band softmax over the last axis. x: (S, N)."""
+    s, n = x.shape
+    tq = convk.row_tile(s, target=32)
+    return pl.pallas_call(
+        _softmax_kernel,
+        grid=(s // tq,),
+        in_specs=[pl.BlockSpec((tq, n), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((tq, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((s, n), jnp.float32),
+        interpret=interpret,
+    )(x)

@@ -1,0 +1,235 @@
+# L1 Pallas kernels: single-complex-op subgraphs with conventional
+# (epilogue) fusion — conv/depthwise/pointwise + bias + ReLU in one kernel.
+#
+# All kernels run with interpret=True (CPU correctness path; real-TPU
+# lowering emits Mosaic custom-calls the CPU PJRT plugin cannot run).
+#
+# Tiling scheme (the TPU adaptation of the paper's cache tiling, DESIGN.md
+# §Hardware-Adaptation): the grid walks (batch, row-tiles); each grid step
+# reads one *haloed* input row-band, keeps it and the full weight in VMEM,
+# and writes one output row-band. Channels stay whole in the lane
+# dimension. Input blocks overlap by the conv halo (R-1 rows), which plain
+# Blocked BlockSpecs cannot express, so the input is mapped whole per batch
+# element and the band is sliced inside the kernel — the BlockSpec-visible
+# working set per step is the band + weights (see EXPERIMENTS.md §Perf for
+# the VMEM accounting). The epilogue (bias+ReLU) is applied to the
+# VMEM-resident tile before writeback — exactly the paper's Fig. 4
+# conventional fusion: the Conv tile is consumed while still "in cache".
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def row_tile(h_out, target=8):
+    """Pick a row-tile size dividing h_out (the grid must tile exactly)."""
+    for t in range(min(target, h_out), 0, -1):
+        if h_out % t == 0:
+            return t
+    return 1
+
+
+def _conv_band(x_band, w):
+    """VALID direct conv of one pre-padded row band. x_band: (TH+R-1, W+C-1, I),
+    w: (R, C, I, O) -> (TH, W, O). Unrolled over the small (R, C) window so
+    each term is a dense (pixels x I) @ (I x O) MXU-shaped contraction."""
+    r, c, _, o = w.shape
+    th = x_band.shape[0] - (r - 1)
+    wo = x_band.shape[1] - (c - 1)
+    acc = jnp.zeros((th, wo, o), dtype=jnp.float32)
+    for dr in range(r):
+        for dc in range(c):
+            patch = jax.lax.dynamic_slice(
+                x_band, (dr, dc, 0), (th, wo, x_band.shape[2]))
+            acc = acc + jnp.einsum(
+                "hwi,io->hwo", patch, w[dr, dc],
+                preferred_element_type=jnp.float32)
+    return acc
+
+
+def _dw_band(x_band, w):
+    """VALID depthwise conv of one row band. x_band: (TH+R-1, W+C-1, C),
+    w: (R, Cc, 1, C) -> (TH, W, C). Unrolled window; each term is an
+    elementwise multiply-accumulate on the (pixels x C) vector unit."""
+    r, c, _, _ = w.shape
+    th = x_band.shape[0] - (r - 1)
+    wo = x_band.shape[1] - (c - 1)
+    acc = jnp.zeros((th, wo, x_band.shape[2]), dtype=jnp.float32)
+    for dr in range(r):
+        for dc in range(c):
+            patch = jax.lax.dynamic_slice(
+                x_band, (dr, dc, 0), (th, wo, x_band.shape[2]))
+            acc = acc + patch * w[dr, dc, 0]
+    return acc
+
+
+def _epilogue(y, b, relu):
+    y = y + b
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+# ---------------------------------------------------------------------------
+# conv2d + bias + relu (dense RxC window)
+# ---------------------------------------------------------------------------
+
+def _conv2d_kernel(x_ref, w_ref, b_ref, o_ref, *, th, r, relu):
+    j = pl.program_id(1)
+    x = x_ref[0]  # (Hp, Wp, I) — one batch element
+    band = jax.lax.dynamic_slice(
+        x, (j * th, 0, 0), (th + r - 1, x.shape[1], x.shape[2]))
+    y = _conv_band(band, w_ref[...])
+    o_ref[0] = _epilogue(y, b_ref[...], relu)
+
+
+def conv2d_bias_relu(x, w, b, relu=True, interpret=True):
+    """x: (N, H, W, I) *pre-padded*, w: (R, C, I, O), b: (O,).
+
+    Output: (N, H-R+1, W-C+1, O). Stride 1. Grid: (N, H_out/TH)."""
+    n, hp, wp, i = x.shape
+    r, c, _, o = w.shape
+    ho, wo = hp - r + 1, wp - c + 1
+    th = row_tile(ho)
+    return pl.pallas_call(
+        functools.partial(_conv2d_kernel, th=th, r=r, relu=relu),
+        grid=(n, ho // th),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, i), lambda bi, bj: (bi, 0, 0, 0)),
+            pl.BlockSpec((r, c, i, o), lambda bi, bj: (0, 0, 0, 0)),
+            pl.BlockSpec((o,), lambda bi, bj: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, th, wo, o), lambda bi, bj: (bi, bj, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, o), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)
+
+
+# ---------------------------------------------------------------------------
+# depthwise conv + bias + relu
+# ---------------------------------------------------------------------------
+
+def _dw_kernel(x_ref, w_ref, b_ref, o_ref, *, th, r, relu):
+    j = pl.program_id(1)
+    x = x_ref[0]
+    band = jax.lax.dynamic_slice(
+        x, (j * th, 0, 0), (th + r - 1, x.shape[1], x.shape[2]))
+    y = _dw_band(band, w_ref[...])
+    o_ref[0] = _epilogue(y, b_ref[...], relu)
+
+
+def depthwise_bias_relu(x, w, b, relu=True, interpret=True):
+    """x: (N, H, W, C) *pre-padded*, w: (R, Cc, 1, C), b: (C,)."""
+    n, hp, wp, c = x.shape
+    r, cc, _, _ = w.shape
+    ho, wo = hp - r + 1, wp - cc + 1
+    th = row_tile(ho)
+    return pl.pallas_call(
+        functools.partial(_dw_kernel, th=th, r=r, relu=relu),
+        grid=(n, ho // th),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, c), lambda bi, bj: (bi, 0, 0, 0)),
+            pl.BlockSpec((r, cc, 1, c), lambda bi, bj: (0, 0, 0, 0)),
+            pl.BlockSpec((c,), lambda bi, bj: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, th, wo, c), lambda bi, bj: (bi, bj, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, c), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)
+
+
+# ---------------------------------------------------------------------------
+# pointwise (1x1) conv + bias + relu — a pure MXU contraction; the row band
+# needs no halo, so true Blocked BlockSpecs carry the tiles.
+# ---------------------------------------------------------------------------
+
+def _pw_kernel(x_ref, w_ref, b_ref, o_ref, *, relu):
+    y = jnp.einsum("hwi,io->hwo", x_ref[0], w_ref[...],
+                   preferred_element_type=jnp.float32)
+    o_ref[0] = _epilogue(y, b_ref[...], relu)
+
+
+def pointwise_bias_relu(x, w, b, relu=True, interpret=True):
+    """x: (N, H, W, I), w: (I, O), b: (O,). No padding needed."""
+    n, h, wd, i = x.shape
+    o = w.shape[1]
+    th = row_tile(h)
+    return pl.pallas_call(
+        functools.partial(_pw_kernel, relu=relu),
+        grid=(n, h // th),
+        in_specs=[
+            pl.BlockSpec((1, th, wd, i), lambda bi, bj: (bi, bj, 0, 0)),
+            pl.BlockSpec((i, o), lambda bi, bj: (0, 0)),
+            pl.BlockSpec((o,), lambda bi, bj: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, th, wd, o), lambda bi, bj: (bi, bj, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, wd, o), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)
+
+
+def pad_same(x, r, c=None):
+    """SAME-pad an NHWC tensor for an (r, c) window, stride 1."""
+    c = r if c is None else c
+    pr, pc = (r - 1) // 2, (c - 1) // 2
+    return jnp.pad(x, ((0, 0), (pr, r - 1 - pr), (pc, c - 1 - pc), (0, 0)))
+
+
+# ---------------------------------------------------------------------------
+# strided depthwise (MobileNet downsampling blocks). Output rows map to
+# input rows at stride 2; the row band for TH output rows spans
+# 2*TH + R - 2 input rows.
+# ---------------------------------------------------------------------------
+
+def _dw_band_s2(x_band, w, th, wo):
+    """VALID stride-2 depthwise of one row band. x_band:
+    (2*TH+R-2, 2*WO+C-2, C), w: (R, Cc, 1, C) -> (TH, WO, C)."""
+    r, c, _, _ = w.shape
+    acc = jnp.zeros((th, wo, x_band.shape[2]), dtype=jnp.float32)
+    for dr in range(r):
+        for dc in range(c):
+            patch = x_band[dr:dr + 2 * th:2, dc:dc + 2 * wo:2, :]
+            acc = acc + patch * w[dr, dc, 0]
+    return acc
+
+
+def _dw_s2_kernel(x_ref, w_ref, b_ref, o_ref, *, th, r, wo, relu):
+    j = pl.program_id(1)
+    x = x_ref[0]
+    band = jax.lax.dynamic_slice(
+        x, (2 * j * th, 0, 0),
+        (2 * th + r - 2, x.shape[1], x.shape[2]))
+    y = _dw_band_s2(band, w_ref[...], th, wo)
+    o_ref[0] = _epilogue(y, b_ref[...], relu)
+
+
+def depthwise_s2_bias_relu(x, w, b, relu=True, interpret=True):
+    """Stride-2 depthwise. x: (N, H, W, C) *pre-padded* so that
+    H = 2*HO + R - 2 and W = 2*WO + C - 2 for output (N, HO, WO, C)."""
+    n, hp, wp, c = x.shape
+    r, cc, _, _ = w.shape
+    ho = (hp - r) // 2 + 1
+    wo = (wp - cc) // 2 + 1
+    th = row_tile(ho)
+    return pl.pallas_call(
+        functools.partial(_dw_s2_kernel, th=th, r=r, wo=wo, relu=relu),
+        grid=(n, ho // th),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, c), lambda bi, bj: (bi, 0, 0, 0)),
+            pl.BlockSpec((r, cc, 1, c), lambda bi, bj: (0, 0, 0, 0)),
+            pl.BlockSpec((c,), lambda bi, bj: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, th, wo, c), lambda bi, bj: (bi, bj, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, c), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)
+
+
+def pad_same_s2(x, r):
+    """SAME-pad an NHWC tensor for an (r, r) window at stride 2 (tf SAME:
+    output ceil(H/2))."""
+    h = x.shape[1]
+    oh = -(-h // 2)
+    total = max((oh - 1) * 2 + r - h, 0)
+    lo = total // 2
+    return jnp.pad(x, ((0, 0), (lo, total - lo), (lo, total - lo), (0, 0)))

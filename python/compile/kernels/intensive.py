@@ -1,0 +1,348 @@
+# L1 Pallas kernels: INTENSIVE operator fusion (paper §III-B).
+#
+# Two complex operators fused into one kernel without redundant
+# re-computation, for the two redundancy-free categories the paper derives:
+#
+#   (a) downstream DEPTHWISE conv (Fig. 7(a)): the downstream input is
+#       reused across the H2, W2 window overlap, so those dimensions are
+#       NOT tiled — each grid step computes a full-spatial upstream tile
+#       (H1 x W1 x o1) in VMEM and immediately consumes it; the channel
+#       dimension is tiled (o1 == o2 since depthwise maps channel i -> i).
+#
+#   (b) downstream POINTWISE conv (Fig. 7(b)): reuse is only across O2, so
+#       O2 is NOT tiled — each grid step computes an (h2 x w2 x O1) upstream
+#       tile and contracts it with the whole (O1 x O2) weight on the MXU.
+#
+# The upstream intermediate (Conv1) never touches HBM: it lives as a value
+# inside the kernel (VMEM), which is the whole point of intensive fusion —
+# the paper's cache-residency argument mapped to the TPU memory hierarchy
+# (DESIGN.md §Hardware-Adaptation). Redundancy check: every Conv1 element is
+# computed by exactly one grid step (grid strides match tile extents on all
+# upstream iteration dimensions), i.e. |fused iteration space| == |GS1|.
+#
+# matmul -> matmul is included as the "mathematically equivalent to
+# pointwise convolution" case, fused with M-row tiling and the full (K x N)
+# weights resident.
+#
+# interpret=True always: CPU correctness path (see conv.py header).
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import conv as convk
+
+
+def _chan_tile(c, target=16):
+    for t in range(min(target, c), 0, -1):
+        if c % t == 0:
+            return t
+    return 1
+
+
+def _upstream_band(kind, x_band, w1):
+    """Run the upstream complex op on a pre-padded band; returns VALID out."""
+    if kind == "conv":
+        return convk._conv_band(x_band, w1)
+    if kind == "dw":
+        return convk._dw_band(x_band, w1)
+    if kind == "pw":
+        return jnp.einsum("hwi,io->hwo", x_band, w1,
+                          preferred_element_type=jnp.float32)
+    raise ValueError(f"unknown upstream kind {kind!r}")
+
+
+def _up_halo(kind, w1):
+    return w1.shape[0] - 1 if kind in ("conv", "dw") else 0
+
+
+# ---------------------------------------------------------------------------
+# Category (a): downstream depthwise. Grid: (N, C/tc) — channel-tiled only;
+# H2 x W2 stay whole per grid step (the un-tiled reused dimensions).
+# ---------------------------------------------------------------------------
+
+def _fused_down_dw_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *,
+                          up_kind, r2, relu1, relu2):
+    x = x_ref[0]  # (Hp, Wp, i-block)
+    w1 = w1_ref[...]
+    # Upstream tile: full spatial extent, one channel block (Fig. 7(a):
+    # H2, W2 are the reused — hence un-tiled — dimensions).
+    mid = _upstream_band(up_kind, x, w1)
+    mid = convk._epilogue(mid, b1_ref[...], relu1)
+    # SAME semantics for the downstream window: zero-pad the VMEM-resident
+    # intermediate (matches the unfused composition exactly; computing the
+    # halo from the extended input would change borders).
+    p = (r2 - 1) // 2
+    mid = jnp.pad(mid, ((p, r2 - 1 - p), (p, r2 - 1 - p), (0, 0)))
+    y = convk._dw_band(mid, w2_ref[...])
+    o_ref[0] = convk._epilogue(y, b2_ref[...], relu2)
+
+
+def fused_down_dw(up_kind, x, w1, b1, w2, b2, relu1=True, relu2=True,
+                  interpret=True):
+    """Intensive fusion, downstream depthwise 3x3 (stride 1).
+
+    x is pre-padded for BOTH windows: SAME pad of the upstream plus the
+    (r2-1)/2 halo of the downstream. Channel blocking:
+      up_kind == 'dw': channels pass through; tile C.
+      up_kind == 'pw' or 'conv': the upstream reduces over ALL input
+        channels, so the input channel dim stays whole and the upstream
+        OUTPUT channels are tiled (o1 == o2, Fig. 7(a)).
+    """
+    n, hp, wp, ci = x.shape
+    r2 = w2.shape[0]
+    if up_kind == "dw":
+        r1 = w1.shape[0]
+        c = ci
+        tc = _chan_tile(c)
+        ho = hp - (r1 - 1)
+        wo = wp - (r1 - 1)
+        in_specs = [
+            pl.BlockSpec((1, hp, wp, tc), lambda bi, bc: (bi, 0, 0, bc)),
+            pl.BlockSpec((r1, r1, 1, tc), lambda bi, bc: (0, 0, 0, bc)),
+            pl.BlockSpec((tc,), lambda bi, bc: (bc,)),
+            pl.BlockSpec((r2, r2, 1, tc), lambda bi, bc: (0, 0, 0, bc)),
+            pl.BlockSpec((tc,), lambda bi, bc: (bc,)),
+        ]
+        out_c = c
+    elif up_kind in ("pw", "conv"):
+        r1 = w1.shape[0] if up_kind == "conv" else 1
+        out_c = w1.shape[-1]
+        tc = _chan_tile(out_c)
+        ho = hp - (r1 - 1)
+        wo = wp - (r1 - 1)
+        if up_kind == "pw":
+            in_specs = [
+                pl.BlockSpec((1, hp, wp, ci), lambda bi, bc: (bi, 0, 0, 0)),
+                pl.BlockSpec((ci, tc), lambda bi, bc: (0, bc)),
+                pl.BlockSpec((tc,), lambda bi, bc: (bc,)),
+                pl.BlockSpec((r2, r2, 1, tc), lambda bi, bc: (0, 0, 0, bc)),
+                pl.BlockSpec((tc,), lambda bi, bc: (bc,)),
+            ]
+        else:
+            in_specs = [
+                pl.BlockSpec((1, hp, wp, ci), lambda bi, bc: (bi, 0, 0, 0)),
+                pl.BlockSpec((r1, r1, ci, tc), lambda bi, bc: (0, 0, 0, bc)),
+                pl.BlockSpec((tc,), lambda bi, bc: (bc,)),
+                pl.BlockSpec((r2, r2, 1, tc), lambda bi, bc: (0, 0, 0, bc)),
+                pl.BlockSpec((tc,), lambda bi, bc: (bc,)),
+            ]
+    else:
+        raise ValueError(up_kind)
+    grid = (n, out_c // tc)
+    return pl.pallas_call(
+        functools.partial(_fused_down_dw_kernel, up_kind=up_kind, r2=r2,
+                          relu1=relu1, relu2=relu2),
+        grid=grid,
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, ho, wo, tc),
+                               lambda bi, bc: (bi, 0, 0, bc)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, out_c), jnp.float32),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)
+
+
+# ---------------------------------------------------------------------------
+# Category (b): downstream pointwise. Grid: (N, H2/th) — spatial row bands;
+# O2 stays whole per grid step (the un-tiled reused dimension).
+# ---------------------------------------------------------------------------
+
+def _fused_down_pw_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *,
+                          up_kind, th, halo, relu1, relu2):
+    j = pl.program_id(1)
+    x = x_ref[0]
+    band = jax.lax.dynamic_slice(
+        x, (j * th, 0, 0), (th + halo, x.shape[1], x.shape[2]))
+    mid = _upstream_band(up_kind, band, w1_ref[...])     # (th, W2, O1)
+    mid = convk._epilogue(mid, b1_ref[...], relu1)
+    y = jnp.einsum("hwi,io->hwo", mid, w2_ref[...],      # full O2: untiled
+                   preferred_element_type=jnp.float32)
+    o_ref[0] = convk._epilogue(y, b2_ref[...], relu2)
+
+
+def fused_down_pw(up_kind, x, w1, b1, w2, b2, relu1=True, relu2=True,
+                  interpret=True):
+    """Intensive fusion, downstream pointwise (R2=C2=1).
+
+    x is pre-padded for the upstream window. Each grid step computes an
+    (th x W x O1) upstream row-band entirely in VMEM and contracts it with
+    the whole (O1, O2) downstream weight — O2 untiled per Fig. 7(b)."""
+    n, hp, wp, ci = x.shape
+    halo = _up_halo(up_kind, w1)
+    o1 = w1.shape[-1] if up_kind != "dw" else ci
+    o2 = w2.shape[1]
+    ho, wo = hp - halo, wp - halo
+    th = convk.row_tile(ho)
+    if up_kind == "conv":
+        r1 = w1.shape[0]
+        w1_spec = pl.BlockSpec((r1, r1, ci, o1), lambda bi, bj: (0, 0, 0, 0))
+    elif up_kind == "dw":
+        r1 = w1.shape[0]
+        w1_spec = pl.BlockSpec((r1, r1, 1, ci), lambda bi, bj: (0, 0, 0, 0))
+    elif up_kind == "pw":
+        w1_spec = pl.BlockSpec((ci, o1), lambda bi, bj: (0, 0))
+    else:
+        raise ValueError(up_kind)
+    return pl.pallas_call(
+        functools.partial(_fused_down_pw_kernel, up_kind=up_kind, th=th,
+                          halo=halo, relu1=relu1, relu2=relu2),
+        grid=(n, ho // th),
+        in_specs=[
+            pl.BlockSpec((1, hp, wp, ci), lambda bi, bj: (bi, 0, 0, 0)),
+            w1_spec,
+            pl.BlockSpec((o1,), lambda bi, bj: (0,)),
+            pl.BlockSpec((o1, o2), lambda bi, bj: (0, 0)),
+            pl.BlockSpec((o2,), lambda bi, bj: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, th, wo, o2), lambda bi, bj: (bi, bj, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, o2), jnp.float32),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)
+
+
+def fused_pair(up_kind, down_kind, x, w1, b1, w2, b2, relu1=True, relu2=True,
+               interpret=True):
+    """Dispatch to the right intensive-fusion category.
+
+    Caller pads x SAME for the upstream window only; a downstream depthwise
+    zero-pads its VMEM-resident intermediate in-kernel, so output spatial
+    size == unpadded input spatial size for 3x3 SAME chains."""
+    if down_kind == "dw":
+        return fused_down_dw(up_kind, x, w1, b1, w2, b2, relu1, relu2,
+                             interpret)
+    if down_kind == "pw":
+        return fused_down_pw(up_kind, x, w1, b1, w2, b2, relu1, relu2,
+                             interpret)
+    raise ValueError(f"downstream {down_kind!r} is not intensive-fusable "
+                     "(paper §III-B: only depthwise/pointwise downstream)")
+
+
+# ---------------------------------------------------------------------------
+# matmul -> matmul (BT / MVT attention-adjacent chains).
+# ---------------------------------------------------------------------------
+
+def _act(y, act):
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "gelu":
+        return jax.nn.gelu(y)
+    return y
+
+
+def _mm_mm_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref, *,
+                  act1, act2):
+    mid = _act(jnp.dot(x_ref[...], w1_ref[...],
+                       preferred_element_type=jnp.float32) + b1_ref[...],
+               act1)
+    o_ref[...] = _act(jnp.dot(mid, w2_ref[...],
+                              preferred_element_type=jnp.float32)
+                      + b2_ref[...], act2)
+
+
+def fused_matmul_matmul(x, w1, b1, w2, b2, act1="relu", act2=None,
+                        interpret=True):
+    """(M,K)@(K,N1)+b1 -act1-> @(N1,N2)+b2 -act2. Grid over M row tiles;
+    N1 and N2 untiled (pointwise-equivalent: reuse only across columns)."""
+    m, k = x.shape
+    n1 = w1.shape[1]
+    n2 = w2.shape[1]
+    tm = convk.row_tile(m, target=32)
+    return pl.pallas_call(
+        functools.partial(_mm_mm_kernel, act1=act1, act2=act2),
+        grid=(m // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda bi: (bi, 0)),
+            pl.BlockSpec((k, n1), lambda bi: (0, 0)),
+            pl.BlockSpec((n1,), lambda bi: (0,)),
+            pl.BlockSpec((n1, n2), lambda bi: (0, 0)),
+            pl.BlockSpec((n2,), lambda bi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tm, n2), lambda bi: (bi, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n2), jnp.float32),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)
+
+
+def pad_for_fused(up_kind, down_kind, x, w1, w2):
+    """Pad x so the fused kernel reproduces SAME padding on both ops.
+
+    Only the upstream window needs input padding; a downstream depthwise
+    handles its own halo on the intermediate inside the kernel."""
+    r1 = w1.shape[0] if up_kind in ("conv", "dw") else 1
+    lo = (r1 - 1) // 2
+    hi = r1 - 1 - lo
+    return jnp.pad(x, ((0, 0), (lo, hi), (lo, hi), (0, 0)))
+
+
+# ---------------------------------------------------------------------------
+# Intensive fusion with a STRIDE-2 downstream depthwise (MobileNet
+# downsampling blocks: pw expand -> dw3x3 s2). Still category (a): the
+# reused dims H2, W2 stay untiled; channel blocks form the grid.
+# ---------------------------------------------------------------------------
+
+def _fused_down_dw_s2_kernel(x_ref, w1_ref, b1_ref, w2_ref, b2_ref, o_ref,
+                             *, up_kind, r2, ho, wo, relu1, relu2):
+    x = x_ref[0]
+    mid = _upstream_band(up_kind, x, w1_ref[...])
+    mid = convk._epilogue(mid, b1_ref[...], relu1)
+    # SAME stride-2 halo on the VMEM-resident intermediate
+    h = mid.shape[0]
+    total = max((ho - 1) * 2 + r2 - h, 0)
+    lo = total // 2
+    mid = jnp.pad(mid, ((lo, total - lo), (lo, total - lo), (0, 0)))
+    y = convk._dw_band_s2(mid, w2_ref[...], ho, wo)
+    o_ref[0] = convk._epilogue(y, b2_ref[...], relu2)
+
+
+def fused_down_dw_s2(up_kind, x, w1, b1, w2, b2, relu1=True, relu2=True,
+                     interpret=True):
+    """Intensive fusion, downstream depthwise 3x3 stride 2. x is
+    pre-padded SAME for the upstream window only; output spatial size is
+    ceil(H/2). Channel blocking as in fused_down_dw."""
+    n, hp, wp, ci = x.shape
+    r2 = w2.shape[0]
+    r1 = w1.shape[0] if up_kind in ("conv", "dw") else 1
+    h1 = hp - (r1 - 1)
+    ho, wo = -(-h1 // 2), -((wp - (r1 - 1)) // -2)
+    if up_kind == "dw":
+        out_c = ci
+        tc = _chan_tile(out_c)
+        in_specs = [
+            pl.BlockSpec((1, hp, wp, tc), lambda bi, bc: (bi, 0, 0, bc)),
+            pl.BlockSpec((r1, r1, 1, tc), lambda bi, bc: (0, 0, 0, bc)),
+            pl.BlockSpec((tc,), lambda bi, bc: (bc,)),
+            pl.BlockSpec((r2, r2, 1, tc), lambda bi, bc: (0, 0, 0, bc)),
+            pl.BlockSpec((tc,), lambda bi, bc: (bc,)),
+        ]
+    elif up_kind == "pw":
+        out_c = w1.shape[-1]
+        tc = _chan_tile(out_c)
+        in_specs = [
+            pl.BlockSpec((1, hp, wp, ci), lambda bi, bc: (bi, 0, 0, 0)),
+            pl.BlockSpec((ci, tc), lambda bi, bc: (0, bc)),
+            pl.BlockSpec((tc,), lambda bi, bc: (bc,)),
+            pl.BlockSpec((r2, r2, 1, tc), lambda bi, bc: (0, 0, 0, bc)),
+            pl.BlockSpec((tc,), lambda bi, bc: (bc,)),
+        ]
+    else:
+        out_c = w1.shape[-1]
+        tc = _chan_tile(out_c)
+        in_specs = [
+            pl.BlockSpec((1, hp, wp, ci), lambda bi, bc: (bi, 0, 0, 0)),
+            pl.BlockSpec((r1, r1, ci, tc), lambda bi, bc: (0, 0, 0, bc)),
+            pl.BlockSpec((tc,), lambda bi, bc: (bc,)),
+            pl.BlockSpec((r2, r2, 1, tc), lambda bi, bc: (0, 0, 0, bc)),
+            pl.BlockSpec((tc,), lambda bi, bc: (bc,)),
+        ]
+    return pl.pallas_call(
+        functools.partial(_fused_down_dw_s2_kernel, up_kind=up_kind,
+                          r2=r2, ho=ho, wo=wo, relu1=relu1, relu2=relu2),
+        grid=(n, out_c // tc),
+        in_specs=in_specs,
+        out_specs=pl.BlockSpec((1, ho, wo, tc),
+                               lambda bi, bc: (bi, 0, 0, bc)),
+        out_shape=jax.ShapeDtypeStruct((n, ho, wo, out_c), jnp.float32),
+        interpret=interpret,
+    )(x, w1, b1, w2, b2)

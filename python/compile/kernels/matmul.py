@@ -1,0 +1,45 @@
+# L1 Pallas kernel: single matmul + epilogue (bias, activation) — the
+# conventional-fusion counterpart of intensive.fused_matmul_matmul, and the
+# building block for Bert-tiny / MobileViT attention subgraphs.
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from . import conv as convk
+
+
+def _act(y, act):
+    if act == "relu":
+        return jnp.maximum(y, 0.0)
+    if act == "gelu":
+        return jax.nn.gelu(y)
+    return y
+
+
+def _mm_kernel(x_ref, w_ref, b_ref, o_ref, *, act):
+    y = jnp.dot(x_ref[...], w_ref[...],
+                preferred_element_type=jnp.float32) + b_ref[...]
+    o_ref[...] = _act(y, act)
+
+
+def matmul_bias(x, w, b, act=None, interpret=True):
+    """(M,K) @ (K,N) + b with fused epilogue. Grid over M row tiles; the
+    (K,N) weight stays VMEM-resident across steps (MXU-shaped contraction)."""
+    m, k = x.shape
+    n = w.shape[1]
+    tm = convk.row_tile(m, target=32)
+    return pl.pallas_call(
+        functools.partial(_mm_kernel, act=act),
+        grid=(m // tm,),
+        in_specs=[
+            pl.BlockSpec((tm, k), lambda bi: (bi, 0)),
+            pl.BlockSpec((k, n), lambda bi: (0, 0)),
+            pl.BlockSpec((n,), lambda bi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((tm, n), lambda bi: (bi, 0)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.float32),
+        interpret=interpret,
+    )(x, w, b)

@@ -1,0 +1,145 @@
+# Pure-jnp correctness oracles for every Pallas kernel.
+#
+# All tensors are NHWC float32 (channels-last keeps the channel dimension in
+# the TPU lane dimension; see DESIGN.md "Hardware adaptation"). Convolution
+# weights are HWIO. Padding is applied explicitly by the caller (the Pallas
+# kernels consume pre-padded inputs), so every reference here is 'VALID'.
+
+import jax
+import jax.numpy as jnp
+
+
+def conv2d(x, w, stride=1):
+    """Direct 2-d convolution. x: (N,H,W,I), w: (R,C,I,O) -> (N,H',W',O)."""
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def depthwise(x, w, stride=1):
+    """Depthwise 2-d convolution. x: (N,H,W,C), w: (R,Cc,1,C) -> (N,H',W',C).
+
+    No reduction over the channel dimension (the paper's first
+    intensive-fusion category: input reused only on H2, W2)."""
+    c = x.shape[-1]
+    return jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(stride, stride),
+        padding="VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+        feature_group_count=c,
+    )
+
+
+def pointwise(x, w):
+    """1x1 convolution. x: (N,H,W,I), w: (I,O) -> (N,H,W,O).
+
+    Free of reduction in the kernel window (R2=C2=1): the paper's second
+    intensive-fusion category (input reused only on O2)."""
+    return jnp.einsum("nhwi,io->nhwo", x, w)
+
+
+def bias_relu(x, b, relu=True):
+    """Epilogue: bias add + optional ReLU."""
+    y = x + b
+    return jnp.maximum(y, 0.0) if relu else y
+
+
+def conv2d_bias_relu(x, w, b, stride=1, relu=True):
+    return bias_relu(conv2d(x, w, stride), b, relu)
+
+
+def depthwise_bias_relu(x, w, b, stride=1, relu=True):
+    return bias_relu(depthwise(x, w, stride), b, relu)
+
+
+def pointwise_bias_relu(x, w, b, relu=True):
+    return bias_relu(pointwise(x, w), b, relu)
+
+
+# ---------------------------------------------------------------------------
+# Intensive-fusion pairs (paper §III-B). The reference is simply the unfused
+# composition; the Pallas kernels must match it (allclose).
+# Upstream op kinds: 'conv' (RxC dense), 'dw' (depthwise), 'pw' (pointwise).
+# Downstream op kinds: 'dw', 'pw' — the two redundancy-free categories.
+# ---------------------------------------------------------------------------
+
+def apply_op(kind, x, w, b, relu=True, stride=1):
+    if kind == "conv":
+        return conv2d_bias_relu(x, w, b, stride=stride, relu=relu)
+    if kind == "dw":
+        return depthwise_bias_relu(x, w, b, stride=stride, relu=relu)
+    if kind == "pw":
+        return pointwise_bias_relu(x, w, b, relu=relu)
+    raise ValueError(f"unknown op kind {kind!r}")
+
+
+def fused_pair(up_kind, down_kind, x, w1, b1, w2, b2,
+               relu1=True, relu2=True, stride1=1):
+    """Reference for the intensively-fused pair: down(up(x)).
+
+    The intermediate is materialized here; the Pallas kernel keeps it in
+    VMEM-resident tiles and never writes it to HBM. For a downstream
+    depthwise the intermediate is zero-padded SAME-style so spatial size is
+    preserved (matching the fused kernel's halo handling)."""
+    mid = apply_op(up_kind, x, w1, b1, relu1, stride1)
+    if down_kind == "dw":
+        r2 = w2.shape[0]
+        pad = (r2 - 1) // 2
+        mid = jnp.pad(mid, ((0, 0), (pad, pad), (pad, pad), (0, 0)))
+        return depthwise_bias_relu(mid, w2, b2, stride=1, relu=relu2)
+    if down_kind == "pw":
+        return pointwise_bias_relu(mid, w2, b2, relu=relu2)
+    raise ValueError(f"downstream kind {down_kind!r} not intensive-fusable")
+
+
+def matmul_bias(x, w, b, act=None):
+    """x: (M,K) @ w: (K,N) + b, optional activation ('relu'|'gelu'|None)."""
+    y = x @ w + b
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "gelu":
+        y = jax.nn.gelu(y)
+    return y
+
+
+def fused_matmul_matmul(x, w1, b1, w2, b2, act1="relu", act2=None):
+    """Two chained matmuls (mathematically pointwise->pointwise: §III-B,
+    'matrix multiplication is mathematically equivalent to pointwise
+    convolution', so intensive fusion applies with M-row tiling)."""
+    return matmul_bias(matmul_bias(x, w1, b1, act1), w2, b2, act2)
+
+
+def softmax(x):
+    return jax.nn.softmax(x, axis=-1)
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * gamma + beta
+
+
+def attention(q, k, v, scale=None):
+    """Single-head scaled dot-product attention over (S, D) tensors."""
+    d = q.shape[-1]
+    scale = scale if scale is not None else 1.0 / jnp.sqrt(jnp.float32(d))
+    return softmax((q @ jnp.swapaxes(k, -1, -2)) * scale) @ v
+
+
+def fused_pair_s2(up_kind, x, w1, b1, w2, b2, relu1=True, relu2=True):
+    """Reference for intensive fusion with stride-2 downstream depthwise:
+    up(x) then SAME-padded stride-2 depthwise."""
+    mid = apply_op(up_kind, x, w1, b1, relu1, 1)
+    r2 = w2.shape[0]
+    h = mid.shape[1]
+    oh = -(-h // 2)
+    total = max((oh - 1) * 2 + r2 - h, 0)
+    lo = total // 2
+    mid = jnp.pad(mid, ((0, 0), (lo, total - lo), (lo, total - lo), (0, 0)))
+    return depthwise_bias_relu(mid, w2, b2, stride=2, relu=relu2)

@@ -1,0 +1,263 @@
+# L2: subgraph programs composed from the L1 Pallas kernels.
+#
+# Each entry in CATALOG is one AOT compilation unit: a jittable function plus
+# example input shapes. aot.py lowers every entry to HLO text; the rust
+# runtime (rust/src/runtime/) loads them by name via the manifest and chains
+# them according to the execution plan the coordinator emits.
+#
+# Padding is internal to each program (callers feed unpadded NHWC tensors).
+# Fused programs keep intermediates inside one kernel (never in HBM);
+# unfused programs are split into one artifact per operator so the chain
+# round-trips through host memory between ops — that is exactly the
+# locality difference the paper measures.
+
+from dataclasses import dataclass, field
+from typing import Callable, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import attention as attnk
+from .kernels import conv as convk
+from .kernels import intensive as intk
+from .kernels import matmul as mmk
+
+F32 = jnp.float32
+
+
+def sds(*shape):
+    return jax.ShapeDtypeStruct(shape, F32)
+
+
+@dataclass
+class ProgramSpec:
+    """One AOT compilation unit."""
+    name: str
+    fn: Callable
+    args: Tuple
+    tags: dict = field(default_factory=dict)
+
+
+# ---------------------------------------------------------------------------
+# Single-operator programs (conventional / epilogue fusion only). These are
+# the units of UNFUSED execution plans and of every baseline.
+# ---------------------------------------------------------------------------
+
+def prog_conv3(n, h, w, i, o, relu=True):
+    def fn(x, wt, b):
+        return (convk.conv2d_bias_relu(convk.pad_same(x, 3), wt, b,
+                                       relu=relu),)
+    return ProgramSpec(f"conv3_n{n}h{h}w{w}i{i}o{o}", fn,
+                       (sds(n, h, w, i), sds(3, 3, i, o), sds(o)),
+                       {"kind": "conv", "flops": 2 * n * h * w * o * i * 9})
+
+
+def prog_dw3(n, h, w, c, relu=True):
+    def fn(x, wt, b):
+        return (convk.depthwise_bias_relu(convk.pad_same(x, 3), wt, b,
+                                          relu=relu),)
+    return ProgramSpec(f"dw3_n{n}h{h}w{w}c{c}", fn,
+                       (sds(n, h, w, c), sds(3, 3, 1, c), sds(c)),
+                       {"kind": "dw", "flops": 2 * n * h * w * c * 9})
+
+
+def prog_pw(n, h, w, i, o, relu=True):
+    def fn(x, wt, b):
+        return (convk.pointwise_bias_relu(x, wt, b, relu=relu),)
+    return ProgramSpec(f"pw_n{n}h{h}w{w}i{i}o{o}", fn,
+                       (sds(n, h, w, i), sds(i, o), sds(o)),
+                       {"kind": "pw", "flops": 2 * n * h * w * i * o})
+
+
+def prog_add(n, h, w, c):
+    def fn(a, b):
+        return (a + b,)
+    return ProgramSpec(f"add_n{n}h{h}w{w}c{c}", fn,
+                       (sds(n, h, w, c), sds(n, h, w, c)),
+                       {"kind": "add", "flops": n * h * w * c})
+
+
+def prog_matmul(m, k, n, act=None):
+    a = act or "none"
+
+    def fn(x, wt, b):
+        return (mmk.matmul_bias(x, wt, b, act=act),)
+    return ProgramSpec(f"mm_m{m}k{k}n{n}_{a}", fn,
+                       (sds(m, k), sds(k, n), sds(n)),
+                       {"kind": "mm", "flops": 2 * m * k * n})
+
+
+# ---------------------------------------------------------------------------
+# Intensively-fused pair programs (the paper's contribution as artifacts).
+# ---------------------------------------------------------------------------
+
+_W1 = {"conv": lambda i, o: sds(3, 3, i, o),
+       "dw": lambda i, o: sds(3, 3, 1, i),
+       "pw": lambda i, o: sds(i, o)}
+_W2 = {"dw": lambda m, o: sds(3, 3, 1, m),
+       "pw": lambda m, o: sds(m, o)}
+
+
+def prog_fused_pair(up, down, n, h, w, i, o1, o2):
+    """up in {conv,dw,pw}, down in {dw,pw}. o1 = upstream out channels
+    (== i for dw upstream), o2 = downstream out channels (== o1 for dw)."""
+    o1 = i if up == "dw" else o1
+    o2 = o1 if down == "dw" else o2
+
+    def fn(x, w1, b1, w2, b2):
+        xp = intk.pad_for_fused(up, down, x, w1, w2)
+        return (intk.fused_pair(up, down, xp, w1, b1, w2, b2),)
+    return ProgramSpec(
+        f"fused_{up}_{down}_n{n}h{h}w{w}i{i}a{o1}b{o2}", fn,
+        (sds(n, h, w, i), _W1[up](i, o1), sds(o1), _W2[down](o1, o2),
+         sds(o2)),
+        {"kind": f"fused_{up}_{down}"})
+
+
+def prog_fused_dw_s2(up, n, h, w, i, o1):
+    """Intensive fusion with a stride-2 downstream depthwise (MobileNet
+    downsampling): up in {pw, conv, dw}."""
+    o1 = i if up == "dw" else o1
+
+    def fn(x, w1, b1, w2, b2):
+        xp = intk.pad_for_fused(up, "dw", x, w1, w2)
+        return (intk.fused_down_dw_s2(up, xp, w1, b1, w2, b2),)
+    return ProgramSpec(
+        f"fuseds2_{up}_dw_n{n}h{h}w{w}i{i}a{o1}", fn,
+        (sds(n, h, w, i), _W1[up](i, o1), sds(o1), sds(3, 3, 1, o1),
+         sds(o1)),
+        {"kind": f"fuseds2_{up}_dw"})
+
+
+def prog_dw3_s2(n, h, w, c):
+    def fn(x, wt, b):
+        return (convk.depthwise_s2_bias_relu(convk.pad_same_s2(x, 3), wt,
+                                             b),)
+    return ProgramSpec(f"dw3s2_n{n}h{h}w{w}c{c}", fn,
+                       (sds(n, h, w, c), sds(3, 3, 1, c), sds(c)),
+                       {"kind": "dw_s2"})
+
+
+def prog_fused_mm_mm(m, k, n1, n2, act1="relu", act2=None):
+    def fn(x, w1, b1, w2, b2):
+        return (intk.fused_matmul_matmul(x, w1, b1, w2, b2, act1, act2),)
+    return ProgramSpec(f"fused_mm_mm_m{m}k{k}a{n1}b{n2}", fn,
+                       (sds(m, k), sds(k, n1), sds(n1), sds(n1, n2),
+                        sds(n2)),
+                       {"kind": "fused_mm_mm"})
+
+
+# ---------------------------------------------------------------------------
+# Composite blocks (E2E driver units).
+# ---------------------------------------------------------------------------
+
+def prog_mbn_block_fused(n, h, w, c, e):
+    """MobileNet-V2 inverted residual, stride 1, expansion e, FUSED:
+    intensive(pw expand -> dw 3x3) in one kernel, then pw project + residual
+    add in a second kernel chain (still conventional-fused epilogues)."""
+    m = c * e
+
+    def fn(x, w1, b1, w2, b2, w3, b3):
+        xp = intk.pad_for_fused("pw", "dw", x, w1, w2)
+        mid = intk.fused_pair("pw", "dw", xp, w1, b1, w2, b2)
+        y = convk.pointwise_bias_relu(mid, w3, b3, relu=False)
+        return (y + x,)
+    return ProgramSpec(
+        f"mbnblk_fused_n{n}h{h}w{w}c{c}e{e}", fn,
+        (sds(n, h, w, c), sds(c, m), sds(m), sds(3, 3, 1, m), sds(m),
+         sds(m, c), sds(c)),
+        {"kind": "mbn_block_fused"})
+
+
+def prog_attention(s, d):
+    """Single-head attention (Bert-tiny unit), Pallas row-band online
+    softmax: q,k,v (S,D) -> (S,D)."""
+    def fn(q, k, v):
+        return (attnk.attention(q, k, v),)
+    return ProgramSpec(f"attn_s{s}d{d}", fn, (sds(s, d), sds(s, d),
+                                              sds(s, d)),
+                       {"kind": "attn"})
+
+
+def prog_layernorm(s, d):
+    def fn(x, g, b):
+        return (attnk.layernorm(x, g, b),)
+    return ProgramSpec(f"ln_s{s}d{d}", fn, (sds(s, d), sds(d), sds(d)),
+                       {"kind": "ln"})
+
+
+# ---------------------------------------------------------------------------
+# The artifact catalog. Shapes are the scaled-down benchmark set (DESIGN.md:
+# CPU-interpret execution keeps spatial extents modest; the cost model, not
+# wall-clock of these artifacts, produces the cross-device tables).
+# ---------------------------------------------------------------------------
+
+def build_catalog() -> List[ProgramSpec]:
+    cat: List[ProgramSpec] = []
+
+    # --- E2E MobileNet-ish driver units (small shape, batch 1) ---
+    # stem
+    cat.append(prog_conv3(1, 28, 28, 3, 16))
+    # inverted-residual stages: (h, c, e)
+    stages = [(28, 16, 2), (14, 24, 2), (7, 32, 2)]
+    for h, c, e in stages:
+        m = c * e
+        cat.append(prog_mbn_block_fused(1, h, h, c, e))
+        # unfused pieces of the same block
+        cat.append(prog_pw(1, h, h, c, m))
+        cat.append(prog_dw3(1, h, h, m))
+        cat.append(prog_pw(1, h, h, m, c, relu=False))
+        cat.append(prog_add(1, h, h, c))
+        # intensively-fused pair alone (reformer JOIN output unit)
+        cat.append(prog_fused_pair("pw", "dw", 1, h, h, c, m, m))
+    # stage transitions (channel changes, no residual)
+    cat.append(prog_pw(1, 28, 28, 16, 24))
+    cat.append(prog_pw(1, 14, 14, 24, 32))
+    cat.append(prog_pw(1, 14, 14, 32, 24, relu=False))
+    cat.append(prog_pw(1, 7, 7, 48, 32, relu=False))
+
+    # --- Fig. 13 micro-benchmark subgraphs: 2 complex ops, B in {1, 4} ---
+    for b in (1, 4):
+        hw, c = 14, 32
+        cat.append(prog_fused_pair("dw", "dw", b, hw, hw, c, c, c))
+        cat.append(prog_fused_pair("dw", "pw", b, hw, hw, c, c, 2 * c))
+        cat.append(prog_fused_pair("pw", "dw", b, hw, hw, c, 2 * c, 2 * c))
+        cat.append(prog_fused_pair("pw", "pw", b, hw, hw, c, 2 * c, c))
+        # unfused counterparts
+        cat.append(prog_dw3(b, hw, hw, c))
+        cat.append(prog_pw(b, hw, hw, c, 2 * c))
+        cat.append(prog_pw(b, hw, hw, 2 * c, c))
+        cat.append(prog_dw3(b, hw, hw, 2 * c))
+
+    # --- stride-2 downsampling blocks (fused + unfused) ---
+    cat.append(prog_fused_dw_s2("pw", 1, 28, 28, 16, 32))
+    cat.append(prog_fused_dw_s2("pw", 1, 14, 14, 24, 48))
+    cat.append(prog_dw3_s2(1, 28, 28, 32))
+    cat.append(prog_dw3_s2(1, 14, 14, 48))
+
+    # --- Bert-tiny units (seq 128, hidden 128, ffn 512, heads 2 x 64) ---
+    s, d, f = 128, 128, 512
+    cat.append(prog_attention(s, 64))
+    cat.append(prog_layernorm(s, d))
+    cat.append(prog_matmul(s, d, d))                       # qkv/out proj
+    cat.append(prog_matmul(s, d, f, act="gelu"))           # ffn up
+    cat.append(prog_matmul(s, f, d))                       # ffn down
+    cat.append(prog_fused_mm_mm(s, d, f, d, act1="gelu"))  # fused ffn
+
+    # de-dup by name (stage shapes can repeat)
+    seen, out = set(), []
+    for p in cat:
+        if p.name not in seen:
+            seen.add(p.name)
+            out.append(p)
+    return out
+
+
+CATALOG = build_catalog()
+
+
+def by_name(name: str) -> ProgramSpec:
+    for p in CATALOG:
+        if p.name == name:
+            return p
+    raise KeyError(name)

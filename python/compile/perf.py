@@ -1,0 +1,125 @@
+# L1/L2 perf analysis (build-time):
+#
+#   L1 — per-kernel VMEM footprint and MXU-utilization ESTIMATES derived
+#        from the BlockSpec tiling (interpret=True gives CPU-numpy timings
+#        only, which are NOT a TPU proxy; we optimize structure, DESIGN.md
+#        §Hardware-Adaptation). A kernel "fits" if one grid step's blocks
+#        stay under the 16 MiB VMEM class budget.
+#
+#   L2 — HLO-level checks on the lowered artifacts: the intensive-fusion
+#        redundancy-free property shows up as NO duplicated upstream
+#        contraction (one dot per conv step), and fusion shows up as the
+#        absence of intermediate round-trips to HBM-visible buffers.
+#
+# Usage: cd python && python -m compile.perf [--artifacts ../artifacts]
+
+import argparse
+import os
+import re
+
+from . import model
+
+VMEM_BUDGET = 16 * 1024 * 1024  # bytes, v4-class VMEM
+
+
+def block_bytes(shape):
+    n = 1
+    for d in shape:
+        n *= d
+    return 4 * n  # f32
+
+
+def kernel_estimates(spec: model.ProgramSpec):
+    """Estimate one grid step's VMEM residency + MXU share for a catalog
+    program from its input/output shapes and kind tag."""
+    kind = spec.tags.get("kind", "")
+    shapes = [tuple(a.shape) for a in spec.args]
+    x = shapes[0]
+    if kind.startswith("fused_") and not kind.startswith("fused_mm"):
+        # category (a)/(b) fused pair: upstream tile (full spatial or row
+        # band) + weights + downstream tile
+        n, h, w, ci = x
+        up = kind.split("_")[1]
+        down = kind.split("_")[2]
+        o1 = shapes[1][-1] if up != "dw" else ci
+        if down == "dw":
+            # full-spatial per channel block (Fig. 7(a)), tc<=16
+            tc = min(16, o1)
+            vmem = block_bytes((h, w, ci)) + block_bytes((h, w, tc)) * 2 \
+                + block_bytes(shapes[1]) + block_bytes(shapes[3])
+            mxu = 0.9 if up in ("pw", "conv") else 0.2
+        else:
+            # row band, O2 whole (Fig. 7(b))
+            o2 = shapes[3][-1]
+            th = max(1, min(8, h))
+            vmem = block_bytes((th + 2, w, ci)) + block_bytes((th, w, o1)) \
+                + block_bytes((th, w, o2)) + block_bytes(shapes[1]) \
+                + block_bytes(shapes[3])
+            mxu = 0.9
+        return vmem, mxu
+    if kind in ("conv", "pw", "mm", "fused_mm_mm"):
+        # row-band tiling, full weights resident
+        vmem = sum(block_bytes(s) for s in shapes[1:])
+        if kind == "conv":
+            n, h, w, ci = x
+            vmem += block_bytes((min(10, h), w, ci)) * 2
+        else:
+            vmem += block_bytes(x) // max(1, x[0])
+        return vmem, 0.9
+    if kind == "dw":
+        n, h, w, c = x
+        return block_bytes((min(10, h), w, c)) * 2, 0.15
+    # simple ops
+    return block_bytes(x) * 2, 0.0
+
+
+def analyze_hlo(path):
+    """Count structural signals in one HLO artifact."""
+    text = open(path).read()
+    return {
+        "dots": len(re.findall(r"= f32.* dot\(", text)),
+        "convs": len(re.findall(r"convolution\(", text)),
+        "whiles": len(re.findall(r"while\(", text)),
+        "lines": text.count("\n"),
+    }
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default="../artifacts")
+    args = ap.parse_args()
+
+    print(f"{'kernel':44} {'VMEM/step':>10} {'fits':>5} {'MXU est':>8}")
+    print("-" * 72)
+    worst = 0
+    for spec in model.CATALOG:
+        vmem, mxu = kernel_estimates(spec)
+        worst = max(worst, vmem)
+        print(f"{spec.name:44} {vmem/1024:8.1f}KB "
+              f"{'yes' if vmem <= VMEM_BUDGET else 'NO':>5} {mxu:8.2f}")
+    print(f"\nmax VMEM/step = {worst/1024:.1f} KB "
+          f"(budget {VMEM_BUDGET//1024} KB) -> "
+          f"{'all kernels fit' if worst <= VMEM_BUDGET else 'OVERFLOW'}")
+
+    # L2: HLO structure of fused vs unfused pairs
+    mdir = args.artifacts
+    if os.path.exists(os.path.join(mdir, "manifest.json")):
+        print("\nHLO structure (fused artifact vs its unfused chain):")
+        triples = [
+            ("fused_pw_dw_n1h14w14i24a48b48",
+             ["pw_n1h14w14i24o48", "dw3_n1h14w14c48"]),
+            ("fused_mm_mm_m128k128a512b128",
+             ["mm_m128k128n512_gelu", "mm_m128k512n128_none"]),
+        ]
+        for fused, chain in triples:
+            fstats = analyze_hlo(os.path.join(mdir, fused + ".hlo.txt"))
+            cstats = [analyze_hlo(os.path.join(mdir, c + ".hlo.txt"))
+                      for c in chain]
+            cd = sum(c["dots"] for c in cstats)
+            print(f"  {fused}: dots={fstats['dots']} "
+                  f"(chain total {cd}) — no contraction duplicated "
+                  f"{'OK' if fstats['dots'] <= cd else 'REDUNDANT!'}")
+
+
+if __name__ == "__main__":
+    main()

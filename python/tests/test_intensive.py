@@ -1,0 +1,147 @@
+# Intensive-fusion Pallas kernels vs the unfused oracle composition —
+# validates the paper's §III-B claim: fusing two complex operators changes
+# neither numerics nor (by construction of the tiling) total upstream work.
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv, intensive, ref
+
+# Two chained reductions (up to 9*C-term accumulations feeding another
+# reduction) reorder differently between the fused and unfused programs.
+RTOL = ATOL = 5e-4
+
+
+def rnd(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+def check(got, want):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=RTOL, atol=ATOL)
+
+
+def make_pair(rng, up, down, i, o1, o2):
+    o1 = i if up == "dw" else o1
+    o2 = o1 if down == "dw" else o2
+    w1 = {"conv": lambda: rnd(rng, 3, 3, i, o1),
+          "dw": lambda: rnd(rng, 3, 3, 1, i),
+          "pw": lambda: rnd(rng, i, o1)}[up]()
+    b1 = rnd(rng, o1)
+    w2 = rnd(rng, 3, 3, 1, o1) if down == "dw" else rnd(rng, o1, o2)
+    b2 = rnd(rng, o1 if down == "dw" else o2)
+    return w1, b1, w2, b2
+
+
+def run_both(up, down, x, w1, b1, w2, b2, relu1=True, relu2=True):
+    xf = intensive.pad_for_fused(up, down, x, w1, w2)
+    got = intensive.fused_pair(up, down, xf, w1, b1, w2, b2,
+                               relu1=relu1, relu2=relu2)
+    r1 = w1.shape[0] if up in ("conv", "dw") else 1
+    xr = conv.pad_same(x, r1) if r1 > 1 else x
+    want = ref.fused_pair(up, down, xr, w1, b1, w2, b2,
+                          relu1=relu1, relu2=relu2)
+    return got, want
+
+
+ALL_PAIRS = [("dw", "dw"), ("dw", "pw"), ("pw", "dw"), ("pw", "pw"),
+             ("conv", "dw"), ("conv", "pw")]
+
+
+@pytest.mark.parametrize("up,down", ALL_PAIRS)
+@pytest.mark.parametrize("n,hw,c", [(1, 14, 32), (4, 14, 32), (2, 8, 8)])
+def test_fused_pair_catalog_shapes(up, down, n, hw, c):
+    rng = np.random.default_rng(7)
+    x = rnd(rng, n, hw, hw, c)
+    w1, b1, w2, b2 = make_pair(rng, up, down, c, 2 * c, c)
+    got, want = run_both(up, down, x, w1, b1, w2, b2)
+    check(got, want)
+
+
+@pytest.mark.parametrize("up,down", ALL_PAIRS)
+def test_fused_pair_no_relu(up, down):
+    rng = np.random.default_rng(8)
+    x = rnd(rng, 1, 8, 8, 8)
+    w1, b1, w2, b2 = make_pair(rng, up, down, 8, 16, 8)
+    got, want = run_both(up, down, x, w1, b1, w2, b2,
+                         relu1=False, relu2=False)
+    check(got, want)
+
+
+@settings(max_examples=24, deadline=None)
+@given(pair=st.sampled_from(ALL_PAIRS),
+       n=st.integers(1, 2),
+       hw=st.integers(4, 12),
+       i=st.sampled_from([2, 4, 8]),
+       o1=st.sampled_from([4, 8, 12]),
+       o2=st.sampled_from([2, 4, 8]),
+       seed=st.integers(0, 2**31))
+def test_fused_pair_shape_sweep(pair, n, hw, i, o1, o2, seed):
+    up, down = pair
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, n, hw, hw, i)
+    w1, b1, w2, b2 = make_pair(rng, up, down, i, o1, o2)
+    got, want = run_both(up, down, x, w1, b1, w2, b2)
+    check(got, want)
+
+
+def test_fused_pair_rejects_downstream_conv():
+    rng = np.random.default_rng(9)
+    x = rnd(rng, 1, 8, 8, 4)
+    with pytest.raises(ValueError):
+        intensive.fused_pair("pw", "conv", x, rnd(rng, 4, 8), rnd(rng, 8),
+                             rnd(rng, 3, 3, 8, 8), rnd(rng, 8))
+
+
+@settings(max_examples=16, deadline=None)
+@given(m=st.sampled_from([16, 32, 64, 128]),
+       k=st.sampled_from([8, 32, 128]),
+       n1=st.sampled_from([16, 64, 512]),
+       n2=st.sampled_from([8, 128]),
+       act1=st.sampled_from(["relu", "gelu", None]),
+       seed=st.integers(0, 2**31))
+def test_fused_matmul_matmul(m, k, n1, n2, act1, seed):
+    rng = np.random.default_rng(seed)
+    x, w1, b1 = rnd(rng, m, k), rnd(rng, k, n1), rnd(rng, n1)
+    w2, b2 = rnd(rng, n1, n2), rnd(rng, n2)
+    got = intensive.fused_matmul_matmul(x, w1, b1, w2, b2, act1=act1)
+    want = ref.fused_matmul_matmul(x, w1, b1, w2, b2, act1=act1)
+    # gelu(tanh approx) on big K accumulates a bit more error
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+# --- stride-2 downstream depthwise (MobileNet downsampling) ----------------
+
+@pytest.mark.parametrize("up", ["pw", "dw", "conv"])
+@pytest.mark.parametrize("n,hw,c", [(1, 14, 16), (2, 8, 8), (1, 13, 4)])
+def test_fused_down_dw_s2(up, n, hw, c):
+    rng = np.random.default_rng(21)
+    x = rnd(rng, n, hw, hw, c)
+    w1 = {"pw": rnd(rng, c, 2 * c), "dw": rnd(rng, 3, 3, 1, c),
+          "conv": rnd(rng, 3, 3, c, 2 * c)}[up]
+    oc = c if up == "dw" else 2 * c
+    b1 = rnd(rng, oc)
+    w2, b2 = rnd(rng, 3, 3, 1, oc), rnd(rng, oc)
+    xf = intensive.pad_for_fused(up, "dw", x, w1, w2)
+    got = intensive.fused_down_dw_s2(up, xf, w1, b1, w2, b2)
+    r1 = w1.shape[0] if up in ("conv", "dw") else 1
+    xr = conv.pad_same(x, r1) if r1 > 1 else x
+    want = ref.fused_pair_s2(up, xr, w1, b1, w2, b2)
+    check(got, want)
+    assert got.shape[1] == (hw + 1) // 2
+
+
+@settings(max_examples=12, deadline=None)
+@given(n=st.integers(1, 2), hw=st.integers(4, 12),
+       c=st.sampled_from([2, 4, 8]), seed=st.integers(0, 2**31))
+def test_fused_pw_dw_s2_sweep(n, hw, c, seed):
+    rng = np.random.default_rng(seed)
+    x = rnd(rng, n, hw, hw, c)
+    w1, b1 = rnd(rng, c, 2 * c), rnd(rng, 2 * c)
+    w2, b2 = rnd(rng, 3, 3, 1, 2 * c), rnd(rng, 2 * c)
+    got = intensive.fused_down_dw_s2("pw", x, w1, b1, w2, b2)
+    want = ref.fused_pair_s2("pw", x, w1, b1, w2, b2)
+    check(got, want)

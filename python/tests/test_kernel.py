@@ -1,0 +1,174 @@
+# Pallas single-op kernels vs the pure-jnp oracle — the CORE correctness
+# signal for L1. Hypothesis sweeps shapes; fixed cases pin the exact
+# benchmark shapes used by the artifact catalog.
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import conv, ref
+
+RTOL = ATOL = 3e-5
+
+
+def rnd(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+def check(got, want):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=RTOL, atol=ATOL)
+
+
+# --- fixed catalog shapes -------------------------------------------------
+
+@pytest.mark.parametrize("n,h,w,i,o", [(1, 28, 28, 3, 16), (1, 8, 8, 4, 8),
+                                       (2, 12, 12, 8, 16)])
+@pytest.mark.parametrize("relu", [True, False])
+def test_conv2d_bias_relu(n, h, w, i, o, relu):
+    rng = np.random.default_rng(0)
+    x, wt, b = rnd(rng, n, h, w, i), rnd(rng, 3, 3, i, o), rnd(rng, o)
+    xp = conv.pad_same(x, 3)
+    check(conv.conv2d_bias_relu(xp, wt, b, relu=relu),
+          ref.conv2d_bias_relu(xp, wt, b, relu=relu))
+
+
+@pytest.mark.parametrize("n,h,w,c", [(1, 14, 14, 32), (4, 14, 14, 64),
+                                     (1, 7, 7, 16)])
+@pytest.mark.parametrize("relu", [True, False])
+def test_depthwise_bias_relu(n, h, w, c, relu):
+    rng = np.random.default_rng(1)
+    x, wt, b = rnd(rng, n, h, w, c), rnd(rng, 3, 3, 1, c), rnd(rng, c)
+    xp = conv.pad_same(x, 3)
+    check(conv.depthwise_bias_relu(xp, wt, b, relu=relu),
+          ref.depthwise_bias_relu(xp, wt, b, relu=relu))
+
+
+@pytest.mark.parametrize("n,h,w,i,o", [(1, 28, 28, 16, 32), (4, 14, 14, 32, 64),
+                                       (1, 7, 7, 64, 32)])
+@pytest.mark.parametrize("relu", [True, False])
+def test_pointwise_bias_relu(n, h, w, i, o, relu):
+    rng = np.random.default_rng(2)
+    x, wt, b = rnd(rng, n, h, w, i), rnd(rng, i, o), rnd(rng, o)
+    check(conv.pointwise_bias_relu(x, wt, b, relu=relu),
+          ref.pointwise_bias_relu(x, wt, b, relu=relu))
+
+
+# --- hypothesis shape sweeps ------------------------------------------------
+
+dims = st.integers(min_value=1, max_value=3)
+spatial = st.integers(min_value=3, max_value=14)
+chans = st.sampled_from([1, 3, 4, 8, 16])
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=dims, h=spatial, w=spatial, i=chans, o=chans,
+       r=st.sampled_from([1, 3, 5]), seed=st.integers(0, 2**31))
+def test_conv2d_shapes(n, h, w, i, o, r, seed):
+    rng = np.random.default_rng(seed)
+    x, wt, b = rnd(rng, n, h, w, i), rnd(rng, r, r, i, o), rnd(rng, o)
+    xp = conv.pad_same(x, r)
+    check(conv.conv2d_bias_relu(xp, wt, b),
+          ref.conv2d_bias_relu(xp, wt, b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=dims, h=spatial, w=spatial, c=chans,
+       r=st.sampled_from([3, 5]), seed=st.integers(0, 2**31))
+def test_depthwise_shapes(n, h, w, c, r, seed):
+    rng = np.random.default_rng(seed)
+    x, wt, b = rnd(rng, n, h, w, c), rnd(rng, r, r, 1, c), rnd(rng, c)
+    xp = conv.pad_same(x, r)
+    check(conv.depthwise_bias_relu(xp, wt, b),
+          ref.depthwise_bias_relu(xp, wt, b))
+
+
+@settings(max_examples=20, deadline=None)
+@given(n=dims, h=spatial, w=spatial, i=chans, o=chans,
+       seed=st.integers(0, 2**31))
+def test_pointwise_shapes(n, h, w, i, o, seed):
+    rng = np.random.default_rng(seed)
+    x, wt, b = rnd(rng, n, h, w, i), rnd(rng, i, o), rnd(rng, o)
+    check(conv.pointwise_bias_relu(x, wt, b),
+          ref.pointwise_bias_relu(x, wt, b))
+
+
+# --- row_tile invariants ----------------------------------------------------
+
+@settings(max_examples=50, deadline=None)
+@given(h=st.integers(1, 256), target=st.integers(1, 32))
+def test_row_tile_divides(h, target):
+    t = conv.row_tile(h, target)
+    assert 1 <= t <= max(target, 1)
+    assert h % t == 0
+
+
+# --- stride-2 depthwise -----------------------------------------------------
+
+@pytest.mark.parametrize("n,h,c", [(1, 14, 32), (2, 13, 8), (1, 8, 16)])
+def test_depthwise_s2(n, h, c):
+    rng = np.random.default_rng(31)
+    x, wt, b = rnd(rng, n, h, h, c), rnd(rng, 3, 3, 1, c), rnd(rng, c)
+    xp = conv.pad_same_s2(x, 3)
+    check(conv.depthwise_s2_bias_relu(xp, wt, b),
+          ref.depthwise_bias_relu(xp, wt, b, stride=2))
+
+
+@settings(max_examples=15, deadline=None)
+@given(n=dims, h=st.integers(4, 14), c=chans, seed=st.integers(0, 2**31))
+def test_depthwise_s2_shapes(n, h, c, seed):
+    rng = np.random.default_rng(seed)
+    x, wt, b = rnd(rng, n, h, h, c), rnd(rng, 3, 3, 1, c), rnd(rng, c)
+    xp = conv.pad_same_s2(x, 3)
+    got = conv.depthwise_s2_bias_relu(xp, wt, b)
+    check(got, ref.depthwise_bias_relu(xp, wt, b, stride=2))
+    assert got.shape[1] == (h + 1) // 2
+
+
+# --- attention / layernorm / softmax Pallas kernels -------------------------
+
+from compile.kernels import attention as attnk
+
+
+@pytest.mark.parametrize("s,d", [(128, 64), (64, 32), (16, 8)])
+def test_attention_kernel(s, d):
+    rng = np.random.default_rng(41)
+    q, k, v = rnd(rng, s, d), rnd(rng, s, d), rnd(rng, s, d)
+    got = attnk.attention(q, k, v)
+    want = ref.attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=15, deadline=None)
+@given(s=st.sampled_from([8, 32, 96, 128]),
+       d=st.sampled_from([4, 16, 64]),
+       seed=st.integers(0, 2**31))
+def test_attention_kernel_sweep(s, d, seed):
+    rng = np.random.default_rng(seed)
+    q, k, v = rnd(rng, s, d), rnd(rng, s, d), rnd(rng, s, d)
+    got = attnk.attention(q, k, v)
+    want = ref.attention(q, k, v)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("s,d", [(128, 128), (32, 16)])
+def test_layernorm_kernel(s, d):
+    rng = np.random.default_rng(42)
+    x, g, b = rnd(rng, s, d), rnd(rng, d), rnd(rng, d)
+    got = attnk.layernorm(x, g, b)
+    want = ref.layernorm(x, g, b)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("s,n", [(128, 128), (16, 64)])
+def test_softmax_kernel(s, n):
+    rng = np.random.default_rng(43)
+    x = rnd(rng, s, n)
+    got = attnk.softmax(x)
+    want = ref.softmax(x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-5, atol=1e-5)

@@ -1,0 +1,69 @@
+//! Design-choice ablations DESIGN.md calls out (beyond the paper's own
+//! Fig. 13): the reformer's budget split fraction, and cost-model-vs-
+//! cache-simulator agreement on the fusion saving.
+
+use ago::device::DeviceProfile;
+use ago::experiments::micro_subgraphs;
+use ago::reformer::{tune_with_reformer, ReformerConfig};
+use ago::simulator::{trace, Hierarchy};
+use ago::tuner::search::SearchConfig;
+use ago::util::benchkit::Table;
+use ago::util::stats::geomean;
+
+fn main() {
+    // --- reformer split-fraction sweep (budget-starved regime) ---------
+    let dev = DeviceProfile::qsd810();
+    let budget = 120;
+    println!("== reformer split_fraction sweep (budget {budget}) ==");
+    let mut t = Table::new(&["split", "geomean latency (4 subgraphs, ms)"]);
+    for frac in [0.25, 0.5, 0.75] {
+        let mut lats = Vec::new();
+        for ms in micro_subgraphs(4) {
+            let mut per_seed = Vec::new();
+            for seed in [1u64, 2, 3] {
+                let cfg = ReformerConfig {
+                    split_fraction: frac,
+                    search: SearchConfig {
+                        budget,
+                        stabilize_window: budget,
+                        seed,
+                        ..Default::default()
+                    },
+                    enabled: true,
+                };
+                let r = tune_with_reformer(&ms.graph, &ms.view, &dev, &cfg);
+                per_seed.push(r.best_latency * 1e3);
+            }
+            lats.push(geomean(&per_seed));
+        }
+        t.row(vec![format!("{frac:.2}"), format!("{:.4}", geomean(&lats))]);
+    }
+    t.print();
+
+    // --- cost model vs cache simulator: fusion saving agreement --------
+    println!("\n== trace-driven simulator: intermediate round-trip ==");
+    let mut t = Table::new(&[
+        "intermediate", "unfused DRAM lines", "fused DRAM lines", "saving",
+    ]);
+    for elems in [64 * 1024, 512 * 1024, 4 * 1024 * 1024] {
+        let mut unfused = Hierarchy::for_device(&dev);
+        trace::producer_consumer(&mut unfused, 0, elems);
+        let mut fused = Hierarchy::for_device(&dev);
+        trace::fused_producer_consumer(&mut fused, 0, elems, 2048);
+        t.row(vec![
+            format!("{} KB", elems * 4 / 1024),
+            unfused.dram_accesses.to_string(),
+            fused.dram_accesses.to_string(),
+            format!(
+                "{:.1}x",
+                unfused.dram_accesses.max(1) as f64
+                    / fused.dram_accesses.max(1) as f64
+            ),
+        ]);
+    }
+    t.print();
+    println!(
+        "\n(the cost model's fusion term prices exactly this saving; see \
+         costmodel tests for the cross-check)"
+    );
+}

@@ -1,0 +1,27 @@
+//! Fig. 10 — end-to-end inference on the Snapdragon 810 profile:
+//! MBN/MNSN/SQN/SFN at small/middle/large input shapes, Torch-Mobile-like
+//! hand library vs Ansor-like tuner vs AGO.
+//!
+//! `AGO_BENCH_BUDGET` scales the tuning budget (default 20000, the
+//! paper's setting).
+
+use ago::device::DeviceProfile;
+use ago::experiments::{bench_budget, e2e_rows, render_e2e};
+use ago::models::{InputShape, ModelId};
+
+fn main() {
+    let dev = DeviceProfile::qsd810();
+    let budget = bench_budget();
+    println!("budget = {budget} evals\n");
+    let rows = e2e_rows(
+        &dev,
+        budget,
+        &ModelId::classical(),
+        &[InputShape::Small, InputShape::Middle, InputShape::Large],
+    );
+    print!("{}", render_e2e(&rows, dev.name));
+    println!(
+        "\npaper (Fig. 10): avg 1.5x/1.6x/1.8x vs Torch Mobile across the \
+         three shapes; avg 1.2x vs Ansor on each"
+    );
+}

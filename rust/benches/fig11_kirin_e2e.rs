@@ -1,0 +1,23 @@
+//! Fig. 11 — end-to-end inference on the Kirin 990 profile (same grid as
+//! Fig. 10 on the high-end device).
+
+use ago::device::DeviceProfile;
+use ago::experiments::{bench_budget, e2e_rows, render_e2e};
+use ago::models::{InputShape, ModelId};
+
+fn main() {
+    let dev = DeviceProfile::kirin990();
+    let budget = bench_budget();
+    println!("budget = {budget} evals\n");
+    let rows = e2e_rows(
+        &dev,
+        budget,
+        &ModelId::classical(),
+        &[InputShape::Small, InputShape::Middle, InputShape::Large],
+    );
+    print!("{}", render_e2e(&rows, dev.name));
+    println!(
+        "\npaper (Fig. 11): avg 1.9x/2.1x/1.5x vs Torch Mobile; \
+         2.6x/1.6x/1.1x vs Ansor across the three shapes"
+    );
+}

@@ -1,0 +1,25 @@
+//! Fig. 12 — the "emerging new networks": Bert-tiny (seq 128, both
+//! devices) and MobileViT (224, Kirin only — the paper skips MVT on the
+//! resource-limited 810).
+
+use ago::device::DeviceProfile;
+use ago::experiments::{bench_budget, e2e_rows, render_e2e};
+use ago::models::{InputShape, ModelId};
+
+fn main() {
+    let budget = bench_budget();
+    println!("budget = {budget} evals\n");
+    for dev in [DeviceProfile::qsd810(), DeviceProfile::kirin990()] {
+        let mut models = vec![ModelId::Bt];
+        if dev.name == "kirin990" {
+            models.push(ModelId::Mvt);
+        }
+        let rows = e2e_rows(&dev, budget, &models, &[InputShape::Large]);
+        print!("{}", render_e2e(&rows, dev.name));
+        println!();
+    }
+    println!(
+        "paper (Fig. 12): +38.2% over Torch Mobile / +20.5% over Ansor on \
+         BT; +34.3% / +29.1% on MVT"
+    );
+}

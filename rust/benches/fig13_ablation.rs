@@ -1,0 +1,95 @@
+//! Fig. 13 — ablation on four two-complex-operator subgraphs
+//! (dw+dw, dw+pw, pw+dw, pw+pw) at batch 1 and 4:
+//! AGO vs AGO-NI (no intensive fusion) vs AGO-NR (no reformer),
+//! budget 2000 per the paper, both device profiles.
+//!
+//! A second section executes the corresponding AOT artifacts for REAL on
+//! the PJRT CPU: fused pair kernel vs per-op chain wall-clock.
+
+use std::time::Instant;
+
+use ago::device::DeviceProfile;
+use ago::experiments::fig13_table;
+use ago::runtime::{Engine, TensorData};
+use ago::util::Rng;
+
+fn real_execution_section() {
+    let dir = std::env::var("AGO_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into());
+    let Ok(mut e) = Engine::new(&dir) else {
+        println!("(artifacts not built; skipping real-execution section)");
+        return;
+    };
+    println!("\n== real PJRT execution: fused kernel vs unfused chain ==");
+    let mut rng = Rng::new(3);
+    for b in [1usize, 4] {
+        // pw->dw at 14x14, 32->64ch (catalog shapes)
+        let fused = format!("fused_pw_dw_n{b}h14w14i32a64b64");
+        let x = TensorData::random(&[b, 14, 14, 32], &mut rng);
+        let w1 = TensorData::random(&[32, 64], &mut rng);
+        let b1 = TensorData::random(&[64], &mut rng);
+        let w2 = TensorData::random(&[3, 3, 1, 64], &mut rng);
+        let b2 = TensorData::random(&[64], &mut rng);
+        let fin = vec![x.clone(), w1.clone(), b1.clone(), w2.clone(),
+                       b2.clone()];
+        let pw = format!("pw_n{b}h14w14i32o64");
+        let dw = format!("dw3_n{b}h14w14c64");
+        // warmup both paths
+        e.execute(&fused, &fin).unwrap();
+        let m = e.execute(&pw, &[x.clone(), w1.clone(), b1.clone()])
+            .unwrap()
+            .remove(0);
+        e.execute(&dw, &[m, w2.clone(), b2.clone()]).unwrap();
+        let reps = 60;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            e.execute(&fused, &fin).unwrap();
+        }
+        let tf = t0.elapsed().as_secs_f64() / reps as f64 * 1e3;
+        let t0 = Instant::now();
+        for _ in 0..reps {
+            let m = e
+                .execute(&pw, &[x.clone(), w1.clone(), b1.clone()])
+                .unwrap()
+                .remove(0);
+            e.execute(&dw, &[m, w2.clone(), b2.clone()]).unwrap();
+        }
+        let tu = t0.elapsed().as_secs_f64() / reps as f64 * 1e3;
+        println!(
+            "pw+dw B={b}: fused {tf:.3} ms, unfused {tu:.3} ms \
+             ({:.2}x)",
+            tu / tf
+        );
+    }
+}
+
+fn main() {
+    let budget: usize = std::env::var("AGO_BENCH_BUDGET")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(2000); // the paper's Fig. 13 budget
+    println!("budget = {budget} evals per variant (paper: 2000)\n");
+    for dev in [DeviceProfile::qsd810(), DeviceProfile::kirin990()] {
+        for b in [1usize, 4] {
+            println!("== {} batch {b} ==", dev.name);
+            fig13_table(&dev, b, budget).print();
+            println!();
+        }
+    }
+    println!(
+        "paper (Fig. 13): AGO-NI loses ~17% avg, AGO-NR ~27% avg; \
+         AGO-NI can win on pw+pw at larger batch (Fig. 13(d))"
+    );
+    // The reformer's advantage depends on the budget-to-space ratio: our
+    // cost-model evaluator saturates these 8-op spaces at 2000 evals, so
+    // we also report the budget-starved regime where the paper's search
+    // difficulty is reproduced (real-measurement tuners get far fewer
+    // effective samples per op).
+    println!("\n== budget-starved regime (120 evals) ==");
+    for dev in [DeviceProfile::qsd810(), DeviceProfile::kirin990()] {
+        println!("== {} batch 4 ==", dev.name);
+        fig13_table(&dev, 4, 120).print();
+        println!();
+    }
+    real_execution_section();
+}

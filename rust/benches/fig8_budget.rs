@@ -1,0 +1,112 @@
+//! Fig. 8 — tuning budget vs subgraph structure, and the Eq. (1) fit.
+//!
+//! The paper tunes subgraphs of increasing operator count at two tensor
+//! shapes and shows (a) budget tracks tensor shape, not op count alone,
+//! and (b) budget ≈ linear in the summed Eq. (1) weights. We measure
+//! evals-to-stabilize of our tuner on the same templates and fit
+//! weight -> budget with OLS.
+
+use ago::device::DeviceProfile;
+use ago::graph::{Graph, OpKind, Shape, Subgraph};
+use ago::partition::weight::{node_weights, WeightParams};
+use ago::tuner::schedule::SubgraphView;
+use ago::tuner::search::{tune, SearchConfig};
+use ago::util::benchkit::Table;
+use ago::util::stats::linear_fit;
+
+/// Build one template: conv followed by `extras` simple ops at the given
+/// IOHW config. Returns (graph, view).
+fn template(i: usize, o: usize, hw: usize, extras: &[OpKind])
+    -> (Graph, SubgraphView)
+{
+    let mut g = Graph::new("fig8");
+    let sin = Shape::nhwc(1, hw, hw, i);
+    let sout = Shape::nhwc(1, hw, hw, o);
+    let inp = g.add(OpKind::Pad, "in", sin, 0, &[]);
+    let mut cur = g.add(OpKind::Conv2d { kh: 3, kw: 3, stride: 1 }, "conv",
+                        sout.clone(), i, &[inp]);
+    for (k, kind) in extras.iter().enumerate() {
+        cur = g.add(kind.clone(), &format!("e{k}"), sout.clone(), 0,
+                    &[cur]);
+    }
+    let nodes: Vec<usize> = (0..g.len()).collect();
+    let view = SubgraphView::new(&g, &Subgraph { id: 0, nodes });
+    (g, view)
+}
+
+fn main() {
+    let dev = DeviceProfile::kirin990();
+    let budget: usize = std::env::var("AGO_BENCH_BUDGET")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(3000);
+    let seeds: Vec<u64> = (1..=31).collect();
+
+    let shapes = [(32usize, 64usize, 28usize), (64, 128, 14)];
+    let extra_sets: [&[OpKind]; 4] = [
+        &[],
+        &[OpKind::Add],
+        &[OpKind::Add, OpKind::ReLU],
+        &[OpKind::Add, OpKind::ReLU, OpKind::Mul],
+    ];
+
+    let mut table = Table::new(&[
+        "subgraph", "IOHW", "weight", "budget(avg)", "fit",
+    ]);
+    let mut ws = Vec::new();
+    let mut bs = Vec::new();
+    let mut rows = Vec::new();
+    for (i, o, hw) in shapes {
+        for extras in extra_sets {
+            let (g, view) = template(i, o, hw, extras);
+            let w: f64 =
+                node_weights(&g, WeightParams::default()).iter().sum();
+            let mut stab = 0.0;
+            for &seed in &seeds {
+                let cfg = SearchConfig {
+                    budget,
+                    stabilize_window: budget, // run the full budget
+                    seed,
+                    ..Default::default()
+                };
+                let r = tune(&g, &view, &dev, &cfg, None);
+                // budget-to-stabilize: first eval whose best-so-far is
+                // within 5% of the final best (smoother than the raw
+                // last-improvement index)
+                let target = r.best_latency * 1.05;
+                let hit = r
+                    .history
+                    .iter()
+                    .position(|&l| l <= target)
+                    .unwrap_or(r.history.len());
+                stab += hit as f64;
+            }
+            stab /= seeds.len() as f64;
+            ws.push(w);
+            bs.push(stab);
+            rows.push((
+                format!("conv+{}", extras.len()),
+                format!("{i}/{o}/{hw}"),
+                w,
+                stab,
+            ));
+        }
+    }
+    let (a, b, r2) = linear_fit(&ws, &bs);
+    for (name, iohw, w, stab) in rows {
+        table.row(vec![
+            name,
+            iohw,
+            format!("{w:.0}"),
+            format!("{stab:.0}"),
+            format!("{:.0}", a * w + b),
+        ]);
+    }
+    table.print();
+    println!(
+        "\nEq.(1) OLS fit: budget = {a:.3} * weight + {b:.1}   (r^2 = {r2:.3})"
+    );
+    println!(
+        "paper: 'we can almost perfectly fit the tuning budget with Eq. (1)'"
+    );
+}

@@ -1,0 +1,87 @@
+//! L3 perf bench: tuner search throughput (schedule evaluations per
+//! second) and partitioner throughput — the compile-time hot paths.
+//! Feeds EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use ago::device::DeviceProfile;
+use ago::graph::{Graph, OpKind, Shape, Subgraph};
+use ago::models::{build, InputShape, ModelId};
+use ago::partition::{cluster, ClusterConfig};
+use ago::tuner::schedule::SubgraphView;
+use ago::tuner::search::{tune, SearchConfig};
+
+fn rep_subgraph() -> (Graph, SubgraphView) {
+    // representative complicated subgraph: pw -> bias -> relu -> dw ->
+    // bias -> relu -> pw -> bias (3 complex ops, 8 nodes)
+    let mut g = Graph::new("perf");
+    let s = Shape::nhwc(1, 28, 28, 32);
+    let m = Shape::nhwc(1, 28, 28, 64);
+    let i = g.add(OpKind::Pad, "in", s.clone(), 0, &[]);
+    let pw = g.add(OpKind::Pointwise, "pw", m.clone(), 32, &[i]);
+    let b1 = g.add(OpKind::BiasAdd, "b1", m.clone(), 0, &[pw]);
+    let r1 = g.add(OpKind::ReLU, "r1", m.clone(), 0, &[b1]);
+    let dw = g.add(OpKind::Depthwise { kh: 3, kw: 3, stride: 1 }, "dw",
+                   m.clone(), 0, &[r1]);
+    let b2 = g.add(OpKind::BiasAdd, "b2", m.clone(), 0, &[dw]);
+    let r2 = g.add(OpKind::ReLU, "r2", m.clone(), 0, &[b2]);
+    let pw2 = g.add(OpKind::Pointwise, "pw2", s, 64, &[r2]);
+    let nodes = vec![i, pw, b1, r1, dw, b2, r2, pw2];
+    let view = SubgraphView::new(&g, &Subgraph { id: 0, nodes });
+    (g, view)
+}
+
+fn main() {
+    let dev = DeviceProfile::kirin990();
+    let (g, view) = rep_subgraph();
+
+    // search throughput: run a large fixed budget, time it
+    let budget = 50_000;
+    let cfg = SearchConfig {
+        budget,
+        stabilize_window: budget, // never early-stop: measure raw rate
+        seed: 7,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let r = tune(&g, &view, &dev, &cfg, None);
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "tuner throughput: {:.0} evals/s ({} evals in {:.2}s, best {:.4} ms)",
+        r.evals as f64 / dt,
+        r.evals,
+        dt,
+        r.best_latency * 1e3
+    );
+
+    // partitioner throughput on the biggest graph (MVT, 382 ops)
+    let mvt = build(ModelId::Mvt, InputShape::Large);
+    let cfg = ClusterConfig::adaptive(&mvt);
+    let t0 = Instant::now();
+    let reps = 50;
+    for _ in 0..reps {
+        let p = cluster(&mvt, cfg);
+        std::hint::black_box(p);
+    }
+    let dt = t0.elapsed().as_secs_f64() / reps as f64;
+    println!(
+        "CLUSTER on MVT ({} ops): {:.2} ms/partition",
+        mvt.len(),
+        dt * 1e3
+    );
+
+    // full-model compile wall time at the paper budget
+    let t0 = Instant::now();
+    let out = ago::coordinator::compile(
+        &build(ModelId::Mbn, InputShape::Large),
+        &ago::coordinator::CompileConfig {
+            budget: 20_000,
+            ..ago::coordinator::CompileConfig::new(dev)
+        },
+    );
+    println!(
+        "MBN/large compile @ 20k budget: {:.2}s wall ({} evals)",
+        t0.elapsed().as_secs_f64(),
+        out.total_evals
+    );
+}

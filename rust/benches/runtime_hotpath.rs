@@ -1,0 +1,99 @@
+//! Runtime hot-path micro-benchmarks (the L3 perf deliverable):
+//! per-execute dispatch overhead, literal conversion cost, executable
+//! cache behavior, and chain throughput. Feeds EXPERIMENTS.md §Perf.
+
+use std::time::Instant;
+
+use ago::runtime::{Engine, TensorData};
+use ago::util::benchkit::{quick, Table};
+use ago::util::Rng;
+
+fn main() {
+    let dir = std::env::var("AGO_ARTIFACTS")
+        .unwrap_or_else(|_| "artifacts".into());
+    let mut e = Engine::new(&dir).expect("run `make artifacts` first");
+    let mut rng = Rng::new(1);
+
+    // smallest artifact = dispatch floor
+    let add_in = [
+        TensorData::random(&[1, 7, 7, 32], &mut rng),
+        TensorData::random(&[1, 7, 7, 32], &mut rng),
+    ];
+    e.execute("add_n1h7w7c32", &add_in).unwrap(); // compile+warm
+
+    let mut t = Table::new(&["metric", "p50", "mean"]);
+    let r = quick("add dispatch", || {
+        e.execute("add_n1h7w7c32", &add_in).unwrap();
+    });
+    t.row(vec![
+        "tiny-kernel execute (dispatch floor)".into(),
+        format!("{:.1} us", r.p50_ns / 1e3),
+        format!("{:.1} us", r.mean_ns / 1e3),
+    ]);
+
+    // medium artifact
+    let mut e2 = Engine::new(&dir).unwrap();
+    let pw_in = [
+        TensorData::random(&[1, 28, 28, 16], &mut rng),
+        TensorData::random(&[16, 32], &mut rng),
+        TensorData::random(&[32], &mut rng),
+    ];
+    e2.execute("pw_n1h28w28i16o32", &pw_in).unwrap();
+    let r = quick("pw execute", || {
+        e2.execute("pw_n1h28w28i16o32", &pw_in).unwrap();
+    });
+    t.row(vec![
+        "pw 28x28x16->32 execute".into(),
+        format!("{:.1} us", r.p50_ns / 1e3),
+        format!("{:.1} us", r.mean_ns / 1e3),
+    ]);
+
+    // literal conversion cost (host -> PJRT buffer path dominates small
+    // kernels; measured via zero-flop add on a bigger tensor)
+    let big = [
+        TensorData::random(&[1, 28, 28, 16], &mut rng),
+        TensorData::random(&[1, 28, 28, 16], &mut rng),
+    ];
+    let mut e3 = Engine::new(&dir).unwrap();
+    e3.execute("add_n1h28w28c16", &big).unwrap();
+    let r = quick("add 28x28x16", || {
+        e3.execute("add_n1h28w28c16", &big).unwrap();
+    });
+    t.row(vec![
+        "add 28x28x16 (conversion-bound)".into(),
+        format!("{:.1} us", r.p50_ns / 1e3),
+        format!("{:.1} us", r.mean_ns / 1e3),
+    ]);
+    t.print();
+
+    // cold-compile cost amortization
+    let t0 = Instant::now();
+    let mut e4 = Engine::new(&dir).unwrap();
+    e4.prepare("mbnblk_fused_n1h28w28c16e2").unwrap();
+    println!(
+        "\ncold compile of mbn block artifact: {:.1} ms (cached \
+         thereafter; {} executables resident)",
+        t0.elapsed().as_secs_f64() * 1e3,
+        e4.compiled_count()
+    );
+
+    // chain throughput
+    let names: Vec<String> = vec![
+        "pw_n1h14w14i24o48".into(),
+        "dw3_n1h14w14c48".into(),
+        "pw_n1h14w14i48o24".into(),
+    ];
+    let x = TensorData::random(&[1, 14, 14, 24], &mut rng);
+    e.run_chain(&names, x.clone(), 1).unwrap(); // warm
+    let reps = 200;
+    let t0 = Instant::now();
+    for _ in 0..reps {
+        e.run_chain(&names, x.clone(), 1).unwrap();
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "3-op chain: {:.3} ms/req, {:.0} req/s",
+        dt / reps as f64 * 1e3,
+        reps as f64 / dt
+    );
+}

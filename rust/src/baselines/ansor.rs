@@ -1,0 +1,80 @@
+//! Ansor-like auto-tuning baseline.
+//!
+//! Per DESIGN.md, this shares AGO's search engine but keeps exactly the
+//! constraints the paper attributes to Ansor-on-Relay: subgraphs come from
+//! the Relay heuristic (≤ 1 complex operator each, movement ops as
+//! delimiters) and fusion never goes beyond conventional epilogue fusion.
+//! Sharing the engine isolates the paper's contribution from
+//! search-quality noise — exactly what the AGO-vs-Ansor comparison is
+//! meant to measure.
+
+use crate::coordinator::{compile, CompileConfig, CompiledModel, Frontend, Variant};
+use crate::device::DeviceProfile;
+use crate::graph::Graph;
+
+/// Compile with Ansor's constraints at the given total budget.
+pub fn ansor_compile(
+    g: &Graph,
+    dev: &DeviceProfile,
+    budget: usize,
+    seed: u64,
+) -> CompiledModel {
+    let cfg = CompileConfig {
+        device: dev.clone(),
+        budget,
+        frontend: Frontend::Relay,
+        // AgoNi on Relay partitions = conventional fusion only (a Relay
+        // subgraph cannot contain two complex ops anyway; NI also bars
+        // the tuner from ever classifying a group as Intensive)
+        variant: Variant::AgoNi,
+        seed,
+        workers: 0,
+    };
+    compile(g, &cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build, InputShape, ModelId};
+    use crate::tuner::schedule::GroupKind;
+
+    #[test]
+    fn never_intensive_never_multi_complex() {
+        let g = build(ModelId::Mbn, InputShape::Small);
+        let dev = DeviceProfile::kirin990();
+        let m = ansor_compile(&g, &dev, 600, 7);
+        for s in &m.schedules {
+            for grp in &s.groups {
+                assert_ne!(grp.kind, GroupKind::Intensive);
+                let c = grp
+                    .ops
+                    .iter()
+                    .filter(|&&v| g.node(v).kind.is_complex())
+                    .count();
+                assert!(c <= 1);
+            }
+        }
+    }
+
+    #[test]
+    fn ago_outperforms_ansor_on_mnsn() {
+        // MNSN is the paper's showcase (massive pw+dw): AGO's intensive
+        // fusion must beat the Relay-constrained tuner
+        let g = build(ModelId::Mnsn, InputShape::Small);
+        let dev = DeviceProfile::kirin990();
+        let ansor = ansor_compile(&g, &dev, 6000, 3);
+        let ago = compile(&g, &CompileConfig {
+            budget: 6000,
+            seed: 3,
+            workers: 0,
+            ..CompileConfig::new(dev)
+        });
+        assert!(
+            ago.total_latency < ansor.total_latency,
+            "AGO {} !< Ansor {}",
+            ago.total_latency,
+            ansor.total_latency
+        );
+    }
+}

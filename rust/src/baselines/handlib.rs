@@ -1,0 +1,154 @@
+//! Hand-tuned-library baseline (Torch Mobile / XNNPACK stand-in).
+//!
+//! No search. Every operator gets a fixed expert schedule: excellent
+//! NEON-friendly knobs when the workload is "typical" (channel counts
+//! divisible by 8, square spatial dims of at least 7 — the shapes library
+//! teams optimize by hand), and a generic fallback otherwise. Epilogue
+//! fusion of conv+bias+activation is supported (XNNPACK does this);
+//! nothing beyond one complex op per kernel ever fuses.
+
+use crate::costmodel::schedule_latency;
+use crate::device::DeviceProfile;
+use crate::graph::{Graph, OpKind, Partition};
+use crate::partition::relay_partition;
+use crate::tuner::schedule::{
+    classify, FusionGroup, Layout, Schedule, SubgraphView, Tile,
+};
+
+/// Is this op a "typical" workload a hand-tuned library has a fast path
+/// for?
+fn is_typical(g: &Graph, v: usize) -> bool {
+    let n = g.node(v);
+    match n.kind {
+        OpKind::Conv2d { kh, kw, .. } => {
+            let s = &n.out_shape;
+            kh == kw
+                && (kh == 1 || kh == 3 || kh == 5)
+                && s.dim(3) % 8 == 0
+                && s.dim(1) >= 7
+        }
+        OpKind::Depthwise { kh, kw, .. } => {
+            kh == kw && (kh == 3 || kh == 5) && n.out_shape.dim(3) % 8 == 0
+        }
+        OpKind::Pointwise => {
+            n.out_shape.dim(3) % 8 == 0 && n.in_c % 8 == 0
+        }
+        OpKind::MatMul => {
+            let s = &n.out_shape;
+            s.dim(s.rank() - 1) % 8 == 0 && n.in_c % 8 == 0
+        }
+        _ => true,
+    }
+}
+
+/// Fixed expert schedule for one Relay-style subgraph.
+fn fixed_schedule(g: &Graph, view: &SubgraphView, dev: &DeviceProfile) -> Schedule {
+    let ops = view.order.clone();
+    let out = &g.node(*ops.last().unwrap()).out_shape;
+    let typical = ops.iter().all(|&v| is_typical(g, v));
+    let tile = if out.rank() == 4 {
+        let tc = if typical { out.dim(3).min(8).max(1) } else { 1 };
+        Tile {
+            th: out.dim(1).min(4).max(1),
+            tw: out.dim(2).min(16).max(1),
+            tc: if out.dim(3) % tc.max(1) == 0 { tc } else { 1 },
+        }
+    } else {
+        Tile {
+            th: out.dim(0).min(8).max(1),
+            tw: 1,
+            tc: out.dim(out.rank() - 1).min(32).max(1),
+        }
+    };
+    // hand libraries ship per-op optimal layouts for their typical fast
+    // paths (XNNPACK: NHWC everywhere except channels-first depthwise
+    // microkernels), generic NHWC otherwise
+    let layout = if typical
+        && ops.iter().any(|&v| {
+            matches!(g.node(v).kind, OpKind::Depthwise { .. })
+        }) {
+        Layout::Nchw
+    } else {
+        Layout::Nhwc
+    };
+    let grp = FusionGroup {
+        kind: classify(g, &ops, false),
+        tile,
+        vec: if typical { 8 } else { 4 },
+        unroll: if typical { 4 } else { 1 },
+        threads: dev.cores,
+        layout,
+        ops,
+    };
+    Schedule { groups: vec![grp] }
+}
+
+/// Compile the whole graph: Relay partitions + fixed schedules. Returns
+/// (partition, per-subgraph schedules, per-subgraph latencies).
+pub fn handlib_compile(
+    g: &Graph,
+    dev: &DeviceProfile,
+) -> (Partition, Vec<Schedule>, Vec<f64>) {
+    let p = relay_partition(g);
+    let views = SubgraphView::all(g, &p);
+    let mut schedules = Vec::with_capacity(views.len());
+    let mut lats = Vec::with_capacity(views.len());
+    for v in &views {
+        let s = fixed_schedule(g, v, dev);
+        // per-subgraph dispatch charged on the first group's latency so
+        // sums stay comparable with `compile()`'s accounting
+        let l = schedule_latency(g, &s, dev) + dev.dispatch_us * 1e-6;
+        schedules.push(s);
+        lats.push(l);
+    }
+    (p, schedules, lats)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build, InputShape, ModelId};
+
+    #[test]
+    fn compiles_every_model() {
+        let dev = DeviceProfile::qsd810();
+        for m in ModelId::all() {
+            let g = build(m, InputShape::Small);
+            let (p, scheds, lats) = handlib_compile(&g, &dev);
+            assert_eq!(scheds.len(), p.n_groups);
+            assert_eq!(lats.len(), p.n_groups);
+            assert!(lats.iter().all(|&l| l > 0.0));
+        }
+    }
+
+    #[test]
+    fn typical_shapes_get_fast_path() {
+        use crate::graph::Shape;
+        let mut g = Graph::new("t");
+        let s8 = Shape::nhwc(1, 14, 14, 32); // typical: %8 channels
+        let s7 = Shape::nhwc(1, 14, 14, 31); // atypical
+        let i = g.add(OpKind::Pad, "in", s8.clone(), 0, &[]);
+        let _t = g.add(OpKind::Pointwise, "pw8", s8, 32, &[i]);
+        let _a = g.add(OpKind::Pointwise, "pw7", s7, 31, &[i]);
+        assert!(is_typical(&g, 1));
+        assert!(!is_typical(&g, 2));
+    }
+
+    #[test]
+    fn no_multi_complex_groups() {
+        let dev = DeviceProfile::kirin990();
+        let g = build(ModelId::Mbn, InputShape::Small);
+        let (p, scheds, _) = handlib_compile(&g, &dev);
+        for (gid, s) in scheds.iter().enumerate() {
+            for grp in &s.groups {
+                let c = grp
+                    .ops
+                    .iter()
+                    .filter(|&&v| g.node(v).kind.is_complex())
+                    .count();
+                assert!(c <= 1, "group {gid} has {c} complex ops");
+            }
+        }
+        let _ = p;
+    }
+}

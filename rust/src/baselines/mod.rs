@@ -1,0 +1,17 @@
+//! Baseline systems the paper compares against (§VI), rebuilt as
+//! substitutes per DESIGN.md:
+//!
+//! - `ansor`: the state-of-the-art auto-tuner baseline. Shares AGO's
+//!   search engine but is constrained exactly the way the paper describes
+//!   Ansor/Relay: one complex operator per subgraph (Relay partitioning)
+//!   and conventional (epilogue) fusion only.
+//! - `handlib`: the Torch Mobile / XNNPACK stand-in — no tuning, fixed
+//!   expert schedules that are excellent on *typical* workloads and
+//!   mediocre elsewhere (the paper's stated reason hand-tuned libraries
+//!   lose).
+
+pub mod ansor;
+pub mod handlib;
+
+pub use ansor::ansor_compile;
+pub use handlib::handlib_compile;

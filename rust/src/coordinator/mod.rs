@@ -1,0 +1,259 @@
+//! L3 coordinator: the end-to-end AGO compile pipeline (paper Fig. 2).
+//!
+//! graph frontend (partition) → reformer (split/join) → tuner backend
+//! (per-subgraph schedule search, fanned out over a worker pool) →
+//! compiled model (schedules + predicted latency + partition report).
+//!
+//! The ablation variants of §VI-B are first-class: `AgoNi` disables
+//! intensive fusion in the backend, `AgoNr` disables the reformer.
+
+pub mod plan;
+
+use std::sync::Arc;
+
+use crate::device::DeviceProfile;
+use crate::graph::{Graph, Partition};
+use crate::partition::{
+    cluster, relay_partition, ClusterConfig, PartitionReport, WeightParams,
+};
+use crate::reformer::{tune_with_reformer, ReformerConfig};
+use crate::tuner::schedule::{Schedule, SubgraphView};
+use crate::tuner::search::SearchConfig;
+use crate::util::ThreadPool;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Variant {
+    /// Full system.
+    Ago,
+    /// No intensive fusion (§VI-B ablation).
+    AgoNi,
+    /// No reformer layer (§VI-B ablation).
+    AgoNr,
+}
+
+impl Variant {
+    pub fn parse(s: &str) -> Option<Variant> {
+        match s.to_ascii_lowercase().as_str() {
+            "ago" => Some(Variant::Ago),
+            "ago-ni" | "ni" => Some(Variant::AgoNi),
+            "ago-nr" | "nr" => Some(Variant::AgoNr),
+            _ => None,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub enum Frontend {
+    /// AGO's weighted clustering (Algorithm 1) with an explicit Td.
+    Cluster(ClusterConfig),
+    /// Weighted clustering with Td adapted to the graph's complex-op
+    /// weights (the default).
+    Auto,
+    /// Relay-style heuristic baseline.
+    Relay,
+}
+
+#[derive(Clone, Debug)]
+pub struct CompileConfig {
+    pub device: DeviceProfile,
+    /// Total tuning budget (cost-model evaluations across all subgraphs;
+    /// the paper's 20,000-measurement budget scales down to this).
+    pub budget: usize,
+    pub frontend: Frontend,
+    pub variant: Variant,
+    pub seed: u64,
+    /// Tuning worker threads (0 = auto).
+    pub workers: usize,
+}
+
+impl CompileConfig {
+    pub fn new(device: DeviceProfile) -> CompileConfig {
+        CompileConfig {
+            device,
+            budget: 4000,
+            frontend: Frontend::Auto,
+            variant: Variant::Ago,
+            seed: 0xA60,
+            workers: 0,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct CompiledModel {
+    pub partition: Partition,
+    /// Per-subgraph best schedules (indexed by subgraph id).
+    pub schedules: Vec<Schedule>,
+    /// Per-subgraph predicted latency, seconds.
+    pub subgraph_latency: Vec<f64>,
+    /// Whole-model predicted latency, seconds (sum over the quotient
+    /// schedule — single-stream mobile inference).
+    pub total_latency: f64,
+    pub total_evals: usize,
+    pub report: PartitionReport,
+}
+
+impl CompiledModel {
+    pub fn latency_ms(&self) -> f64 {
+        self.total_latency * 1e3
+    }
+}
+
+/// Run the full pipeline on a model graph.
+pub fn compile(g: &Graph, cfg: &CompileConfig) -> CompiledModel {
+    let partition = match &cfg.frontend {
+        Frontend::Cluster(c) => cluster(g, *c),
+        Frontend::Auto => cluster(g, ClusterConfig::adaptive(g)),
+        Frontend::Relay => relay_partition(g),
+    };
+    let report =
+        PartitionReport::build(g, &partition, WeightParams::default());
+    let views = SubgraphView::all(g, &partition);
+
+    // budget per subgraph ∝ its weight (heavier subgraphs need more
+    // schedules to stabilize — Fig. 8). The floor comes OUT of the total
+    // budget so partitioners that fragment into many trivial subgraphs do
+    // not mint free evaluations.
+    let weights = &report.weights;
+    let wsum: f64 = weights.iter().sum::<f64>().max(1.0);
+    let floor = 8usize;
+    let pool = cfg
+        .budget
+        .saturating_sub(floor * partition.n_groups)
+        .max(0);
+    let budgets: Vec<usize> = weights
+        .iter()
+        .map(|w| floor + ((pool as f64) * w / wsum).round() as usize)
+        .collect();
+
+    let garc = Arc::new(g.clone());
+    let dev = Arc::new(cfg.device.clone());
+    let variant = cfg.variant;
+    let seed = cfg.seed;
+    let pool = if cfg.workers == 0 {
+        ThreadPool::for_host()
+    } else {
+        ThreadPool::new(cfg.workers)
+    };
+    let tasks: Vec<(usize, SubgraphView, usize)> = views
+        .into_iter()
+        .enumerate()
+        .map(|(i, v)| (i, v, budgets[i]))
+        .collect();
+    let results: Vec<(usize, Schedule, f64, usize)> = pool.map(
+        tasks,
+        move |(i, view, budget)| {
+            let g = Arc::clone(&garc);
+            let dev = Arc::clone(&dev);
+            if view.is_empty() {
+                return (i, Schedule { groups: Vec::new() }, 0.0, 0);
+            }
+            let search = SearchConfig {
+                budget,
+                stabilize_window: (budget / 4).clamp(16, 256),
+                seed: seed ^ ((i as u64) << 17),
+                allow_intensive: variant != Variant::AgoNi,
+                ..Default::default()
+            };
+            let rcfg = ReformerConfig {
+                search,
+                enabled: variant != Variant::AgoNr,
+                ..Default::default()
+            };
+            let r = tune_with_reformer(&g, &view, &dev, &rcfg);
+            (i, r.best, r.best_latency, r.evals)
+        },
+    );
+
+    let n = partition.n_groups;
+    let mut schedules = vec![Schedule { groups: Vec::new() }; n];
+    let mut lats = vec![0.0; n];
+    let mut total_evals = 0;
+    for (i, s, l, e) in results {
+        schedules[i] = s;
+        lats[i] = l;
+        total_evals += e;
+    }
+    // per-subgraph runtime dispatch: the graph executor pays this once
+    // per subgraph invocation (fragmented partitions lose here)
+    let dispatch = partition.n_groups as f64 * cfg.device.dispatch_us * 1e-6;
+    let total_latency = lats.iter().sum::<f64>() + dispatch;
+    CompiledModel {
+        partition,
+        schedules,
+        subgraph_latency: lats,
+        total_latency,
+        total_evals,
+        report,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build, InputShape, ModelId};
+
+    fn quick_cfg(dev: DeviceProfile, budget: usize) -> CompileConfig {
+        CompileConfig {
+            budget,
+            workers: 2,
+            ..CompileConfig::new(dev)
+        }
+    }
+
+    #[test]
+    fn compiles_mobilenet_small() {
+        let g = build(ModelId::Mbn, InputShape::Small);
+        let cfg = quick_cfg(DeviceProfile::kirin990(), 800);
+        let m = compile(&g, &cfg);
+        assert!(m.partition.is_acyclic(&g));
+        assert_eq!(m.schedules.len(), m.partition.n_groups);
+        assert!(m.total_latency > 0.0);
+        // every graph op appears in exactly one schedule group
+        let mut covered: Vec<usize> = m
+            .schedules
+            .iter()
+            .flat_map(|s| s.groups.iter().flat_map(|gr| gr.ops.clone()))
+            .collect();
+        covered.sort_unstable();
+        assert_eq!(covered, (0..g.len()).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ago_beats_or_ties_ablations_on_mbn() {
+        let g = build(ModelId::Mbn, InputShape::Middle);
+        let dev = DeviceProfile::qsd810();
+        let mk = |variant| {
+            let cfg = CompileConfig {
+                variant,
+                ..quick_cfg(dev.clone(), 1200)
+            };
+            compile(&g, &cfg).total_latency
+        };
+        let ago = mk(Variant::Ago);
+        let ni = mk(Variant::AgoNi);
+        // intensively-fusable dw/pw chains dominate MBN: full AGO must win
+        assert!(ago <= ni * 1.02, "AGO {ago} vs AGO-NI {ni}");
+    }
+
+    #[test]
+    fn relay_frontend_compiles_too() {
+        let g = build(ModelId::Sqn, InputShape::Small);
+        let cfg = CompileConfig {
+            frontend: Frontend::Relay,
+            ..quick_cfg(DeviceProfile::kirin990(), 600)
+        };
+        let m = compile(&g, &cfg);
+        assert!(m.partition.n_groups > 0);
+        assert!(m.total_latency > 0.0);
+        assert!(m.partition.complex_counts(&g).iter().all(|&c| c <= 1));
+    }
+
+    #[test]
+    fn variant_parse() {
+        assert_eq!(Variant::parse("ago"), Some(Variant::Ago));
+        assert_eq!(Variant::parse("AGO-NI"), Some(Variant::AgoNi));
+        assert_eq!(Variant::parse("nr"), Some(Variant::AgoNr));
+        assert_eq!(Variant::parse("x"), None);
+    }
+}

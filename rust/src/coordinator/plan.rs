@@ -1,0 +1,250 @@
+//! Compiled-plan serialization: persist a [`CompiledModel`] as JSON and
+//! reload it later — the deployment artifact the paper's "execute AGO
+//! once before the long-run deployment" workflow implies. The rust
+//! binary compiles once (`ago compile --out plan.json`) and serves from
+//! the plan thereafter (`ago run --plan plan.json`).
+
+use anyhow::{anyhow, Result};
+
+use crate::graph::Partition;
+use crate::tuner::schedule::{FusionGroup, GroupKind, Layout, Schedule, Tile};
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::CompiledModel;
+
+fn kind_str(k: GroupKind) -> &'static str {
+    match k {
+        GroupKind::Simple => "simple",
+        GroupKind::Epilogue => "epilogue",
+        GroupKind::Intensive => "intensive",
+        GroupKind::Joint => "joint",
+    }
+}
+
+fn kind_parse(t: &str) -> Result<GroupKind> {
+    Ok(match t {
+        "simple" => GroupKind::Simple,
+        "epilogue" => GroupKind::Epilogue,
+        "intensive" => GroupKind::Intensive,
+        "joint" => GroupKind::Joint,
+        other => return Err(anyhow!("unknown group kind {other:?}")),
+    })
+}
+
+fn group_to_json(g: &FusionGroup) -> Json {
+    obj(vec![
+        ("ops", arr(g.ops.iter().map(|&v| num(v as f64)).collect())),
+        ("kind", s(kind_str(g.kind))),
+        ("tile", arr(vec![
+            num(g.tile.th as f64),
+            num(g.tile.tw as f64),
+            num(g.tile.tc as f64),
+        ])),
+        ("layout", s(match g.layout {
+            Layout::Nhwc => "nhwc",
+            Layout::Nchw => "nchw",
+        })),
+        ("vec", num(g.vec as f64)),
+        ("unroll", num(g.unroll as f64)),
+        ("threads", num(g.threads as f64)),
+    ])
+}
+
+fn group_from_json(j: &Json) -> Result<FusionGroup> {
+    let ops = j
+        .get("ops")
+        .and_then(|o| o.as_arr())
+        .ok_or_else(|| anyhow!("group missing ops"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad op id")))
+        .collect::<Result<Vec<_>>>()?;
+    let kind = kind_parse(
+        j.get("kind")
+            .and_then(|k| k.as_str())
+            .ok_or_else(|| anyhow!("group missing kind"))?,
+    )?;
+    let t = j
+        .get("tile")
+        .and_then(|t| t.as_arr())
+        .ok_or_else(|| anyhow!("group missing tile"))?;
+    if t.len() != 3 {
+        return Err(anyhow!("tile must have 3 entries"));
+    }
+    Ok(FusionGroup {
+        ops,
+        kind,
+        tile: Tile {
+            th: t[0].as_usize().unwrap_or(1),
+            tw: t[1].as_usize().unwrap_or(1),
+            tc: t[2].as_usize().unwrap_or(1),
+        },
+        layout: match j.get("layout").and_then(|l| l.as_str()) {
+            Some("nchw") => Layout::Nchw,
+            _ => Layout::Nhwc,
+        },
+        vec: j.get("vec").and_then(|v| v.as_usize()).unwrap_or(8),
+        unroll: j.get("unroll").and_then(|v| v.as_usize()).unwrap_or(4),
+        threads: j.get("threads").and_then(|v| v.as_usize()).unwrap_or(1),
+    })
+}
+
+/// Serialize a compiled model (partition + schedules + metadata).
+pub fn to_json(m: &CompiledModel, model_name: &str, device: &str) -> Json {
+    obj(vec![
+        ("model", s(model_name)),
+        ("device", s(device)),
+        ("total_latency_ms", num(m.total_latency * 1e3)),
+        ("total_evals", num(m.total_evals as f64)),
+        (
+            "assign",
+            arr(m.partition.assign.iter().map(|&a| num(a as f64)).collect()),
+        ),
+        (
+            "schedules",
+            arr(m
+                .schedules
+                .iter()
+                .map(|sch| {
+                    arr(sch.groups.iter().map(group_to_json).collect())
+                })
+                .collect()),
+        ),
+        (
+            "subgraph_latency_ms",
+            arr(m
+                .subgraph_latency
+                .iter()
+                .map(|&l| num(l * 1e3))
+                .collect()),
+        ),
+    ])
+}
+
+/// A plan loaded from disk (schedules + partition; report is not
+/// persisted).
+#[derive(Clone, Debug)]
+pub struct LoadedPlan {
+    pub model: String,
+    pub device: String,
+    pub partition: Partition,
+    pub schedules: Vec<Schedule>,
+    pub total_latency_ms: f64,
+}
+
+pub fn from_json(j: &Json) -> Result<LoadedPlan> {
+    let assign = j
+        .get("assign")
+        .and_then(|a| a.as_arr())
+        .ok_or_else(|| anyhow!("plan missing assign"))?
+        .iter()
+        .map(|v| v.as_usize().ok_or_else(|| anyhow!("bad assign")))
+        .collect::<Result<Vec<_>>>()?;
+    let schedules = j
+        .get("schedules")
+        .and_then(|a| a.as_arr())
+        .ok_or_else(|| anyhow!("plan missing schedules"))?
+        .iter()
+        .map(|sch| {
+            let groups = sch
+                .as_arr()
+                .ok_or_else(|| anyhow!("schedule must be an array"))?
+                .iter()
+                .map(group_from_json)
+                .collect::<Result<Vec<_>>>()?;
+            Ok(Schedule { groups })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    Ok(LoadedPlan {
+        model: j
+            .get("model")
+            .and_then(|m| m.as_str())
+            .unwrap_or("")
+            .to_string(),
+        device: j
+            .get("device")
+            .and_then(|d| d.as_str())
+            .unwrap_or("")
+            .to_string(),
+        partition: Partition::from_assignment(assign),
+        schedules,
+        total_latency_ms: j
+            .get("total_latency_ms")
+            .and_then(|l| l.as_f64())
+            .unwrap_or(0.0),
+    })
+}
+
+/// Write to a file (pretty JSON).
+pub fn save(m: &CompiledModel, model_name: &str, device: &str,
+            path: &str) -> Result<()> {
+    std::fs::write(path, to_json(m, model_name, device).pretty())?;
+    Ok(())
+}
+
+/// Read from a file.
+pub fn load(path: &str) -> Result<LoadedPlan> {
+    let text = std::fs::read_to_string(path)?;
+    let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+    from_json(&j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{compile, CompileConfig};
+    use crate::device::DeviceProfile;
+    use crate::models::{build, InputShape, ModelId};
+
+    #[test]
+    fn roundtrip_through_json() {
+        let g = build(ModelId::Sqn, InputShape::Small);
+        let m = compile(&g, &CompileConfig {
+            budget: 300,
+            workers: 2,
+            ..CompileConfig::new(DeviceProfile::kirin990())
+        });
+        let j = to_json(&m, "sqn", "kirin990");
+        let text = j.pretty();
+        let back = from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.model, "sqn");
+        assert_eq!(back.partition.assign, m.partition.assign);
+        assert_eq!(back.schedules.len(), m.schedules.len());
+        for (a, b) in back.schedules.iter().zip(&m.schedules) {
+            assert_eq!(a.groups.len(), b.groups.len());
+            for (ga, gb) in a.groups.iter().zip(&b.groups) {
+                assert_eq!(ga.ops, gb.ops);
+                assert_eq!(ga.kind, gb.kind);
+                assert_eq!(ga.tile, gb.tile);
+                assert_eq!(ga.vec, gb.vec);
+            }
+        }
+        assert!((back.total_latency_ms - m.latency_ms()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn save_load_file() {
+        let g = build(ModelId::Bt, InputShape::Large);
+        let m = compile(&g, &CompileConfig {
+            budget: 200,
+            workers: 2,
+            ..CompileConfig::new(DeviceProfile::qsd810())
+        });
+        let path = std::env::temp_dir().join("ago_plan_test.json");
+        let path = path.to_str().unwrap();
+        save(&m, "bt", "qsd810", path).unwrap();
+        let back = load(path).unwrap();
+        assert_eq!(back.device, "qsd810");
+        assert!(back.partition.is_acyclic(&g));
+        std::fs::remove_file(path).ok();
+    }
+
+    #[test]
+    fn rejects_malformed_plan() {
+        assert!(from_json(&Json::parse("{}").unwrap()).is_err());
+        assert!(from_json(
+            &Json::parse(r#"{"assign": [0], "schedules": [[{"ops": [0]}]]}"#)
+                .unwrap()
+        )
+        .is_err()); // group missing kind
+    }
+}

@@ -1,0 +1,184 @@
+//! Mobile SoC device profiles — the simulated substrate for the paper's
+//! two testbeds (§VI): Kirin 990 (high-end) and Snapdragon 810 (low-end).
+//!
+//! The numbers are public microarchitectural figures; they feed both the
+//! analytical cost model and the trace-driven cache simulator. Absolute
+//! latencies will not match silicon; the *ratios* the paper reports
+//! (fusion vs no fusion, AGO vs baselines, high-end vs low-end) depend on
+//! cache capacities, bandwidth and FLOP rate, which these profiles carry.
+
+/// One cache level.
+#[derive(Clone, Copy, Debug)]
+pub struct CacheLevel {
+    pub size_bytes: usize,
+    pub line_bytes: usize,
+    pub assoc: usize,
+    /// Load-to-use latency, cycles.
+    pub latency_cycles: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct DeviceProfile {
+    pub name: &'static str,
+    /// Big cores used for inference (mobile runtimes pin to big cluster).
+    pub cores: usize,
+    pub freq_ghz: f64,
+    /// f32 FLOPs per cycle per core (NEON: 2x 128-bit FMA pipes = 16,
+    /// one pipe = 8).
+    pub flops_per_cycle: f64,
+    pub l1: CacheLevel,
+    pub l2: CacheLevel,
+    pub l3: Option<CacheLevel>,
+    pub dram_gbps: f64,
+    pub dram_latency_ns: f64,
+    /// Sustained-vs-peak derate (thermals; the 810 is notorious).
+    pub derate: f64,
+    /// Per-kernel launch/dispatch overhead, microseconds.
+    pub launch_us: f64,
+    /// Per-subgraph runtime overhead (graph-executor dispatch, argument
+    /// setup, output tensor allocation), microseconds. Fragmented
+    /// partitions pay this once per subgraph — the overhead AGO's
+    /// fewer/heavier subgraphs amortize.
+    pub dispatch_us: f64,
+}
+
+impl DeviceProfile {
+    /// HiSilicon Kirin 990: 2x A76 @2.86 + 2x A76 @2.36 (+4x A55).
+    /// Modeled as 4 big cores at the mean big frequency.
+    pub fn kirin990() -> DeviceProfile {
+        DeviceProfile {
+            name: "kirin990",
+            cores: 4,
+            freq_ghz: 2.6,
+            flops_per_cycle: 16.0, // A76: 2x128-bit FMA
+            l1: CacheLevel {
+                size_bytes: 64 * 1024,
+                line_bytes: 64,
+                assoc: 4,
+                latency_cycles: 4.0,
+            },
+            l2: CacheLevel {
+                size_bytes: 512 * 1024,
+                line_bytes: 64,
+                assoc: 8,
+                latency_cycles: 13.0,
+            },
+            l3: Some(CacheLevel {
+                size_bytes: 4 * 1024 * 1024,
+                line_bytes: 64,
+                assoc: 16,
+                latency_cycles: 35.0,
+            }),
+            dram_gbps: 29.9, // LPDDR4X-4266 x 4ch
+            dram_latency_ns: 110.0,
+            derate: 0.85,
+            launch_us: 8.0,
+            dispatch_us: 14.0,
+        }
+    }
+
+    /// Qualcomm Snapdragon 810: 4x A57 @2.0 (+4x A53). Heavy thermal
+    /// throttling; smaller caches; LPDDR4-3200.
+    pub fn qsd810() -> DeviceProfile {
+        DeviceProfile {
+            name: "qsd810",
+            cores: 4,
+            freq_ghz: 1.96,
+            flops_per_cycle: 8.0, // A57: 1x128-bit FMA
+            l1: CacheLevel {
+                size_bytes: 32 * 1024,
+                line_bytes: 64,
+                assoc: 2,
+                latency_cycles: 4.0,
+            },
+            l2: CacheLevel {
+                size_bytes: 2 * 1024 * 1024,
+                line_bytes: 64,
+                assoc: 16,
+                latency_cycles: 21.0,
+            },
+            l3: None,
+            dram_gbps: 12.8,
+            dram_latency_ns: 140.0,
+            derate: 0.6, // sustained thermal throttling
+            launch_us: 10.0,
+            dispatch_us: 18.0,
+        }
+    }
+
+    pub fn by_name(name: &str) -> Option<DeviceProfile> {
+        match name.to_ascii_lowercase().as_str() {
+            "kirin990" | "kirin" => Some(Self::kirin990()),
+            "qsd810" | "qsd" | "snapdragon810" => Some(Self::qsd810()),
+            _ => None,
+        }
+    }
+
+    /// Peak sustained f32 GFLOP/s across the big cluster.
+    pub fn peak_gflops(&self) -> f64 {
+        self.cores as f64 * self.freq_ghz * self.flops_per_cycle
+            * self.derate
+    }
+
+    /// Effective bandwidth of the level that holds `bytes` (bytes/sec):
+    /// the locality lever the cost model pulls.
+    pub fn bandwidth_for(&self, bytes: usize) -> f64 {
+        let cyc = self.freq_ghz * 1e9;
+        // approximate cluster-level bandwidths: L1 ~ 64 B/cy,
+        // L2 ~ 32 B/cy, L3 ~ 16 B/cy (all comfortably above DRAM)
+        if bytes <= self.l1.size_bytes {
+            64.0 * cyc
+        } else if bytes <= self.l2.size_bytes {
+            32.0 * cyc
+        } else if let Some(l3) = &self.l3 {
+            if bytes <= l3.size_bytes {
+                (16.0 * cyc).max(self.dram_gbps * 1e9)
+            } else {
+                self.dram_gbps * 1e9
+            }
+        } else {
+            self.dram_gbps * 1e9
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn kirin_beats_qsd() {
+        let k = DeviceProfile::kirin990();
+        let q = DeviceProfile::qsd810();
+        assert!(k.peak_gflops() > 2.0 * q.peak_gflops());
+        assert!(k.dram_gbps > q.dram_gbps);
+    }
+
+    #[test]
+    fn by_name_roundtrip() {
+        assert_eq!(DeviceProfile::by_name("kirin990").unwrap().name,
+                   "kirin990");
+        assert_eq!(DeviceProfile::by_name("QSD810").unwrap().name,
+                   "qsd810");
+        assert!(DeviceProfile::by_name("a100").is_none());
+    }
+
+    #[test]
+    fn bandwidth_monotone_in_working_set() {
+        let k = DeviceProfile::kirin990();
+        let b1 = k.bandwidth_for(16 * 1024);
+        let b2 = k.bandwidth_for(256 * 1024);
+        let b3 = k.bandwidth_for(2 * 1024 * 1024);
+        let b4 = k.bandwidth_for(64 * 1024 * 1024);
+        assert!(b1 >= b2 && b2 >= b3 && b3 >= b4);
+        assert!(b4 >= k.dram_gbps * 1e9 * 0.99);
+    }
+
+    #[test]
+    fn qsd_has_no_l3() {
+        let q = DeviceProfile::qsd810();
+        assert!(q.l3.is_none());
+        let big = q.bandwidth_for(8 * 1024 * 1024);
+        assert_eq!(big, q.dram_gbps * 1e9);
+    }
+}

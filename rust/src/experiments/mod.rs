@@ -1,0 +1,270 @@
+//! Experiment drivers for every table/figure in the paper's evaluation
+//! (§VI). Benches (`rust/benches/*`) are thin mains over these, so the
+//! same code regenerates EXPERIMENTS.md numbers.
+
+use crate::baselines::{ansor_compile, handlib_compile};
+use crate::coordinator::{compile, CompileConfig, Variant};
+use crate::device::DeviceProfile;
+use crate::graph::{Graph, OpKind, Shape, Subgraph};
+use crate::models::{build, InputShape, ModelId};
+use crate::reformer::{tune_with_reformer, ReformerConfig};
+use crate::tuner::schedule::SubgraphView;
+use crate::tuner::search::SearchConfig;
+use crate::util::benchkit::{fmt_ms, fmt_x, Table};
+use crate::util::stats::geomean;
+
+/// Budget from `AGO_BENCH_BUDGET` (default 20_000 — the paper's setting;
+/// evaluations are cost-model calls, so this is cheap).
+pub fn bench_budget() -> usize {
+    std::env::var("AGO_BENCH_BUDGET")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(20_000)
+}
+
+/// One row of the Fig. 10/11 end-to-end comparison.
+#[derive(Clone, Debug)]
+pub struct E2eRow {
+    pub model: ModelId,
+    pub shape: InputShape,
+    pub hand_ms: f64,
+    pub ansor_ms: f64,
+    pub ago_ms: f64,
+}
+
+impl E2eRow {
+    pub fn speedup_vs_hand(&self) -> f64 {
+        self.hand_ms / self.ago_ms
+    }
+    pub fn speedup_vs_ansor(&self) -> f64 {
+        self.ansor_ms / self.ago_ms
+    }
+}
+
+/// Fig. 10 (qsd810) / Fig. 11 (kirin990): classical CNNs x three shapes.
+pub fn e2e_rows(
+    dev: &DeviceProfile,
+    budget: usize,
+    models: &[ModelId],
+    shapes: &[InputShape],
+) -> Vec<E2eRow> {
+    let mut rows = Vec::new();
+    for &m in models {
+        for &s in shapes {
+            let g = build(m, s);
+            let (_, _, hl) = handlib_compile(&g, dev);
+            let hand_ms: f64 = hl.iter().sum::<f64>() * 1e3;
+            let ansor = ansor_compile(&g, dev, budget, 0xA60);
+            let ago = compile(&g, &CompileConfig {
+                budget,
+                ..CompileConfig::new(dev.clone())
+            });
+            rows.push(E2eRow {
+                model: m,
+                shape: s,
+                hand_ms,
+                ansor_ms: ansor.latency_ms(),
+                ago_ms: ago.latency_ms(),
+            });
+        }
+    }
+    rows
+}
+
+/// Render an E2E table with per-shape speedup averages (the numbers the
+/// paper quotes in §VI-A prose).
+pub fn render_e2e(rows: &[E2eRow], dev_name: &str) -> String {
+    let mut t = Table::new(&[
+        "model", "shape", "hand(ms)", "ansor(ms)", "ago(ms)", "vs hand",
+        "vs ansor",
+    ]);
+    for r in rows {
+        t.row(vec![
+            r.model.name().into(),
+            r.shape.name().into(),
+            fmt_ms(r.hand_ms),
+            fmt_ms(r.ansor_ms),
+            fmt_ms(r.ago_ms),
+            fmt_x(r.speedup_vs_hand()),
+            fmt_x(r.speedup_vs_ansor()),
+        ]);
+    }
+    let mut out = format!("== end-to-end, {dev_name} ==\n{}", t.render());
+    for s in [InputShape::Small, InputShape::Middle, InputShape::Large] {
+        let hs: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.shape == s)
+            .map(|r| r.speedup_vs_hand())
+            .collect();
+        let as_: Vec<f64> = rows
+            .iter()
+            .filter(|r| r.shape == s)
+            .map(|r| r.speedup_vs_ansor())
+            .collect();
+        if !hs.is_empty() {
+            out.push_str(&format!(
+                "avg @ {}: {} vs hand, {} vs ansor\n",
+                s.name(),
+                fmt_x(geomean(&hs)),
+                fmt_x(geomean(&as_))
+            ));
+        }
+    }
+    out
+}
+
+/// Fig. 13 micro-benchmark: one two-complex-op subgraph.
+pub struct MicroSubgraph {
+    pub name: &'static str,
+    pub graph: Graph,
+    pub view: SubgraphView,
+}
+
+/// The four §VI-B subgraphs (dw+dw, dw+pw, pw+dw, pw+pw) with epilogues,
+/// at batch `b`, 14x14 spatial, 32 base channels.
+pub fn micro_subgraphs(b: usize) -> Vec<MicroSubgraph> {
+    let hw = 14;
+    let c = 32;
+    let build_pair = |name: &'static str, up: &str, down: &str| {
+        let mut g = Graph::new(name);
+        let s_c = Shape::nhwc(b, hw, hw, c);
+        let s_2c = Shape::nhwc(b, hw, hw, 2 * c);
+        let inp = g.add(OpKind::Pad, "in", s_c.clone(), 0, &[]);
+        let (u, u_shape) = match up {
+            "dw" => (
+                g.add(OpKind::Depthwise { kh: 3, kw: 3, stride: 1 }, "up",
+                      s_c.clone(), 0, &[inp]),
+                s_c.clone(),
+            ),
+            _ => (
+                g.add(OpKind::Pointwise, "up", s_2c.clone(), c, &[inp]),
+                s_2c.clone(),
+            ),
+        };
+        let bias = g.add(OpKind::BiasAdd, "b1", u_shape.clone(), 0, &[u]);
+        let relu = g.add(OpKind::ReLU, "r1", u_shape.clone(), 0, &[bias]);
+        let mid_c = u_shape.dim(3);
+        let d = match down {
+            "dw" => g.add(OpKind::Depthwise { kh: 3, kw: 3, stride: 1 },
+                          "down", u_shape.clone(), 0, &[relu]),
+            _ => g.add(OpKind::Pointwise, "down",
+                       Shape::nhwc(b, hw, hw, c), mid_c, &[relu]),
+        };
+        let dshape = g.node(d).out_shape.clone();
+        let b2 = g.add(OpKind::BiasAdd, "b2", dshape.clone(), 0, &[d]);
+        let _ = g.add(OpKind::ReLU, "r2", dshape, 0, &[b2]);
+        let nodes: Vec<usize> = (0..g.len()).collect();
+        let view = SubgraphView::new(&g, &Subgraph { id: 0, nodes });
+        MicroSubgraph { name, graph: g, view }
+    };
+    vec![
+        build_pair("dw+dw", "dw", "dw"),
+        build_pair("dw+pw", "dw", "pw"),
+        build_pair("pw+dw", "pw", "dw"),
+        build_pair("pw+pw", "pw", "pw"),
+    ]
+}
+
+/// Tune one micro subgraph under an ablation variant; returns latency ms.
+pub fn tune_micro(
+    ms: &MicroSubgraph,
+    dev: &DeviceProfile,
+    variant: Variant,
+    budget: usize,
+    seed: u64,
+) -> f64 {
+    let search = SearchConfig {
+        budget,
+        stabilize_window: budget / 4,
+        seed,
+        allow_intensive: variant != Variant::AgoNi,
+        ..Default::default()
+    };
+    let rcfg = ReformerConfig {
+        search,
+        enabled: variant != Variant::AgoNr,
+        ..Default::default()
+    };
+    let r = tune_with_reformer(&ms.graph, &ms.view, dev, &rcfg);
+    r.best_latency * 1e3
+}
+
+/// Fig. 13: all four subgraphs x variants on one device. Averages over
+/// `seeds` to absorb search noise (the paper averages repeated runs too).
+pub fn fig13_table(dev: &DeviceProfile, b: usize, budget: usize) -> Table {
+    let seeds = [11u64, 22, 33];
+    let mut t = Table::new(&[
+        "subgraph", "AGO(ms)", "AGO-NI(ms)", "AGO-NR(ms)", "NI loss",
+        "NR loss",
+    ]);
+    for ms in micro_subgraphs(b) {
+        let avg = |variant| -> f64 {
+            let ls: Vec<f64> = seeds
+                .iter()
+                .map(|&s| tune_micro(&ms, dev, variant, budget, s))
+                .collect();
+            geomean(&ls)
+        };
+        let ago = avg(Variant::Ago);
+        let ni = avg(Variant::AgoNi);
+        let nr = avg(Variant::AgoNr);
+        t.row(vec![
+            format!("{} B={b}", ms.name),
+            format!("{ago:.4}"),
+            format!("{ni:.4}"),
+            format!("{nr:.4}"),
+            format!("{:+.1}%", (ni / ago - 1.0) * 100.0),
+            format!("{:+.1}%", (nr / ago - 1.0) * 100.0),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn micro_subgraphs_have_two_complex_ops() {
+        for b in [1, 4] {
+            for ms in micro_subgraphs(b) {
+                assert_eq!(ms.view.complex.len(), 2, "{}", ms.name);
+                assert!(ms.graph.is_acyclic());
+                assert_eq!(ms.graph.node(0).out_shape.dim(0), b);
+            }
+        }
+    }
+
+    #[test]
+    fn e2e_rows_produce_positive_latencies() {
+        let dev = DeviceProfile::qsd810();
+        let rows = e2e_rows(&dev, 400, &[ModelId::Sqn],
+                            &[InputShape::Small]);
+        assert_eq!(rows.len(), 1);
+        assert!(rows[0].hand_ms > 0.0);
+        assert!(rows[0].ansor_ms > 0.0);
+        assert!(rows[0].ago_ms > 0.0);
+        let rendered = render_e2e(&rows, "qsd810");
+        assert!(rendered.contains("SQN"));
+    }
+
+    #[test]
+    fn fig13_ago_wins_most_micro_benchmarks() {
+        // aggregate check: across the four subgraphs, AGO's geomean must
+        // beat AGO-NI and AGO-NR (paper: avg 17% / 27% losses)
+        let dev = DeviceProfile::qsd810();
+        let mut ni_losses = Vec::new();
+        let mut nr_losses = Vec::new();
+        for ms in micro_subgraphs(1) {
+            let ago = tune_micro(&ms, &dev, Variant::Ago, 1500, 5);
+            let ni = tune_micro(&ms, &dev, Variant::AgoNi, 1500, 5);
+            let nr = tune_micro(&ms, &dev, Variant::AgoNr, 1500, 5);
+            ni_losses.push(ni / ago);
+            nr_losses.push(nr / ago);
+        }
+        assert!(geomean(&ni_losses) >= 1.0,
+                "NI should lose on average: {ni_losses:?}");
+        assert!(geomean(&nr_losses) >= 0.99,
+                "NR should not win on average: {nr_losses:?}");
+    }
+}

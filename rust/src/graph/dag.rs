@@ -1,0 +1,247 @@
+//! Directed acyclic computational graph with topological-stage bookkeeping
+//! (Definition 2: the stage of a node is the length of the longest path
+//! from any root to it).
+
+use std::collections::VecDeque;
+
+use super::op::{OpKind, Shape};
+
+pub type NodeId = usize;
+
+#[derive(Clone, Debug)]
+pub struct Node {
+    pub id: NodeId,
+    pub kind: OpKind,
+    pub name: String,
+    /// Output tensor shape of this operator.
+    pub out_shape: Shape,
+    /// Contraction extent (input channels / K); 0 for simple ops where it
+    /// is irrelevant.
+    pub in_c: usize,
+}
+
+impl Node {
+    /// Loop-nest extents (feeds Eq. (1) and the cost model).
+    pub fn loops(&self) -> Vec<usize> {
+        self.kind.loops(&self.out_shape, self.in_c)
+    }
+
+    pub fn flops(&self) -> u64 {
+        self.kind.flops(&self.out_shape, self.in_c)
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct Graph {
+    pub nodes: Vec<Node>,
+    preds: Vec<Vec<NodeId>>,
+    succs: Vec<Vec<NodeId>>,
+    pub name: String,
+}
+
+impl Graph {
+    pub fn new(name: &str) -> Graph {
+        Graph { name: name.to_string(), ..Default::default() }
+    }
+
+    /// Add a node fed by `inputs`; returns its id.
+    pub fn add(
+        &mut self,
+        kind: OpKind,
+        name: &str,
+        out_shape: Shape,
+        in_c: usize,
+        inputs: &[NodeId],
+    ) -> NodeId {
+        let id = self.nodes.len();
+        self.nodes.push(Node {
+            id,
+            kind,
+            name: name.to_string(),
+            out_shape,
+            in_c,
+        });
+        self.preds.push(Vec::new());
+        self.succs.push(Vec::new());
+        for &u in inputs {
+            assert!(u < id, "edge from nonexistent/later node {u} -> {id}");
+            self.preds[id].push(u);
+            self.succs[u].push(id);
+        }
+        id
+    }
+
+    pub fn len(&self) -> usize {
+        self.nodes.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.nodes.is_empty()
+    }
+
+    pub fn preds(&self, v: NodeId) -> &[NodeId] {
+        &self.preds[v]
+    }
+
+    pub fn succs(&self, v: NodeId) -> &[NodeId] {
+        &self.succs[v]
+    }
+
+    pub fn node(&self, v: NodeId) -> &Node {
+        &self.nodes[v]
+    }
+
+    /// All directed edges (u, v).
+    pub fn edges(&self) -> Vec<(NodeId, NodeId)> {
+        let mut out = Vec::new();
+        for (u, ss) in self.succs.iter().enumerate() {
+            for &v in ss {
+                out.push((u, v));
+            }
+        }
+        out
+    }
+
+    /// Kahn topological order; `None` if the graph has a cycle. (`add`
+    /// cannot create cycles — ids are monotonic — but imported/edited
+    /// graphs go through this check.)
+    pub fn topo_order(&self) -> Option<Vec<NodeId>> {
+        let mut indeg: Vec<usize> =
+            self.preds.iter().map(|p| p.len()).collect();
+        let mut q: VecDeque<NodeId> = (0..self.len())
+            .filter(|&v| indeg[v] == 0)
+            .collect();
+        let mut order = Vec::with_capacity(self.len());
+        while let Some(v) = q.pop_front() {
+            order.push(v);
+            for &w in &self.succs[v] {
+                indeg[w] -= 1;
+                if indeg[w] == 0 {
+                    q.push_back(w);
+                }
+            }
+        }
+        (order.len() == self.len()).then_some(order)
+    }
+
+    pub fn is_acyclic(&self) -> bool {
+        self.topo_order().is_some()
+    }
+
+    /// Topological stages (Definition 2): `ts[v]` = 1 + length of the
+    /// longest path from a zero-in-degree root to `v` (roots have stage 1).
+    pub fn topo_stages(&self) -> Vec<usize> {
+        let order = self.topo_order().expect("graph must be acyclic");
+        let mut ts = vec![1usize; self.len()];
+        for &v in &order {
+            for &u in &self.preds[v] {
+                ts[v] = ts[v].max(ts[u] + 1);
+            }
+        }
+        ts
+    }
+
+    /// Number of complex operators.
+    pub fn complex_count(&self) -> usize {
+        self.nodes.iter().filter(|n| n.kind.is_complex()).count()
+    }
+
+    /// Total FLOPs of one inference.
+    pub fn total_flops(&self) -> u64 {
+        self.nodes.iter().map(|n| n.flops()).sum()
+    }
+
+    /// Graphviz DOT dump (debugging / docs).
+    pub fn to_dot(&self) -> String {
+        let mut s = format!("digraph \"{}\" {{\n", self.name);
+        for n in &self.nodes {
+            let style = if n.kind.is_complex() {
+                ",style=filled,fillcolor=palegreen"
+            } else {
+                ""
+            };
+            s.push_str(&format!(
+                "  n{} [label=\"{} {}\"{}];\n",
+                n.id,
+                n.kind.mnemonic(),
+                n.out_shape,
+                style
+            ));
+        }
+        for (u, v) in self.edges() {
+            s.push_str(&format!("  n{u} -> n{v};\n"));
+        }
+        s.push_str("}\n");
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn diamond() -> Graph {
+        // 0 -> 1 -> 3, 0 -> 2 -> 3
+        let mut g = Graph::new("diamond");
+        let s = Shape::nhwc(1, 8, 8, 4);
+        let a = g.add(OpKind::Pointwise, "a", s.clone(), 4, &[]);
+        let b = g.add(OpKind::ReLU, "b", s.clone(), 0, &[a]);
+        let c = g.add(OpKind::Depthwise { kh: 3, kw: 3, stride: 1 }, "c",
+                      s.clone(), 0, &[a]);
+        let d = g.add(OpKind::Add, "d", s, 0, &[b, c]);
+        assert_eq!((a, b, c, d), (0, 1, 2, 3));
+        g
+    }
+
+    #[test]
+    fn adjacency() {
+        let g = diamond();
+        assert_eq!(g.succs(0), &[1, 2]);
+        assert_eq!(g.preds(3), &[1, 2]);
+        assert_eq!(g.edges().len(), 4);
+    }
+
+    #[test]
+    fn topo_order_is_valid() {
+        let g = diamond();
+        let order = g.topo_order().unwrap();
+        let pos: Vec<usize> = {
+            let mut p = vec![0; g.len()];
+            for (i, &v) in order.iter().enumerate() {
+                p[v] = i;
+            }
+            p
+        };
+        for (u, v) in g.edges() {
+            assert!(pos[u] < pos[v]);
+        }
+    }
+
+    #[test]
+    fn stages_longest_path() {
+        let g = diamond();
+        let ts = g.topo_stages();
+        assert_eq!(ts, vec![1, 2, 2, 3]);
+    }
+
+    #[test]
+    fn stages_respect_edges() {
+        let g = diamond();
+        let ts = g.topo_stages();
+        for (u, v) in g.edges() {
+            assert!(ts[u] < ts[v]);
+        }
+    }
+
+    #[test]
+    fn complex_count() {
+        assert_eq!(diamond().complex_count(), 2);
+    }
+
+    #[test]
+    fn dot_contains_nodes() {
+        let dot = diamond().to_dot();
+        assert!(dot.contains("digraph"));
+        assert!(dot.contains("n0 ->"));
+    }
+}

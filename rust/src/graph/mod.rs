@@ -1,0 +1,13 @@
+//! Computational-graph IR: operators as nodes, tensors as edges (paper
+//! Fig. 1). The frontend partitions this graph; the tuner optimizes the
+//! resulting subgraphs.
+
+pub mod dag;
+pub mod op;
+pub mod import;
+pub mod subgraph;
+pub mod validate;
+
+pub use dag::{Graph, NodeId};
+pub use op::{OpKind, Shape};
+pub use subgraph::{Partition, Subgraph};

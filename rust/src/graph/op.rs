@@ -1,0 +1,275 @@
+//! Operator kinds and tensor shapes.
+//!
+//! The paper distinguishes COMPLEX operators (convolution variants, matrix
+//! multiplication — anything with a reduction over a large axis) from
+//! SIMPLE operators (elementwise, data movement, normalization). Subgraph
+//! heuristics in prior compilers allow at most one complex operator per
+//! subgraph; AGO removes that constraint.
+
+use std::fmt;
+
+/// Tensor shape. Activations are NHWC; matrices are (M, K).
+#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+pub struct Shape(pub Vec<usize>);
+
+impl Shape {
+    pub fn nhwc(n: usize, h: usize, w: usize, c: usize) -> Shape {
+        Shape(vec![n, h, w, c])
+    }
+
+    pub fn mk(m: usize, k: usize) -> Shape {
+        Shape(vec![m, k])
+    }
+
+    pub fn rank(&self) -> usize {
+        self.0.len()
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.0.iter().product()
+    }
+
+    /// Bytes at f32.
+    pub fn bytes(&self) -> usize {
+        self.numel() * 4
+    }
+
+    pub fn dim(&self, i: usize) -> usize {
+        self.0[i]
+    }
+}
+
+impl fmt::Display for Shape {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(
+            f,
+            "({})",
+            self.0
+                .iter()
+                .map(|d| d.to_string())
+                .collect::<Vec<_>>()
+                .join(",")
+        )
+    }
+}
+
+/// Operator kind. Shape parameters live on the node (`Graph::add`); the
+/// kind carries only operator-intrinsic attributes.
+#[derive(Clone, Debug, PartialEq)]
+pub enum OpKind {
+    // ---- complex operators (reduction-bearing) ----
+    /// Dense 2-d convolution, window `kh x kw`, stride `s`.
+    Conv2d { kh: usize, kw: usize, stride: usize },
+    /// Depthwise convolution (no reduction over channels).
+    Depthwise { kh: usize, kw: usize, stride: usize },
+    /// Pointwise (1x1) convolution (no reduction in the window).
+    Pointwise,
+    /// Matrix multiplication (mathematically = pointwise conv, §III-B).
+    MatMul,
+
+    // ---- simple operators ----
+    Add,
+    Mul,
+    BiasAdd,
+    ReLU,
+    ReLU6,
+    HardSwish,
+    Sigmoid,
+    GELU,
+    Softmax,
+    BatchNorm,
+    LayerNorm,
+    Pad,
+    Reshape,
+    Transpose,
+    Concat,
+    Split,
+    ChannelShuffle,
+    AvgPool { k: usize, stride: usize },
+    MaxPool { k: usize, stride: usize },
+    GlobalAvgPool,
+    Scale, // multiply by scalar/vector (attention 1/sqrt(d), etc.)
+}
+
+impl OpKind {
+    /// Complex operators carry reductions; only they trigger the paper's
+    /// one-per-subgraph constraint in prior compilers.
+    pub fn is_complex(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Conv2d { .. }
+                | OpKind::Depthwise { .. }
+                | OpKind::Pointwise
+                | OpKind::MatMul
+        )
+    }
+
+    /// Data-movement operators (the ones Relay treats as partition
+    /// delimiters — the paper's MVT analysis in §VI-B).
+    pub fn is_data_movement(&self) -> bool {
+        matches!(
+            self,
+            OpKind::Reshape
+                | OpKind::Transpose
+                | OpKind::Concat
+                | OpKind::Split
+                | OpKind::ChannelShuffle
+                | OpKind::Pad
+        )
+    }
+
+    /// Short mnemonic used in reports and DOT dumps.
+    pub fn mnemonic(&self) -> &'static str {
+        match self {
+            OpKind::Conv2d { .. } => "conv",
+            OpKind::Depthwise { .. } => "dw",
+            OpKind::Pointwise => "pw",
+            OpKind::MatMul => "mm",
+            OpKind::Add => "add",
+            OpKind::Mul => "mul",
+            OpKind::BiasAdd => "bias",
+            OpKind::ReLU => "relu",
+            OpKind::ReLU6 => "relu6",
+            OpKind::HardSwish => "hswish",
+            OpKind::Sigmoid => "sigmoid",
+            OpKind::GELU => "gelu",
+            OpKind::Softmax => "softmax",
+            OpKind::BatchNorm => "bn",
+            OpKind::LayerNorm => "ln",
+            OpKind::Pad => "pad",
+            OpKind::Reshape => "reshape",
+            OpKind::Transpose => "transpose",
+            OpKind::Concat => "concat",
+            OpKind::Split => "split",
+            OpKind::ChannelShuffle => "shuffle",
+            OpKind::AvgPool { .. } => "avgpool",
+            OpKind::MaxPool { .. } => "maxpool",
+            OpKind::GlobalAvgPool => "gap",
+            OpKind::Scale => "scale",
+        }
+    }
+
+    /// Loop-nest extents of the operator's tensor program, used by the
+    /// Eq. (1) weight and the cost model. `in_c` is the (primary) input
+    /// channel/contraction extent, `out` the output shape.
+    pub fn loops(&self, out: &Shape, in_c: usize) -> Vec<usize> {
+        match self {
+            OpKind::Conv2d { kh, kw, .. } => {
+                // N, H, W, O spatial/output loops + I, R, C reductions
+                let mut l = out.0.clone();
+                l.extend([in_c, *kh, *kw]);
+                l
+            }
+            OpKind::Depthwise { kh, kw, .. } => {
+                let mut l = out.0.clone();
+                l.extend([*kh, *kw]);
+                l
+            }
+            OpKind::Pointwise => {
+                let mut l = out.0.clone();
+                l.push(in_c);
+                l
+            }
+            OpKind::MatMul => {
+                let mut l = out.0.clone();
+                l.push(in_c);
+                l
+            }
+            OpKind::AvgPool { k, .. } | OpKind::MaxPool { k, .. } => {
+                let mut l = out.0.clone();
+                l.extend([*k, *k]);
+                l
+            }
+            OpKind::GlobalAvgPool => {
+                // reduce H, W of the input: out is (N,1,1,C); model the
+                // reduction extent via in_c as H*W
+                let mut l = out.0.clone();
+                l.push(in_c.max(1));
+                l
+            }
+            // simple elementwise / movement: the loop nest is the output
+            // iteration space
+            _ => out.0.clone(),
+        }
+    }
+
+    /// FLOPs to produce `out` (2x for multiply-accumulate ops).
+    pub fn flops(&self, out: &Shape, in_c: usize) -> u64 {
+        let o = out.numel() as u64;
+        match self {
+            OpKind::Conv2d { kh, kw, .. } => {
+                2 * o * (in_c * kh * kw) as u64
+            }
+            OpKind::Depthwise { kh, kw, .. } => 2 * o * (kh * kw) as u64,
+            OpKind::Pointwise | OpKind::MatMul => 2 * o * in_c as u64,
+            OpKind::AvgPool { k, .. } | OpKind::MaxPool { k, .. } => {
+                o * (k * k) as u64
+            }
+            OpKind::GlobalAvgPool => o * in_c.max(1) as u64,
+            OpKind::Softmax | OpKind::LayerNorm | OpKind::BatchNorm => 5 * o,
+            OpKind::GELU | OpKind::HardSwish | OpKind::Sigmoid => 8 * o,
+            OpKind::Reshape | OpKind::Transpose | OpKind::Concat
+            | OpKind::Split | OpKind::ChannelShuffle | OpKind::Pad => 0,
+            _ => o,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn complex_classification() {
+        assert!(OpKind::Conv2d { kh: 3, kw: 3, stride: 1 }.is_complex());
+        assert!(OpKind::Depthwise { kh: 3, kw: 3, stride: 1 }.is_complex());
+        assert!(OpKind::Pointwise.is_complex());
+        assert!(OpKind::MatMul.is_complex());
+        for k in [
+            OpKind::Add,
+            OpKind::ReLU,
+            OpKind::Reshape,
+            OpKind::Softmax,
+            OpKind::LayerNorm,
+            OpKind::GlobalAvgPool,
+        ] {
+            assert!(!k.is_complex(), "{k:?} misclassified");
+        }
+    }
+
+    #[test]
+    fn data_movement_classification() {
+        assert!(OpKind::Reshape.is_data_movement());
+        assert!(OpKind::Transpose.is_data_movement());
+        assert!(!OpKind::Add.is_data_movement());
+        assert!(!OpKind::Pointwise.is_data_movement());
+    }
+
+    #[test]
+    fn conv_loops_match_paper() {
+        // 2-d convolution: "seven nested loops" (§IV-A)
+        let out = Shape::nhwc(1, 28, 28, 64);
+        let l = OpKind::Conv2d { kh: 3, kw: 3, stride: 1 }.loops(&out, 32);
+        assert_eq!(l.len(), 7);
+        assert_eq!(l, vec![1, 28, 28, 64, 32, 3, 3]);
+    }
+
+    #[test]
+    fn flops_sanity() {
+        let out = Shape::nhwc(1, 14, 14, 64);
+        let conv = OpKind::Conv2d { kh: 3, kw: 3, stride: 1 };
+        assert_eq!(conv.flops(&out, 32), 2 * 196 * 64 * 32 * 9);
+        let pw = OpKind::Pointwise;
+        assert_eq!(pw.flops(&out, 32), 2 * 196 * 64 * 32);
+        assert_eq!(OpKind::Reshape.flops(&out, 0), 0);
+    }
+
+    #[test]
+    fn shape_helpers() {
+        let s = Shape::nhwc(2, 14, 14, 32);
+        assert_eq!(s.numel(), 2 * 14 * 14 * 32);
+        assert_eq!(s.bytes(), s.numel() * 4);
+        assert_eq!(format!("{s}"), "(2,14,14,32)");
+    }
+}

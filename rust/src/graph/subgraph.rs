@@ -1,0 +1,228 @@
+//! Graph partitions and subgraphs.
+//!
+//! A partition assigns every node of a [`Graph`] to exactly one subgraph
+//! (paper §IV). The *quotient graph* has one node per subgraph and an edge
+//! wherever any original edge crosses the cut; Definition 1's n-way acyclic
+//! property is exactly "the quotient graph is a DAG".
+
+use std::collections::BTreeSet;
+
+use super::dag::{Graph, NodeId};
+
+#[derive(Clone, Debug)]
+pub struct Subgraph {
+    pub id: usize,
+    /// Member node ids, ascending.
+    pub nodes: Vec<NodeId>,
+}
+
+#[derive(Clone, Debug)]
+pub struct Partition {
+    /// `assign[v]` = subgraph index of node v.
+    pub assign: Vec<usize>,
+    /// Number of subgraphs.
+    pub n_groups: usize,
+}
+
+impl Partition {
+    /// Build from an assignment vector, compacting group ids to 0..n.
+    pub fn from_assignment(mut assign: Vec<usize>) -> Partition {
+        let mut remap: Vec<Option<usize>> =
+            vec![None; assign.iter().max().map(|m| m + 1).unwrap_or(0)];
+        let mut next = 0;
+        for a in assign.iter_mut() {
+            let slot = &mut remap[*a];
+            if slot.is_none() {
+                *slot = Some(next);
+                next += 1;
+            }
+            *a = slot.unwrap();
+        }
+        Partition { assign, n_groups: next }
+    }
+
+    /// Singleton partition: every node its own subgraph.
+    pub fn singletons(n: usize) -> Partition {
+        Partition { assign: (0..n).collect(), n_groups: n }
+    }
+
+    pub fn group_of(&self, v: NodeId) -> usize {
+        self.assign[v]
+    }
+
+    /// Materialize subgraph member lists.
+    pub fn subgraphs(&self) -> Vec<Subgraph> {
+        let mut groups: Vec<Vec<NodeId>> = vec![Vec::new(); self.n_groups];
+        for (v, &g) in self.assign.iter().enumerate() {
+            groups[g].push(v);
+        }
+        groups
+            .into_iter()
+            .enumerate()
+            .map(|(id, nodes)| Subgraph { id, nodes })
+            .collect()
+    }
+
+    /// Every node in exactly one subgraph, ids compact.
+    pub fn is_cover(&self, g: &Graph) -> bool {
+        self.assign.len() == g.len()
+            && self.assign.iter().all(|&a| a < self.n_groups)
+            && (0..self.n_groups).all(|gid| {
+                self.assign.iter().any(|&a| a == gid)
+            })
+    }
+
+    /// Edges of the quotient graph (deduplicated, self-loops dropped).
+    pub fn quotient_edges(&self, g: &Graph) -> Vec<(usize, usize)> {
+        let mut set = BTreeSet::new();
+        for (u, v) in g.edges() {
+            let (a, b) = (self.assign[u], self.assign[v]);
+            if a != b {
+                set.insert((a, b));
+            }
+        }
+        set.into_iter().collect()
+    }
+
+    /// Definition 1: the partition is n-way acyclic iff the quotient graph
+    /// is a DAG. (Kahn's algorithm over subgraph nodes.)
+    pub fn is_acyclic(&self, g: &Graph) -> bool {
+        let edges = self.quotient_edges(g);
+        let n = self.n_groups;
+        let mut indeg = vec![0usize; n];
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for &(a, b) in &edges {
+            succs[a].push(b);
+            indeg[b] += 1;
+        }
+        let mut stack: Vec<usize> =
+            (0..n).filter(|&v| indeg[v] == 0).collect();
+        let mut seen = 0;
+        while let Some(v) = stack.pop() {
+            seen += 1;
+            for &w in &succs[v] {
+                indeg[w] -= 1;
+                if indeg[w] == 0 {
+                    stack.push(w);
+                }
+            }
+        }
+        seen == n
+    }
+
+    /// Topological order over subgraphs (execution schedule). Panics if
+    /// cyclic — callers must have validated acyclicity.
+    pub fn schedule(&self, g: &Graph) -> Vec<usize> {
+        assert!(self.is_acyclic(g), "cyclic partition has no schedule");
+        let edges = self.quotient_edges(g);
+        let n = self.n_groups;
+        let mut indeg = vec![0usize; n];
+        let mut succs: Vec<Vec<usize>> = vec![Vec::new(); n];
+        for &(a, b) in &edges {
+            succs[a].push(b);
+            indeg[b] += 1;
+        }
+        let mut queue: std::collections::VecDeque<usize> =
+            (0..n).filter(|&v| indeg[v] == 0).collect();
+        let mut order = Vec::with_capacity(n);
+        while let Some(v) = queue.pop_front() {
+            order.push(v);
+            for &w in &succs[v] {
+                indeg[w] -= 1;
+                if indeg[w] == 0 {
+                    queue.push_back(w);
+                }
+            }
+        }
+        order
+    }
+
+    /// Complex-operator count per subgraph.
+    pub fn complex_counts(&self, g: &Graph) -> Vec<usize> {
+        let mut counts = vec![0usize; self.n_groups];
+        for n in &g.nodes {
+            if n.kind.is_complex() {
+                counts[self.assign[n.id]] += 1;
+            }
+        }
+        counts
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::{OpKind, Shape};
+
+    /// Fig. 9's shape: conv1 -> conv2 -> conv3 and conv1 -> conv3.
+    fn fig9() -> Graph {
+        let mut g = Graph::new("fig9");
+        let s = Shape::nhwc(1, 8, 8, 8);
+        let c1 = g.add(OpKind::Conv2d { kh: 3, kw: 3, stride: 1 }, "conv1",
+                       s.clone(), 8, &[]);
+        let c2 = g.add(OpKind::Conv2d { kh: 3, kw: 3, stride: 1 }, "conv2",
+                       s.clone(), 8, &[c1]);
+        let _c3 = g.add(OpKind::Conv2d { kh: 3, kw: 3, stride: 1 }, "conv3",
+                        s, 8, &[c1, c2]);
+        g
+    }
+
+    #[test]
+    fn grouping_conv1_conv3_is_cyclic() {
+        // The paper's Fig. 9 example: {conv1, conv3} vs {conv2} deadlocks.
+        let g = fig9();
+        let p = Partition::from_assignment(vec![0, 1, 0]);
+        assert!(p.is_cover(&g));
+        assert!(!p.is_acyclic(&g));
+    }
+
+    #[test]
+    fn grouping_affix_nodes_is_acyclic() {
+        let g = fig9();
+        // {conv1, conv2} + {conv3}: stages differ by 1, Theorem 1 applies.
+        let p = Partition::from_assignment(vec![0, 0, 1]);
+        assert!(p.is_acyclic(&g));
+        // whole graph in one subgraph is trivially fine
+        let p1 = Partition::from_assignment(vec![0, 0, 0]);
+        assert!(p1.is_acyclic(&g));
+    }
+
+    #[test]
+    fn singletons_always_acyclic() {
+        let g = fig9();
+        let p = Partition::singletons(g.len());
+        assert!(p.is_cover(&g));
+        assert!(p.is_acyclic(&g));
+        assert_eq!(p.n_groups, 3);
+    }
+
+    #[test]
+    fn compaction() {
+        let p = Partition::from_assignment(vec![7, 7, 3]);
+        assert_eq!(p.n_groups, 2);
+        assert_eq!(p.assign, vec![0, 0, 1]);
+    }
+
+    #[test]
+    fn schedule_respects_quotient_edges() {
+        let g = fig9();
+        let p = Partition::from_assignment(vec![0, 0, 1]);
+        let sched = p.schedule(&g);
+        assert_eq!(sched, vec![0, 1]);
+    }
+
+    #[test]
+    fn complex_counts() {
+        let g = fig9();
+        let p = Partition::from_assignment(vec![0, 0, 1]);
+        assert_eq!(p.complex_counts(&g), vec![2, 1]);
+    }
+
+    #[test]
+    fn quotient_edges_dedup() {
+        let g = fig9();
+        let p = Partition::from_assignment(vec![0, 0, 1]);
+        // edges conv1->conv3 and conv2->conv3 both map to (0,1)
+        assert_eq!(p.quotient_edges(&g), vec![(0, 1)]);
+    }
+}

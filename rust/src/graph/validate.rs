@@ -1,0 +1,200 @@
+//! Structural validation of computational graphs: producer/consumer shape
+//! consistency per operator kind. Model builders run through this in
+//! tests, and `Graph::validate` is the entry point for imported graphs.
+
+use super::dag::Graph;
+use super::op::OpKind;
+
+/// One validation finding.
+#[derive(Clone, Debug)]
+pub struct Violation {
+    pub node: usize,
+    pub message: String,
+}
+
+/// Check every node's output shape against its inputs. Data-movement ops
+/// (reshape/transpose/...) are exempt from element-preservation only when
+/// explicitly noted; elementwise ops must preserve shapes (modulo
+/// broadcast on (N,1,1,C) SE-style scales).
+pub fn validate(g: &Graph) -> Vec<Violation> {
+    let mut out = Vec::new();
+    let mut push = |node: usize, message: String| {
+        out.push(Violation { node, message });
+    };
+    for n in &g.nodes {
+        let preds = g.preds(n.id);
+        let ins: Vec<_> =
+            preds.iter().map(|&p| &g.node(p).out_shape).collect();
+        match &n.kind {
+            OpKind::Add | OpKind::Mul => {
+                for s in &ins {
+                    let same = **s == n.out_shape;
+                    let bcast = s.rank() == 4
+                        && n.out_shape.rank() == 4
+                        && s.dim(1) == 1
+                        && s.dim(2) == 1
+                        && s.dim(3) == n.out_shape.dim(3);
+                    if !same && !bcast {
+                        push(n.id, format!(
+                            "elementwise input {s} vs output {}",
+                            n.out_shape
+                        ));
+                    }
+                }
+            }
+            OpKind::BiasAdd
+            | OpKind::ReLU
+            | OpKind::ReLU6
+            | OpKind::HardSwish
+            | OpKind::Sigmoid
+            | OpKind::GELU
+            | OpKind::Softmax
+            | OpKind::BatchNorm
+            | OpKind::LayerNorm
+            | OpKind::Scale
+            | OpKind::ChannelShuffle => {
+                for s in &ins {
+                    if **s != n.out_shape {
+                        push(n.id, format!(
+                            "unary op input {s} != output {}",
+                            n.out_shape
+                        ));
+                    }
+                }
+            }
+            OpKind::Depthwise { stride, .. } => {
+                if let Some(s) = ins.first() {
+                    if s.rank() == 4 {
+                        if s.dim(3) != n.out_shape.dim(3) {
+                            push(n.id, format!(
+                                "depthwise changes channels: {s} -> {}",
+                                n.out_shape
+                            ));
+                        }
+                        let expect = s.dim(1).div_ceil(*stride);
+                        if n.out_shape.dim(1) != expect {
+                            push(n.id, format!(
+                                "depthwise stride {stride}: rows {} != {expect}",
+                                n.out_shape.dim(1)
+                            ));
+                        }
+                    }
+                }
+            }
+            OpKind::Pointwise => {
+                if let Some(s) = ins.first() {
+                    if s.rank() == 4
+                        && n.out_shape.rank() == 4
+                        && (s.dim(1) != n.out_shape.dim(1)
+                            || s.dim(2) != n.out_shape.dim(2))
+                    {
+                        push(n.id, format!(
+                            "pointwise changes spatial dims: {s} -> {}",
+                            n.out_shape
+                        ));
+                    }
+                    if s.rank() == 4 && n.in_c != 0 && s.dim(3) != n.in_c {
+                        push(n.id, format!(
+                            "pointwise in_c {} != producer channels {}",
+                            n.in_c,
+                            s.dim(3)
+                        ));
+                    }
+                }
+            }
+            OpKind::Conv2d { stride, .. } => {
+                if let Some(s) = ins.first() {
+                    if s.rank() == 4 {
+                        let expect = s.dim(1).div_ceil(*stride);
+                        if n.out_shape.dim(1) != expect {
+                            push(n.id, format!(
+                                "conv stride {stride}: rows {} != {expect}",
+                                n.out_shape.dim(1)
+                            ));
+                        }
+                    }
+                }
+            }
+            OpKind::Concat => {
+                if ins.iter().all(|s| s.rank() == 4)
+                    && n.out_shape.rank() == 4
+                {
+                    let csum: usize = ins.iter().map(|s| s.dim(3)).sum();
+                    if csum != n.out_shape.dim(3) {
+                        push(n.id, format!(
+                            "concat channels {csum} != output {}",
+                            n.out_shape.dim(3)
+                        ));
+                    }
+                }
+            }
+            // movement / pooling / matmul / split: shape freedom or
+            // covered elsewhere
+            _ => {}
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpKind, Shape};
+    use crate::models::{build, InputShape, ModelId};
+
+    #[test]
+    fn model_zoo_validates_cleanly() {
+        for m in ModelId::all() {
+            for s in [InputShape::Small, InputShape::Large] {
+                let g = build(m, s);
+                let v = validate(&g);
+                assert!(
+                    v.is_empty(),
+                    "{}/{:?}: {} violations, first: {:?}",
+                    m.name(),
+                    s,
+                    v.len(),
+                    v.first()
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn catches_bad_elementwise() {
+        let mut g = Graph::new("t");
+        let a = g.add(OpKind::Pad, "a", Shape::nhwc(1, 8, 8, 4), 0, &[]);
+        let b = g.add(OpKind::Pad, "b", Shape::nhwc(1, 8, 8, 8), 0, &[]);
+        let _ = g.add(OpKind::Add, "add", Shape::nhwc(1, 8, 8, 4), 0,
+                      &[a, b]);
+        assert_eq!(validate(&g).len(), 1);
+    }
+
+    #[test]
+    fn catches_depthwise_channel_change() {
+        let mut g = Graph::new("t");
+        let a = g.add(OpKind::Pad, "a", Shape::nhwc(1, 8, 8, 4), 0, &[]);
+        let _ = g.add(OpKind::Depthwise { kh: 3, kw: 3, stride: 1 }, "dw",
+                      Shape::nhwc(1, 8, 8, 8), 0, &[a]);
+        assert!(!validate(&g).is_empty());
+    }
+
+    #[test]
+    fn allows_se_broadcast_mul() {
+        let mut g = Graph::new("t");
+        let a = g.add(OpKind::Pad, "a", Shape::nhwc(1, 8, 8, 4), 0, &[]);
+        let s = g.add(OpKind::Pad, "s", Shape::nhwc(1, 1, 1, 4), 0, &[]);
+        let _ = g.add(OpKind::Mul, "mul", Shape::nhwc(1, 8, 8, 4), 0,
+                      &[a, s]);
+        assert!(validate(&g).is_empty());
+    }
+
+    #[test]
+    fn catches_stride_mismatch() {
+        let mut g = Graph::new("t");
+        let a = g.add(OpKind::Pad, "a", Shape::nhwc(1, 8, 8, 4), 0, &[]);
+        let _ = g.add(OpKind::Conv2d { kh: 3, kw: 3, stride: 2 }, "c",
+                      Shape::nhwc(1, 8, 8, 8), 4, &[a]);
+        assert!(!validate(&g).is_empty());
+    }
+}

@@ -1,0 +1,20 @@
+//! AGO: arbitrary-structure graph optimization for mobile AI inference.
+//!
+//! Reproduction of "AGO: Boosting Mobile AI Inference Performance by
+//! Removing Constraints on Graph Optimization" (Xu, Peng, Wang; 2022).
+//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! paper-vs-measured record.
+
+pub mod baselines;
+pub mod coordinator;
+pub mod costmodel;
+pub mod device;
+pub mod experiments;
+pub mod graph;
+pub mod models;
+pub mod partition;
+pub mod reformer;
+pub mod runtime;
+pub mod simulator;
+pub mod tuner;
+pub mod util;

@@ -1,0 +1,307 @@
+//! `ago` — CLI for the AGO reproduction.
+//!
+//! Subcommands:
+//!   compile    run the full pipeline on a model and report latency
+//!   partition  compare AGO vs Relay partitioning (Fig. 14 view)
+//!   run        execute AOT artifacts through the PJRT runtime
+//!   models     list available model graphs
+//!   devices    list device profiles
+
+use ago::baselines::{ansor_compile, handlib_compile};
+use ago::coordinator::{compile, CompileConfig, Frontend, Variant};
+use ago::device::DeviceProfile;
+use ago::graph::Graph;
+use ago::models::{build, InputShape, ModelId};
+use ago::partition::{relay_partition, PartitionReport, WeightParams};
+use ago::runtime::{Engine, TensorData};
+use ago::util::benchkit::{fmt_ms, fmt_x, Table};
+use ago::util::cli::Args;
+use ago::util::{logging, Rng};
+
+fn main() {
+    logging::init();
+    let args = Args::from_env(true);
+    let code = match args.subcommand.as_deref() {
+        Some("compile") => cmd_compile(&args),
+        Some("partition") => cmd_partition(&args),
+        Some("run") => cmd_run(&args),
+        Some("models") => {
+            for m in ModelId::all() {
+                let g = build(m, InputShape::Large);
+                println!(
+                    "{:5} {:28} {:4} ops, {:3} complex, {:.0} MFLOPs",
+                    m.name(),
+                    g.name,
+                    g.len(),
+                    g.complex_count(),
+                    g.total_flops() as f64 / 1e6
+                );
+            }
+            0
+        }
+        Some("devices") => {
+            for d in [DeviceProfile::kirin990(), DeviceProfile::qsd810()] {
+                println!(
+                    "{:9} {} cores @ {:.2} GHz, {:.0} GFLOP/s peak, \
+                     {:.1} GB/s DRAM",
+                    d.name,
+                    d.cores,
+                    d.freq_ghz,
+                    d.peak_gflops(),
+                    d.dram_gbps
+                );
+            }
+            0
+        }
+        _ => {
+            eprintln!(
+                "usage: ago <compile|partition|run|models|devices> [opts]\n\
+                 \n\
+                 compile   --model mbn --shape small|middle|large \\\n\
+                 \x20         --device kirin990|qsd810 --budget 20000 \\\n\
+                 \x20         --variant ago|ni|nr --frontend auto|relay \\\n\
+                 \x20         [--baselines]\n\
+                 partition --model mvt --shape large\n\
+                 run       --artifacts artifacts [--program NAME | --demo]"
+            );
+            2
+        }
+    };
+    std::process::exit(code);
+}
+
+fn model_graph(args: &Args) -> Option<(ModelId, InputShape, Graph)> {
+    let m = ModelId::parse(args.get_or("model", "mbn"))?;
+    let s = InputShape::parse(args.get_or("shape", "small"))?;
+    Some((m, s, build(m, s)))
+}
+
+fn cmd_compile(args: &Args) -> i32 {
+    // --graph file.json imports a custom model; otherwise use the zoo
+    let (mname, sname, g) = if let Some(path) = args.get("graph") {
+        match ago::graph::import::load(path, args.has_flag("no-validate")) {
+            Ok(g) => (g.name.clone(), "custom".to_string(), g),
+            Err(e) => {
+                eprintln!("cannot import {path}: {e:#}");
+                return 1;
+            }
+        }
+    } else {
+        let Some((m, s, g)) = model_graph(args) else {
+            eprintln!("unknown --model or --shape");
+            return 2;
+        };
+        (m.name().to_string(), s.name().to_string(), g)
+    };
+    let Some(dev) = DeviceProfile::by_name(args.get_or("device", "kirin990"))
+    else {
+        eprintln!("unknown --device (kirin990|qsd810)");
+        return 2;
+    };
+    let variant = Variant::parse(args.get_or("variant", "ago"))
+        .unwrap_or(Variant::Ago);
+    let frontend = match args.get_or("frontend", "auto") {
+        "relay" => Frontend::Relay,
+        _ => Frontend::Auto,
+    };
+    let budget = args.get_usize("budget", 20_000);
+    let cfg = CompileConfig {
+        device: dev.clone(),
+        budget,
+        frontend,
+        variant,
+        seed: args.get_u64("seed", 0xA60),
+        workers: args.get_usize("workers", 0),
+    };
+    log::info!(
+        "compiling {mname}/{sname} for {} (budget {budget}, {:?})",
+        dev.name,
+        variant
+    );
+    let t0 = std::time::Instant::now();
+    let out = compile(&g, &cfg);
+    println!(
+        "{mname} {sname}: {} subgraphs, predicted latency {} ms \
+         ({} evals, compile took {:.1}s)",
+        out.partition.n_groups,
+        fmt_ms(out.latency_ms()),
+        out.total_evals,
+        t0.elapsed().as_secs_f64()
+    );
+    println!("{}", out.report.summary("partition"));
+    if let Some(path) = args.get("out") {
+        match ago::coordinator::plan::save(&out, &mname, dev.name, path) {
+            Ok(()) => println!("plan written to {path}"),
+            Err(e) => {
+                eprintln!("failed to write plan: {e:#}");
+                return 1;
+            }
+        }
+    }
+    if args.has_flag("baselines") {
+        let ansor = ansor_compile(&g, &dev, budget, cfg.seed);
+        let (_, _, hl) = handlib_compile(&g, &dev);
+        let hand: f64 = hl.iter().sum();
+        let mut t = Table::new(&["system", "latency(ms)", "vs hand"]);
+        t.row(vec!["handlib".into(), fmt_ms(hand * 1e3), "1.00x".into()]);
+        t.row(vec![
+            "ansor".into(),
+            fmt_ms(ansor.latency_ms()),
+            fmt_x(hand / ansor.total_latency),
+        ]);
+        t.row(vec![
+            "ago".into(),
+            fmt_ms(out.latency_ms()),
+            fmt_x(hand / out.total_latency),
+        ]);
+        t.print();
+    }
+    0
+}
+
+fn cmd_partition(args: &Args) -> i32 {
+    let Some((m, s, g)) = model_graph(args) else {
+        eprintln!("unknown --model or --shape");
+        return 2;
+    };
+    let wp = WeightParams::default();
+    let ago_p = ago::partition::cluster(
+        &g,
+        ago::partition::cluster::ClusterConfig::adaptive(&g),
+    );
+    let relay_p = relay_partition(&g);
+    let ago_r = PartitionReport::build(&g, &ago_p, wp);
+    let relay_r = PartitionReport::build(&g, &relay_p, wp);
+    println!("model {}/{} ({} ops)", m.name(), s.name(), g.len());
+    println!("{}", ago_r.summary("AGO  "));
+    println!("{}", relay_r.summary("Relay"));
+    println!("\nweight histogram (log2 bins): AGO | Relay");
+    for (i, (a, r)) in ago_r.bins.iter().zip(&relay_r.bins).enumerate() {
+        if *a > 0 || *r > 0 {
+            println!("  [2^{i:2}, 2^{:2}): {a:4} | {r:4}", i + 1);
+        }
+    }
+    0
+}
+
+fn cmd_run(args: &Args) -> i32 {
+    let dir = args.get_or("artifacts", "artifacts");
+    let mut engine = match Engine::new(dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("cannot open artifacts at {dir}: {e:#}");
+            eprintln!("run `make artifacts` first");
+            return 1;
+        }
+    };
+    if let Some(path) = args.get("plan") {
+        match ago::coordinator::plan::load(path) {
+            Ok(p) => {
+                println!(
+                    "plan {path}: model {}, device {}, {} subgraphs, \
+                     predicted {:.2} ms",
+                    p.model,
+                    p.device,
+                    p.partition.n_groups,
+                    p.total_latency_ms
+                );
+                let intensive = p
+                    .schedules
+                    .iter()
+                    .flat_map(|s| &s.groups)
+                    .filter(|g| {
+                        g.kind
+                            == ago::tuner::schedule::GroupKind::Intensive
+                    })
+                    .count();
+                println!("intensively fused groups: {intensive}");
+                return 0;
+            }
+            Err(e) => {
+                eprintln!("cannot load plan {path}: {e:#}");
+                return 1;
+            }
+        }
+    }
+    if let Some(name) = args.get("program") {
+        let meta = match engine.manifest.get(name) {
+            Ok(m) => m.clone(),
+            Err(e) => {
+                eprintln!("{e:#}");
+                return 1;
+            }
+        };
+        let mut rng = Rng::new(args.get_u64("seed", 1));
+        let inputs: Vec<TensorData> = meta
+            .inputs
+            .iter()
+            .map(|t| TensorData::random(&t.shape, &mut rng))
+            .collect();
+        let t0 = std::time::Instant::now();
+        match engine.execute(name, &inputs) {
+            Ok(outs) => {
+                println!(
+                    "{name}: {} outputs in {:.3} ms (first shape {:?})",
+                    outs.len(),
+                    t0.elapsed().as_secs_f64() * 1e3,
+                    outs[0].shape
+                );
+                0
+            }
+            Err(e) => {
+                eprintln!("execute failed: {e:#}");
+                1
+            }
+        }
+    } else {
+        // --demo: fused vs unfused pw->dw chain, real execution
+        let mut rng = Rng::new(args.get_u64("seed", 1));
+        let x = TensorData::random(&[1, 14, 14, 24], &mut rng);
+        let w1 = TensorData::random(&[24, 48], &mut rng);
+        let b1 = TensorData::random(&[48], &mut rng);
+        let w2 = TensorData::random(&[3, 3, 1, 48], &mut rng);
+        let b2 = TensorData::random(&[48], &mut rng);
+        let reps = args.get_usize("reps", 50);
+        let fused_in = vec![x.clone(), w1.clone(), b1.clone(), w2.clone(),
+                            b2.clone()];
+        // warmup: compile AND run each once (first execution pays lazy
+        // runtime init that would skew the timed loops)
+        engine
+            .execute("fused_pw_dw_n1h14w14i24a48b48", &fused_in)
+            .unwrap();
+        let warm_mid = engine
+            .execute("pw_n1h14w14i24o48", &[x.clone(), w1.clone(), b1.clone()])
+            .unwrap()
+            .remove(0);
+        engine
+            .execute("dw3_n1h14w14c48", &[warm_mid, w2.clone(), b2.clone()])
+            .unwrap();
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            engine
+                .execute("fused_pw_dw_n1h14w14i24a48b48", &fused_in)
+                .unwrap();
+        }
+        let fused_dt = t0.elapsed().as_secs_f64() / reps as f64;
+        let t0 = std::time::Instant::now();
+        for _ in 0..reps {
+            let mid = engine
+                .execute("pw_n1h14w14i24o48",
+                         &[x.clone(), w1.clone(), b1.clone()])
+                .unwrap()
+                .remove(0);
+            engine
+                .execute("dw3_n1h14w14c48", &[mid, w2.clone(), b2.clone()])
+                .unwrap();
+        }
+        let unfused_dt = t0.elapsed().as_secs_f64() / reps as f64;
+        println!(
+            "pw->dw real execution: fused {:.3} ms, unfused {:.3} ms \
+             ({} over {reps} reps)",
+            fused_dt * 1e3,
+            unfused_dt * 1e3,
+            fmt_x(unfused_dt / fused_dt)
+        );
+        0
+    }
+}

@@ -1,0 +1,208 @@
+//! Shared building blocks for the model zoo. Every helper returns the id
+//! of its output node, so builders compose like the networks themselves.
+
+use crate::graph::{Graph, NodeId, OpKind, Shape};
+
+/// conv KxK (stride s) + bias + activation. BatchNorm is assumed folded
+/// into the conv at inference time (standard mobile deployment), so it is
+/// not emitted as a separate node.
+pub fn conv_act(
+    g: &mut Graph,
+    x: NodeId,
+    name: &str,
+    k: usize,
+    stride: usize,
+    out_c: usize,
+    act: Option<OpKind>,
+) -> NodeId {
+    let in_shape = g.node(x).out_shape.clone();
+    let (n, h, w, in_c) =
+        (in_shape.dim(0), in_shape.dim(1), in_shape.dim(2), in_shape.dim(3));
+    let (oh, ow) = (h.div_ceil(stride), w.div_ceil(stride));
+    let out = Shape::nhwc(n, oh, ow, out_c);
+    let kind = if k == 1 {
+        OpKind::Pointwise
+    } else {
+        OpKind::Conv2d { kh: k, kw: k, stride }
+    };
+    let conv = g.add(kind, name, out.clone(), in_c, &[x]);
+    let bias = g.add(OpKind::BiasAdd, &format!("{name}.bias"), out.clone(),
+                     0, &[conv]);
+    match act {
+        Some(a) => {
+            let an = format!("{name}.{}", a.mnemonic());
+            g.add(a, &an, out, 0, &[bias])
+        }
+        None => bias,
+    }
+}
+
+/// depthwise KxK (stride s) + bias + activation.
+pub fn dw_act(
+    g: &mut Graph,
+    x: NodeId,
+    name: &str,
+    k: usize,
+    stride: usize,
+    act: Option<OpKind>,
+) -> NodeId {
+    let in_shape = g.node(x).out_shape.clone();
+    let (n, h, w, c) =
+        (in_shape.dim(0), in_shape.dim(1), in_shape.dim(2), in_shape.dim(3));
+    let (oh, ow) = (h.div_ceil(stride), w.div_ceil(stride));
+    let out = Shape::nhwc(n, oh, ow, c);
+    let dw = g.add(OpKind::Depthwise { kh: k, kw: k, stride }, name,
+                   out.clone(), 0, &[x]);
+    let bias = g.add(OpKind::BiasAdd, &format!("{name}.bias"), out.clone(),
+                     0, &[dw]);
+    match act {
+        Some(a) => {
+            let an = format!("{name}.{}", a.mnemonic());
+            g.add(a, &an, out, 0, &[bias])
+        }
+        None => bias,
+    }
+}
+
+/// MobileNet-V2 inverted residual: pw expand (xT) -> dw KxK -> pw project,
+/// residual add when stride==1 and channels match.
+pub fn inverted_residual(
+    g: &mut Graph,
+    x: NodeId,
+    name: &str,
+    expand: usize,
+    out_c: usize,
+    k: usize,
+    stride: usize,
+) -> NodeId {
+    let in_c = g.node(x).out_shape.dim(3);
+    let mid_c = in_c * expand;
+    let mut cur = x;
+    if expand != 1 {
+        cur = conv_act(g, cur, &format!("{name}.expand"), 1, 1, mid_c,
+                       Some(OpKind::ReLU6));
+    }
+    cur = dw_act(g, cur, &format!("{name}.dw"), k, stride,
+                 Some(OpKind::ReLU6));
+    cur = conv_act(g, cur, &format!("{name}.project"), 1, 1, out_c, None);
+    if stride == 1 && in_c == out_c {
+        let shape = g.node(cur).out_shape.clone();
+        cur = g.add(OpKind::Add, &format!("{name}.res"), shape, 0,
+                    &[x, cur]);
+    }
+    cur
+}
+
+/// Squeeze-and-excitation (MNasNet-A1): GAP -> pw reduce -> ReLU ->
+/// pw expand -> sigmoid -> channel-wise mul.
+pub fn squeeze_excite(
+    g: &mut Graph,
+    x: NodeId,
+    name: &str,
+    reduce: usize,
+) -> NodeId {
+    let s = g.node(x).out_shape.clone();
+    let (n, h, w, c) = (s.dim(0), s.dim(1), s.dim(2), s.dim(3));
+    let pooled = Shape::nhwc(n, 1, 1, c);
+    let gap = g.add(OpKind::GlobalAvgPool, &format!("{name}.gap"),
+                    pooled.clone(), h * w, &[x]);
+    let rc = (c / reduce).max(1);
+    let r = g.add(OpKind::Pointwise, &format!("{name}.fc1"),
+                  Shape::nhwc(n, 1, 1, rc), c, &[gap]);
+    let relu = g.add(OpKind::ReLU, &format!("{name}.relu"),
+                     Shape::nhwc(n, 1, 1, rc), 0, &[r]);
+    let e = g.add(OpKind::Pointwise, &format!("{name}.fc2"), pooled.clone(),
+                  rc, &[relu]);
+    let sig = g.add(OpKind::Sigmoid, &format!("{name}.sigmoid"), pooled, 0,
+                    &[e]);
+    g.add(OpKind::Mul, &format!("{name}.scale"), s, 0, &[x, sig])
+}
+
+/// Max/avg pool helper.
+pub fn pool(
+    g: &mut Graph,
+    x: NodeId,
+    name: &str,
+    k: usize,
+    stride: usize,
+    avg: bool,
+) -> NodeId {
+    let s = g.node(x).out_shape.clone();
+    let (n, h, w, c) = (s.dim(0), s.dim(1), s.dim(2), s.dim(3));
+    let out = Shape::nhwc(n, h.div_ceil(stride), w.div_ceil(stride), c);
+    let kind = if avg {
+        OpKind::AvgPool { k, stride }
+    } else {
+        OpKind::MaxPool { k, stride }
+    };
+    g.add(kind, name, out, 0, &[x])
+}
+
+/// Classifier head: GAP -> matmul(fc) -> softmax.
+pub fn head(g: &mut Graph, x: NodeId, classes: usize) -> NodeId {
+    let s = g.node(x).out_shape.clone();
+    let (n, h, w, c) = (s.dim(0), s.dim(1), s.dim(2), s.dim(3));
+    let gap = g.add(OpKind::GlobalAvgPool, "head.gap",
+                    Shape::nhwc(n, 1, 1, c), h * w, &[x]);
+    let flat = g.add(OpKind::Reshape, "head.flatten", Shape::mk(n, c), 0,
+                     &[gap]);
+    let fc = g.add(OpKind::MatMul, "head.fc", Shape::mk(n, classes), c,
+                   &[flat]);
+    g.add(OpKind::Softmax, "head.softmax", Shape::mk(n, classes), 0, &[fc])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn input(g: &mut Graph, hw: usize, c: usize) -> NodeId {
+        // model input as a zero-cost pad node (a source in the DAG)
+        g.add(OpKind::Pad, "input", Shape::nhwc(1, hw, hw, c), 0, &[])
+    }
+
+    #[test]
+    fn conv_act_shapes() {
+        let mut g = Graph::new("t");
+        let x = input(&mut g, 56, 3);
+        let y = conv_act(&mut g, x, "stem", 3, 2, 32, Some(OpKind::ReLU6));
+        assert_eq!(g.node(y).out_shape, Shape::nhwc(1, 28, 28, 32));
+        assert!(g.is_acyclic());
+    }
+
+    #[test]
+    fn inverted_residual_has_residual_edge() {
+        let mut g = Graph::new("t");
+        let x = input(&mut g, 14, 32);
+        let y = inverted_residual(&mut g, x, "b", 6, 32, 3, 1);
+        // output is an Add fed by both the input and the projection
+        assert_eq!(g.node(y).kind, OpKind::Add);
+        assert!(g.preds(y).contains(&x));
+    }
+
+    #[test]
+    fn inverted_residual_no_residual_on_stride2() {
+        let mut g = Graph::new("t");
+        let x = input(&mut g, 14, 32);
+        let y = inverted_residual(&mut g, x, "b", 6, 64, 3, 2);
+        assert_ne!(g.node(y).kind, OpKind::Add);
+        assert_eq!(g.node(y).out_shape, Shape::nhwc(1, 7, 7, 64));
+    }
+
+    #[test]
+    fn se_block_structure() {
+        let mut g = Graph::new("t");
+        let x = input(&mut g, 14, 64);
+        let y = squeeze_excite(&mut g, x, "se", 4);
+        assert_eq!(g.node(y).kind, OpKind::Mul);
+        assert_eq!(g.node(y).out_shape, Shape::nhwc(1, 14, 14, 64));
+    }
+
+    #[test]
+    fn head_ends_in_softmax() {
+        let mut g = Graph::new("t");
+        let x = input(&mut g, 7, 128);
+        let y = head(&mut g, x, 1000);
+        assert_eq!(g.node(y).kind, OpKind::Softmax);
+        assert_eq!(g.node(y).out_shape, Shape::mk(1, 1000));
+    }
+}

@@ -1,0 +1,280 @@
+//! CNN builders: MobileNet-V2, MNasNet-A1, SqueezeNet-1.1, ShuffleNet-V2.
+//! Layer configurations follow the published architectures; BatchNorm is
+//! folded into the preceding conv (inference-time graphs).
+
+use crate::graph::{Graph, NodeId, OpKind, Shape};
+
+use super::blocks::{
+    conv_act, dw_act, head, inverted_residual, pool, squeeze_excite,
+};
+
+fn input(g: &mut Graph, hw: usize, c: usize) -> NodeId {
+    g.add(OpKind::Pad, "input", Shape::nhwc(1, hw, hw, c), 0, &[])
+}
+
+/// MobileNet-V2 (width 1.0). Sandler et al., CVPR 2018, Table 2.
+pub fn mobilenet_v2(hw: usize) -> Graph {
+    let mut g = Graph::new(&format!("mobilenet_v2_{hw}"));
+    let x = input(&mut g, hw, 3);
+    let mut cur = conv_act(&mut g, x, "stem", 3, 2, 32, Some(OpKind::ReLU6));
+    // (expansion t, out channels c, repeats n, first stride s)
+    let cfg: &[(usize, usize, usize, usize)] = &[
+        (1, 16, 1, 1),
+        (6, 24, 2, 2),
+        (6, 32, 3, 2),
+        (6, 64, 4, 2),
+        (6, 96, 3, 1),
+        (6, 160, 3, 2),
+        (6, 320, 1, 1),
+    ];
+    let mut idx = 0;
+    for &(t, c, n, s) in cfg {
+        for rep in 0..n {
+            let stride = if rep == 0 { s } else { 1 };
+            cur = inverted_residual(
+                &mut g,
+                cur,
+                &format!("ir{idx}"),
+                t,
+                c,
+                3,
+                stride,
+            );
+            idx += 1;
+        }
+    }
+    cur = conv_act(&mut g, cur, "last", 1, 1, 1280, Some(OpKind::ReLU6));
+    head(&mut g, cur, 1000);
+    g
+}
+
+/// MNasNet-A1 (Tan et al., CVPR 2019, Fig. 7): MBConv blocks with 3x3/5x5
+/// depthwise kernels and squeeze-excitation on some stages.
+pub fn mnasnet(hw: usize) -> Graph {
+    let mut g = Graph::new(&format!("mnasnet_{hw}"));
+    let x = input(&mut g, hw, 3);
+    let mut cur = conv_act(&mut g, x, "stem", 3, 2, 32, Some(OpKind::ReLU));
+    // SepConv 3x3, 16
+    cur = dw_act(&mut g, cur, "sep.dw", 3, 1, Some(OpKind::ReLU));
+    cur = conv_act(&mut g, cur, "sep.pw", 1, 1, 16, None);
+    // (expand, out_c, repeats, stride, kernel, se)
+    let cfg: &[(usize, usize, usize, usize, usize, bool)] = &[
+        (6, 24, 2, 2, 3, false),
+        (3, 40, 3, 2, 5, true),
+        (6, 80, 4, 2, 3, false),
+        (6, 112, 2, 1, 3, true),
+        (6, 160, 3, 2, 5, true),
+        (6, 320, 1, 1, 3, false),
+    ];
+    let mut idx = 0;
+    for &(t, c, n, s, k, se) in cfg {
+        for rep in 0..n {
+            let stride = if rep == 0 { s } else { 1 };
+            // MBConv with optional SE between dw and project
+            let in_c = g.node(cur).out_shape.dim(3);
+            let mid = in_c * t;
+            let name = format!("mb{idx}");
+            let mut b = conv_act(&mut g, cur, &format!("{name}.expand"), 1,
+                                 1, mid, Some(OpKind::ReLU));
+            b = dw_act(&mut g, b, &format!("{name}.dw"), k, stride,
+                       Some(OpKind::ReLU));
+            if se {
+                b = squeeze_excite(&mut g, b, &format!("{name}.se"), 4);
+            }
+            b = conv_act(&mut g, b, &format!("{name}.project"), 1, 1, c,
+                         None);
+            if stride == 1 && in_c == c {
+                let shape = g.node(b).out_shape.clone();
+                b = g.add(OpKind::Add, &format!("{name}.res"), shape, 0,
+                          &[cur, b]);
+            }
+            cur = b;
+            idx += 1;
+        }
+    }
+    cur = conv_act(&mut g, cur, "last", 1, 1, 1280, Some(OpKind::ReLU));
+    head(&mut g, cur, 1000);
+    g
+}
+
+/// SqueezeNet 1.1 (Iandola et al., 2016). Fire = squeeze pw -> parallel
+/// expand pw + expand 3x3 -> concat.
+pub fn squeezenet(hw: usize) -> Graph {
+    let mut g = Graph::new(&format!("squeezenet_{hw}"));
+    let x = input(&mut g, hw, 3);
+    let mut cur = conv_act(&mut g, x, "stem", 3, 2, 64, Some(OpKind::ReLU));
+    cur = pool(&mut g, cur, "pool1", 3, 2, false);
+
+    let fire = |g: &mut Graph, x: NodeId, name: &str, s: usize,
+                    e: usize| {
+        let sq = conv_act(g, x, &format!("{name}.squeeze"), 1, 1, s,
+                          Some(OpKind::ReLU));
+        let e1 = conv_act(g, sq, &format!("{name}.e1"), 1, 1, e,
+                          Some(OpKind::ReLU));
+        let e3 = conv_act(g, sq, &format!("{name}.e3"), 3, 1, e,
+                          Some(OpKind::ReLU));
+        let shape = {
+            let s1 = &g.node(e1).out_shape;
+            Shape::nhwc(s1.dim(0), s1.dim(1), s1.dim(2), 2 * e)
+        };
+        g.add(OpKind::Concat, &format!("{name}.cat"), shape, 0, &[e1, e3])
+    };
+
+    cur = fire(&mut g, cur, "fire2", 16, 64);
+    cur = fire(&mut g, cur, "fire3", 16, 64);
+    cur = pool(&mut g, cur, "pool3", 3, 2, false);
+    cur = fire(&mut g, cur, "fire4", 32, 128);
+    cur = fire(&mut g, cur, "fire5", 32, 128);
+    cur = pool(&mut g, cur, "pool5", 3, 2, false);
+    cur = fire(&mut g, cur, "fire6", 48, 192);
+    cur = fire(&mut g, cur, "fire7", 48, 192);
+    cur = fire(&mut g, cur, "fire8", 64, 256);
+    cur = fire(&mut g, cur, "fire9", 64, 256);
+    cur = conv_act(&mut g, cur, "conv10", 1, 1, 1000, Some(OpKind::ReLU));
+    head(&mut g, cur, 1000);
+    g
+}
+
+/// ShuffleNet-V2 1.0x (Ma et al., ECCV 2018). Units use channel split,
+/// pw -> dw -> pw on one branch, concat + channel shuffle.
+pub fn shufflenet_v2(hw: usize) -> Graph {
+    let mut g = Graph::new(&format!("shufflenet_v2_{hw}"));
+    let x = input(&mut g, hw, 3);
+    let mut cur = conv_act(&mut g, x, "stem", 3, 2, 24, Some(OpKind::ReLU));
+    cur = pool(&mut g, cur, "pool1", 3, 2, false);
+
+    // basic unit (stride 1): split -> (identity | pw-dw-pw) -> concat ->
+    // shuffle
+    let basic = |g: &mut Graph, x: NodeId, name: &str| -> NodeId {
+        let s = g.node(x).out_shape.clone();
+        let (n, h, w, c) = (s.dim(0), s.dim(1), s.dim(2), s.dim(3));
+        let half = Shape::nhwc(n, h, w, c / 2);
+        let l = g.add(OpKind::Split, &format!("{name}.split_l"),
+                      half.clone(), 0, &[x]);
+        let r = g.add(OpKind::Split, &format!("{name}.split_r"),
+                      half.clone(), 0, &[x]);
+        let mut b = conv_act(g, r, &format!("{name}.pw1"), 1, 1, c / 2,
+                             Some(OpKind::ReLU));
+        b = dw_act(g, b, &format!("{name}.dw"), 3, 1, None);
+        b = conv_act(g, b, &format!("{name}.pw2"), 1, 1, c / 2,
+                     Some(OpKind::ReLU));
+        let cat = g.add(OpKind::Concat, &format!("{name}.cat"), s.clone(),
+                        0, &[l, b]);
+        g.add(OpKind::ChannelShuffle, &format!("{name}.shuffle"), s, 0,
+              &[cat])
+    };
+
+    // downsample unit (stride 2): two branches, no split
+    let down = |g: &mut Graph, x: NodeId, name: &str,
+                out_c: usize| -> NodeId {
+        let s = g.node(x).out_shape.clone();
+        let (n, h, w, _c) = (s.dim(0), s.dim(1), s.dim(2), s.dim(3));
+        let half = out_c / 2;
+        // branch 1: dw s2 -> pw
+        let mut b1 = dw_act(g, x, &format!("{name}.b1.dw"), 3, 2, None);
+        b1 = conv_act(g, b1, &format!("{name}.b1.pw"), 1, 1, half,
+                      Some(OpKind::ReLU));
+        // branch 2: pw -> dw s2 -> pw
+        let mut b2 = conv_act(g, x, &format!("{name}.b2.pw1"), 1, 1, half,
+                              Some(OpKind::ReLU));
+        b2 = dw_act(g, b2, &format!("{name}.b2.dw"), 3, 2, None);
+        b2 = conv_act(g, b2, &format!("{name}.b2.pw2"), 1, 1, half,
+                      Some(OpKind::ReLU));
+        let out = Shape::nhwc(n, h.div_ceil(2), w.div_ceil(2), out_c);
+        let cat = g.add(OpKind::Concat, &format!("{name}.cat"),
+                        out.clone(), 0, &[b1, b2]);
+        g.add(OpKind::ChannelShuffle, &format!("{name}.shuffle"), out, 0,
+              &[cat])
+    };
+
+    // stage 2: 116 channels, 1 down + 3 basic
+    cur = down(&mut g, cur, "s2.d", 116);
+    for i in 0..3 {
+        cur = basic(&mut g, cur, &format!("s2.b{i}"));
+    }
+    // stage 3: 232 channels, 1 down + 7 basic
+    cur = down(&mut g, cur, "s3.d", 232);
+    for i in 0..7 {
+        cur = basic(&mut g, cur, &format!("s3.b{i}"));
+    }
+    // stage 4: 464 channels, 1 down + 3 basic
+    cur = down(&mut g, cur, "s4.d", 464);
+    for i in 0..3 {
+        cur = basic(&mut g, cur, &format!("s4.b{i}"));
+    }
+    cur = conv_act(&mut g, cur, "conv5", 1, 1, 1024, Some(OpKind::ReLU));
+    head(&mut g, cur, 1000);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mobilenet_structure() {
+        let g = mobilenet_v2(224);
+        assert!(g.is_acyclic());
+        // 17 inverted residuals x (2-3 convs) + stem + last + head
+        let pw = g.nodes.iter()
+            .filter(|n| n.kind == OpKind::Pointwise)
+            .count();
+        let dw = g.nodes.iter()
+            .filter(|n| matches!(n.kind, OpKind::Depthwise { .. }))
+            .count();
+        assert_eq!(dw, 17);
+        assert!(pw >= 33, "pw count {pw}");
+        // ~300M multiply-adds = ~600 MFLOPs known figure for 224 input
+        let gf = g.total_flops() as f64 / 1e6;
+        assert!((450.0..800.0).contains(&gf), "MBN MFLOPs {gf}");
+    }
+
+    #[test]
+    fn mnasnet_structure() {
+        let g = mnasnet(224);
+        assert!(g.is_acyclic());
+        let se_muls = g.nodes.iter()
+            .filter(|n| n.kind == OpKind::Mul)
+            .count();
+        assert_eq!(se_muls, 3 + 2 + 3); // SE stages: 40x3, 112x2, 160x3
+    }
+
+    #[test]
+    fn squeezenet_structure() {
+        let g = squeezenet(224);
+        assert!(g.is_acyclic());
+        let concats = g.nodes.iter()
+            .filter(|n| n.kind == OpKind::Concat)
+            .count();
+        assert_eq!(concats, 8); // 8 fire modules
+        // fire branches share the squeeze output
+        let convs = g.nodes.iter()
+            .filter(|n| matches!(n.kind, OpKind::Conv2d { .. }))
+            .count();
+        assert!(convs >= 9); // stem + 8 x e3
+    }
+
+    #[test]
+    fn shufflenet_structure() {
+        let g = shufflenet_v2(224);
+        assert!(g.is_acyclic());
+        let shuffles = g.nodes.iter()
+            .filter(|n| n.kind == OpKind::ChannelShuffle)
+            .count();
+        assert_eq!(shuffles, 3 + 13); // 3 downsample + 13 basic units
+        let splits = g.nodes.iter()
+            .filter(|n| n.kind == OpKind::Split)
+            .count();
+        assert_eq!(splits, 2 * (3 + 7 + 3)); // 13 basic units
+    }
+
+    #[test]
+    fn stride_chain_shapes() {
+        let g = mobilenet_v2(224);
+        // final feature map before GAP should be 7x7x1280
+        let last = g.nodes.iter()
+            .find(|n| n.name == "last.relu6")
+            .unwrap();
+        assert_eq!(last.out_shape, Shape::nhwc(1, 7, 7, 1280));
+    }
+}

@@ -1,0 +1,181 @@
+//! Model zoo: computational-graph builders for the paper's six benchmark
+//! networks (§VI-A): MobileNet-V2 (MBN), MNasNet (MNSN), SqueezeNet (SQN),
+//! ShuffleNet-V2 (SFN), Bert-tiny (BT), MobileViT (MVT).
+//!
+//! Only the graph structure matters to the compiler (op kinds, shapes,
+//! branching); weights are irrelevant to compile-time behaviour, so
+//! builders produce shape-annotated DAGs directly.
+
+pub mod blocks;
+pub mod cnn;
+pub mod transformer;
+
+use crate::graph::Graph;
+
+/// The paper's benchmark set.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ModelId {
+    Mbn,
+    Mnsn,
+    Sqn,
+    Sfn,
+    Bt,
+    Mvt,
+}
+
+impl ModelId {
+    pub fn parse(s: &str) -> Option<ModelId> {
+        match s.to_ascii_lowercase().as_str() {
+            "mbn" | "mobilenet" | "mobilenetv2" => Some(ModelId::Mbn),
+            "mnsn" | "mnasnet" => Some(ModelId::Mnsn),
+            "sqn" | "squeezenet" => Some(ModelId::Sqn),
+            "sfn" | "shufflenet" | "shufflenetv2" => Some(ModelId::Sfn),
+            "bt" | "bert-tiny" | "berttiny" => Some(ModelId::Bt),
+            "mvt" | "mobilevit" => Some(ModelId::Mvt),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            ModelId::Mbn => "MBN",
+            ModelId::Mnsn => "MNSN",
+            ModelId::Sqn => "SQN",
+            ModelId::Sfn => "SFN",
+            ModelId::Bt => "BT",
+            ModelId::Mvt => "MVT",
+        }
+    }
+
+    /// The four "classical" CNNs evaluated at three input shapes.
+    pub fn classical() -> [ModelId; 4] {
+        [ModelId::Mbn, ModelId::Mnsn, ModelId::Sqn, ModelId::Sfn]
+    }
+
+    pub fn all() -> [ModelId; 6] {
+        [
+            ModelId::Mbn,
+            ModelId::Mnsn,
+            ModelId::Sqn,
+            ModelId::Sfn,
+            ModelId::Bt,
+            ModelId::Mvt,
+        ]
+    }
+}
+
+/// Input-shape presets (paper §VI-A): small 56, middle 112, large 224 for
+/// CNNs; BT is fixed at sequence length 128; MVT is evaluated at 224.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum InputShape {
+    Small,
+    Middle,
+    Large,
+}
+
+impl InputShape {
+    pub fn hw(&self) -> usize {
+        match self {
+            InputShape::Small => 56,
+            InputShape::Middle => 112,
+            InputShape::Large => 224,
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<InputShape> {
+        match s.to_ascii_lowercase().as_str() {
+            "small" | "56" => Some(InputShape::Small),
+            "middle" | "112" => Some(InputShape::Middle),
+            "large" | "224" => Some(InputShape::Large),
+            _ => None,
+        }
+    }
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            InputShape::Small => "small",
+            InputShape::Middle => "middle",
+            InputShape::Large => "large",
+        }
+    }
+}
+
+/// Build a model graph at the given input shape (batch 1 throughout — the
+/// paper's mobile-inference setting).
+pub fn build(model: ModelId, shape: InputShape) -> Graph {
+    match model {
+        ModelId::Mbn => cnn::mobilenet_v2(shape.hw()),
+        ModelId::Mnsn => cnn::mnasnet(shape.hw()),
+        ModelId::Sqn => cnn::squeezenet(shape.hw()),
+        ModelId::Sfn => cnn::shufflenet_v2(shape.hw()),
+        ModelId::Bt => transformer::bert_tiny(128),
+        ModelId::Mvt => transformer::mobilevit(shape.hw()),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn all_models_build_and_are_acyclic() {
+        for m in ModelId::all() {
+            let g = build(m, InputShape::Large);
+            assert!(g.len() > 10, "{} too small: {}", m.name(), g.len());
+            assert!(g.is_acyclic(), "{} has a cycle", m.name());
+            assert!(g.complex_count() > 0, "{} has no complex op", m.name());
+        }
+    }
+
+    #[test]
+    fn input_shapes_scale_flops() {
+        for m in ModelId::classical() {
+            let small = build(m, InputShape::Small).total_flops();
+            let large = build(m, InputShape::Large).total_flops();
+            assert!(
+                large > 4 * small,
+                "{}: large {} !>> small {}",
+                m.name(),
+                large,
+                small
+            );
+        }
+    }
+
+    #[test]
+    fn parse_roundtrip() {
+        for m in ModelId::all() {
+            assert_eq!(ModelId::parse(m.name()), Some(m));
+        }
+        assert_eq!(InputShape::parse("small"), Some(InputShape::Small));
+        assert_eq!(ModelId::parse("nope"), None);
+    }
+
+    #[test]
+    fn mvt_is_reshape_transpose_heavy() {
+        // §VI-B: attention modules yield a large number of reshape and
+        // transpose operators — the structures Relay fragments on.
+        let g = build(ModelId::Mvt, InputShape::Large);
+        let movement = g
+            .nodes
+            .iter()
+            .filter(|n| n.kind.is_data_movement())
+            .count();
+        assert!(
+            movement >= 40,
+            "MVT should be movement-heavy, got {movement}"
+        );
+    }
+
+    #[test]
+    fn bert_tiny_matmul_count() {
+        let g = build(ModelId::Bt, InputShape::Large);
+        let mms = g
+            .nodes
+            .iter()
+            .filter(|n| matches!(n.kind, crate::graph::OpKind::MatMul))
+            .count();
+        // 2 layers x (3 qkv + 2 attn x 2 heads + 1 out + 2 ffn) = 2x10 = 20
+        assert!(mms >= 16, "BT matmul count {mms}");
+    }
+}

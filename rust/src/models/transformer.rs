@@ -1,0 +1,250 @@
+//! Transformer-family builders: Bert-tiny and MobileViT.
+//!
+//! These are the paper's "emerging new networks" (§VI-A): attention blocks
+//! produce long chains of matmul/reshape/transpose operators, which is
+//! exactly the structure Relay-style frontends fragment into trivial
+//! subgraphs (§VI-B's MVT case study).
+
+use crate::graph::{Graph, NodeId, OpKind, Shape};
+
+use super::blocks::{conv_act, inverted_residual};
+
+/// Multi-head self-attention over a (S, D) sequence; returns output node.
+/// Heads are materialized as separate matmul chains (the per-head shapes
+/// are what the compiler sees after graph lowering).
+pub fn attention(
+    g: &mut Graph,
+    x: NodeId,
+    name: &str,
+    s: usize,
+    d: usize,
+    heads: usize,
+) -> NodeId {
+    let dh = d / heads;
+    let q = g.add(OpKind::MatMul, &format!("{name}.q"), Shape::mk(s, d), d,
+                  &[x]);
+    let k = g.add(OpKind::MatMul, &format!("{name}.k"), Shape::mk(s, d), d,
+                  &[x]);
+    let v = g.add(OpKind::MatMul, &format!("{name}.v"), Shape::mk(s, d), d,
+                  &[x]);
+    let mut head_outs = Vec::new();
+    for h in 0..heads {
+        let hn = format!("{name}.h{h}");
+        // slice each head via reshape
+        let qh = g.add(OpKind::Reshape, &format!("{hn}.q"),
+                       Shape::mk(s, dh), 0, &[q]);
+        let kh = g.add(OpKind::Reshape, &format!("{hn}.k"),
+                       Shape::mk(s, dh), 0, &[k]);
+        let vh = g.add(OpKind::Reshape, &format!("{hn}.v"),
+                       Shape::mk(s, dh), 0, &[v]);
+        let kt = g.add(OpKind::Transpose, &format!("{hn}.kT"),
+                       Shape::mk(dh, s), 0, &[kh]);
+        let scores = g.add(OpKind::MatMul, &format!("{hn}.qk"),
+                           Shape::mk(s, s), dh, &[qh, kt]);
+        let scaled = g.add(OpKind::Scale, &format!("{hn}.scale"),
+                           Shape::mk(s, s), 0, &[scores]);
+        let probs = g.add(OpKind::Softmax, &format!("{hn}.softmax"),
+                          Shape::mk(s, s), 0, &[scaled]);
+        let ctx = g.add(OpKind::MatMul, &format!("{hn}.av"),
+                        Shape::mk(s, dh), s, &[probs, vh]);
+        head_outs.push(ctx);
+    }
+    let cat = g.add(OpKind::Concat, &format!("{name}.cat"), Shape::mk(s, d),
+                    0, &head_outs);
+    g.add(OpKind::MatMul, &format!("{name}.out"), Shape::mk(s, d), d,
+          &[cat])
+}
+
+/// One transformer encoder layer (post-LN, as in BERT).
+pub fn encoder_layer(
+    g: &mut Graph,
+    x: NodeId,
+    name: &str,
+    s: usize,
+    d: usize,
+    heads: usize,
+    ffn: usize,
+) -> NodeId {
+    let attn = attention(g, x, &format!("{name}.attn"), s, d, heads);
+    let res1 = g.add(OpKind::Add, &format!("{name}.res1"), Shape::mk(s, d),
+                     0, &[x, attn]);
+    let ln1 = g.add(OpKind::LayerNorm, &format!("{name}.ln1"),
+                    Shape::mk(s, d), 0, &[res1]);
+    let up = g.add(OpKind::MatMul, &format!("{name}.ffn.up"),
+                   Shape::mk(s, ffn), d, &[ln1]);
+    let act = g.add(OpKind::GELU, &format!("{name}.ffn.gelu"),
+                    Shape::mk(s, ffn), 0, &[up]);
+    let down = g.add(OpKind::MatMul, &format!("{name}.ffn.down"),
+                     Shape::mk(s, d), ffn, &[act]);
+    let res2 = g.add(OpKind::Add, &format!("{name}.res2"), Shape::mk(s, d),
+                     0, &[ln1, down]);
+    g.add(OpKind::LayerNorm, &format!("{name}.ln2"), Shape::mk(s, d), 0,
+          &[res2])
+}
+
+/// Bert-tiny (Turc et al., 2019): L=2 layers, H=128 hidden, A=2 heads,
+/// FFN 512, sequence length `s` (the paper uses 128).
+pub fn bert_tiny(s: usize) -> Graph {
+    let mut g = Graph::new(&format!("bert_tiny_s{s}"));
+    let d = 128;
+    // embeddings enter as the graph input (lookup is not compiled compute)
+    let x = g.add(OpKind::Pad, "embeddings", Shape::mk(s, d), 0, &[]);
+    let emb_ln = g.add(OpKind::LayerNorm, "emb.ln", Shape::mk(s, d), 0,
+                       &[x]);
+    let mut cur = emb_ln;
+    for l in 0..2 {
+        cur = encoder_layer(&mut g, cur, &format!("layer{l}"), s, d, 2,
+                            512);
+    }
+    // pooler: first-token slice -> dense -> tanh (tanh ~ sigmoid class)
+    let pooled = g.add(OpKind::Reshape, "pooler.slice", Shape::mk(1, d), 0,
+                       &[cur]);
+    let dense = g.add(OpKind::MatMul, "pooler.dense", Shape::mk(1, d), d,
+                      &[pooled]);
+    g.add(OpKind::Sigmoid, "pooler.act", Shape::mk(1, d), 0, &[dense]);
+    g
+}
+
+/// The MVT "typical structure" from §VI-B: matmul, reshape, add, reshape,
+/// transpose, reshape, matmul, reshape — eight consecutive operators.
+fn mvt_unfold_chain(
+    g: &mut Graph,
+    x: NodeId,
+    name: &str,
+    tokens: usize,
+    d: usize,
+) -> NodeId {
+    let mm1 = g.add(OpKind::MatMul, &format!("{name}.mm1"),
+                    Shape::mk(tokens, d), d, &[x]);
+    let r1 = g.add(OpKind::Reshape, &format!("{name}.r1"),
+                   Shape::mk(tokens, d), 0, &[mm1]);
+    let add = g.add(OpKind::Add, &format!("{name}.posadd"),
+                    Shape::mk(tokens, d), 0, &[r1]);
+    let r2 = g.add(OpKind::Reshape, &format!("{name}.r2"),
+                   Shape::mk(tokens, d), 0, &[add]);
+    let t = g.add(OpKind::Transpose, &format!("{name}.t"),
+                  Shape::mk(d, tokens), 0, &[r2]);
+    let r3 = g.add(OpKind::Reshape, &format!("{name}.r3"),
+                   Shape::mk(tokens, d), 0, &[t]);
+    let mm2 = g.add(OpKind::MatMul, &format!("{name}.mm2"),
+                    Shape::mk(tokens, d), d, &[r3]);
+    g.add(OpKind::Reshape, &format!("{name}.r4"), Shape::mk(tokens, d), 0,
+          &[mm2])
+}
+
+/// One MobileViT block (Mehta & Rastegari, ICLR 2022): local conv reps ->
+/// unfold -> transformer x L -> fold -> fusion convs.
+fn mobilevit_block(
+    g: &mut Graph,
+    x: NodeId,
+    name: &str,
+    d: usize,
+    layers: usize,
+    heads: usize,
+) -> NodeId {
+    let s = g.node(x).out_shape.clone();
+    let (n, h, w, c) = (s.dim(0), s.dim(1), s.dim(2), s.dim(3));
+    // local representation: conv 3x3 + pw to d
+    let local = conv_act(g, x, &format!("{name}.local3"), 3, 1, c,
+                         Some(OpKind::HardSwish));
+    let proj = conv_act(g, local, &format!("{name}.proj"), 1, 1, d, None);
+    // unfold into tokens: (P, N_patches, d) flattened to (tokens, d)
+    let tokens = (h * w).max(1);
+    let mut cur = g.add(OpKind::Reshape, &format!("{name}.unfold1"),
+                        Shape::mk(tokens, d), 0, &[proj]);
+    cur = g.add(OpKind::Transpose, &format!("{name}.unfold2"),
+                Shape::mk(tokens, d), 0, &[cur]);
+    // the §VI-B chain appears at the unfold boundary
+    cur = mvt_unfold_chain(g, cur, &format!("{name}.chain"), tokens, d);
+    for l in 0..layers {
+        cur = encoder_layer(g, cur, &format!("{name}.enc{l}"), tokens, d,
+                            heads, 2 * d);
+    }
+    // fold back
+    let mut folded = g.add(OpKind::Transpose, &format!("{name}.fold1"),
+                           Shape::mk(tokens, d), 0, &[cur]);
+    folded = g.add(OpKind::Reshape, &format!("{name}.fold2"),
+                   Shape::nhwc(n, h, w, d), 0, &[folded]);
+    // fusion: pw back to c, concat with input, conv 3x3 to c
+    let back = conv_act(g, folded, &format!("{name}.back"), 1, 1, c, None);
+    let cat_shape = Shape::nhwc(n, h, w, 2 * c);
+    let cat = g.add(OpKind::Concat, &format!("{name}.cat"), cat_shape, 0,
+                    &[x, back]);
+    conv_act(g, cat, &format!("{name}.fuse"), 3, 1, c,
+             Some(OpKind::HardSwish))
+}
+
+/// MobileViT-XS-like network. Stem + MV2 blocks + three MobileViT blocks.
+pub fn mobilevit(hw: usize) -> Graph {
+    let mut g = Graph::new(&format!("mobilevit_{hw}"));
+    let x = g.add(OpKind::Pad, "input", Shape::nhwc(1, hw, hw, 3), 0, &[]);
+    let mut cur = conv_act(&mut g, x, "stem", 3, 2, 16,
+                           Some(OpKind::HardSwish));
+    cur = inverted_residual(&mut g, cur, "mv0", 2, 16, 3, 1);
+    cur = inverted_residual(&mut g, cur, "mv1", 2, 24, 3, 2);
+    cur = inverted_residual(&mut g, cur, "mv2", 2, 24, 3, 1);
+    cur = inverted_residual(&mut g, cur, "mv3", 2, 48, 3, 2);
+    cur = mobilevit_block(&mut g, cur, "vit0", 64, 2, 2);
+    cur = inverted_residual(&mut g, cur, "mv4", 2, 64, 3, 2);
+    cur = mobilevit_block(&mut g, cur, "vit1", 80, 4, 2);
+    cur = inverted_residual(&mut g, cur, "mv5", 2, 80, 3, 2);
+    cur = mobilevit_block(&mut g, cur, "vit2", 96, 3, 2);
+    cur = conv_act(&mut g, cur, "last", 1, 1, 384, Some(OpKind::HardSwish));
+    super::blocks::head(&mut g, cur, 1000);
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bert_tiny_structure() {
+        let g = bert_tiny(128);
+        assert!(g.is_acyclic());
+        let ln = g.nodes.iter()
+            .filter(|n| n.kind == OpKind::LayerNorm)
+            .count();
+        assert_eq!(ln, 1 + 2 * 2); // emb + 2 per layer
+        let softmax = g.nodes.iter()
+            .filter(|n| n.kind == OpKind::Softmax)
+            .count();
+        assert_eq!(softmax, 2 * 2); // heads x layers
+    }
+
+    #[test]
+    fn attention_is_branchy() {
+        let mut g = Graph::new("t");
+        let x = g.add(OpKind::Pad, "in", Shape::mk(64, 128), 0, &[]);
+        let _ = attention(&mut g, x, "a", 64, 128, 2);
+        // q, k, v all read the same input
+        assert_eq!(g.succs(x).len(), 3);
+        assert!(g.is_acyclic());
+    }
+
+    #[test]
+    fn mvt_unfold_chain_is_eight_ops() {
+        let mut g = Graph::new("t");
+        let x = g.add(OpKind::Pad, "in", Shape::mk(196, 64), 0, &[]);
+        let before = g.len();
+        let _ = mvt_unfold_chain(&mut g, x, "c", 196, 64);
+        assert_eq!(g.len() - before, 8); // §VI-B: eight consecutive ops
+    }
+
+    #[test]
+    fn mobilevit_structure() {
+        let g = mobilevit(224);
+        assert!(g.is_acyclic());
+        // §VI-B scale check: a couple hundred operators, many of them
+        // reshape/transpose
+        assert!(g.len() >= 200, "MVT size {}", g.len());
+        let movement = g.nodes.iter()
+            .filter(|n| n.kind.is_data_movement())
+            .count();
+        assert!(movement >= 60, "MVT movement ops {movement}");
+        let mms = g.nodes.iter()
+            .filter(|n| n.kind == OpKind::MatMul)
+            .count();
+        assert!(mms >= 40, "MVT matmuls {mms}");
+    }
+}

@@ -1,0 +1,236 @@
+//! Quotient-graph view with topological stages and affix sets.
+//!
+//! During clustering, every subgraph is a *hyper node* (paper Algorithm 1,
+//! line 7). This module maintains the quotient graph under edge
+//! contractions: adjacency, topological stages (Definition 2), and affix
+//! sets (Definition 3: undirected neighbors exactly one stage away).
+//! Theorem 1 guarantees contracting a (v, u ∈ AS_v) pair keeps the
+//! quotient acyclic.
+
+use std::collections::BTreeSet;
+
+use crate::graph::{Graph, NodeId, Partition};
+
+/// Mutable quotient graph over hyper nodes.
+#[derive(Clone, Debug)]
+pub struct Quotient {
+    /// For each live group id: member original nodes.
+    pub members: Vec<Vec<NodeId>>,
+    /// Live flag (contracted groups are tombstoned).
+    pub alive: Vec<bool>,
+    /// Directed adjacency between live groups (deduplicated).
+    succs: Vec<BTreeSet<usize>>,
+    preds: Vec<BTreeSet<usize>>,
+    /// Topological stages of live groups (recomputed after contraction).
+    pub stage: Vec<usize>,
+}
+
+impl Quotient {
+    /// Start from the singleton partition of `g`.
+    pub fn singletons(g: &Graph) -> Quotient {
+        let n = g.len();
+        let mut q = Quotient {
+            members: (0..n).map(|v| vec![v]).collect(),
+            alive: vec![true; n],
+            succs: vec![BTreeSet::new(); n],
+            preds: vec![BTreeSet::new(); n],
+            stage: vec![1; n],
+        };
+        for (u, v) in g.edges() {
+            q.succs[u].insert(v);
+            q.preds[v].insert(u);
+        }
+        q.recompute_stages();
+        q
+    }
+
+    pub fn live_groups(&self) -> Vec<usize> {
+        (0..self.members.len()).filter(|&i| self.alive[i]).collect()
+    }
+
+    pub fn succs_of(&self, id: usize) -> impl Iterator<Item = usize> + '_ {
+        self.succs[id].iter().copied()
+    }
+
+    pub fn preds_of(&self, id: usize) -> impl Iterator<Item = usize> + '_ {
+        self.preds[id].iter().copied()
+    }
+
+    /// Affix set of hyper node `v` (Definition 3): undirected quotient
+    /// neighbors `u` with `|stage(u) - stage(v)| == 1`.
+    ///
+    /// Definition 3 additionally allows restricting the set to one side
+    /// (all +1 or all -1); since the clustering algorithm merges a single
+    /// candidate at a time, membership of each individual u is what
+    /// Theorem 1's proof consumes.
+    pub fn affix_set(&self, v: usize) -> Vec<usize> {
+        debug_assert!(self.alive[v]);
+        let sv = self.stage[v];
+        let mut out: Vec<usize> = self.succs[v]
+            .iter()
+            .chain(self.preds[v].iter())
+            .copied()
+            .filter(|&u| {
+                let su = self.stage[u];
+                su + 1 == sv || sv + 1 == su
+            })
+            .collect();
+        out.sort_unstable();
+        out.dedup();
+        out
+    }
+
+    /// Contract `u` into `v` (both live). Returns the surviving id (`v`).
+    /// Caller must have validated `u ∈ affix_set(v)` for Theorem 1 to
+    /// apply; contraction itself only maintains the data structures.
+    pub fn contract(&mut self, v: usize, u: usize) -> usize {
+        assert!(self.alive[v] && self.alive[u] && v != u);
+        let mem = std::mem::take(&mut self.members[u]);
+        self.members[v].extend(mem);
+        // splice u's edges into v
+        let us: Vec<usize> = self.succs[u].iter().copied().collect();
+        for w in us {
+            self.preds[w].remove(&u);
+            if w != v {
+                self.succs[v].insert(w);
+                self.preds[w].insert(v);
+            }
+        }
+        let up: Vec<usize> = self.preds[u].iter().copied().collect();
+        for w in up {
+            self.succs[w].remove(&u);
+            if w != v {
+                self.preds[v].insert(w);
+                self.succs[w].insert(v);
+            }
+        }
+        self.succs[u].clear();
+        self.preds[u].clear();
+        self.succs[v].remove(&u);
+        self.preds[v].remove(&u);
+        self.alive[u] = false;
+        self.recompute_stages();
+        v
+    }
+
+    /// Longest-path topological stages over live groups (Definition 2).
+    /// Panics if the quotient is cyclic — by Theorem 1 that cannot happen
+    /// when contractions go through affix sets.
+    pub fn recompute_stages(&mut self) {
+        let live = self.live_groups();
+        let mut indeg: Vec<usize> = vec![0; self.members.len()];
+        for &v in &live {
+            indeg[v] = self.preds[v].len();
+        }
+        let mut queue: std::collections::VecDeque<usize> = live
+            .iter()
+            .copied()
+            .filter(|&v| indeg[v] == 0)
+            .collect();
+        for &v in &live {
+            self.stage[v] = 1;
+        }
+        let mut seen = 0;
+        while let Some(v) = queue.pop_front() {
+            seen += 1;
+            for &w in &self.succs[v] {
+                if self.stage[w] < self.stage[v] + 1 {
+                    self.stage[w] = self.stage[v] + 1;
+                }
+                indeg[w] -= 1;
+                if indeg[w] == 0 {
+                    queue.push_back(w);
+                }
+            }
+        }
+        assert_eq!(
+            seen,
+            live.len(),
+            "quotient graph became cyclic — affix-set invariant violated"
+        );
+    }
+
+    /// Export as a [`Partition`] over the original graph.
+    pub fn to_partition(&self, g: &Graph) -> Partition {
+        let mut assign = vec![usize::MAX; g.len()];
+        for (gid, mem) in self.members.iter().enumerate() {
+            if self.alive[gid] {
+                for &v in mem {
+                    assign[v] = gid;
+                }
+            }
+        }
+        assert!(assign.iter().all(|&a| a != usize::MAX));
+        Partition::from_assignment(assign)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpKind, Shape};
+
+    /// Fig. 9: conv1 -> conv2 -> conv3, conv1 -> conv3.
+    fn fig9() -> Graph {
+        let mut g = Graph::new("fig9");
+        let s = Shape::nhwc(1, 8, 8, 8);
+        let c1 = g.add(OpKind::Conv2d { kh: 3, kw: 3, stride: 1 }, "c1",
+                       s.clone(), 8, &[]);
+        let c2 = g.add(OpKind::Conv2d { kh: 3, kw: 3, stride: 1 }, "c2",
+                       s.clone(), 8, &[c1]);
+        let _ = g.add(OpKind::Conv2d { kh: 3, kw: 3, stride: 1 }, "c3", s,
+                      8, &[c1, c2]);
+        g
+    }
+
+    #[test]
+    fn stages_of_fig9() {
+        let q = Quotient::singletons(&fig9());
+        assert_eq!(q.stage[0], 1);
+        assert_eq!(q.stage[1], 2);
+        assert_eq!(q.stage[2], 3); // longest path, not shortest
+    }
+
+    #[test]
+    fn affix_excludes_stage_gap_two() {
+        let q = Quotient::singletons(&fig9());
+        // conv3 (stage 3) is adjacent to conv1 (stage 1) but NOT affix
+        let a0 = q.affix_set(0);
+        assert!(a0.contains(&1));
+        assert!(!a0.contains(&2), "conv1-conv3 grouping must be barred");
+        // conv3's affix set only has conv2
+        assert_eq!(q.affix_set(2), vec![1]);
+    }
+
+    #[test]
+    fn contract_keeps_acyclic_and_updates_stages() {
+        let mut q = Quotient::singletons(&fig9());
+        q.contract(1, 0); // merge conv1 into conv2's group
+        assert_eq!(q.live_groups(), vec![1, 2]);
+        // the merged group now directly precedes conv3
+        assert_eq!(q.affix_set(2), vec![1]);
+        q.contract(2, 1);
+        assert_eq!(q.live_groups(), vec![2]);
+    }
+
+    #[test]
+    fn to_partition_roundtrip() {
+        let g = fig9();
+        let mut q = Quotient::singletons(&g);
+        q.contract(1, 0);
+        let p = q.to_partition(&g);
+        assert!(p.is_cover(&g));
+        assert!(p.is_acyclic(&g));
+        assert_eq!(p.n_groups, 2);
+        assert_eq!(p.assign[0], p.assign[1]);
+        assert_ne!(p.assign[0], p.assign[2]);
+    }
+
+    #[test]
+    #[should_panic(expected = "affix-set invariant")]
+    fn contracting_non_affix_pair_panics_on_cycle() {
+        let mut q = Quotient::singletons(&fig9());
+        // conv1 + conv3 (stage gap 2): creates quotient cycle with conv2
+        q.contract(0, 2);
+    }
+}

@@ -1,0 +1,190 @@
+//! Algorithm 1 — CLUSTER: weighted iterative clustering with the acyclic
+//! guarantee of Theorem 1.
+//!
+//! Each iteration picks the heaviest candidate hyper node v, finds the
+//! lightest node u in its affix set with `w_v + w_u < Td`, and contracts
+//! them; otherwise v is retired from the candidate set. No structural
+//! constraint beyond the weight threshold is imposed — subgraphs may hold
+//! arbitrarily many complex operators (the whole point of the paper).
+
+use std::collections::BTreeSet;
+
+use crate::graph::{Graph, Partition};
+
+use super::affix::Quotient;
+use super::weight::{node_weights, WeightParams};
+
+#[derive(Clone, Copy, Debug)]
+pub struct ClusterConfig {
+    /// Maximum subgraph weight `Td`. Merges stop once the sum would reach
+    /// this; trivial subgraphs below it keep growing.
+    pub td: f64,
+    pub weights: WeightParams,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        // Default Td ~ a handful of heavy mobile convolutions per
+        // subgraph; benches sweep this (Fig. 14 sensitivity).
+        ClusterConfig { td: 4000.0, weights: WeightParams::default() }
+    }
+}
+
+impl ClusterConfig {
+    /// Td scaled to the graph at hand: a subgraph should hold a few
+    /// complex operators plus their simple neighbors (paper §IV-A:
+    /// "guarantee a tractable size for each subgraph"). A fixed absolute
+    /// threshold over-merges small-input graphs and under-merges large
+    /// ones, so the default pipeline derives Td from the mean complex-op
+    /// weight.
+    pub fn adaptive(g: &Graph) -> ClusterConfig {
+        let wp = WeightParams::default();
+        let complex: Vec<f64> = g
+            .nodes
+            .iter()
+            .filter(|n| n.kind.is_complex())
+            .map(|n| super::weight::node_weight(g, n.id, wp))
+            .collect();
+        let mean = if complex.is_empty() {
+            1000.0
+        } else {
+            complex.iter().sum::<f64>() / complex.len() as f64
+        };
+        ClusterConfig { td: (3.2 * mean).max(64.0), weights: wp }
+    }
+}
+
+/// Algorithm 1. Returns an acyclic partition of `g`.
+pub fn cluster(g: &Graph, cfg: ClusterConfig) -> Partition {
+    if g.is_empty() {
+        return Partition::from_assignment(Vec::new());
+    }
+    let w = node_weights(g, cfg.weights);
+    let mut q = Quotient::singletons(g);
+    // group weight = sum of member weights
+    let mut gw: Vec<f64> = w.clone();
+    // candidate set (Line 2), keyed for heaviest-first selection
+    let mut cand: BTreeSet<usize> = q.live_groups().into_iter().collect();
+
+    while !cand.is_empty() {
+        // Line 5: heaviest candidate
+        let &v = cand
+            .iter()
+            .max_by(|&&a, &&b| gw[a].partial_cmp(&gw[b]).unwrap())
+            .unwrap();
+        // Line 6: lightest affix partner under the threshold
+        let partner = q
+            .affix_set(v)
+            .into_iter()
+            .filter(|&u| gw[v] + gw[u] < cfg.td)
+            .min_by(|&a, &b| gw[a].partial_cmp(&gw[b]).unwrap());
+        match partner {
+            Some(u) => {
+                // Lines 7-8: contract u into v; merged node stays a
+                // candidate. Lines 12: Quotient::contract updates E and
+                // TopStage.
+                cand.remove(&u);
+                q.contract(v, u);
+                gw[v] += gw[u];
+            }
+            None => {
+                // Line 10
+                cand.remove(&v);
+            }
+        }
+    }
+    q.to_partition(g)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpKind, Shape};
+    use crate::models::{build, InputShape, ModelId};
+    use crate::partition::weight::subgraph_weights;
+
+    fn chain(n: usize) -> Graph {
+        let mut g = Graph::new("chain");
+        let s = Shape::nhwc(1, 14, 14, 32);
+        let mut prev = None;
+        for i in 0..n {
+            let inputs: Vec<usize> = prev.into_iter().collect();
+            let id = g.add(OpKind::Pointwise, &format!("pw{i}"), s.clone(),
+                           32, &inputs);
+            prev = Some(id);
+        }
+        g
+    }
+
+    #[test]
+    fn unlimited_threshold_merges_chain_fully() {
+        let g = chain(6);
+        let p = cluster(&g, ClusterConfig {
+            td: f64::INFINITY,
+            weights: WeightParams::default(),
+        });
+        assert_eq!(p.n_groups, 1);
+        assert!(p.is_acyclic(&g));
+    }
+
+    #[test]
+    fn tiny_threshold_keeps_singletons() {
+        let g = chain(6);
+        let p = cluster(&g, ClusterConfig {
+            td: 0.0,
+            weights: WeightParams::default(),
+        });
+        assert_eq!(p.n_groups, 6);
+    }
+
+    #[test]
+    fn multi_complex_subgraphs_exist() {
+        // the defining property: subgraphs with >1 complex operator
+        let g = build(ModelId::Mbn, InputShape::Small);
+        let p = cluster(&g, ClusterConfig::default());
+        assert!(p.is_acyclic(&g));
+        let max_complex =
+            p.complex_counts(&g).into_iter().max().unwrap_or(0);
+        assert!(
+            max_complex >= 2,
+            "expected intensive-fusion-eligible subgraphs, max complex = {max_complex}"
+        );
+    }
+
+    #[test]
+    fn weight_threshold_respected() {
+        let cfg = ClusterConfig::default();
+        for m in [ModelId::Mbn, ModelId::Sqn] {
+            let g = build(m, InputShape::Small);
+            let p = cluster(&g, cfg);
+            let ws = subgraph_weights(&g, &p, cfg.weights);
+            let mut sizes = vec![0usize; p.n_groups];
+            for &a in &p.assign {
+                sizes[a] += 1;
+            }
+            for (gid, &sw) in ws.iter().enumerate() {
+                // every merge requires w_v + w_u < Td, so any multi-member
+                // group is under the threshold; only a single node whose
+                // own weight exceeds Td may be over it
+                assert!(
+                    sw < cfg.td || sizes[gid] == 1,
+                    "group {gid} weight {sw} >= Td={} with {} members",
+                    cfg.td,
+                    sizes[gid]
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn all_models_partition_acyclically() {
+        for m in ModelId::all() {
+            let g = build(m, InputShape::Small);
+            let p = cluster(&g, ClusterConfig::default());
+            assert!(p.is_cover(&g), "{}: not a cover", m.name());
+            assert!(p.is_acyclic(&g), "{}: cyclic partition", m.name());
+            assert!(p.n_groups < g.len(),
+                    "{}: clustering did nothing", m.name());
+        }
+    }
+}

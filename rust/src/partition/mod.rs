@@ -1,0 +1,15 @@
+//! Graph frontend (paper §IV): operator weight assignment (Eq. 1), affix
+//! sets over topological stages (Definitions 2-3), the CLUSTER weighted
+//! clustering algorithm (Algorithm 1, acyclic by Theorem 1), the
+//! Relay-style baseline partitioner, and partition statistics (Fig. 14).
+
+pub mod affix;
+pub mod cluster;
+pub mod relay;
+pub mod report;
+pub mod weight;
+
+pub use cluster::{cluster, ClusterConfig};
+pub use relay::relay_partition;
+pub use report::PartitionReport;
+pub use weight::{node_weight, subgraph_weights, WeightParams};

@@ -1,0 +1,149 @@
+//! Relay-style baseline partitioner (the heuristic frontend AGO replaces;
+//! paper §II and [5]).
+//!
+//! Heuristics reproduced:
+//!  1. at most ONE complex operator per subgraph;
+//!  2. a complex operator absorbs its *following* simple elementwise ops
+//!     (epilogue chains) while they are single-consumer — the classic
+//!     conv+bias+relu grouping;
+//!  3. data-movement operators (reshape/transpose/concat/split/shuffle/pad)
+//!     act as delimiters: they never merge with a complex operator's group
+//!     (§VI-B: "Relay will heuristically take such operators as
+//!     delimiters");
+//!  4. runs of simple non-movement ops without a complex producer group
+//!     together until a delimiter.
+//!
+//! The result is the fragmented, unbalanced partition the paper measures
+//! on MVT (259 subgraphs, Jain 0.19 vs AGO's 82 / 0.55).
+
+use crate::graph::{Graph, Partition};
+
+pub fn relay_partition(g: &Graph) -> Partition {
+    let order = g.topo_order().expect("graph must be acyclic");
+    let mut assign: Vec<Option<usize>> = vec![None; g.len()];
+    // group id -> contains a complex op already?
+    let mut group_complex: Vec<bool> = Vec::new();
+    let next = |gc: &mut Vec<bool>, complex: bool| -> usize {
+        gc.push(complex);
+        gc.len() - 1
+    };
+
+    for &v in &order {
+        let kind = &g.node(v).kind;
+        if kind.is_data_movement() {
+            // delimiter: always its own fresh group; absorbs nothing
+            assign[v] = Some(next(&mut group_complex, false));
+            continue;
+        }
+        // try to join the (unique) predecessor's group: only if v has
+        // exactly one predecessor, that predecessor's group can accept it,
+        // and v is that predecessor's only consumer (straight-line fusion)
+        let mut joined = None;
+        if g.preds(v).len() == 1 {
+            let u = g.preds(v)[0];
+            let ug = assign[u].unwrap();
+            let u_single_consumer = g.succs(u).len() == 1;
+            let u_is_movement = g.node(u).kind.is_data_movement();
+            let would_have_two_complex =
+                kind.is_complex() && group_complex[ug];
+            if u_single_consumer && !u_is_movement && !would_have_two_complex
+            {
+                joined = Some(ug);
+            }
+        }
+        match joined {
+            Some(ug) => {
+                assign[v] = Some(ug);
+                if kind.is_complex() {
+                    group_complex[ug] = true;
+                }
+            }
+            None => {
+                assign[v] =
+                    Some(next(&mut group_complex, kind.is_complex()));
+            }
+        }
+    }
+    Partition::from_assignment(
+        assign.into_iter().map(|a| a.unwrap()).collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpKind, Shape};
+    use crate::models::{build, InputShape, ModelId};
+
+    #[test]
+    fn one_complex_per_subgraph() {
+        for m in ModelId::all() {
+            let g = build(m, InputShape::Small);
+            let p = relay_partition(&g);
+            assert!(p.is_cover(&g));
+            assert!(p.is_acyclic(&g), "{}: relay made a cycle", m.name());
+            let counts = p.complex_counts(&g);
+            assert!(
+                counts.iter().all(|&c| c <= 1),
+                "{}: relay grouped multiple complex ops",
+                m.name()
+            );
+        }
+    }
+
+    #[test]
+    fn epilogue_fusion_happens() {
+        // conv -> bias -> relu must land in one subgraph
+        let mut g = Graph::new("t");
+        let s = Shape::nhwc(1, 14, 14, 32);
+        let i = g.add(OpKind::Pad, "in", s.clone(), 0, &[]);
+        let c = g.add(OpKind::Conv2d { kh: 3, kw: 3, stride: 1 }, "conv",
+                      s.clone(), 16, &[i]);
+        let b = g.add(OpKind::BiasAdd, "bias", s.clone(), 0, &[c]);
+        let r = g.add(OpKind::ReLU, "relu", s, 0, &[b]);
+        let p = relay_partition(&g);
+        assert_eq!(p.assign[c], p.assign[b]);
+        assert_eq!(p.assign[b], p.assign[r]);
+    }
+
+    #[test]
+    fn two_convs_split() {
+        let mut g = Graph::new("t");
+        let s = Shape::nhwc(1, 14, 14, 32);
+        let i = g.add(OpKind::Pad, "in", s.clone(), 0, &[]);
+        let c1 = g.add(OpKind::Pointwise, "pw1", s.clone(), 32, &[i]);
+        let c2 = g.add(OpKind::Depthwise { kh: 3, kw: 3, stride: 1 }, "dw",
+                       s, 0, &[c1]);
+        let p = relay_partition(&g);
+        assert_ne!(
+            p.assign[c1], p.assign[c2],
+            "relay must not group two complex ops"
+        );
+    }
+
+    #[test]
+    fn movement_is_delimiter() {
+        let mut g = Graph::new("t");
+        let s = Shape::mk(196, 64);
+        let i = g.add(OpKind::Pad, "in", s.clone(), 0, &[]);
+        let m1 = g.add(OpKind::MatMul, "mm1", s.clone(), 64, &[i]);
+        let r = g.add(OpKind::Reshape, "reshape", s.clone(), 0, &[m1]);
+        let m2 = g.add(OpKind::MatMul, "mm2", s, 64, &[r]);
+        let p = relay_partition(&g);
+        assert_ne!(p.assign[m1], p.assign[r]);
+        assert_ne!(p.assign[r], p.assign[m2]);
+    }
+
+    #[test]
+    fn mvt_fragments_heavily() {
+        // §VI-B: Relay produces ~3x as many subgraphs as AGO on MVT
+        let g = build(ModelId::Mvt, InputShape::Large);
+        let p = relay_partition(&g);
+        assert!(
+            p.n_groups > g.len() / 3,
+            "relay on MVT should fragment: {} groups / {} nodes",
+            p.n_groups,
+            g.len()
+        );
+    }
+}

@@ -1,0 +1,114 @@
+//! Partition statistics for Fig. 14: subgraph counts, weight
+//! distribution in log2 bins, average/median weight, trivial-subgraph
+//! count, and Jain's fairness index.
+
+use crate::graph::{Graph, Partition};
+use crate::util::stats;
+
+use super::weight::{subgraph_weights, WeightParams};
+
+/// Weight below which the paper calls a subgraph "trivial" (§VI-B).
+pub const TRIVIAL_WEIGHT: f64 = 20.0;
+
+#[derive(Clone, Debug)]
+pub struct PartitionReport {
+    pub n_subgraphs: usize,
+    pub weights: Vec<f64>,
+    pub avg_weight: f64,
+    pub median_weight: f64,
+    pub jain: f64,
+    pub trivial: usize,
+    /// Histogram over log2 bins: `bins[i]` counts weights in `[2^i, 2^(i+1))`.
+    pub bins: Vec<usize>,
+    /// Max complex-operator count in any subgraph.
+    pub max_complex: usize,
+}
+
+impl PartitionReport {
+    pub fn build(g: &Graph, p: &Partition, wp: WeightParams) -> Self {
+        let weights = subgraph_weights(g, p, wp);
+        let n_bins = 12;
+        let mut bins = vec![0usize; n_bins];
+        for &w in &weights {
+            let b = if w < 2.0 {
+                0
+            } else {
+                (w.log2().floor() as usize).min(n_bins - 1)
+            };
+            bins[b] += 1;
+        }
+        PartitionReport {
+            n_subgraphs: p.n_groups,
+            avg_weight: stats::mean(&weights),
+            median_weight: stats::median(&weights),
+            jain: stats::jain_index(&weights),
+            trivial: weights.iter().filter(|&&w| w < TRIVIAL_WEIGHT).count(),
+            bins,
+            max_complex: p.complex_counts(g).into_iter().max().unwrap_or(0),
+            weights,
+        }
+    }
+
+    /// Render the Fig.14-style summary line.
+    pub fn summary(&self, label: &str) -> String {
+        format!(
+            "{label}: {} subgraphs, avg {:.0}, median {:.0}, Jain {:.2}, \
+             trivial(<{}) {}, max-complex {}",
+            self.n_subgraphs,
+            self.avg_weight,
+            self.median_weight,
+            self.jain,
+            TRIVIAL_WEIGHT,
+            self.trivial,
+            self.max_complex
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build, InputShape, ModelId};
+    use crate::partition::{cluster, relay_partition, ClusterConfig};
+
+    #[test]
+    fn fig14_shape_holds_on_mvt() {
+        // The paper's qualitative claims (§VI-B): AGO produces FEWER
+        // subgraphs, HIGHER average/median weight, BETTER balance (Jain),
+        // and FEWER trivial subgraphs than Relay on MobileViT.
+        let g = build(ModelId::Mvt, InputShape::Large);
+        let wp = WeightParams::default();
+        let ago = PartitionReport::build(
+            &g,
+            &cluster(&g, ClusterConfig::default()),
+            wp,
+        );
+        let relay = PartitionReport::build(&g, &relay_partition(&g), wp);
+        assert!(ago.n_subgraphs < relay.n_subgraphs,
+                "AGO {} !< Relay {}", ago.n_subgraphs, relay.n_subgraphs);
+        assert!(ago.avg_weight > relay.avg_weight);
+        assert!(ago.median_weight > relay.median_weight);
+        assert!(ago.jain > relay.jain,
+                "Jain: ago {:.2} relay {:.2}", ago.jain, relay.jain);
+        assert!(ago.trivial < relay.trivial);
+    }
+
+    #[test]
+    fn bins_sum_to_subgraph_count() {
+        let g = build(ModelId::Mbn, InputShape::Small);
+        let p = relay_partition(&g);
+        let r = PartitionReport::build(&g, &p, WeightParams::default());
+        assert_eq!(r.bins.iter().sum::<usize>(), r.n_subgraphs);
+        assert_eq!(r.weights.len(), r.n_subgraphs);
+    }
+
+    #[test]
+    fn summary_contains_key_numbers() {
+        let g = build(ModelId::Sqn, InputShape::Small);
+        let p = relay_partition(&g);
+        let r = PartitionReport::build(&g, &p, WeightParams::default());
+        let s = r.summary("relay");
+        assert!(s.contains("subgraphs"));
+        assert!(s.contains("Jain"));
+    }
+}

@@ -1,0 +1,120 @@
+//! Operator weights — Eq. (1) of the paper:
+//!
+//! ```text
+//! w_v = c * Π_{l ∈ L_v} log(s_l) + b
+//! ```
+//!
+//! where `L_v` is the loop nest of operator v and `s_l` each loop extent.
+//! The weight is a *tuning complexity* proxy: Fig. 8 shows tuning budget
+//! scales with the loop structure (number of loops x log extents), not
+//! with the operator count, and subgraph complexity is the sum of member
+//! weights.
+//!
+//! Unit-extent loops contribute nothing to tuning complexity (there is
+//! nothing to tile or reorder), so they are skipped — this also keeps the
+//! product from collapsing to zero via log(1) = 0 on batch-1 graphs.
+
+use crate::graph::{Graph, Partition};
+
+#[derive(Clone, Copy, Debug)]
+pub struct WeightParams {
+    /// Slope `c` in Eq. (1).
+    pub c: f64,
+    /// Bias `b` in Eq. (1).
+    pub b: f64,
+}
+
+impl Default for WeightParams {
+    fn default() -> Self {
+        // Calibrated against our tuner's budget-to-stabilize measurements
+        // (Fig. 8 bench refits these; the partitioner only needs weights
+        // to be on a consistent scale).
+        WeightParams { c: 1.0, b: 1.0 }
+    }
+}
+
+/// Eq. (1) weight of one node.
+pub fn node_weight(g: &Graph, v: usize, p: WeightParams) -> f64 {
+    let loops = g.node(v).loops();
+    let mut prod = 1.0f64;
+    for s in loops {
+        if s > 1 {
+            prod *= (s as f64).log2();
+        }
+    }
+    p.c * prod + p.b
+}
+
+/// Weights of every node.
+pub fn node_weights(g: &Graph, p: WeightParams) -> Vec<f64> {
+    (0..g.len()).map(|v| node_weight(g, v, p)).collect()
+}
+
+/// Per-subgraph weights: the sum of member node weights (the paper's
+/// second Fig. 8 observation: budget scales ~linearly in operator count at
+/// fixed shape, so summation is the right aggregate).
+pub fn subgraph_weights(g: &Graph, part: &Partition, p: WeightParams) -> Vec<f64> {
+    let w = node_weights(g, p);
+    let mut out = vec![0.0; part.n_groups];
+    for (v, &grp) in part.assign.iter().enumerate() {
+        out[grp] += w[v];
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, OpKind, Shape};
+
+    fn conv_graph(h: usize, i: usize, o: usize) -> Graph {
+        let mut g = Graph::new("t");
+        let inp = g.add(OpKind::Pad, "in", Shape::nhwc(1, h, h, i), 0, &[]);
+        let c = g.add(OpKind::Conv2d { kh: 3, kw: 3, stride: 1 }, "conv",
+                      Shape::nhwc(1, h, h, o), i, &[inp]);
+        let _ = g.add(OpKind::Add, "add", Shape::nhwc(1, h, h, o), 0, &[c]);
+        g
+    }
+
+    #[test]
+    fn weight_grows_with_shape() {
+        let p = WeightParams::default();
+        let small = conv_graph(14, 32, 64);
+        let large = conv_graph(28, 32, 64);
+        assert!(node_weight(&large, 1, p) > node_weight(&small, 1, p));
+    }
+
+    #[test]
+    fn complex_heavier_than_simple() {
+        let p = WeightParams::default();
+        let g = conv_graph(28, 32, 64);
+        // conv (id 1) must far outweigh the elementwise add (id 2)
+        assert!(node_weight(&g, 1, p) > 5.0 * node_weight(&g, 2, p));
+    }
+
+    #[test]
+    fn batch_one_does_not_zero_weight() {
+        let p = WeightParams::default();
+        let g = conv_graph(28, 32, 64);
+        assert!(node_weight(&g, 1, p) > p.b);
+    }
+
+    #[test]
+    fn subgraph_weight_is_additive() {
+        let p = WeightParams::default();
+        let g = conv_graph(28, 32, 64);
+        let both = Partition::from_assignment(vec![0, 0, 0]);
+        let split = Partition::from_assignment(vec![0, 1, 2]);
+        let wb = subgraph_weights(&g, &both, p);
+        let ws = subgraph_weights(&g, &split, p);
+        assert!((wb[0] - ws.iter().sum::<f64>()).abs() < 1e-9);
+    }
+
+    #[test]
+    fn slope_scales() {
+        let g = conv_graph(28, 32, 64);
+        let w1 = node_weight(&g, 1, WeightParams { c: 1.0, b: 0.0 });
+        let w2 = node_weight(&g, 1, WeightParams { c: 2.0, b: 0.0 });
+        assert!((w2 - 2.0 * w1).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,324 @@
+//! PJRT execution engine: compile-once, execute-many over the artifact
+//! catalog, plus chain execution for unfused plans.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::{Duration, Instant};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Rng;
+
+use super::manifest::{Manifest, ProgramMeta};
+
+/// Host-side f32 tensor.
+#[derive(Clone, Debug)]
+pub struct TensorData {
+    pub shape: Vec<usize>,
+    pub data: Vec<f32>,
+}
+
+impl TensorData {
+    pub fn zeros(shape: &[usize]) -> TensorData {
+        TensorData {
+            shape: shape.to_vec(),
+            data: vec![0.0; shape.iter().product()],
+        }
+    }
+
+    /// Deterministic pseudo-random tensor (N(0,1)-ish via sum of
+    /// uniforms; plenty for runtime plumbing checks).
+    pub fn random(shape: &[usize], rng: &mut Rng) -> TensorData {
+        let n: usize = shape.iter().product();
+        let data = (0..n)
+            .map(|_| (rng.f32() + rng.f32() + rng.f32()) * 2.0 - 3.0)
+            .collect();
+        TensorData { shape: shape.to_vec(), data }
+    }
+
+    pub fn numel(&self) -> usize {
+        self.data.len()
+    }
+
+    /// Convert to an XLA literal (one host copy). Steady-state serving
+    /// should convert parameters ONCE via [`Engine::prepare_literals`]
+    /// and reuse them (§Perf: conversion dominated the request loop).
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        Ok(xla::Literal::vec1(&self.data).reshape(&dims)?)
+    }
+
+    fn from_literal(lit: &xla::Literal) -> Result<TensorData> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> =
+            shape.dims().iter().map(|&d| d as usize).collect();
+        let data = lit.to_vec::<f32>()?;
+        Ok(TensorData { shape: dims, data })
+    }
+}
+
+/// Compile-and-execute engine over one artifact directory.
+pub struct Engine {
+    client: xla::PjRtClient,
+    pub manifest: Manifest,
+    cache: BTreeMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Engine {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Engine> {
+        let manifest = Manifest::load(&artifact_dir)?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Engine { client, manifest, cache: BTreeMap::new() })
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn prepare(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.manifest.hlo_path(name)?;
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    pub fn compiled_count(&self) -> usize {
+        self.cache.len()
+    }
+
+    /// Execute one artifact. Input count/shapes must match the manifest.
+    pub fn execute(
+        &mut self,
+        name: &str,
+        inputs: &[TensorData],
+    ) -> Result<Vec<TensorData>> {
+        self.prepare(name)?;
+        let meta = self.manifest.get(name)?.clone();
+        if inputs.len() != meta.inputs.len() {
+            return Err(anyhow!(
+                "{name}: expected {} inputs, got {}",
+                meta.inputs.len(),
+                inputs.len()
+            ));
+        }
+        for (i, (t, m)) in inputs.iter().zip(&meta.inputs).enumerate() {
+            if t.shape != m.shape {
+                return Err(anyhow!(
+                    "{name}: input {i} shape {:?} != manifest {:?}",
+                    t.shape,
+                    m.shape
+                ));
+            }
+        }
+        let lits = inputs
+            .iter()
+            .map(|t| t.to_literal())
+            .collect::<Result<Vec<_>>>()?;
+        self.execute_literals(name, &lits)
+    }
+
+    /// Execute with pre-converted literals (no shape re-validation, no
+    /// host copies for the inputs) — the serving hot path.
+    pub fn execute_literals(
+        &mut self,
+        name: &str,
+        lits: &[xla::Literal],
+    ) -> Result<Vec<TensorData>> {
+        self.prepare(name)?;
+        let exe = self.cache.get(name).expect("prepared above");
+        let result = exe.execute::<xla::Literal>(lits)?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True
+        let tuple = result.to_tuple()?;
+        tuple.iter().map(TensorData::from_literal).collect()
+    }
+
+    /// Execute with a TensorData activation plus pre-converted parameter
+    /// literals.
+    pub fn execute_with_params(
+        &mut self,
+        name: &str,
+        activation: &TensorData,
+        params: &[xla::Literal],
+    ) -> Result<Vec<TensorData>> {
+        let act = activation.to_literal()?;
+        // `execute` is generic over Borrow<Literal>, so borrowed literals
+        // avoid re-copying the cached parameters
+        let mut all: Vec<&xla::Literal> = Vec::with_capacity(params.len() + 1);
+        all.push(&act);
+        all.extend(params.iter());
+        self.prepare(name)?;
+        let exe = self.cache.get(name).expect("prepared above");
+        let result = exe.execute::<&xla::Literal>(&all)?[0][0]
+            .to_literal_sync()?;
+        let tuple = result.to_tuple()?;
+        tuple.iter().map(TensorData::from_literal).collect()
+    }
+
+    /// Random weights for every non-activation input of a program (the
+    /// first input is the activation; the rest are parameters).
+    pub fn random_params(
+        &self,
+        meta: &ProgramMeta,
+        rng: &mut Rng,
+    ) -> Vec<TensorData> {
+        meta.inputs[1..]
+            .iter()
+            .map(|m| TensorData::random(&m.shape, rng))
+            .collect()
+    }
+
+    /// Execute a chain of artifacts: each program's first input is the
+    /// previous output; parameters are seeded deterministically per
+    /// program. Returns the final output and total wall time (excluding
+    /// compilation, which `prepare` front-loads).
+    pub fn run_chain(
+        &mut self,
+        names: &[String],
+        x0: TensorData,
+        seed: u64,
+    ) -> Result<(TensorData, Duration)> {
+        for n in names {
+            self.prepare(n)?;
+        }
+        // pre-generate parameters AND pre-convert them to literals: the
+        // timed region converts only the flowing activation (§Perf —
+        // parameter conversion dominated the request loop before this)
+        let mut params: Vec<Vec<xla::Literal>> = Vec::new();
+        for (i, n) in names.iter().enumerate() {
+            let meta = self.manifest.get(n)?.clone();
+            let mut rng = Rng::new(seed ^ ((i as u64) << 8));
+            params.push(
+                self.random_params(&meta, &mut rng)
+                    .iter()
+                    .map(|t| t.to_literal())
+                    .collect::<Result<Vec<_>>>()?,
+            );
+        }
+        let t0 = Instant::now();
+        let mut cur = x0;
+        for (n, ps) in names.iter().zip(&params) {
+            let mut outs = self.execute_with_params(n, &cur, ps)?;
+            cur = outs.remove(0);
+        }
+        Ok((cur, t0.elapsed()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn engine() -> Engine {
+        let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+        Engine::new(dir).expect("engine")
+    }
+
+    #[test]
+    fn executes_pointwise_artifact() {
+        let mut e = engine();
+        let mut rng = Rng::new(1);
+        let x = TensorData::random(&[1, 28, 28, 16], &mut rng);
+        let w = TensorData::random(&[16, 32], &mut rng);
+        let b = TensorData::random(&[32], &mut rng);
+        let outs = e
+            .execute("pw_n1h28w28i16o32", &[x.clone(), w.clone(), b.clone()])
+            .expect("execute");
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].shape, vec![1, 28, 28, 32]);
+        // cross-check one element against a host-side computation:
+        // out[0,0,0,o] = relu(sum_i x[0,0,0,i] * w[i,o] + b[o])
+        for o in [0usize, 17, 31] {
+            let mut acc = 0.0f32;
+            for i in 0..16 {
+                acc += x.data[i] * w.data[i * 32 + o];
+            }
+            acc += b.data[o];
+            let want = acc.max(0.0);
+            let got = outs[0].data[o];
+            assert!(
+                (got - want).abs() < 1e-3 * (1.0 + want.abs()),
+                "o={o}: got {got}, want {want}"
+            );
+        }
+    }
+
+    #[test]
+    fn fused_artifact_matches_unfused_chain() {
+        // THE runtime-level correctness check for intensive fusion: the
+        // fused pw->dw artifact must equal the pw then dw3 chain.
+        let mut e = engine();
+        let mut rng = Rng::new(2);
+        let x = TensorData::random(&[1, 14, 14, 24], &mut rng);
+        let w1 = TensorData::random(&[24, 48], &mut rng);
+        let b1 = TensorData::random(&[48], &mut rng);
+        let w2 = TensorData::random(&[3, 3, 1, 48], &mut rng);
+        let b2 = TensorData::random(&[48], &mut rng);
+        let fused = e
+            .execute(
+                "fused_pw_dw_n1h14w14i24a48b48",
+                &[x.clone(), w1.clone(), b1.clone(), w2.clone(), b2.clone()],
+            )
+            .expect("fused")
+            .remove(0);
+        let mid = e
+            .execute("pw_n1h14w14i24o48", &[x, w1, b1])
+            .expect("pw")
+            .remove(0);
+        let unfused = e
+            .execute("dw3_n1h14w14c48", &[mid, w2, b2])
+            .expect("dw")
+            .remove(0);
+        assert_eq!(fused.shape, unfused.shape);
+        let max_diff = fused
+            .data
+            .iter()
+            .zip(&unfused.data)
+            .map(|(a, b)| (a - b).abs())
+            .fold(0.0f32, f32::max);
+        assert!(max_diff < 1e-3, "max diff {max_diff}");
+    }
+
+    #[test]
+    fn chain_runs_and_times() {
+        let mut e = engine();
+        let mut rng = Rng::new(3);
+        let x = TensorData::random(&[1, 14, 14, 32], &mut rng);
+        let names = vec![
+            "dw3_n1h14w14c32".to_string(),
+            "pw_n1h14w14i32o64".to_string(),
+        ];
+        let (out, dt) = e.run_chain(&names, x, 7).expect("chain");
+        assert_eq!(out.shape, vec![1, 14, 14, 64]);
+        assert!(dt.as_nanos() > 0);
+    }
+
+    #[test]
+    fn shape_mismatch_is_error() {
+        let mut e = engine();
+        let mut rng = Rng::new(4);
+        let bad = TensorData::random(&[1, 28, 28, 8], &mut rng);
+        let w = TensorData::random(&[16, 32], &mut rng);
+        let b = TensorData::random(&[32], &mut rng);
+        assert!(e.execute("pw_n1h28w28i16o32", &[bad, w, b]).is_err());
+    }
+
+    #[test]
+    fn executable_cache_reuses() {
+        let mut e = engine();
+        let mut rng = Rng::new(5);
+        let x = TensorData::random(&[1, 28, 28, 16], &mut rng);
+        let w = TensorData::random(&[16, 32], &mut rng);
+        let b = TensorData::random(&[32], &mut rng);
+        let inputs = [x, w, b];
+        e.execute("pw_n1h28w28i16o32", &inputs).unwrap();
+        assert_eq!(e.compiled_count(), 1);
+        e.execute("pw_n1h28w28i16o32", &inputs).unwrap();
+        assert_eq!(e.compiled_count(), 1);
+    }
+}

@@ -1,0 +1,175 @@
+//! Artifact manifest: the JSON index `aot.py` writes next to the
+//! `*.hlo.txt` files.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::Json;
+
+#[derive(Clone, Debug)]
+pub struct TensorMeta {
+    pub shape: Vec<usize>,
+    pub dtype: String,
+}
+
+impl TensorMeta {
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    fn from_json(j: &Json) -> Result<TensorMeta> {
+        let shape = j
+            .get("shape")
+            .and_then(|s| s.as_arr())
+            .ok_or_else(|| anyhow!("tensor meta missing shape"))?
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<Vec<_>>>()?;
+        let dtype = j
+            .get("dtype")
+            .and_then(|d| d.as_str())
+            .unwrap_or("float32")
+            .to_string();
+        Ok(TensorMeta { shape, dtype })
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ProgramMeta {
+    pub name: String,
+    /// HLO text file, relative to the manifest directory.
+    pub file: String,
+    pub inputs: Vec<TensorMeta>,
+    pub outputs: Vec<TensorMeta>,
+    pub kind: String,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub programs: BTreeMap<String, ProgramMeta>,
+}
+
+impl Manifest {
+    /// Load `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let mut programs = BTreeMap::new();
+        for p in j
+            .get("programs")
+            .and_then(|p| p.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing programs"))?
+        {
+            let name = p
+                .get("name")
+                .and_then(|n| n.as_str())
+                .ok_or_else(|| anyhow!("program missing name"))?
+                .to_string();
+            let file = p
+                .get("file")
+                .and_then(|f| f.as_str())
+                .ok_or_else(|| anyhow!("program missing file"))?
+                .to_string();
+            let inputs = p
+                .get("inputs")
+                .and_then(|i| i.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = p
+                .get("outputs")
+                .and_then(|o| o.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(TensorMeta::from_json)
+                .collect::<Result<Vec<_>>>()?;
+            let kind = p
+                .get("tags")
+                .and_then(|t| t.get("kind"))
+                .and_then(|k| k.as_str())
+                .unwrap_or("")
+                .to_string();
+            programs.insert(
+                name.clone(),
+                ProgramMeta { name, file, inputs, outputs, kind },
+            );
+        }
+        Ok(Manifest { dir, programs })
+    }
+
+    /// Default artifact directory: `$AGO_ARTIFACTS` or `./artifacts`.
+    pub fn default_dir() -> PathBuf {
+        std::env::var("AGO_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| PathBuf::from("artifacts"))
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ProgramMeta> {
+        self.programs
+            .get(name)
+            .ok_or_else(|| anyhow!("no artifact named {name}"))
+    }
+
+    pub fn hlo_path(&self, name: &str) -> Result<PathBuf> {
+        Ok(self.dir.join(&self.get(name)?.file))
+    }
+
+    /// Names of programs whose kind matches a predicate.
+    pub fn names_by_kind(&self, pred: impl Fn(&str) -> bool) -> Vec<String> {
+        self.programs
+            .values()
+            .filter(|p| pred(&p.kind))
+            .map(|p| p.name.clone())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    }
+
+    #[test]
+    fn loads_real_manifest() {
+        let m = Manifest::load(artifacts_dir()).expect("manifest");
+        assert!(m.programs.len() >= 40, "got {}", m.programs.len());
+        // one known entry with exact shapes
+        let p = m.get("pw_n1h28w28i16o32").unwrap();
+        assert_eq!(p.inputs.len(), 3);
+        assert_eq!(p.inputs[0].shape, vec![1, 28, 28, 16]);
+        assert_eq!(p.outputs[0].shape, vec![1, 28, 28, 32]);
+        assert_eq!(p.kind, "pw");
+    }
+
+    #[test]
+    fn hlo_files_exist() {
+        let m = Manifest::load(artifacts_dir()).expect("manifest");
+        for name in m.programs.keys() {
+            let p = m.hlo_path(name).unwrap();
+            assert!(p.exists(), "{} missing", p.display());
+        }
+    }
+
+    #[test]
+    fn unknown_program_is_error() {
+        let m = Manifest::load(artifacts_dir()).expect("manifest");
+        assert!(m.get("nonexistent").is_err());
+    }
+
+    #[test]
+    fn kind_filter() {
+        let m = Manifest::load(artifacts_dir()).expect("manifest");
+        let fused = m.names_by_kind(|k| k.starts_with("fused_"));
+        assert!(fused.len() >= 8, "fused artifacts: {}", fused.len());
+    }
+}

@@ -1,0 +1,15 @@
+//! PJRT runtime: load AOT artifacts (HLO text produced by
+//! `python/compile/aot.py`), compile them on the PJRT CPU client, and
+//! execute chains of them on the request path. Python never runs here.
+//!
+//! The engine backs the E2E driver and the micro-benchmarks with *real*
+//! execution: a fused plan runs one artifact where the unfused plan runs
+//! an artifact per operator with host-memory round-trips in between — the
+//! locality difference the paper measures, reproduced with real programs
+//! and real numerics.
+
+pub mod engine;
+pub mod manifest;
+
+pub use engine::{Engine, TensorData};
+pub use manifest::{Manifest, ProgramMeta};

@@ -1,0 +1,15 @@
+//! Trace-driven cache-hierarchy simulator (substrate).
+//!
+//! The paper evaluates on physical mobile SoCs; we cannot. This simulator
+//! is the synthetic equivalent: a set-associative LRU hierarchy built from
+//! a [`DeviceProfile`], driven by address traces generated from loop
+//! nests. The analytical cost model (`costmodel`) is calibrated against it
+//! (see tests there), and it backs the ablation bench that shows *why*
+//! fusion wins: the intermediate-tensor round-trips disappear from the
+//! miss profile.
+
+pub mod cache;
+pub mod trace;
+
+pub use cache::{Cache, Hierarchy, LevelStats};
+pub use trace::{loop_nest_trace, tensor_walk};

@@ -1,0 +1,127 @@
+//! Address-trace generators: turn loop nests / tensor walks into access
+//! streams for the cache simulator.
+//!
+//! These are deliberately simple — enough to demonstrate (and test) the
+//! phenomena the cost model prices: streaming reuse, tiled reuse, and the
+//! intermediate-tensor round-trip that operator fusion removes.
+
+use super::cache::Hierarchy;
+
+/// Walk a contiguous tensor of `elems` f32 elements `passes` times.
+pub fn tensor_walk(h: &mut Hierarchy, base: u64, elems: usize, passes: usize) {
+    for _ in 0..passes {
+        for i in 0..elems {
+            h.access(base + (i * 4) as u64, 4);
+        }
+    }
+}
+
+/// Simulate an unfused producer/consumer pair: producer writes `elems`
+/// f32s of an intermediate, consumer reads them back. If the tensor
+/// exceeds cache, the read-back pays DRAM misses — the cost fusion saves.
+pub fn producer_consumer(
+    h: &mut Hierarchy,
+    inter_base: u64,
+    elems: usize,
+) {
+    tensor_walk(h, inter_base, elems, 1); // producer writes
+    tensor_walk(h, inter_base, elems, 1); // consumer reads
+}
+
+/// Simulate the fused version: each tile of the intermediate is written
+/// and immediately re-read while hot (tile << cache).
+pub fn fused_producer_consumer(
+    h: &mut Hierarchy,
+    inter_base: u64,
+    elems: usize,
+    tile_elems: usize,
+) {
+    let tile = tile_elems.max(1);
+    let mut i = 0;
+    while i < elems {
+        let n = tile.min(elems - i);
+        let base = inter_base + (i * 4) as u64;
+        tensor_walk(h, base, n, 1); // produce tile
+        tensor_walk(h, base, n, 1); // consume tile (hot)
+        i += n;
+    }
+}
+
+/// Trace a tiled 2-D loop nest reading a `rows x cols` f32 tensor with
+/// tile `tr x tc` (row-major). Models loop-tiling locality.
+pub fn loop_nest_trace(
+    h: &mut Hierarchy,
+    base: u64,
+    rows: usize,
+    cols: usize,
+    tr: usize,
+    tc: usize,
+) {
+    let (tr, tc) = (tr.max(1), tc.max(1));
+    for r0 in (0..rows).step_by(tr) {
+        for c0 in (0..cols).step_by(tc) {
+            for r in r0..(r0 + tr).min(rows) {
+                for c in c0..(c0 + tc).min(cols) {
+                    h.access(base + ((r * cols + c) * 4) as u64, 4);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::device::DeviceProfile;
+    use crate::simulator::Hierarchy;
+
+    /// The core claim behind operator fusion (paper §III-A): consuming
+    /// the intermediate while hot eliminates the DRAM round-trip.
+    #[test]
+    fn fusion_removes_intermediate_round_trip() {
+        let dev = DeviceProfile::qsd810();
+        let elems = 4 * 1024 * 1024; // 16 MiB >> L2
+        let mut unfused = Hierarchy::for_device(&dev);
+        producer_consumer(&mut unfused, 0, elems);
+        let mut fused = Hierarchy::for_device(&dev);
+        fused_producer_consumer(&mut fused, 0, elems, 2048); // 8 KiB tiles
+        assert!(
+            (fused.dram_accesses as f64)
+                < 0.6 * unfused.dram_accesses as f64,
+            "fused {} vs unfused {}",
+            fused.dram_accesses,
+            unfused.dram_accesses
+        );
+        assert!(fused.total_cycles < unfused.total_cycles);
+    }
+
+    /// Small intermediates fit in cache: fusion gains shrink — the
+    /// boundary the weight threshold / tuner must respect.
+    #[test]
+    fn small_intermediate_fusion_gain_is_modest() {
+        let dev = DeviceProfile::kirin990();
+        let elems = 2 * 1024; // 8 KiB << L1
+        let mut unfused = Hierarchy::for_device(&dev);
+        producer_consumer(&mut unfused, 0, elems);
+        let mut fused = Hierarchy::for_device(&dev);
+        fused_producer_consumer(&mut fused, 0, elems, 512);
+        let ratio = unfused.total_cycles / fused.total_cycles.max(1.0);
+        assert!(ratio < 1.5, "tiny tensors should not gain much: {ratio}");
+    }
+
+    #[test]
+    fn tiling_improves_strided_reuse() {
+        let dev = DeviceProfile::qsd810();
+        // two passes over a big matrix, tiled vs untiled columns-first
+        // emulate column reuse via two sweeps
+        let (rows, cols) = (512, 512); // 1 MiB
+        let mut untiled = Hierarchy::for_device(&dev);
+        loop_nest_trace(&mut untiled, 0, rows, cols, rows, cols);
+        loop_nest_trace(&mut untiled, 0, rows, cols, rows, cols);
+        let mut tiled = Hierarchy::for_device(&dev);
+        loop_nest_trace(&mut tiled, 0, rows, cols, 64, 64);
+        loop_nest_trace(&mut tiled, 0, rows, cols, 64, 64);
+        // both stream the same bytes; equality is fine, regression isn't
+        assert!(tiled.dram_accesses <= untiled.dram_accesses + 16);
+    }
+}

@@ -1,0 +1,252 @@
+//! Intensive-fusion legality and the §III-B redundancy analysis.
+//!
+//! The paper derives when fusing two complex operators re-computes
+//! upstream work: after tiling, the upstream intra-tile loops are attached
+//! under the downstream's outer loops, so the upstream iteration space
+//! inflates by (1) any downstream outer loop the upstream does not need
+//! (`GS2/TS2 - GS1/TS1 ≠ ∅` — e.g. the O2 channel loop of a dense conv)
+//! and (2) window overlap (`|TS2| < |TS1|` on the spatial dims).
+//!
+//! Redundancy-free categories (Fig. 7): downstream DEPTHWISE (reuse only
+//! on H2, W2 — leave them untiled) and downstream POINTWISE / MATMUL
+//! (reuse only on O2 — leave it untiled). This module both (a) answers
+//! "is this pair intensive-fusable at all" and (b) prices the redundancy
+//! of a *specific* tiling so the cost model can reject bad fusions
+//! quantitatively rather than by fiat.
+
+use crate::graph::{Graph, NodeId, OpKind};
+
+use super::schedule::Tile;
+
+/// Is (up → down) an intensive-fusion candidate?
+/// Requires: both complex; `down` consumes `up`'s output either directly
+/// or through a chain of simple elementwise ops (bias/activation epilogues
+/// fuse into the pair and do not disturb the data mapping); the downstream
+/// operator is depthwise, pointwise, or matmul (the two redundancy-free
+/// categories; matmul ≡ pointwise, §III-B). Data-movement ops between the
+/// pair (reshape/transpose/...) change the mapping and bar loop fusion.
+pub fn intensive_legal(g: &Graph, up: NodeId, down: NodeId) -> bool {
+    let (nu, nd) = (g.node(up), g.node(down));
+    if !nu.kind.is_complex() || !nd.kind.is_complex() {
+        return false;
+    }
+    if !matches!(
+        nd.kind,
+        OpKind::Depthwise { .. } | OpKind::Pointwise | OpKind::MatMul
+    ) {
+        return false;
+    }
+    // walk upward from `down` through simple single-pred elementwise ops
+    let mut cur = down;
+    loop {
+        let preds = g.preds(cur);
+        if preds.len() != 1 {
+            return false; // multi-input joins block the straight chain
+        }
+        let p = preds[0];
+        if p == up {
+            return true;
+        }
+        let pk = &g.node(p).kind;
+        if pk.is_complex() || pk.is_data_movement() {
+            return false;
+        }
+        cur = p;
+    }
+}
+
+/// Upstream re-computation factor for fusing `up` into `down`'s loop nest
+/// with downstream output tile `tile` (≥ 1.0; 1.0 = redundancy-free).
+///
+/// Terms per §III-B:
+/// - dense-conv downstream: the O2 loop is not in the upstream's
+///   iteration space → upstream repeats `O2 / tc` times; plus window
+///   overlap `((th + R2 - 1)(tw + C2 - 1)) / (th * tw)`.
+/// - depthwise downstream: only window overlap (channel loop maps 1:1).
+/// - pointwise / matmul downstream: only the `O2 / tc` channel term
+///   (R2 = C2 = 1 ⇒ no overlap).
+pub fn redundancy_factor(g: &Graph, down: NodeId, tile: &Tile) -> f64 {
+    let nd = g.node(down);
+    let out = &nd.out_shape;
+    match nd.kind {
+        OpKind::Depthwise { kh, kw, .. } => {
+            let (h, w) = (out.dim(1), out.dim(2));
+            let th = tile.th.min(h).max(1);
+            let tw = tile.tw.min(w).max(1);
+            overlap(h, th, kh) * overlap(w, tw, kw)
+        }
+        OpKind::Pointwise => {
+            let o2 = out.dim(3);
+            let tc = tile.tc.min(o2).max(1);
+            (o2 as f64 / tc as f64).max(1.0)
+        }
+        OpKind::MatMul => {
+            let n2 = out.dim(out.rank() - 1);
+            let tc = tile.tc.min(n2).max(1);
+            (n2 as f64 / tc as f64).max(1.0)
+        }
+        OpKind::Conv2d { kh, kw, .. } => {
+            let (h, w, o2) = (out.dim(1), out.dim(2), out.dim(3));
+            let th = tile.th.min(h).max(1);
+            let tw = tile.tw.min(w).max(1);
+            let tc = tile.tc.min(o2).max(1);
+            (o2 as f64 / tc as f64).max(1.0)
+                * overlap(h, th, kh)
+                * overlap(w, tw, kw)
+        }
+        _ => 1.0,
+    }
+}
+
+/// Window-overlap inflation on one spatial dim: upstream rows computed
+/// across all tiles (`ceil(d/t) * (t + k - 1)`) over rows needed once
+/// (`d + k - 1`). Exactly 1.0 when the dim is untiled (t = d).
+fn overlap(d: usize, t: usize, k: usize) -> f64 {
+    let tiles = d.div_ceil(t) as f64;
+    (tiles * (t + k - 1) as f64 / (d + k - 1) as f64).max(1.0)
+}
+
+/// The tile that achieves redundancy 1.0 for a legal downstream op:
+/// leave the reused dimensions untiled (Fig. 7), tile the rest freely.
+pub fn redundancy_free_tile(g: &Graph, down: NodeId, chan_tile: usize) -> Tile {
+    let nd = g.node(down);
+    let out = &nd.out_shape;
+    match nd.kind {
+        OpKind::Depthwise { .. } => Tile {
+            th: out.dim(1),
+            tw: out.dim(2),
+            tc: chan_tile.min(out.dim(3)).max(1),
+        },
+        OpKind::Pointwise => Tile {
+            th: 1.max(chan_tile.min(out.dim(1))),
+            tw: out.dim(2).min(16).max(1),
+            tc: out.dim(3),
+        },
+        OpKind::MatMul => Tile {
+            th: chan_tile.min(out.dim(0)).max(1),
+            tw: 1,
+            tc: out.dim(out.rank() - 1),
+        },
+        _ => Tile::whole(out),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{Graph, Shape};
+
+    fn pair(down_kind: OpKind, down_shape: Shape) -> (Graph, NodeId, NodeId) {
+        let mut g = Graph::new("t");
+        let s = Shape::nhwc(1, 14, 14, 32);
+        let i = g.add(OpKind::Pad, "in", s.clone(), 0, &[]);
+        let up = g.add(OpKind::Pointwise, "up", s, 32, &[i]);
+        let down = g.add(down_kind, "down", down_shape, 32, &[up]);
+        (g, up, down)
+    }
+
+    #[test]
+    fn legal_categories() {
+        let s = Shape::nhwc(1, 14, 14, 32);
+        let (g, u, d) =
+            pair(OpKind::Depthwise { kh: 3, kw: 3, stride: 1 }, s.clone());
+        assert!(intensive_legal(&g, u, d));
+        let (g, u, d) = pair(OpKind::Pointwise, s.clone());
+        assert!(intensive_legal(&g, u, d));
+        let (g, u, d) = pair(OpKind::MatMul, Shape::mk(196, 64));
+        assert!(intensive_legal(&g, u, d));
+        // dense conv downstream: NOT redundancy-free
+        let (g, u, d) =
+            pair(OpKind::Conv2d { kh: 3, kw: 3, stride: 1 }, s.clone());
+        assert!(!intensive_legal(&g, u, d));
+        // simple op downstream: not an intensive pair at all
+        let (g, u, d) = pair(OpKind::ReLU, s);
+        assert!(!intensive_legal(&g, u, d));
+    }
+
+    #[test]
+    fn epilogue_chain_between_pair_is_legal() {
+        // pw -> relu -> pw: the relu fuses as the upstream epilogue
+        let mut g = Graph::new("t");
+        let s = Shape::nhwc(1, 14, 14, 32);
+        let i = g.add(OpKind::Pad, "in", s.clone(), 0, &[]);
+        let a = g.add(OpKind::Pointwise, "a", s.clone(), 32, &[i]);
+        let mid = g.add(OpKind::ReLU, "mid", s.clone(), 0, &[a]);
+        let b = g.add(OpKind::Pointwise, "b", s, 32, &[mid]);
+        assert!(intensive_legal(&g, a, b));
+    }
+
+    #[test]
+    fn data_movement_between_pair_is_illegal() {
+        // mm -> reshape -> mm: the reshape changes the data mapping
+        let mut g = Graph::new("t");
+        let s = Shape::mk(196, 64);
+        let i = g.add(OpKind::Pad, "in", s.clone(), 0, &[]);
+        let a = g.add(OpKind::MatMul, "a", s.clone(), 64, &[i]);
+        let mid = g.add(OpKind::Reshape, "mid", s.clone(), 0, &[a]);
+        let b = g.add(OpKind::MatMul, "b", s, 64, &[mid]);
+        assert!(!intensive_legal(&g, a, b));
+    }
+
+    #[test]
+    fn multi_input_join_between_pair_is_illegal() {
+        // pw -> add(residual) -> dw: the add's second input blocks it
+        let mut g = Graph::new("t");
+        let s = Shape::nhwc(1, 14, 14, 32);
+        let i = g.add(OpKind::Pad, "in", s.clone(), 0, &[]);
+        let a = g.add(OpKind::Pointwise, "a", s.clone(), 32, &[i]);
+        let add = g.add(OpKind::Add, "add", s.clone(), 0, &[i, a]);
+        let b = g.add(OpKind::Depthwise { kh: 3, kw: 3, stride: 1 }, "b",
+                      s, 0, &[add]);
+        assert!(!intensive_legal(&g, a, b));
+    }
+
+    #[test]
+    fn depthwise_untiled_spatial_is_free() {
+        let s = Shape::nhwc(1, 14, 14, 32);
+        let (g, _, d) =
+            pair(OpKind::Depthwise { kh: 3, kw: 3, stride: 1 }, s);
+        // full spatial tile: exactly no overlap redundancy
+        let free = Tile { th: 14, tw: 14, tc: 8 };
+        assert_eq!(redundancy_factor(&g, d, &free), 1.0);
+        // tiling spatial dims induces window-overlap redundancy
+        let tiled = Tile { th: 4, tw: 4, tc: 8 };
+        assert!(redundancy_factor(&g, d, &tiled)
+                > redundancy_factor(&g, d, &free));
+    }
+
+    #[test]
+    fn pointwise_untiled_channels_is_free() {
+        let s = Shape::nhwc(1, 14, 14, 64);
+        let (g, _, d) = pair(OpKind::Pointwise, s);
+        let free = Tile { th: 2, tw: 14, tc: 64 };
+        assert_eq!(redundancy_factor(&g, d, &free), 1.0);
+        let tiled = Tile { th: 2, tw: 14, tc: 16 };
+        assert_eq!(redundancy_factor(&g, d, &tiled), 4.0);
+    }
+
+    #[test]
+    fn dense_conv_downstream_is_costly() {
+        let s = Shape::nhwc(1, 14, 14, 64);
+        let (g, _, d) =
+            pair(OpKind::Conv2d { kh: 3, kw: 3, stride: 1 }, s);
+        // the Fig. 5 situation: o2 tiled 1-of-64, 1x16 spatial tile
+        let t = Tile { th: 1, tw: 16, tc: 1 };
+        let f = redundancy_factor(&g, d, &t);
+        assert!(f > 64.0, "dense conv fusion must price O2 reuse: {f}");
+    }
+
+    #[test]
+    fn redundancy_free_tile_is_actually_free() {
+        let s = Shape::nhwc(1, 14, 14, 64);
+        for kind in [
+            OpKind::Depthwise { kh: 3, kw: 3, stride: 1 },
+            OpKind::Pointwise,
+        ] {
+            let (g, _, d) = pair(kind, s.clone());
+            let t = redundancy_free_tile(&g, d, 8);
+            let f = redundancy_factor(&g, d, &t);
+            assert_eq!(f, 1.0, "factor {f} for {:?}", g.node(d).kind);
+        }
+    }
+}

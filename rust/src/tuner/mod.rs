@@ -1,0 +1,11 @@
+//! Tuner backend (paper §III): schedule representation, fusion legality
+//! (conventional/epilogue, intensive, joint), the §III-B redundancy
+//! analysis, and evolutionary schedule search over the cost model.
+
+pub mod legality;
+pub mod schedule;
+pub mod search;
+
+pub use legality::{intensive_legal, redundancy_factor};
+pub use schedule::{FusionGroup, GroupKind, Schedule, SubgraphView, Tile};
+pub use search::{tune, SearchConfig, TuneResult};

@@ -1,0 +1,210 @@
+//! Schedule IR.
+//!
+//! A schedule for a subgraph is a segmentation of its (topologically
+//! ordered) operators into *fusion groups*, plus per-group loop-level
+//! knobs: output tile sizes, vector width, unroll factor, thread count.
+//! The two headline techniques of §III map onto [`GroupKind`]:
+//! `Epilogue` is conventional fusion (Fig. 4), `Intensive` is the paper's
+//! multi-complex-operator fusion (Fig. 5/7), and `Joint` covers complex
+//! operators co-scheduled in one compiled unit without loop-level fusion.
+
+use crate::graph::{Graph, NodeId, Partition, Subgraph};
+
+/// Output tile of a fusion group. For NHWC tensors: `th x tw` spatial
+/// rows/cols and `tc` channels; for matmul outputs (M, N): `th` rows, `tc`
+/// columns (`tw` = 1).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Tile {
+    pub th: usize,
+    pub tw: usize,
+    pub tc: usize,
+}
+
+impl Tile {
+    pub fn whole(shape: &crate::graph::Shape) -> Tile {
+        match shape.rank() {
+            4 => Tile { th: shape.dim(1), tw: shape.dim(2), tc: shape.dim(3) },
+            2 => Tile { th: shape.dim(0), tw: 1, tc: shape.dim(1) },
+            _ => Tile { th: 1, tw: 1, tc: shape.numel() },
+        }
+    }
+
+    pub fn elems(&self) -> usize {
+        self.th * self.tw * self.tc
+    }
+}
+
+/// Data layout of a fusion group's tensors. The paper names layout
+/// selection as an optimization that cyclic partitions would deadlock
+/// (§IV); with acyclic subgraphs the tuner picks per-group layouts and
+/// pays explicit conversion costs at group boundaries.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Layout {
+    /// channels-last: channel contraction vectorizes (pw/conv/matmul).
+    Nhwc,
+    /// channels-first: spatial vectorization (depthwise-friendly).
+    Nchw,
+}
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum GroupKind {
+    /// Only simple operators.
+    Simple,
+    /// One complex operator plus simple epilogue ops (conventional fusion).
+    Epilogue,
+    /// Two complex operators loop-fused (intensive fusion, §III-B);
+    /// legality/redundancy computed by `legality`.
+    Intensive,
+    /// ≥ 2 complex operators compiled as one unit without loop fusion
+    /// (joint optimization: shared layouts, intermediates stay cached,
+    /// single dispatch).
+    Joint,
+}
+
+#[derive(Clone, Debug)]
+pub struct FusionGroup {
+    /// Member ops in topological order (ids into the *original* graph).
+    pub ops: Vec<NodeId>,
+    pub kind: GroupKind,
+    pub tile: Tile,
+    /// Vector lanes on the innermost (channel) loop: 1, 4 or 8 f32.
+    pub vec: usize,
+    /// Innermost unroll factor.
+    pub unroll: usize,
+    /// Threads across the outer loops.
+    pub threads: usize,
+    /// Data layout of this group's loop nest.
+    pub layout: Layout,
+}
+
+#[derive(Clone, Debug)]
+pub struct Schedule {
+    pub groups: Vec<FusionGroup>,
+}
+
+impl Schedule {
+    /// Number of member ops across all groups.
+    pub fn op_count(&self) -> usize {
+        self.groups.iter().map(|g| g.ops.len()).sum()
+    }
+}
+
+/// A subgraph plus the pre-computed views every tuner component needs.
+#[derive(Clone, Debug)]
+pub struct SubgraphView {
+    /// Ops in topological order (original-graph ids).
+    pub order: Vec<NodeId>,
+    /// Complex ops among `order`, in order.
+    pub complex: Vec<NodeId>,
+}
+
+impl SubgraphView {
+    pub fn new(g: &Graph, sub: &Subgraph) -> SubgraphView {
+        let member: std::collections::BTreeSet<NodeId> =
+            sub.nodes.iter().copied().collect();
+        let order: Vec<NodeId> = g
+            .topo_order()
+            .expect("acyclic")
+            .into_iter()
+            .filter(|v| member.contains(v))
+            .collect();
+        let complex = order
+            .iter()
+            .copied()
+            .filter(|&v| g.node(v).kind.is_complex())
+            .collect();
+        SubgraphView { order, complex }
+    }
+
+    /// All views of a partition, indexed by subgraph id.
+    pub fn all(g: &Graph, p: &Partition) -> Vec<SubgraphView> {
+        p.subgraphs().iter().map(|s| SubgraphView::new(g, s)).collect()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.order.is_empty()
+    }
+}
+
+/// Build the group kind implied by a set of member ops.
+pub fn classify(g: &Graph, ops: &[NodeId], loop_fused: bool) -> GroupKind {
+    let n_complex =
+        ops.iter().filter(|&&v| g.node(v).kind.is_complex()).count();
+    match n_complex {
+        0 => GroupKind::Simple,
+        1 => GroupKind::Epilogue,
+        _ if loop_fused => GroupKind::Intensive,
+        _ => GroupKind::Joint,
+    }
+}
+
+/// Divisors of n (ascending) — the tile-size candidates.
+pub fn divisors(n: usize) -> Vec<usize> {
+    let mut d = Vec::new();
+    for i in 1..=n {
+        if i * i > n {
+            break;
+        }
+        if n % i == 0 {
+            d.push(i);
+            if i != n / i {
+                d.push(n / i);
+            }
+        }
+    }
+    d.sort_unstable();
+    d
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpKind, Shape};
+
+    fn mini() -> (Graph, SubgraphView) {
+        let mut g = Graph::new("t");
+        let s = Shape::nhwc(1, 14, 14, 32);
+        let i = g.add(OpKind::Pad, "in", s.clone(), 0, &[]);
+        let pw = g.add(OpKind::Pointwise, "pw", s.clone(), 32, &[i]);
+        let b = g.add(OpKind::BiasAdd, "b", s.clone(), 0, &[pw]);
+        let dw = g.add(OpKind::Depthwise { kh: 3, kw: 3, stride: 1 }, "dw",
+                       s.clone(), 0, &[b]);
+        let r = g.add(OpKind::ReLU, "r", s, 0, &[dw]);
+        let sub = Subgraph { id: 0, nodes: vec![i, pw, b, dw, r] };
+        let view = SubgraphView::new(&g, &sub);
+        (g, view)
+    }
+
+    use crate::graph::Subgraph;
+
+    #[test]
+    fn view_orders_and_finds_complex() {
+        let (_, v) = mini();
+        assert_eq!(v.order, vec![0, 1, 2, 3, 4]);
+        assert_eq!(v.complex, vec![1, 3]);
+    }
+
+    #[test]
+    fn classify_kinds() {
+        let (g, v) = mini();
+        assert_eq!(classify(&g, &v.order[..1], false), GroupKind::Simple);
+        assert_eq!(classify(&g, &v.order[..3], false), GroupKind::Epilogue);
+        assert_eq!(classify(&g, &v.order, true), GroupKind::Intensive);
+        assert_eq!(classify(&g, &v.order, false), GroupKind::Joint);
+    }
+
+    #[test]
+    fn whole_tile() {
+        let t = Tile::whole(&Shape::nhwc(1, 14, 14, 32));
+        assert_eq!(t, Tile { th: 14, tw: 14, tc: 32 });
+        let m = Tile::whole(&Shape::mk(128, 512));
+        assert_eq!(m, Tile { th: 128, tw: 1, tc: 512 });
+    }
+
+    #[test]
+    fn divisors_correct() {
+        assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
+        assert_eq!(divisors(7), vec![1, 7]);
+        assert_eq!(divisors(1), vec![1]);
+    }
+}

@@ -1,0 +1,508 @@
+//! Evolutionary schedule search over the cost model.
+//!
+//! The tuner explores segmentations of a subgraph into fusion groups plus
+//! per-group loop knobs. Unlike Relay-constrained tuners it may place any
+//! number of complex operators in one group (Intensive when the §III-B
+//! analysis allows loop fusion, Joint otherwise) — the search space the
+//! paper's backend unlocks. "Budget" counts cost-model evaluations, the
+//! analogue of the paper's number-of-measured-schedules; the
+//! budget-to-stabilize statistic drives Fig. 8.
+
+use crate::costmodel::schedule_latency;
+use crate::device::DeviceProfile;
+use crate::graph::{Graph, NodeId};
+use crate::util::Rng;
+
+use super::legality::{intensive_legal, redundancy_free_tile};
+use super::schedule::{
+    classify, divisors, FusionGroup, GroupKind, Layout, Schedule,
+    SubgraphView, Tile,
+};
+
+#[derive(Clone, Debug)]
+pub struct SearchConfig {
+    /// Max cost-model evaluations.
+    pub budget: usize,
+    /// Population size for the evolutionary loop.
+    pub population: usize,
+    /// Evaluations without >1% improvement after which tuning is declared
+    /// stable (the reformer's JOIN trigger and Fig. 8's budget metric).
+    pub stabilize_window: usize,
+    pub seed: u64,
+    /// Ablation switch: false = AGO-NI (no intensive fusion; such groups
+    /// degrade to Joint).
+    pub allow_intensive: bool,
+}
+
+impl Default for SearchConfig {
+    fn default() -> Self {
+        SearchConfig {
+            budget: 512,
+            population: 16,
+            stabilize_window: 128,
+            seed: 0xA60,
+            allow_intensive: true,
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct TuneResult {
+    pub best: Schedule,
+    pub best_latency: f64,
+    pub evals: usize,
+    /// Evaluation index after which no >1% improvement happened.
+    pub evals_to_stabilize: usize,
+    /// Best-so-far latency curve (one entry per evaluation).
+    pub history: Vec<f64>,
+}
+
+/// Tune one subgraph. `initial` seeds the population (the reformer passes
+/// the composed mini-subgraph schedule here — §V).
+pub fn tune(
+    g: &Graph,
+    view: &SubgraphView,
+    dev: &DeviceProfile,
+    cfg: &SearchConfig,
+    initial: Option<Schedule>,
+) -> TuneResult {
+    assert!(!view.is_empty(), "cannot tune an empty subgraph");
+    let mut rng = Rng::new(cfg.seed);
+    let mut evals = 0usize;
+    let mut history = Vec::new();
+    let mut best: Option<(Schedule, f64)> = None;
+    let mut last_improve = 0usize;
+
+    let eval = |s: Schedule,
+                    best: &mut Option<(Schedule, f64)>,
+                    evals: &mut usize,
+                    history: &mut Vec<f64>,
+                    last_improve: &mut usize|
+     -> f64 {
+        let lat = schedule_latency(g, &s, dev);
+        *evals += 1;
+        match best {
+            Some((_, bl)) if lat >= *bl * 0.99 => {}
+            _ => {
+                if best.as_ref().map(|(_, bl)| lat < *bl).unwrap_or(true) {
+                    if best
+                        .as_ref()
+                        .map(|(_, bl)| lat < *bl * 0.99)
+                        .unwrap_or(true)
+                    {
+                        *last_improve = *evals;
+                    }
+                    *best = Some((s, lat));
+                }
+            }
+        }
+        history.push(best.as_ref().unwrap().1);
+        lat
+    };
+
+    // seed population
+    let mut pop: Vec<(Schedule, f64)> = Vec::new();
+    if let Some(init) = initial {
+        let lat = eval(init.clone(), &mut best, &mut evals, &mut history,
+                       &mut last_improve);
+        pop.push((init, lat));
+    }
+    while pop.len() < cfg.population && evals < cfg.budget {
+        let s = random_schedule(g, view, &mut rng, cfg.allow_intensive);
+        let lat = eval(s.clone(), &mut best, &mut evals, &mut history,
+                       &mut last_improve);
+        pop.push((s, lat));
+    }
+
+    // evolutionary loop: tournament parent -> mutate -> replace worst
+    while evals < cfg.budget {
+        if evals.saturating_sub(last_improve) >= cfg.stabilize_window {
+            break; // stabilized
+        }
+        // 25% fresh random restarts keep exploring segmentations the
+        // population has abandoned (multi-complex groups need several
+        // coordinated choices that single mutations rarely line up).
+        let child = if rng.chance(0.25) {
+            random_schedule(g, view, &mut rng, cfg.allow_intensive)
+        } else {
+            let a = rng.range(0, pop.len());
+            let b = rng.range(0, pop.len());
+            let parent = if pop[a].1 <= pop[b].1 { a } else { b };
+            mutate(g, view, &pop[parent].0, &mut rng, cfg.allow_intensive)
+        };
+        let lat = eval(child.clone(), &mut best, &mut evals, &mut history,
+                       &mut last_improve);
+        // replace current worst if the child is better
+        let (worst, _) = pop
+            .iter()
+            .enumerate()
+            .max_by(|x, y| x.1 .1.partial_cmp(&y.1 .1).unwrap())
+            .map(|(i, p)| (i, p.1))
+            .unwrap();
+        if lat < pop[worst].1 {
+            pop[worst] = (child, lat);
+        }
+    }
+
+    let (best, best_latency) = best.expect("at least one eval");
+    TuneResult {
+        best,
+        best_latency,
+        evals,
+        evals_to_stabilize: last_improve,
+        history,
+    }
+}
+
+// ---------------------------------------------------------------------------
+// schedule generation
+// ---------------------------------------------------------------------------
+
+/// Random segmentation of the subgraph into legal fusion groups + knobs.
+pub fn random_schedule(
+    g: &Graph,
+    view: &SubgraphView,
+    rng: &mut Rng,
+    allow_intensive: bool,
+) -> Schedule {
+    let mut groups: Vec<Vec<NodeId>> = Vec::new();
+    let mut cur: Vec<NodeId> = Vec::new();
+    let mut cur_complex = 0usize;
+    for &v in &view.order {
+        let is_complex = g.node(v).kind.is_complex();
+        let mut close = false;
+        if is_complex && cur_complex >= 1 {
+            // adding a second/third complex op: close unless we opt into
+            // a multi-complex group (the AGO-specific move)
+            close = !rng.chance(0.6);
+        } else if !cur.is_empty() {
+            close = rng.chance(0.25);
+        }
+        if close && !cur.is_empty() {
+            groups.push(std::mem::take(&mut cur));
+            cur_complex = 0;
+        }
+        cur.push(v);
+        cur_complex += usize::from(is_complex);
+    }
+    if !cur.is_empty() {
+        groups.push(cur);
+    }
+    Schedule {
+        groups: groups
+            .into_iter()
+            .map(|ops| make_group(g, ops, rng, allow_intensive))
+            .collect(),
+    }
+}
+
+/// Assemble a group: classify kind (with intensive legality), pick knobs.
+fn make_group(
+    g: &Graph,
+    ops: Vec<NodeId>,
+    rng: &mut Rng,
+    allow_intensive: bool,
+) -> FusionGroup {
+    let complex: Vec<NodeId> = ops
+        .iter()
+        .copied()
+        .filter(|&v| g.node(v).kind.is_complex())
+        .collect();
+    let loop_fusable = allow_intensive
+        && complex.len() == 2
+        && intensive_legal(g, complex[0], complex[1]);
+    let kind = classify(g, &ops, loop_fusable && rng.chance(0.8));
+    let out = &g.node(*ops.last().unwrap()).out_shape;
+    let tile = if kind == GroupKind::Intensive && rng.chance(0.7) {
+        // bias half the samples toward the redundancy-free tiling; the
+        // other half must discover it through cost
+        let chans = *rng.choose(&[4, 8, 16, 32]);
+        redundancy_free_tile(g, *complex.last().unwrap(), chans)
+    } else {
+        random_tile(out, rng)
+    };
+    FusionGroup {
+        ops,
+        kind,
+        tile,
+        vec: *rng.choose(&[1, 4, 8]),
+        unroll: *rng.choose(&[1, 2, 4, 8]),
+        threads: *rng.choose(&[1, 2, 4]),
+        layout: if rng.chance(0.75) { Layout::Nhwc } else { Layout::Nchw },
+    }
+}
+
+fn random_tile(shape: &crate::graph::Shape, rng: &mut Rng) -> Tile {
+    match shape.rank() {
+        4 => Tile {
+            th: *rng.choose(&divisors(shape.dim(1))),
+            tw: *rng.choose(&divisors(shape.dim(2))),
+            tc: *rng.choose(&divisors(shape.dim(3))),
+        },
+        2 => Tile {
+            th: *rng.choose(&divisors(shape.dim(0))),
+            tw: 1,
+            tc: *rng.choose(&divisors(shape.dim(1))),
+        },
+        _ => Tile { th: 1, tw: 1, tc: 1 },
+    }
+}
+
+/// One mutation: knob tweak, group split, or adjacent-group merge.
+pub fn mutate(
+    g: &Graph,
+    view: &SubgraphView,
+    s: &Schedule,
+    rng: &mut Rng,
+    allow_intensive: bool,
+) -> Schedule {
+    let mut groups = s.groups.clone();
+    match rng.range(0, 10) {
+        // 0-5: tweak a knob of one group
+        0..=5 => {
+            let gi = rng.range(0, groups.len());
+            let grp = &mut groups[gi];
+            // re-roll intensive choice for multi-complex groups first so
+            // the tile mutation below can target the chosen kind
+            let complex: Vec<NodeId> = grp
+                .ops
+                .iter()
+                .copied()
+                .filter(|&v| g.node(v).kind.is_complex())
+                .collect();
+            if complex.len() >= 2 {
+                let fusable = allow_intensive
+                    && complex.len() == 2
+                    && intensive_legal(g, complex[0], complex[1]);
+                grp.kind =
+                    classify(g, &grp.ops, fusable && rng.chance(0.8));
+            }
+            match rng.range(0, 5) {
+                4 => {
+                    grp.layout = if grp.layout == Layout::Nhwc {
+                        Layout::Nchw
+                    } else {
+                        Layout::Nhwc
+                    };
+                }
+                0 => {
+                    grp.tile = if grp.kind == GroupKind::Intensive
+                        && rng.chance(0.5)
+                    {
+                        // §III-B-guided move: jump straight to the
+                        // redundancy-free tiling of the downstream op
+                        let chans = *rng.choose(&[4, 8, 16, 32]);
+                        redundancy_free_tile(
+                            g,
+                            *complex.last().unwrap(),
+                            chans,
+                        )
+                    } else {
+                        let out =
+                            &g.node(*grp.ops.last().unwrap()).out_shape;
+                        random_tile(out, rng)
+                    };
+                }
+                1 => grp.vec = *rng.choose(&[1, 4, 8]),
+                2 => grp.unroll = *rng.choose(&[1, 2, 4, 8]),
+                _ => grp.threads = *rng.choose(&[1, 2, 4]),
+            }
+        }
+        // 6-7: split a group
+        6 | 7 => {
+            let gi = rng.range(0, groups.len());
+            if groups[gi].ops.len() >= 2 {
+                let cut = rng.range(1, groups[gi].ops.len());
+                let tail = groups[gi].ops.split_off(cut);
+                let head_ops = groups[gi].ops.clone();
+                let head = make_group(g, head_ops, rng, allow_intensive);
+                let tail = make_group(g, tail, rng, allow_intensive);
+                groups[gi] = head;
+                groups.insert(gi + 1, tail);
+            }
+        }
+        // 8-9: merge two adjacent groups
+        _ => {
+            if groups.len() >= 2 {
+                let gi = rng.range(0, groups.len() - 1);
+                let tail = groups.remove(gi + 1);
+                let mut ops = groups[gi].ops.clone();
+                ops.extend(tail.ops);
+                groups[gi] = make_group(g, ops, rng, allow_intensive);
+            }
+        }
+    }
+    let _ = view;
+    Schedule { groups }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::{OpKind, Shape, Subgraph};
+
+    /// in -> pw -> bias -> dw -> relu (intensive-fusable pair). The
+    /// intermediate (56x56x128 = 1.6 MiB) exceeds both devices' L2, so
+    /// intensive fusion has a clear payoff for the search to find.
+    fn pair_view() -> (Graph, SubgraphView) {
+        let mut g = Graph::new("t");
+        let s = Shape::nhwc(1, 56, 56, 64);
+        let m = Shape::nhwc(1, 56, 56, 128);
+        let i = g.add(OpKind::Pad, "in", s, 0, &[]);
+        let pw = g.add(OpKind::Pointwise, "pw", m.clone(), 32, &[i]);
+        let b = g.add(OpKind::BiasAdd, "b", m.clone(), 0, &[pw]);
+        let dw = g.add(OpKind::Depthwise { kh: 3, kw: 3, stride: 1 }, "dw",
+                       m.clone(), 0, &[b]);
+        let r = g.add(OpKind::ReLU, "r", m, 0, &[dw]);
+        let sub = Subgraph { id: 0, nodes: vec![i, pw, b, dw, r] };
+        let v = SubgraphView::new(&g, &sub);
+        (g, v)
+    }
+
+    #[test]
+    fn random_schedules_cover_all_ops() {
+        let (g, v) = pair_view();
+        let mut rng = Rng::new(1);
+        for _ in 0..50 {
+            let s = random_schedule(&g, &v, &mut rng, true);
+            assert_eq!(s.op_count(), v.order.len());
+            let mut seen: Vec<NodeId> =
+                s.groups.iter().flat_map(|grp| grp.ops.clone()).collect();
+            seen.sort_unstable();
+            assert_eq!(seen, v.order);
+        }
+    }
+
+    #[test]
+    fn tune_improves_over_first_sample() {
+        let (g, v) = pair_view();
+        let dev = crate::device::DeviceProfile::kirin990();
+        let cfg = SearchConfig { budget: 300, ..Default::default() };
+        let r = tune(&g, &v, &dev, &cfg, None);
+        assert!(r.best_latency > 0.0);
+        assert!(r.history.len() == r.evals);
+        assert!(r.history.last().unwrap() <= &r.history[0]);
+        // best-so-far curve is monotone non-increasing
+        for w in r.history.windows(2) {
+            assert!(w[1] <= w[0] + 1e-15);
+        }
+    }
+
+    #[test]
+    fn tune_is_deterministic_per_seed() {
+        let (g, v) = pair_view();
+        let dev = crate::device::DeviceProfile::qsd810();
+        let cfg = SearchConfig { budget: 200, ..Default::default() };
+        let a = tune(&g, &v, &dev, &cfg, None);
+        let b = tune(&g, &v, &dev, &cfg, None);
+        assert_eq!(a.best_latency, b.best_latency);
+        assert_eq!(a.evals, b.evals);
+    }
+
+    #[test]
+    fn intensive_discovered_when_allowed() {
+        let (g, v) = pair_view();
+        let dev = crate::device::DeviceProfile::kirin990();
+        let cfg = SearchConfig { budget: 600, ..Default::default() };
+        let r = tune(&g, &v, &dev, &cfg, None);
+        let has_intensive = r
+            .best
+            .groups
+            .iter()
+            .any(|grp| grp.kind == GroupKind::Intensive);
+        assert!(has_intensive,
+                "search should find the intensive pw->dw fusion");
+    }
+
+    #[test]
+    fn ago_ni_never_emits_intensive() {
+        let (g, v) = pair_view();
+        let dev = crate::device::DeviceProfile::kirin990();
+        let cfg = SearchConfig {
+            budget: 400,
+            allow_intensive: false,
+            ..Default::default()
+        };
+        let r = tune(&g, &v, &dev, &cfg, None);
+        assert!(r
+            .best
+            .groups
+            .iter()
+            .all(|grp| grp.kind != GroupKind::Intensive));
+    }
+
+    #[test]
+    fn ni_is_not_faster_than_full_ago() {
+        let (g, v) = pair_view();
+        let dev = crate::device::DeviceProfile::qsd810();
+        let full = tune(&g, &v, &dev,
+                        &SearchConfig { budget: 600, ..Default::default() },
+                        None);
+        let ni = tune(&g, &v, &dev,
+                      &SearchConfig {
+                          budget: 600,
+                          allow_intensive: false,
+                          ..Default::default()
+                      },
+                      None);
+        assert!(full.best_latency <= ni.best_latency * 1.001,
+                "AGO {} vs AGO-NI {}", full.best_latency, ni.best_latency);
+    }
+
+    #[test]
+    fn initial_schedule_seeds_search() {
+        let (g, v) = pair_view();
+        let dev = crate::device::DeviceProfile::kirin990();
+        let cfg = SearchConfig { budget: 150, ..Default::default() };
+        let warm = tune(&g, &v, &dev, &cfg, None);
+        // reuse the previous best as the initial schedule: final result
+        // can only be at least as good
+        let seeded = tune(&g, &v, &dev, &cfg, Some(warm.best.clone()));
+        assert!(seeded.best_latency <= warm.best_latency * 1.001);
+    }
+
+    #[test]
+    fn layout_selection_prefers_nchw_for_depthwise_chain() {
+        // dw-dominated subgraph: the tuner should discover the
+        // channels-first layout (the knob the paper says cyclic
+        // partitions would deadlock)
+        let mut g = Graph::new("t");
+        let s = Shape::nhwc(1, 28, 28, 64);
+        let i = g.add(OpKind::Pad, "in", s.clone(), 0, &[]);
+        let d1 = g.add(OpKind::Depthwise { kh: 3, kw: 3, stride: 1 }, "d1",
+                       s.clone(), 0, &[i]);
+        let b = g.add(OpKind::BiasAdd, "b", s.clone(), 0, &[d1]);
+        let d2 = g.add(OpKind::Depthwise { kh: 3, kw: 3, stride: 1 }, "d2",
+                       s, 0, &[b]);
+        let sub = Subgraph { id: 0, nodes: vec![i, d1, b, d2] };
+        let v = SubgraphView::new(&g, &sub);
+        let dev = crate::device::DeviceProfile::kirin990();
+        let cfg = SearchConfig { budget: 800, ..Default::default() };
+        let r = tune(&g, &v, &dev, &cfg, None);
+        // every complex-op group in the best schedule should be NCHW
+        let all_nchw = r
+            .best
+            .groups
+            .iter()
+            .filter(|grp| {
+                grp.ops.iter().any(|&o| g.node(o).kind.is_complex())
+            })
+            .all(|grp| grp.layout == crate::tuner::schedule::Layout::Nchw);
+        assert!(all_nchw, "dw chain should tune to NCHW: {:?}",
+                r.best.groups.iter().map(|g| g.layout).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn mutation_preserves_cover() {
+        let (g, v) = pair_view();
+        let mut rng = Rng::new(3);
+        let mut s = random_schedule(&g, &v, &mut rng, true);
+        for _ in 0..200 {
+            s = mutate(&g, &v, &s, &mut rng, true);
+            let mut seen: Vec<NodeId> =
+                s.groups.iter().flat_map(|grp| grp.ops.clone()).collect();
+            seen.sort_unstable();
+            assert_eq!(seen, v.order, "mutation broke the op cover");
+        }
+    }
+}

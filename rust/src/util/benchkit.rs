@@ -1,0 +1,169 @@
+//! Micro/throughput benchmark harness (substrate — no criterion offline).
+//!
+//! `cargo bench` targets use `harness = false` and drive this directly.
+//! Reports min / p50 / mean / p99 wall-clock per iteration after a warmup,
+//! with adaptive iteration counts, and renders aligned text tables so each
+//! bench binary can print the same rows the paper's figures report.
+
+use std::time::{Duration, Instant};
+
+use super::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub min_ns: f64,
+    pub p50_ns: f64,
+    pub mean_ns: f64,
+    pub p99_ns: f64,
+}
+
+impl BenchResult {
+    pub fn p50_ms(&self) -> f64 {
+        self.p50_ns / 1e6
+    }
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_ns / 1e6
+    }
+}
+
+/// Time `f`, choosing an iteration count so total runtime ≈ `target`.
+pub fn bench<F: FnMut()>(name: &str, target: Duration, mut f: F) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    f();
+    let first = t0.elapsed().max(Duration::from_nanos(50));
+    let iters = (target.as_nanos() / first.as_nanos()).clamp(5, 10_000) as usize;
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed().as_nanos() as f64);
+    }
+    BenchResult {
+        name: name.to_string(),
+        iters,
+        min_ns: samples.iter().cloned().fold(f64::INFINITY, f64::min),
+        p50_ns: stats::percentile(&samples, 50.0),
+        mean_ns: stats::mean(&samples),
+        p99_ns: stats::percentile(&samples, 99.0),
+    }
+}
+
+/// Quick default: ~300 ms per case keeps whole bench binaries in seconds.
+pub fn quick<F: FnMut()>(name: &str, f: F) -> BenchResult {
+    bench(name, Duration::from_millis(300), f)
+}
+
+/// Aligned plain-text table; `rows` are already formatted cells.
+pub struct Table {
+    headers: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(headers: &[&str]) -> Table {
+        Table {
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.headers.len(), "column count mismatch");
+        self.rows.push(cells);
+    }
+
+    pub fn render(&self) -> String {
+        let ncol = self.headers.len();
+        let mut widths: Vec<usize> =
+            self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let line = |out: &mut String, cells: &[String]| {
+            for (i, c) in cells.iter().enumerate() {
+                out.push_str(&format!("{:<w$}", c, w = widths[i]));
+                if i + 1 < ncol {
+                    out.push_str("  ");
+                }
+            }
+            out.push('\n');
+        };
+        line(&mut out, &self.headers);
+        let total: usize = widths.iter().sum::<usize>() + 2 * (ncol - 1);
+        out.push_str(&"-".repeat(total));
+        out.push('\n');
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+}
+
+/// Format a milliseconds value the way the paper annotates its bars.
+pub fn fmt_ms(ms: f64) -> String {
+    if ms >= 100.0 {
+        format!("{ms:.0}")
+    } else if ms >= 10.0 {
+        format!("{ms:.1}")
+    } else {
+        format!("{ms:.2}")
+    }
+}
+
+/// Format a speedup multiplier ("2.6x").
+pub fn fmt_x(x: f64) -> String {
+    format!("{x:.2}x")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_measures_something() {
+        let r = bench("spin", Duration::from_millis(20), || {
+            std::hint::black_box((0..1000).sum::<u64>());
+        });
+        assert!(r.iters >= 5);
+        assert!(r.min_ns > 0.0);
+        assert!(r.p50_ns >= r.min_ns);
+        assert!(r.p99_ns >= r.p50_ns);
+    }
+
+    #[test]
+    fn table_renders_aligned() {
+        let mut t = Table::new(&["net", "lat(ms)", "speedup"]);
+        t.row(vec!["MBN".into(), "12.5".into(), "1.9x".into()]);
+        t.row(vec!["MNSN-long".into(), "7.1".into(), "2.6x".into()]);
+        let s = t.render();
+        let lines: Vec<&str> = s.lines().collect();
+        assert_eq!(lines.len(), 4);
+        // all rows equal width
+        assert!(lines[1].chars().all(|c| c == '-'));
+    }
+
+    #[test]
+    #[should_panic]
+    fn table_rejects_bad_row() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_ms(123.4), "123");
+        assert_eq!(fmt_ms(42.25), "42.2");
+        assert_eq!(fmt_ms(3.141), "3.14");
+        assert_eq!(fmt_x(2.6), "2.60x");
+    }
+}

@@ -1,0 +1,141 @@
+//! Tiny CLI argument parser (substrate — no clap offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional arguments,
+//! and subcommands. Enough for the `ago` binary and the bench harnesses.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse, treating the first non-option token as the subcommand when
+    /// `with_subcommand` is set.
+    pub fn parse_from<I: IntoIterator<Item = String>>(
+        argv: I,
+        with_subcommand: bool,
+    ) -> Args {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(tok) = iter.next() {
+            if let Some(rest) = tok.strip_prefix("--") {
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|n| !n.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(rest.to_string(), v);
+                } else {
+                    out.flags.push(rest.to_string());
+                }
+            } else if with_subcommand && out.subcommand.is_none() {
+                out.subcommand = Some(tok);
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        out
+    }
+
+    /// Parse the process arguments (skipping argv[0]).
+    pub fn from_env(with_subcommand: bool) -> Args {
+        Args::parse_from(std::env::args().skip(1), with_subcommand)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> usize {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects an integer, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> u64 {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects an integer, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+
+    pub fn get_f64(&self, name: &str, default: f64) -> f64 {
+        self.get(name)
+            .map(|v| {
+                v.parse().unwrap_or_else(|_| {
+                    panic!("--{name} expects a number, got {v:?}")
+                })
+            })
+            .unwrap_or(default)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str, sub: bool) -> Args {
+        Args::parse_from(s.split_whitespace().map(String::from), sub)
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse("compile --model mbn --budget=2000 --verbose", true);
+        assert_eq!(a.subcommand.as_deref(), Some("compile"));
+        assert_eq!(a.get("model"), Some("mbn"));
+        assert_eq!(a.get_usize("budget", 0), 2000);
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn positional_after_subcommand() {
+        let a = parse("run plan.json --device kirin990", true);
+        assert_eq!(a.subcommand.as_deref(), Some("run"));
+        assert_eq!(a.positional, vec!["plan.json"]);
+        assert_eq!(a.get("device"), Some("kirin990"));
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_nothing() {
+        let a = parse("--fast", false);
+        assert!(a.has_flag("fast"));
+        assert!(a.subcommand.is_none());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("", false);
+        assert_eq!(a.get_or("device", "qsd810"), "qsd810");
+        assert_eq!(a.get_f64("td", 1.5), 1.5);
+    }
+
+    #[test]
+    fn flag_followed_by_option() {
+        let a = parse("--check --out dir", false);
+        assert!(a.has_flag("check"));
+        assert_eq!(a.get("out"), Some("dir"));
+    }
+}

@@ -1,0 +1,17 @@
+//! Infrastructure substrates built in-house (the offline vendor set has no
+//! tokio/clap/criterion/proptest/serde_json): deterministic RNG, JSON,
+//! CLI parsing, a thread pool, a bench harness, a property-test kit,
+//! statistics, and logging.
+
+pub mod benchkit;
+pub mod cli;
+pub mod json;
+pub mod logging;
+pub mod propkit;
+pub mod rng;
+pub mod stats;
+pub mod threadpool;
+
+pub use json::Json;
+pub use rng::Rng;
+pub use threadpool::ThreadPool;

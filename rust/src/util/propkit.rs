@@ -1,0 +1,135 @@
+//! Property-based testing kit (substrate — no proptest offline).
+//!
+//! `forall(cases, |rng| ...)` runs a property over `cases` independently
+//! seeded RNGs and reports the first failing seed so a failure reproduces
+//! with `check_seed(seed, ...)`. No shrinking — generators here are small
+//! and seeds are printable, which has proven enough to debug failures.
+
+use super::rng::Rng;
+
+/// Result of a property run.
+#[derive(Debug)]
+pub enum PropResult {
+    Ok { cases: usize },
+    Failed { seed: u64, case: usize, message: String },
+}
+
+/// Run `prop` for `cases` seeds derived from `base_seed`. The property
+/// returns `Err(msg)` (or panics) to signal failure.
+pub fn forall_seeded<F>(base_seed: u64, cases: usize, prop: F) -> PropResult
+where
+    F: Fn(&mut Rng) -> Result<(), String> + std::panic::RefUnwindSafe,
+{
+    for case in 0..cases {
+        let seed = base_seed
+            .wrapping_mul(0x9E37_79B9_7F4A_7C15)
+            .wrapping_add(case as u64);
+        let outcome = std::panic::catch_unwind(|| {
+            let mut rng = Rng::new(seed);
+            prop(&mut rng)
+        });
+        match outcome {
+            Ok(Ok(())) => {}
+            Ok(Err(message)) => {
+                return PropResult::Failed { seed, case, message }
+            }
+            Err(panic) => {
+                let message = panic
+                    .downcast_ref::<String>()
+                    .cloned()
+                    .or_else(|| {
+                        panic.downcast_ref::<&str>().map(|s| s.to_string())
+                    })
+                    .unwrap_or_else(|| "panic".to_string());
+                return PropResult::Failed { seed, case, message };
+            }
+        }
+    }
+    PropResult::Ok { cases }
+}
+
+/// Assert a property holds over `cases` random cases; panics with the
+/// reproducing seed otherwise. This is the entry point used in `#[test]`s.
+pub fn forall<F>(cases: usize, prop: F)
+where
+    F: Fn(&mut Rng) -> Result<(), String> + std::panic::RefUnwindSafe,
+{
+    match forall_seeded(0xA60_5EED, cases, prop) {
+        PropResult::Ok { .. } => {}
+        PropResult::Failed { seed, case, message } => panic!(
+            "property failed at case {case} (reproduce with seed {seed:#x}): {message}"
+        ),
+    }
+}
+
+/// Re-run a single failing seed (debugging helper).
+pub fn check_seed<F>(seed: u64, prop: F) -> Result<(), String>
+where
+    F: Fn(&mut Rng) -> Result<(), String>,
+{
+    let mut rng = Rng::new(seed);
+    prop(&mut rng)
+}
+
+/// `ensure!(cond, "msg {}", x)` inside properties.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($fmt:tt)*) => {
+        if !$cond {
+            return Err(format!($($fmt)*));
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        forall(100, |rng| {
+            let a = rng.range(0, 100);
+            ensure!(a < 100, "range overflow: {a}");
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn failing_property_reports_seed() {
+        let r = forall_seeded(1, 200, |rng| {
+            let v = rng.range(0, 10);
+            if v == 3 {
+                Err("hit 3".into())
+            } else {
+                Ok(())
+            }
+        });
+        match r {
+            PropResult::Failed { seed, message, .. } => {
+                assert_eq!(message, "hit 3");
+                // reproducible
+                let again = check_seed(seed, |rng| {
+                    let v = rng.range(0, 10);
+                    if v == 3 {
+                        Err("hit 3".into())
+                    } else {
+                        Ok(())
+                    }
+                });
+                assert!(again.is_err());
+            }
+            PropResult::Ok { .. } => panic!("expected failure"),
+        }
+    }
+
+    #[test]
+    fn panics_are_captured() {
+        let r = forall_seeded(2, 50, |rng| {
+            if rng.range(0, 25) == 7 {
+                panic!("boom");
+            }
+            Ok(())
+        });
+        assert!(matches!(r, PropResult::Failed { .. }));
+    }
+}

@@ -1,0 +1,233 @@
+//! Property tests over the cost model and the reformer — the invariants
+//! the tuner's search correctness rests on.
+
+use ago::costmodel::{group_latency, schedule_latency};
+use ago::device::DeviceProfile;
+use ago::ensure;
+use ago::graph::{Graph, OpKind, Shape, Subgraph};
+use ago::reformer::{join_schedules, split};
+use ago::tuner::legality::redundancy_factor;
+use ago::tuner::schedule::{
+    divisors, FusionGroup, GroupKind, Layout, Schedule, SubgraphView, Tile,
+};
+use ago::tuner::search::random_schedule;
+use ago::util::propkit::forall;
+use ago::util::Rng;
+
+fn chain_graph(rng: &mut Rng) -> (Graph, SubgraphView) {
+    // random chain of 3-10 ops with 1-4 complex ops
+    let mut g = Graph::new("chain");
+    let hw = *rng.choose(&[7usize, 14, 28]);
+    let c = *rng.choose(&[8usize, 16, 32]);
+    let s = Shape::nhwc(1, hw, hw, c);
+    let n = rng.range(3, 11);
+    let mut prev: Option<usize> = None;
+    for i in 0..n {
+        let kind = match rng.range(0, 5) {
+            0 => OpKind::Pointwise,
+            1 => OpKind::Depthwise { kh: 3, kw: 3, stride: 1 },
+            2 => OpKind::BiasAdd,
+            3 => OpKind::ReLU,
+            _ => OpKind::Add,
+        };
+        let inputs: Vec<usize> = prev.into_iter().collect();
+        let id = g.add(kind, &format!("n{i}"), s.clone(), c, &inputs);
+        prev = Some(id);
+    }
+    let nodes: Vec<usize> = (0..g.len()).collect();
+    let view = SubgraphView::new(&g, &Subgraph { id: 0, nodes });
+    (g, view)
+}
+
+#[test]
+fn latency_is_positive_and_finite_for_any_schedule() {
+    forall(200, |rng| {
+        let (g, view) = chain_graph(rng);
+        let dev = if rng.chance(0.5) {
+            DeviceProfile::kirin990()
+        } else {
+            DeviceProfile::qsd810()
+        };
+        let s = random_schedule(&g, &view, rng, true);
+        let lat = schedule_latency(&g, &s, &dev);
+        ensure!(lat.is_finite() && lat > 0.0, "latency {lat}");
+        Ok(())
+    });
+}
+
+#[test]
+fn redundancy_factor_at_least_one_and_free_at_whole_tile() {
+    forall(200, |rng| {
+        let mut g = Graph::new("t");
+        let hw = rng.range(4, 30);
+        let c = *rng.choose(&[8usize, 16, 64]);
+        let s = Shape::nhwc(1, hw, hw, c);
+        let i = g.add(OpKind::Pad, "in", s.clone(), 0, &[]);
+        let kind = match rng.range(0, 3) {
+            0 => OpKind::Depthwise { kh: 3, kw: 3, stride: 1 },
+            1 => OpKind::Pointwise,
+            _ => OpKind::Conv2d { kh: 3, kw: 3, stride: 1 },
+        };
+        let d = g.add(kind, "down", s.clone(), c, &[i]);
+        let tile = Tile {
+            th: *rng.choose(&divisors(hw)),
+            tw: *rng.choose(&divisors(hw)),
+            tc: *rng.choose(&divisors(c)),
+        };
+        let f = redundancy_factor(&g, d, &tile);
+        ensure!(f >= 1.0, "factor {f} < 1");
+        // whole tile is always redundancy-free
+        let whole = Tile { th: hw, tw: hw, tc: c };
+        let fw = redundancy_factor(&g, d, &whole);
+        ensure!((fw - 1.0).abs() < 1e-9, "whole-tile factor {fw}");
+        // monotone-ish: the whole tile is never worse than a random tile
+        ensure!(fw <= f + 1e-9, "whole {fw} > tiled {f}");
+        Ok(())
+    });
+}
+
+#[test]
+fn more_redundant_tiling_never_cheaper() {
+    forall(100, |rng| {
+        let mut g = Graph::new("t");
+        let hw = 28;
+        let c = 64;
+        let s = Shape::nhwc(1, hw, hw, c);
+        let i = g.add(OpKind::Pad, "in", s.clone(), 0, &[]);
+        let pw = g.add(OpKind::Pointwise, "pw", s.clone(), c, &[i]);
+        let dw = g.add(OpKind::Depthwise { kh: 3, kw: 3, stride: 1 }, "dw",
+                       s, 0, &[pw]);
+        let dev = DeviceProfile::kirin990();
+        let mk = |tile| FusionGroup {
+            ops: vec![i, pw, dw],
+            kind: GroupKind::Intensive,
+            tile,
+            vec: 8,
+            unroll: 4,
+            threads: 4,
+            layout: Layout::Nhwc,
+        };
+        // shrinking the spatial tile of a dw-downstream intensive group
+        // strictly increases upstream recomputation
+        let tc = *rng.choose(&[4usize, 8, 16]);
+        let big = mk(Tile { th: 28, tw: 28, tc });
+        let small_t = *rng.choose(&[1usize, 2, 4, 7]);
+        let small = mk(Tile { th: small_t, tw: small_t, tc });
+        let lb = group_latency(&g, &big, &dev);
+        let ls = group_latency(&g, &small, &dev);
+        ensure!(lb <= ls + 1e-12, "redundant tile cheaper: {lb} vs {ls}");
+        Ok(())
+    });
+}
+
+#[test]
+fn split_then_join_preserves_op_cover() {
+    forall(150, |rng| {
+        let (g, view) = chain_graph(rng);
+        let minis = split(&view, &g);
+        for m in &minis {
+            ensure!(m.complex.len() <= 1,
+                    "mini with {} complex ops", m.complex.len());
+        }
+        let scheds: Vec<Schedule> = minis
+            .iter()
+            .map(|m| random_schedule(&g, m, rng, true))
+            .collect();
+        let joined = join_schedules(scheds);
+        let mut covered: Vec<usize> = joined
+            .groups
+            .iter()
+            .flat_map(|gr| gr.ops.clone())
+            .collect();
+        covered.sort_unstable();
+        ensure!(covered == view.order,
+                "join lost ops: {covered:?} vs {:?}", view.order);
+        Ok(())
+    });
+}
+
+#[test]
+fn joined_schedule_cost_is_sum_plus_layout_conversions() {
+    // join concatenates groups; group costs are independent, so the
+    // composed cost can only exceed the sum of mini costs by the layout
+    // conversion passes at the newly visible mini boundaries — and is
+    // exactly equal when every group uses the same layout.
+    forall(80, |rng| {
+        let (g, view) = chain_graph(rng);
+        let dev = DeviceProfile::qsd810();
+        let minis = split(&view, &g);
+        let mut scheds: Vec<Schedule> = minis
+            .iter()
+            .map(|m| random_schedule(&g, m, rng, true))
+            .collect();
+        let parts: f64 = scheds
+            .iter()
+            .map(|s| schedule_latency(&g, s, &dev))
+            .sum();
+        let joined = join_schedules(scheds.clone());
+        let total = schedule_latency(&g, &joined, &dev);
+        ensure!(
+            total >= parts - 1e-12 * parts.max(1.0),
+            "join made cost vanish: {total} vs {parts}"
+        );
+        // uniform layout => exact additivity
+        for s in &mut scheds {
+            for grp in &mut s.groups {
+                grp.layout = Layout::Nhwc;
+            }
+        }
+        let parts_u: f64 = scheds
+            .iter()
+            .map(|s| schedule_latency(&g, s, &dev))
+            .sum();
+        let joined_u = join_schedules(scheds);
+        let total_u = schedule_latency(&g, &joined_u, &dev);
+        ensure!(
+            (total_u - parts_u).abs() < 1e-12 * parts_u.max(1.0),
+            "uniform-layout join changed cost: {total_u} vs {parts_u}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn layout_mismatch_never_cheaper() {
+    // flipping one group of a uniform-layout schedule to the other layout
+    // adds conversion cost and/or compute penalty — never a free win for
+    // a pw-dominated chain already in its preferred layout.
+    forall(80, |rng| {
+        let mut g = Graph::new("t");
+        let s = Shape::nhwc(1, 14, 14, 32);
+        let i = g.add(OpKind::Pad, "in", s.clone(), 0, &[]);
+        let a = g.add(OpKind::Pointwise, "a", s.clone(), 32, &[i]);
+        let b = g.add(OpKind::Pointwise, "b", s.clone(), 32, &[a]);
+        let nodes = vec![i, a, b];
+        let view = SubgraphView::new(&g, &Subgraph { id: 0, nodes });
+        let dev = DeviceProfile::kirin990();
+        let mut sch = random_schedule(&g, &view, rng, true);
+        for grp in &mut sch.groups {
+            grp.layout = Layout::Nhwc; // preferred for pointwise
+        }
+        let base = schedule_latency(&g, &sch, &dev);
+        let gi = rng.range(0, sch.groups.len());
+        sch.groups[gi].layout = Layout::Nchw;
+        let flipped = schedule_latency(&g, &sch, &dev);
+        ensure!(
+            flipped >= base - 1e-15,
+            "layout flip got cheaper: {flipped} vs {base}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn qsd_never_faster_than_kirin_on_same_schedule() {
+    forall(100, |rng| {
+        let (g, view) = chain_graph(rng);
+        let s = random_schedule(&g, &view, rng, true);
+        let lk = schedule_latency(&g, &s, &DeviceProfile::kirin990());
+        let lq = schedule_latency(&g, &s, &DeviceProfile::qsd810());
+        ensure!(lk <= lq * 1.001, "kirin {lk} slower than qsd {lq}");
+        Ok(())
+    });
+}

@@ -1,0 +1,173 @@
+//! End-to-end runtime integration: real PJRT execution of the AOT
+//! artifact catalog — fused plans vs unfused chains, numerics equality,
+//! and the MobileNet-ish block pipeline the E2E example drives.
+
+use ago::runtime::{Engine, TensorData};
+use ago::util::Rng;
+
+fn engine() -> Engine {
+    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
+    Engine::new(dir).expect("engine (run `make artifacts` first)")
+}
+
+fn max_abs_diff(a: &TensorData, b: &TensorData) -> f32 {
+    assert_eq!(a.shape, b.shape);
+    a.data
+        .iter()
+        .zip(&b.data)
+        .map(|(x, y)| (x - y).abs())
+        .fold(0.0f32, f32::max)
+}
+
+/// Every fused pw->dw artifact in the catalog must equal its unfused
+/// chain, executed for real.
+#[test]
+fn all_fused_pw_dw_match_unfused_chains() {
+    let mut e = engine();
+    let mut rng = Rng::new(11);
+    // (fused, pw, dw) triples present in the catalog
+    let stages = [
+        ("fused_pw_dw_n1h28w28i16a32b32", "pw_n1h28w28i16o32",
+         "dw3_n1h28w28c32", [1usize, 28, 28, 16], 16usize, 32usize),
+        ("fused_pw_dw_n1h14w14i24a48b48", "pw_n1h14w14i24o48",
+         "dw3_n1h14w14c48", [1, 14, 14, 24], 24, 48),
+        ("fused_pw_dw_n1h7w7i32a64b64", "pw_n1h7w7i32o64",
+         "dw3_n1h7w7c64", [1, 7, 7, 32], 32, 64),
+    ];
+    for (fused, pw, dw, xshape, ci, co) in stages {
+        let x = TensorData::random(&xshape, &mut rng);
+        let w1 = TensorData::random(&[ci, co], &mut rng);
+        let b1 = TensorData::random(&[co], &mut rng);
+        let w2 = TensorData::random(&[3, 3, 1, co], &mut rng);
+        let b2 = TensorData::random(&[co], &mut rng);
+        let f = e
+            .execute(fused, &[x.clone(), w1.clone(), b1.clone(),
+                              w2.clone(), b2.clone()])
+            .unwrap_or_else(|err| panic!("{fused}: {err:#}"))
+            .remove(0);
+        let mid = e.execute(pw, &[x, w1, b1]).unwrap().remove(0);
+        let u = e.execute(dw, &[mid, w2, b2]).unwrap().remove(0);
+        let d = max_abs_diff(&f, &u);
+        assert!(d < 2e-3, "{fused}: max diff {d}");
+    }
+}
+
+/// The composite MobileNet block artifact equals the four-artifact
+/// unfused chain (pw -> dw -> pw-linear -> residual add).
+#[test]
+fn mbn_block_fused_matches_unfused_pipeline() {
+    let mut e = engine();
+    let mut rng = Rng::new(12);
+    let (h, c, m) = (28usize, 16usize, 32usize);
+    let x = TensorData::random(&[1, h, h, c], &mut rng);
+    let w1 = TensorData::random(&[c, m], &mut rng);
+    let b1 = TensorData::random(&[m], &mut rng);
+    let w2 = TensorData::random(&[3, 3, 1, m], &mut rng);
+    let b2 = TensorData::random(&[m], &mut rng);
+    let w3 = TensorData::random(&[m, c], &mut rng);
+    let b3 = TensorData::random(&[c], &mut rng);
+    let fused = e
+        .execute(
+            "mbnblk_fused_n1h28w28c16e2",
+            &[x.clone(), w1.clone(), b1.clone(), w2.clone(), b2.clone(),
+              w3.clone(), b3.clone()],
+        )
+        .unwrap()
+        .remove(0);
+    let a = e
+        .execute("pw_n1h28w28i16o32", &[x.clone(), w1, b1])
+        .unwrap()
+        .remove(0);
+    let b = e.execute("dw3_n1h28w28c32", &[a, w2, b2]).unwrap().remove(0);
+    let c_ = e
+        .execute("pw_n1h28w28i32o16", &[b, w3, b3])
+        .unwrap()
+        .remove(0);
+    let out = e
+        .execute("add_n1h28w28c16", &[c_, x])
+        .unwrap()
+        .remove(0);
+    let d = max_abs_diff(&fused, &out);
+    assert!(d < 2e-3, "mbn block: max diff {d}");
+}
+
+/// Fused ffn (mm->gelu->mm) equals the two-matmul chain.
+#[test]
+fn fused_ffn_matches_chain() {
+    let mut e = engine();
+    let mut rng = Rng::new(13);
+    let x = TensorData::random(&[128, 128], &mut rng);
+    let w1 = TensorData::random(&[128, 512], &mut rng);
+    let b1 = TensorData::random(&[512], &mut rng);
+    let w2 = TensorData::random(&[512, 128], &mut rng);
+    let b2 = TensorData::random(&[128], &mut rng);
+    let fused = e
+        .execute("fused_mm_mm_m128k128a512b128",
+                 &[x.clone(), w1.clone(), b1.clone(), w2.clone(),
+                   b2.clone()])
+        .unwrap()
+        .remove(0);
+    let mid = e
+        .execute("mm_m128k128n512_gelu", &[x, w1, b1])
+        .unwrap()
+        .remove(0);
+    let out = e
+        .execute("mm_m128k512n128_none", &[mid, w2, b2])
+        .unwrap()
+        .remove(0);
+    let d = max_abs_diff(&fused, &out);
+    assert!(d < 5e-2, "ffn: max diff {d}"); // gelu + 512-wide reductions
+}
+
+/// Batched request serving: repeated execution is stable and the
+/// executable cache keeps compilation out of the loop.
+#[test]
+fn repeated_requests_are_stable() {
+    let mut e = engine();
+    let mut rng = Rng::new(14);
+    let x = TensorData::random(&[1, 14, 14, 32], &mut rng);
+    let names = vec![
+        "dw3_n1h14w14c32".to_string(),
+        "pw_n1h14w14i32o64".to_string(),
+    ];
+    let (first, _) = e.run_chain(&names, x.clone(), 99).unwrap();
+    for _ in 0..5 {
+        let (again, _) = e.run_chain(&names, x.clone(), 99).unwrap();
+        assert_eq!(first.data, again.data, "non-deterministic run");
+    }
+    assert_eq!(e.compiled_count(), 2);
+}
+
+/// Fig. 13 shapes: all four two-complex-op fused artifacts execute at
+/// batch 1 and 4.
+#[test]
+fn fig13_artifacts_execute() {
+    let mut e = engine();
+    let mut rng = Rng::new(15);
+    for b in [1usize, 4] {
+        let cases: [(String, Vec<Vec<usize>>); 4] = [
+            (format!("fused_dw_dw_n{b}h14w14i32a32b32"),
+             vec![vec![b, 14, 14, 32], vec![3, 3, 1, 32], vec![32],
+                  vec![3, 3, 1, 32], vec![32]]),
+            (format!("fused_dw_pw_n{b}h14w14i32a32b64"),
+             vec![vec![b, 14, 14, 32], vec![3, 3, 1, 32], vec![32],
+                  vec![32, 64], vec![64]]),
+            (format!("fused_pw_dw_n{b}h14w14i32a64b64"),
+             vec![vec![b, 14, 14, 32], vec![32, 64], vec![64],
+                  vec![3, 3, 1, 64], vec![64]]),
+            (format!("fused_pw_pw_n{b}h14w14i32a64b32"),
+             vec![vec![b, 14, 14, 32], vec![32, 64], vec![64],
+                  vec![64, 32], vec![32]]),
+        ];
+        for (name, shapes) in cases {
+            let inputs: Vec<TensorData> = shapes
+                .iter()
+                .map(|s| TensorData::random(s, &mut rng))
+                .collect();
+            let out = e
+                .execute(&name, &inputs)
+                .unwrap_or_else(|err| panic!("{name}: {err:#}"));
+            assert_eq!(out[0].shape[0], b);
+        }
+    }
+}

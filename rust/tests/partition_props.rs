@@ -1,0 +1,158 @@
+//! Property-based tests over the graph frontend: random DAGs in, the
+//! CLUSTER/Relay invariants out. Uses the in-house propkit (no proptest
+//! offline); failures print a reproducing seed.
+
+use ago::ensure;
+use ago::graph::{Graph, OpKind, Shape};
+use ago::partition::{
+    cluster, relay_partition, subgraph_weights, ClusterConfig, WeightParams,
+};
+use ago::util::propkit::forall;
+use ago::util::Rng;
+
+/// Random layered DAG with mixed op kinds (shapes kept consistent enough
+/// for the partitioner: it only reads kinds + shapes, not data).
+fn random_graph(rng: &mut Rng) -> Graph {
+    let mut g = Graph::new("random");
+    let n = rng.range(2, 60);
+    let hw = *rng.choose(&[7usize, 14, 28]);
+    let c = *rng.choose(&[8usize, 16, 32]);
+    let s = Shape::nhwc(1, hw, hw, c);
+    for i in 0..n {
+        let kind = match rng.range(0, 10) {
+            0 => OpKind::Conv2d { kh: 3, kw: 3, stride: 1 },
+            1 => OpKind::Pointwise,
+            2 => OpKind::Depthwise { kh: 3, kw: 3, stride: 1 },
+            3 => OpKind::MatMul,
+            4 => OpKind::Add,
+            5 => OpKind::ReLU,
+            6 => OpKind::Reshape,
+            7 => OpKind::Transpose,
+            8 => OpKind::BiasAdd,
+            _ => OpKind::Mul,
+        };
+        // each node reads 0-2 random earlier nodes
+        let mut inputs = Vec::new();
+        if i > 0 {
+            let k = rng.range(0, 3.min(i + 1));
+            for _ in 0..k {
+                inputs.push(rng.range(0, i));
+            }
+            inputs.sort_unstable();
+            inputs.dedup();
+        }
+        g.add(kind, &format!("n{i}"), s.clone(), c, &inputs);
+    }
+    g
+}
+
+#[test]
+fn cluster_output_is_acyclic_cover_under_threshold() {
+    forall(150, |rng| {
+        let g = random_graph(rng);
+        let td = *rng.choose(&[50.0, 400.0, 2000.0, f64::INFINITY]);
+        let cfg = ClusterConfig { td, weights: WeightParams::default() };
+        let p = cluster(&g, cfg);
+        ensure!(p.is_cover(&g), "not a cover");
+        ensure!(p.is_acyclic(&g), "cyclic partition (td={td})");
+        // threshold: multi-member groups stay under td
+        let ws = subgraph_weights(&g, &p, cfg.weights);
+        let mut sizes = vec![0usize; p.n_groups];
+        for &a in &p.assign {
+            sizes[a] += 1;
+        }
+        for (gid, &w) in ws.iter().enumerate() {
+            ensure!(
+                w < td || sizes[gid] == 1,
+                "group {gid}: weight {w} >= td {td} with {} members",
+                sizes[gid]
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cluster_schedule_exists_and_covers_groups() {
+    forall(60, |rng| {
+        let g = random_graph(rng);
+        let p = cluster(&g, ClusterConfig::adaptive(&g));
+        let sched = p.schedule(&g);
+        ensure!(
+            sched.len() == p.n_groups,
+            "schedule misses groups: {} vs {}",
+            sched.len(),
+            p.n_groups
+        );
+        // schedule must be a valid topological order of the quotient
+        let mut pos = vec![0usize; p.n_groups];
+        for (i, &gid) in sched.iter().enumerate() {
+            pos[gid] = i;
+        }
+        for (a, b) in p.quotient_edges(&g) {
+            ensure!(pos[a] < pos[b], "schedule violates edge {a}->{b}");
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn relay_invariants_on_random_graphs() {
+    forall(150, |rng| {
+        let g = random_graph(rng);
+        let p = relay_partition(&g);
+        ensure!(p.is_cover(&g), "relay: not a cover");
+        ensure!(p.is_acyclic(&g), "relay: cyclic");
+        for (gid, &c) in p.complex_counts(&g).iter().enumerate() {
+            ensure!(c <= 1, "relay group {gid} has {c} complex ops");
+        }
+        // movement ops are singletons
+        let mut sizes = vec![0usize; p.n_groups];
+        for &a in &p.assign {
+            sizes[a] += 1;
+        }
+        for node in &g.nodes {
+            if node.kind.is_data_movement() && !g.preds(node.id).is_empty()
+            {
+                ensure!(
+                    sizes[p.assign[node.id]] == 1,
+                    "movement op {} not a singleton",
+                    node.id
+                );
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn cluster_never_coarser_than_relay_on_trivial_threshold() {
+    // td = 0 means no merges at all: exactly n singleton groups
+    forall(40, |rng| {
+        let g = random_graph(rng);
+        let p = cluster(
+            &g,
+            ClusterConfig { td: 0.0, weights: WeightParams::default() },
+        );
+        ensure!(p.n_groups == g.len(), "td=0 must yield singletons");
+        Ok(())
+    });
+}
+
+#[test]
+fn adaptive_td_merges_something_on_real_models() {
+    use ago::models::{build, InputShape, ModelId};
+    for m in ModelId::all() {
+        for s in [InputShape::Small, InputShape::Large] {
+            let g = build(m, s);
+            let p = cluster(&g, ClusterConfig::adaptive(&g));
+            assert!(p.is_acyclic(&g));
+            assert!(
+                p.n_groups < g.len(),
+                "{}/{:?}: nothing merged",
+                m.name(),
+                s
+            );
+        }
+    }
+}

@@ -1,0 +1,124 @@
+//! Integration tests: the whole compile pipeline over the model zoo, the
+//! ablation ordering the paper reports, and cost-model sanity across
+//! devices.
+
+use ago::baselines::{ansor_compile, handlib_compile};
+use ago::coordinator::{compile, CompileConfig, Variant};
+use ago::device::DeviceProfile;
+use ago::models::{build, InputShape, ModelId};
+use ago::util::stats::geomean;
+
+fn cfg(dev: &DeviceProfile, budget: usize, variant: Variant) -> CompileConfig {
+    CompileConfig {
+        budget,
+        variant,
+        workers: 2,
+        ..CompileConfig::new(dev.clone())
+    }
+}
+
+#[test]
+fn pipeline_compiles_all_models_both_devices() {
+    for dev in [DeviceProfile::kirin990(), DeviceProfile::qsd810()] {
+        for m in ModelId::all() {
+            let g = build(m, InputShape::Small);
+            let out = compile(&g, &cfg(&dev, 600, Variant::Ago));
+            assert!(out.partition.is_acyclic(&g), "{}", m.name());
+            assert!(out.total_latency > 0.0);
+            assert_eq!(out.schedules.len(), out.partition.n_groups);
+            // schedules cover all ops exactly once
+            let mut covered: Vec<usize> = out
+                .schedules
+                .iter()
+                .flat_map(|s| s.groups.iter().flat_map(|gr| gr.ops.clone()))
+                .collect();
+            covered.sort_unstable();
+            assert_eq!(covered, (0..g.len()).collect::<Vec<_>>(),
+                       "{}: op cover broken", m.name());
+        }
+    }
+}
+
+#[test]
+fn ago_beats_baselines_in_aggregate() {
+    // The paper's headline: AGO > Ansor > (usually) hand-lib across the
+    // CNN suite. Checked as geomean over the four classical models.
+    let dev = DeviceProfile::kirin990();
+    let budget = 4000;
+    let mut vs_ansor = Vec::new();
+    let mut vs_hand = Vec::new();
+    for m in ModelId::classical() {
+        let g = build(m, InputShape::Small);
+        let ago = compile(&g, &cfg(&dev, budget, Variant::Ago));
+        let ansor = ansor_compile(&g, &dev, budget, 0xA60);
+        let (_, _, hl) = handlib_compile(&g, &dev);
+        let hand: f64 = hl.iter().sum();
+        vs_ansor.push(ansor.total_latency / ago.total_latency);
+        vs_hand.push(hand / ago.total_latency);
+    }
+    let ga = geomean(&vs_ansor);
+    let gh = geomean(&vs_hand);
+    assert!(ga > 1.02, "AGO vs Ansor geomean {ga}");
+    assert!(gh > 1.05, "AGO vs handlib geomean {gh}");
+}
+
+#[test]
+fn ablation_ordering_on_fusable_models() {
+    // Fig. 13's aggregate story: full AGO ≥ AGO-NI and ≥ AGO-NR on
+    // dw/pw-rich networks (geomean across MBN+MNSN to absorb seed noise).
+    let dev = DeviceProfile::qsd810();
+    let mut ni_ratio = Vec::new();
+    let mut nr_ratio = Vec::new();
+    for m in [ModelId::Mbn, ModelId::Mnsn] {
+        let g = build(m, InputShape::Small);
+        let ago = compile(&g, &cfg(&dev, 3000, Variant::Ago)).total_latency;
+        let ni = compile(&g, &cfg(&dev, 3000, Variant::AgoNi)).total_latency;
+        let nr = compile(&g, &cfg(&dev, 3000, Variant::AgoNr)).total_latency;
+        ni_ratio.push(ni / ago);
+        nr_ratio.push(nr / ago);
+    }
+    assert!(geomean(&ni_ratio) >= 0.99,
+            "AGO-NI should not beat AGO: {ni_ratio:?}");
+    assert!(geomean(&nr_ratio) >= 0.99,
+            "AGO-NR should not beat AGO: {nr_ratio:?}");
+}
+
+#[test]
+fn kirin_is_faster_than_qsd_end_to_end() {
+    let g = build(ModelId::Mbn, InputShape::Middle);
+    let k = compile(&g, &cfg(&DeviceProfile::kirin990(), 1000, Variant::Ago));
+    let q = compile(&g, &cfg(&DeviceProfile::qsd810(), 1000, Variant::Ago));
+    assert!(
+        k.total_latency < q.total_latency,
+        "kirin {} !< qsd {}",
+        k.total_latency,
+        q.total_latency
+    );
+}
+
+#[test]
+fn larger_input_shapes_cost_more() {
+    let dev = DeviceProfile::kirin990();
+    for m in ModelId::classical() {
+        let small = compile(&build(m, InputShape::Small),
+                            &cfg(&dev, 800, Variant::Ago));
+        let large = compile(&build(m, InputShape::Large),
+                            &cfg(&dev, 800, Variant::Ago));
+        assert!(
+            large.total_latency > small.total_latency,
+            "{}: large {} !> small {}",
+            m.name(),
+            large.total_latency,
+            small.total_latency
+        );
+    }
+}
+
+#[test]
+fn budget_improves_or_maintains_quality() {
+    let g = build(ModelId::Sfn, InputShape::Small);
+    let dev = DeviceProfile::kirin990();
+    let lo = compile(&g, &cfg(&dev, 300, Variant::Ago)).total_latency;
+    let hi = compile(&g, &cfg(&dev, 6000, Variant::Ago)).total_latency;
+    assert!(hi <= lo * 1.02, "more budget got worse: {hi} vs {lo}");
+}
