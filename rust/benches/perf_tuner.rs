@@ -1,15 +1,19 @@
 //! L3 perf bench: tuner search throughput (schedule evaluations per
-//! second) and partitioner throughput — the compile-time hot paths.
-//! Feeds EXPERIMENTS.md §Perf.
+//! second, direct vs memoized evaluator), partitioner throughput, and
+//! full-model compile wall time — the compile-time hot paths. Feeds
+//! EXPERIMENTS.md §Perf and writes `BENCH_tuner.json` so the perf
+//! trajectory is tracked PR-over-PR.
 
 use std::time::Instant;
 
+use ago::costmodel::{CostEvaluator, DirectEvaluator, MemoEvaluator};
 use ago::device::DeviceProfile;
 use ago::graph::{Graph, OpKind, Shape, Subgraph};
 use ago::models::{build, InputShape, ModelId};
 use ago::partition::{cluster, ClusterConfig};
 use ago::tuner::schedule::SubgraphView;
-use ago::tuner::search::{tune, SearchConfig};
+use ago::tuner::search::{tune, tune_with_evaluator, SearchConfig};
+use ago::util::json::{num, obj, s};
 
 fn rep_subgraph() -> (Graph, SubgraphView) {
     // representative complicated subgraph: pw -> bias -> relu -> dw ->
@@ -70,6 +74,47 @@ fn main() {
         dt * 1e3
     );
 
+    // direct vs memoized evaluator at the acceptance budget: 4000 evals
+    // on MBN's heaviest subgraph, stabilization disabled so both paths
+    // spend the identical evaluation count
+    let mbn = build(ModelId::Mbn, InputShape::Middle);
+    let p = cluster(&mbn, ClusterConfig::adaptive(&mbn));
+    let views = SubgraphView::all(&mbn, &p);
+    let heavy = views
+        .iter()
+        .filter(|v| !v.is_empty())
+        .max_by_key(|v| (v.complex.len(), v.order.len()))
+        .expect("mbn has subgraphs");
+    let budget = 4000;
+    let cfg = SearchConfig {
+        budget,
+        stabilize_window: budget,
+        seed: 7,
+        ..Default::default()
+    };
+    let t0 = Instant::now();
+    let mut direct = DirectEvaluator::new(&mbn, &dev);
+    let rd = tune_with_evaluator(&mbn, heavy, &cfg, None, &mut direct);
+    let dt_direct = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let mut memo = MemoEvaluator::new(&mbn, &dev);
+    let rm = tune_with_evaluator(&mbn, heavy, &cfg, None, &mut memo);
+    let dt_memo = t0.elapsed().as_secs_f64();
+    assert_eq!(
+        rd.best_latency, rm.best_latency,
+        "memoization changed the search result"
+    );
+    let eps_direct = rd.evals as f64 / dt_direct;
+    let eps_memo = rm.evals as f64 / dt_memo;
+    let hit_rate = memo.stats().hit_rate();
+    println!(
+        "MBN heavy subgraph @ {budget} evals: direct {eps_direct:.0} \
+         evals/s, memoized {eps_memo:.0} evals/s ({:.2}x, hit-rate \
+         {:.1}%)",
+        eps_memo / eps_direct,
+        hit_rate * 100.0
+    );
+
     // full-model compile wall time at the paper budget
     let t0 = Instant::now();
     let out = ago::coordinator::compile(
@@ -79,9 +124,29 @@ fn main() {
             ..ago::coordinator::CompileConfig::new(dev)
         },
     );
+    let compile_secs = t0.elapsed().as_secs_f64();
     println!(
-        "MBN/large compile @ 20k budget: {:.2}s wall ({} evals)",
-        t0.elapsed().as_secs_f64(),
-        out.total_evals
+        "MBN/large compile @ 20k budget: {compile_secs:.2}s wall \
+         ({} evals, {:.0} evals/s, hit-rate {:.1}%)",
+        out.total_evals,
+        out.evals_per_sec,
+        out.cache_hit_rate * 100.0
     );
+
+    // perf trajectory record
+    let record = obj(vec![
+        ("bench", s("perf_tuner")),
+        ("model", s("mbn")),
+        ("budget", num(budget as f64)),
+        ("evals_per_sec_direct", num(eps_direct)),
+        ("evals_per_sec_memo", num(eps_memo)),
+        ("memo_speedup", num(eps_memo / eps_direct)),
+        ("cache_hit_rate", num(hit_rate)),
+        ("compile_20k_secs", num(compile_secs)),
+        ("compile_20k_evals_per_sec", num(out.evals_per_sec)),
+        ("compile_20k_cache_hit_rate", num(out.cache_hit_rate)),
+    ]);
+    std::fs::write("BENCH_tuner.json", record.pretty())
+        .expect("write BENCH_tuner.json");
+    println!("wrote BENCH_tuner.json");
 }

@@ -7,7 +7,7 @@
 //! fusion of conv+bias+activation is supported (XNNPACK does this);
 //! nothing beyond one complex op per kernel ever fuses.
 
-use crate::costmodel::schedule_latency;
+use crate::costmodel::{CostEvaluator, DirectEvaluator};
 use crate::device::DeviceProfile;
 use crate::graph::{Graph, OpKind, Partition};
 use crate::partition::relay_partition;
@@ -91,13 +91,16 @@ pub fn handlib_compile(
 ) -> (Partition, Vec<Schedule>, Vec<f64>) {
     let p = relay_partition(g);
     let views = SubgraphView::all(g, &p);
+    // fixed schedules are priced exactly once each, so the direct
+    // (uncached) evaluator is the right implementation of the seam here
+    let mut evaluator = DirectEvaluator::new(g, dev);
     let mut schedules = Vec::with_capacity(views.len());
     let mut lats = Vec::with_capacity(views.len());
     for v in &views {
         let s = fixed_schedule(g, v, dev);
         // per-subgraph dispatch charged on the first group's latency so
         // sums stay comparable with `compile()`'s accounting
-        let l = schedule_latency(g, &s, dev) + dev.dispatch_us * 1e-6;
+        let l = evaluator.evaluate_schedule(&s) + dev.dispatch_us * 1e-6;
         schedules.push(s);
         lats.push(l);
     }

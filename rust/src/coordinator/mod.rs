@@ -10,13 +10,15 @@
 pub mod plan;
 
 use std::sync::Arc;
+use std::time::Instant;
 
+use crate::costmodel::{CostEvaluator, EvalStats, MemoEvaluator};
 use crate::device::DeviceProfile;
 use crate::graph::{Graph, Partition};
 use crate::partition::{
     cluster, relay_partition, ClusterConfig, PartitionReport, WeightParams,
 };
-use crate::reformer::{tune_with_reformer, ReformerConfig};
+use crate::reformer::{tune_with_reformer_eval, ReformerConfig};
 use crate::tuner::schedule::{Schedule, SubgraphView};
 use crate::tuner::search::SearchConfig;
 use crate::util::ThreadPool;
@@ -90,6 +92,11 @@ pub struct CompiledModel {
     /// schedule — single-stream mobile inference).
     pub total_latency: f64,
     pub total_evals: usize,
+    /// Fraction of fusion-group pricings served from the memo caches
+    /// (aggregated across all subgraph tuning tasks).
+    pub cache_hit_rate: f64,
+    /// Cost-model schedule evaluations per wall-clock second of tuning.
+    pub evals_per_sec: f64,
     pub report: PartitionReport,
 }
 
@@ -97,6 +104,54 @@ impl CompiledModel {
     pub fn latency_ms(&self) -> f64 {
         self.total_latency * 1e3
     }
+}
+
+/// Split a total evaluation budget across subgraphs proportionally to
+/// their weights (heavier subgraphs need more schedules to stabilize —
+/// Fig. 8), with a small per-subgraph floor so even trivial subgraphs get
+/// a few evaluations. Invariant: for non-empty `weights` the returned
+/// budgets sum to exactly `budget` — the floor is clamped when `8 * n`
+/// would exceed the total, proportional shares are floored against a
+/// running remainder so rounding can never mint allocations, and the
+/// flooring residue (< n) is topped up one evaluation at a time from the
+/// front. (The tuner layers keep their own minimum-evaluation floors —
+/// the reformer spends ≥ 24 per mini and ≥ 16 on the joint round — so
+/// *spend* can still exceed a pathologically small allocation; this
+/// function bounds what the coordinator hands out.)
+pub fn split_budget(budget: usize, weights: &[f64]) -> Vec<usize> {
+    let n = weights.len();
+    if n == 0 {
+        return Vec::new();
+    }
+    let floor = (budget / n).min(8);
+    let pool = budget - floor * n; // floor * n <= budget by construction
+    let wsum: f64 = weights.iter().map(|w| w.max(0.0)).sum();
+    let mut remaining = pool;
+    let mut budgets: Vec<usize> = weights
+        .iter()
+        .map(|w| {
+            // no weight signal (all zero): spread the pool evenly
+            let frac = if wsum > 0.0 {
+                w.max(0.0) / wsum
+            } else {
+                1.0 / n as f64
+            };
+            let share = (((pool as f64) * frac).floor() as usize)
+                .min(remaining);
+            remaining -= share;
+            floor + share
+        })
+        .collect();
+    // each floored share loses < 1, so the residue is < n: one top-up
+    // pass assigns the pool exactly
+    for b in budgets.iter_mut() {
+        if remaining == 0 {
+            break;
+        }
+        *b += 1;
+        remaining -= 1;
+    }
+    budgets
 }
 
 /// Run the full pipeline on a model graph.
@@ -110,21 +165,8 @@ pub fn compile(g: &Graph, cfg: &CompileConfig) -> CompiledModel {
         PartitionReport::build(g, &partition, WeightParams::default());
     let views = SubgraphView::all(g, &partition);
 
-    // budget per subgraph ∝ its weight (heavier subgraphs need more
-    // schedules to stabilize — Fig. 8). The floor comes OUT of the total
-    // budget so partitioners that fragment into many trivial subgraphs do
-    // not mint free evaluations.
-    let weights = &report.weights;
-    let wsum: f64 = weights.iter().sum::<f64>().max(1.0);
-    let floor = 8usize;
-    let pool = cfg
-        .budget
-        .saturating_sub(floor * partition.n_groups)
-        .max(0);
-    let budgets: Vec<usize> = weights
-        .iter()
-        .map(|w| floor + ((pool as f64) * w / wsum).round() as usize)
-        .collect();
+    let budgets = split_budget(cfg.budget, &report.weights);
+    debug_assert!(budgets.iter().sum::<usize>() <= cfg.budget);
 
     let garc = Arc::new(g.clone());
     let dev = Arc::new(cfg.device.clone());
@@ -140,13 +182,20 @@ pub fn compile(g: &Graph, cfg: &CompileConfig) -> CompiledModel {
         .enumerate()
         .map(|(i, v)| (i, v, budgets[i]))
         .collect();
-    let results: Vec<(usize, Schedule, f64, usize)> = pool.map(
+    let t_tuning = Instant::now();
+    let results: Vec<(usize, Schedule, f64, usize, EvalStats)> = pool.map(
         tasks,
         move |(i, view, budget)| {
             let g = Arc::clone(&garc);
             let dev = Arc::clone(&dev);
             if view.is_empty() {
-                return (i, Schedule { groups: Vec::new() }, 0.0, 0);
+                return (
+                    i,
+                    Schedule { groups: Vec::new() },
+                    0.0,
+                    0,
+                    EvalStats::default(),
+                );
             }
             let search = SearchConfig {
                 budget,
@@ -160,19 +209,26 @@ pub fn compile(g: &Graph, cfg: &CompileConfig) -> CompiledModel {
                 enabled: variant != Variant::AgoNr,
                 ..Default::default()
             };
-            let r = tune_with_reformer(&g, &view, &dev, &rcfg);
-            (i, r.best, r.best_latency, r.evals)
+            // one evaluator (and thus one group-latency cache) per
+            // subgraph task: groups never cross subgraphs, so sharing
+            // wider would only add lock traffic
+            let mut evaluator = MemoEvaluator::new(&g, &dev);
+            let r = tune_with_reformer_eval(&g, &view, &rcfg, &mut evaluator);
+            (i, r.best, r.best_latency, r.evals, evaluator.stats())
         },
     );
+    let tuning_secs = t_tuning.elapsed().as_secs_f64();
 
     let n = partition.n_groups;
     let mut schedules = vec![Schedule { groups: Vec::new() }; n];
     let mut lats = vec![0.0; n];
     let mut total_evals = 0;
-    for (i, s, l, e) in results {
+    let mut stats = EvalStats::default();
+    for (i, s, l, e, st) in results {
         schedules[i] = s;
         lats[i] = l;
         total_evals += e;
+        stats.merge(&st);
     }
     // per-subgraph runtime dispatch: the graph executor pays this once
     // per subgraph invocation (fragmented partitions lose here)
@@ -184,6 +240,8 @@ pub fn compile(g: &Graph, cfg: &CompileConfig) -> CompiledModel {
         subgraph_latency: lats,
         total_latency,
         total_evals,
+        cache_hit_rate: stats.hit_rate(),
+        evals_per_sec: stats.schedule_evals as f64 / tuning_secs.max(1e-9),
         report,
     }
 }
@@ -247,6 +305,67 @@ mod tests {
         assert!(m.partition.n_groups > 0);
         assert!(m.total_latency > 0.0);
         assert!(m.partition.complex_counts(&g).iter().all(|&c| c <= 1));
+    }
+
+    #[test]
+    fn budget_split_never_exceeds_total() {
+        // the old `.max(0)` on a usize was dead code and the un-clamped
+        // floor minted evaluations whenever 8 * n_groups > budget
+        let cases: [(usize, Vec<f64>); 6] = [
+            (0, vec![1.0, 2.0, 3.0]),
+            (5, vec![1.0; 10]),           // floor would want 80
+            (23, vec![0.0, 7.0, 1.0]),
+            (100, vec![1.0]),
+            (4000, vec![3.0, 1.0, 9.0, 2.5, 0.1]),
+            (17, vec![]),
+        ];
+        for (budget, weights) in cases {
+            let split = split_budget(budget, &weights);
+            assert_eq!(split.len(), weights.len());
+            let sum: usize = split.iter().sum();
+            if weights.is_empty() {
+                assert_eq!(sum, 0);
+            } else {
+                // exact: rounding neither mints nor drops evaluations
+                assert_eq!(
+                    sum, budget,
+                    "split {split:?} sums to {sum} != budget {budget}"
+                );
+            }
+        }
+        // with room to spare, every subgraph gets at least the floor
+        let split = split_budget(4000, &[1.0, 2.0, 3.0]);
+        assert!(split.iter().all(|&b| b >= 8), "{split:?}");
+        // heavier subgraphs get more
+        assert!(split[2] > split[0], "{split:?}");
+        // weights are normalized before sharing, so sub-1.0 weight sums
+        // still assign the whole pool rather than underspending
+        let norm = split_budget(4000, &[0.2, 0.3]);
+        assert_eq!(norm.iter().sum::<usize>(), 4000, "{norm:?}");
+        // all-zero weights spread the pool evenly instead of dropping it
+        let zero = split_budget(100, &[0.0, 0.0]);
+        assert_eq!(zero.iter().sum::<usize>(), 100, "{zero:?}");
+        assert_eq!(zero[0], zero[1], "{zero:?}");
+    }
+
+    #[test]
+    fn compile_reports_cache_and_throughput_stats() {
+        let g = build(ModelId::Mbn, InputShape::Small);
+        let cfg = quick_cfg(DeviceProfile::kirin990(), 800);
+        let m = compile(&g, &cfg);
+        assert!(m.evals_per_sec > 0.0, "evals/sec {}", m.evals_per_sec);
+        assert!(
+            (0.0..=1.0).contains(&m.cache_hit_rate),
+            "hit rate {}",
+            m.cache_hit_rate
+        );
+        // evolutionary mutations revisit groups constantly and the JOIN
+        // round starts warm: the memo caches must be doing real work
+        assert!(
+            m.cache_hit_rate > 0.1,
+            "suspiciously cold cache: {}",
+            m.cache_hit_rate
+        );
     }
 
     #[test]

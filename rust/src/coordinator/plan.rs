@@ -95,6 +95,10 @@ pub fn to_json(m: &CompiledModel, model_name: &str, device: &str) -> Json {
         ("device", s(device)),
         ("total_latency_ms", num(m.total_latency * 1e3)),
         ("total_evals", num(m.total_evals as f64)),
+        // evals_per_sec is deliberately NOT serialized: it is wall-clock
+        // derived, and the plan artifact must stay byte-reproducible for
+        // identical (model, device, seed, budget) compiles
+        ("cache_hit_rate", num(m.cache_hit_rate)),
         (
             "assign",
             arr(m.partition.assign.iter().map(|&a| num(a as f64)).collect()),

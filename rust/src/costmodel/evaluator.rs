@@ -1,0 +1,278 @@
+//! The `CostEvaluator` seam: every consumer of the analytical cost model
+//! (tuner, reformer, coordinator, baselines, cross-checks) prices
+//! schedules through this trait instead of calling [`group_latency`] /
+//! [`schedule_latency`] directly.
+//!
+//! Two implementations:
+//! - [`DirectEvaluator`] forwards to the roofline model unchanged — the
+//!   reference path, and the right choice for one-shot pricing (handlib).
+//! - [`MemoEvaluator`] caches `group_latency` per canonical [`GroupKey`]
+//!   and replaces the per-evaluation `BTreeMap` layout-crossing scan with
+//!   a flat owner table plus precomputed per-tensor conversion costs.
+//!   An evolutionary mutation changes one or two groups of a schedule, so
+//!   under memoization a schedule evaluation recomputes only the mutated
+//!   groups (everything else is a cache hit) — the incremental cost
+//!   feedback that makes large joint search spaces tractable.
+//!
+//! Bit-exactness contract: for the same graph and device, both
+//! implementations return *identical* f64 latencies — same functions,
+//! same summation order. Tests in `tests/costmodel_props.rs` and below
+//! pin this for random schedules over the seed models.
+
+use std::collections::HashMap;
+
+use crate::device::DeviceProfile;
+use crate::graph::Graph;
+use crate::tuner::schedule::{FusionGroup, Layout, Schedule};
+
+use super::{group_latency, schedule_latency};
+
+/// Canonical identity of a fusion group for memoization: everything
+/// `group_latency` reads — ops, kind, tile, knobs (vec/unroll/threads),
+/// layout. `FusionGroup` is exactly that set of fields and is `Hash + Eq`,
+/// so it is its own key; keeping the alias names the contract and lets
+/// cache probes borrow the group instead of allocating a key per lookup.
+/// Two groups with equal keys have equal latency on a fixed graph and
+/// device.
+pub type GroupKey = FusionGroup;
+
+/// Cumulative evaluator counters. `hits`/`misses` only move for caching
+/// implementations; `group_evals` counts every group priced, cached or
+/// not.
+#[derive(Clone, Copy, Debug, Default)]
+pub struct EvalStats {
+    pub schedule_evals: u64,
+    pub group_evals: u64,
+    pub hits: u64,
+    pub misses: u64,
+}
+
+impl EvalStats {
+    /// Fraction of group pricings served from cache (0.0 for direct
+    /// evaluators, which never cache).
+    pub fn hit_rate(&self) -> f64 {
+        let total = self.hits + self.misses;
+        if total == 0 {
+            0.0
+        } else {
+            self.hits as f64 / total as f64
+        }
+    }
+
+    pub fn merge(&mut self, other: &EvalStats) {
+        self.schedule_evals += other.schedule_evals;
+        self.group_evals += other.group_evals;
+        self.hits += other.hits;
+        self.misses += other.misses;
+    }
+}
+
+/// One interface for pricing schedules. Implementations bind the graph
+/// and device at construction so hot loops pass only the schedule.
+pub trait CostEvaluator {
+    /// Latency of one fusion group, seconds.
+    fn evaluate_group(&mut self, grp: &FusionGroup) -> f64;
+    /// Latency of a whole subgraph schedule, seconds (group latencies
+    /// plus layout-conversion passes at group boundaries).
+    fn evaluate_schedule(&mut self, s: &Schedule) -> f64;
+    /// Cumulative counters since construction.
+    fn stats(&self) -> EvalStats;
+}
+
+/// The reference path: forwards every call to the roofline model.
+pub struct DirectEvaluator<'a> {
+    g: &'a Graph,
+    dev: &'a DeviceProfile,
+    stats: EvalStats,
+}
+
+impl<'a> DirectEvaluator<'a> {
+    pub fn new(g: &'a Graph, dev: &'a DeviceProfile) -> DirectEvaluator<'a> {
+        DirectEvaluator { g, dev, stats: EvalStats::default() }
+    }
+}
+
+impl CostEvaluator for DirectEvaluator<'_> {
+    fn evaluate_group(&mut self, grp: &FusionGroup) -> f64 {
+        self.stats.group_evals += 1;
+        group_latency(self.g, grp, self.dev)
+    }
+
+    fn evaluate_schedule(&mut self, s: &Schedule) -> f64 {
+        self.stats.schedule_evals += 1;
+        self.stats.group_evals += s.groups.len() as u64;
+        schedule_latency(self.g, s, self.dev)
+    }
+
+    fn stats(&self) -> EvalStats {
+        self.stats
+    }
+}
+
+/// Memoizing evaluator: `group_latency` cached by [`GroupKey`];
+/// layout-conversion costs computed from a flat per-node owner table and
+/// per-node conversion costs precomputed at construction (one division
+/// per graph node instead of one BTreeMap build per evaluation).
+pub struct MemoEvaluator<'a> {
+    g: &'a Graph,
+    dev: &'a DeviceProfile,
+    cache: HashMap<GroupKey, f64>,
+    /// Seconds to transpose node v's output once: 2 * bytes / bandwidth —
+    /// exactly the expression `schedule_latency` evaluates inline.
+    conv_cost: Vec<f64>,
+    /// Scratch: node -> (group index, layout) for the schedule currently
+    /// being evaluated. Cleared at the start of each evaluation.
+    owner: Vec<Option<(usize, Layout)>>,
+    stats: EvalStats,
+}
+
+impl<'a> MemoEvaluator<'a> {
+    pub fn new(g: &'a Graph, dev: &'a DeviceProfile) -> MemoEvaluator<'a> {
+        let conv_cost = (0..g.len())
+            .map(|v| {
+                let bytes = g.node(v).out_shape.bytes();
+                2.0 * bytes as f64 / dev.bandwidth_for(bytes).max(1.0)
+            })
+            .collect();
+        MemoEvaluator {
+            g,
+            dev,
+            cache: HashMap::new(),
+            conv_cost,
+            owner: vec![None; g.len()],
+            stats: EvalStats::default(),
+        }
+    }
+
+    /// Number of distinct groups priced so far.
+    pub fn cache_len(&self) -> usize {
+        self.cache.len()
+    }
+}
+
+impl CostEvaluator for MemoEvaluator<'_> {
+    fn evaluate_group(&mut self, grp: &FusionGroup) -> f64 {
+        self.stats.group_evals += 1;
+        if let Some(&lat) = self.cache.get(grp) {
+            self.stats.hits += 1;
+            return lat;
+        }
+        self.stats.misses += 1;
+        let lat = group_latency(self.g, grp, self.dev);
+        self.cache.insert(grp.clone(), lat);
+        lat
+    }
+
+    fn evaluate_schedule(&mut self, s: &Schedule) -> f64 {
+        self.stats.schedule_evals += 1;
+        // Same summation order as `schedule_latency`: groups first, then
+        // conversion passes in group/op/pred iteration order — the two
+        // paths must stay bit-identical.
+        let mut total = 0.0f64;
+        for grp in &s.groups {
+            total += self.evaluate_group(grp);
+        }
+        // invariant: `owner` is all-None between evaluations (it starts
+        // that way and the cleanup below restores it), so only the
+        // current schedule's ops are ever touched — O(schedule), not
+        // O(graph), per evaluation
+        for (gi, grp) in s.groups.iter().enumerate() {
+            for &v in &grp.ops {
+                self.owner[v] = Some((gi, grp.layout));
+            }
+        }
+        for grp in &s.groups {
+            for &v in &grp.ops {
+                let (cg, cl) = self.owner[v].expect("op owned by its group");
+                for &p in self.g.preds(v) {
+                    if let Some((pg, pl)) = self.owner[p] {
+                        if pg != cg && pl != cl {
+                            total += self.conv_cost[p];
+                        }
+                    }
+                }
+            }
+        }
+        for grp in &s.groups {
+            for &v in &grp.ops {
+                self.owner[v] = None;
+            }
+        }
+        total
+    }
+
+    fn stats(&self) -> EvalStats {
+        self.stats
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build, InputShape, ModelId};
+    use crate::partition::{cluster, ClusterConfig};
+    use crate::tuner::schedule::SubgraphView;
+    use crate::tuner::search::random_schedule;
+    use crate::util::Rng;
+
+    /// Acceptance criterion: for random schedules over seed models, the
+    /// memoized evaluator equals `schedule_latency` bit-for-bit — warm
+    /// or cold.
+    #[test]
+    fn memo_is_bit_identical_on_seed_models() {
+        let dev = DeviceProfile::kirin990();
+        for m in [ModelId::Mbn, ModelId::Sqn] {
+            let g = build(m, InputShape::Small);
+            let p = cluster(&g, ClusterConfig::adaptive(&g));
+            let views = SubgraphView::all(&g, &p);
+            let mut memo = MemoEvaluator::new(&g, &dev);
+            let mut direct = DirectEvaluator::new(&g, &dev);
+            let mut rng = Rng::new(0xBEEF);
+            for view in views.iter().filter(|v| !v.is_empty()) {
+                for _ in 0..20 {
+                    let s = random_schedule(&g, view, &mut rng, true);
+                    let raw = schedule_latency(&g, &s, &dev);
+                    let via_direct = direct.evaluate_schedule(&s);
+                    let cold = memo.evaluate_schedule(&s);
+                    let warm = memo.evaluate_schedule(&s);
+                    assert!(raw == via_direct, "{raw} != {via_direct}");
+                    assert!(raw == cold, "cold: {raw} != {cold}");
+                    assert!(raw == warm, "warm: {raw} != {warm}");
+                }
+            }
+            let st = memo.stats();
+            assert!(st.hits > 0, "re-evaluation must hit the cache");
+            assert!(st.misses > 0);
+        }
+    }
+
+    #[test]
+    fn group_pricing_caches() {
+        let g = build(ModelId::Mbn, InputShape::Small);
+        let dev = DeviceProfile::qsd810();
+        let p = cluster(&g, ClusterConfig::adaptive(&g));
+        let views = SubgraphView::all(&g, &p);
+        let view = views.iter().find(|v| !v.is_empty()).unwrap();
+        let mut rng = Rng::new(3);
+        let s = random_schedule(&g, view, &mut rng, true);
+        let mut memo = MemoEvaluator::new(&g, &dev);
+        let a = memo.evaluate_group(&s.groups[0]);
+        let b = memo.evaluate_group(&s.groups[0]);
+        assert!(a == b);
+        let st = memo.stats();
+        assert_eq!(st.hits, 1);
+        assert_eq!(st.misses, 1);
+        assert_eq!(memo.cache_len(), 1);
+    }
+
+    #[test]
+    fn stats_merge_and_hit_rate() {
+        let mut a = EvalStats { schedule_evals: 2, group_evals: 6, hits: 3, misses: 1 };
+        let b = EvalStats { schedule_evals: 1, group_evals: 2, hits: 1, misses: 3 };
+        a.merge(&b);
+        assert_eq!(a.schedule_evals, 3);
+        assert_eq!(a.group_evals, 8);
+        assert!((a.hit_rate() - 0.5).abs() < 1e-12);
+        assert_eq!(EvalStats::default().hit_rate(), 0.0);
+    }
+}

@@ -2,7 +2,9 @@
 //!
 //! Reproduction of "AGO: Boosting Mobile AI Inference Performance by
 //! Removing Constraints on Graph Optimization" (Xu, Peng, Wang; 2022).
-//! See DESIGN.md for the system inventory and EXPERIMENTS.md for the
+//! See DESIGN.md (repo root) for the layer inventory — frontend /
+//! reformer / backend / runtime — and the `CostEvaluator` seam through
+//! which every consumer prices schedules; EXPERIMENTS.md holds the
 //! paper-vs-measured record.
 
 pub mod baselines;

@@ -8,10 +8,11 @@
 //! for a final joint tuning round — evading cold-start tuning of the huge
 //! combined space (the paper's answer to Challenge 2).
 
+use crate::costmodel::{CostEvaluator, MemoEvaluator};
 use crate::device::DeviceProfile;
 use crate::graph::{Graph, NodeId};
 use crate::tuner::schedule::{Schedule, SubgraphView};
-use crate::tuner::search::{tune, SearchConfig, TuneResult};
+use crate::tuner::search::{tune_with_evaluator, SearchConfig, TuneResult};
 
 #[derive(Clone, Debug)]
 pub struct ReformerConfig {
@@ -79,17 +80,35 @@ pub fn join_schedules(minis: Vec<Schedule>) -> Schedule {
 }
 
 /// Tune one subgraph through the reformer: SPLIT -> tune minis -> JOIN ->
-/// joint tuning seeded with the composed schedule.
+/// joint tuning seeded with the composed schedule. All rounds share one
+/// [`MemoEvaluator`] cache; see [`tune_with_reformer_eval`].
 pub fn tune_with_reformer(
     g: &Graph,
     view: &SubgraphView,
     dev: &DeviceProfile,
     cfg: &ReformerConfig,
 ) -> TuneResult {
+    let mut evaluator = MemoEvaluator::new(g, dev);
+    tune_with_reformer_eval(g, view, cfg, &mut evaluator)
+}
+
+/// [`tune_with_reformer`] with a caller-owned evaluator (the coordinator
+/// passes one per subgraph task and harvests its stats). One cache spans
+/// the SPLIT minis and the JOIN round: the minis' best groups reappear
+/// verbatim in the composed initial schedule, so the joint round starts
+/// warm instead of re-pricing everything the minis already explored.
+/// The evaluator MUST be bound to this same `g` (see
+/// [`tune_with_evaluator`]'s contract).
+pub fn tune_with_reformer_eval(
+    g: &Graph,
+    view: &SubgraphView,
+    cfg: &ReformerConfig,
+    evaluator: &mut dyn CostEvaluator,
+) -> TuneResult {
     let budget = cfg.search.budget;
     if !cfg.enabled || view.complex.len() <= 1 {
         // AGO-NR, or nothing to divide: direct tuning
-        return tune(g, view, dev, &cfg.search, None);
+        return tune_with_evaluator(g, view, &cfg.search, None, evaluator);
     }
     let minis = split(view, g);
     let mini_budget = ((budget as f64 * cfg.split_fraction) as usize
@@ -104,7 +123,7 @@ pub fn tune_with_reformer(
             seed: cfg.search.seed ^ (0x5eed_0000 + i as u64),
             ..cfg.search.clone()
         };
-        let r = tune(g, mini, dev, &mcfg, None);
+        let r = tune_with_evaluator(g, mini, &mcfg, None, evaluator);
         spent += r.evals;
         mini_best.push(r.best);
     }
@@ -113,7 +132,8 @@ pub fn tune_with_reformer(
         budget: budget.saturating_sub(spent).max(16),
         ..cfg.search.clone()
     };
-    let mut result = tune(g, view, dev, &jcfg, Some(initial));
+    let mut result =
+        tune_with_evaluator(g, view, &jcfg, Some(initial), evaluator);
     result.evals += spent;
     result
 }
@@ -193,6 +213,28 @@ mod tests {
         assert!(r.best_latency > 0.0);
         assert!(r.evals <= 400 + 48, "evals {}", r.evals);
         assert_eq!(r.best.op_count(), v.order.len());
+    }
+
+    #[test]
+    fn join_round_starts_warm() {
+        // the minis' best groups reappear verbatim in the composed
+        // initial schedule, so the shared cache must see hits
+        let (g, v) = triple();
+        let dev = crate::device::DeviceProfile::kirin990();
+        let cfg = ReformerConfig {
+            search: SearchConfig { budget: 400, ..Default::default() },
+            ..Default::default()
+        };
+        let mut evaluator = MemoEvaluator::new(&g, &dev);
+        let r = tune_with_reformer_eval(&g, &v, &cfg, &mut evaluator);
+        assert!(r.best_latency > 0.0);
+        let st = evaluator.stats();
+        assert!(st.hits > 0, "shared cache saw no hits: {st:?}");
+        assert!(st.misses > 0);
+        // sharing the cache must not change the result
+        let cold = tune_with_reformer(&g, &v, &dev, &cfg);
+        assert_eq!(cold.best_latency, r.best_latency);
+        assert_eq!(cold.evals, r.evals);
     }
 
     #[test]

@@ -131,17 +131,38 @@ impl Manifest {
     }
 }
 
+/// `Some(dir)` when an artifact catalog exists at `dir`; otherwise prints
+/// a skip notice and returns `None`. Tests that need real PJRT execution
+/// use this to skip gracefully on a fresh checkout (the tier-1 gate must
+/// pass without `make artifacts`). Note libtest captures output of
+/// passing tests, so the notice shows under `--nocapture`; a dynamic
+/// skip is used instead of `#[ignore]` so the same tests run for real
+/// whenever the catalog IS present.
+pub fn catalog_or_skip(dir: impl AsRef<Path>) -> Option<PathBuf> {
+    let d = dir.as_ref().to_path_buf();
+    if d.join("manifest.json").is_file() {
+        Some(d)
+    } else {
+        eprintln!(
+            "SKIP: artifact catalog absent at {} (run `make artifacts`)",
+            d.display()
+        );
+        None
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
 
-    fn artifacts_dir() -> PathBuf {
-        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
+    fn artifacts_dir() -> Option<PathBuf> {
+        catalog_or_skip(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts"))
     }
 
     #[test]
     fn loads_real_manifest() {
-        let m = Manifest::load(artifacts_dir()).expect("manifest");
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(dir).expect("manifest");
         assert!(m.programs.len() >= 40, "got {}", m.programs.len());
         // one known entry with exact shapes
         let p = m.get("pw_n1h28w28i16o32").unwrap();
@@ -153,7 +174,8 @@ mod tests {
 
     #[test]
     fn hlo_files_exist() {
-        let m = Manifest::load(artifacts_dir()).expect("manifest");
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(dir).expect("manifest");
         for name in m.programs.keys() {
             let p = m.hlo_path(name).unwrap();
             assert!(p.exists(), "{} missing", p.display());
@@ -162,13 +184,15 @@ mod tests {
 
     #[test]
     fn unknown_program_is_error() {
-        let m = Manifest::load(artifacts_dir()).expect("manifest");
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(dir).expect("manifest");
         assert!(m.get("nonexistent").is_err());
     }
 
     #[test]
     fn kind_filter() {
-        let m = Manifest::load(artifacts_dir()).expect("manifest");
+        let Some(dir) = artifacts_dir() else { return };
+        let m = Manifest::load(dir).expect("manifest");
         let fused = m.names_by_kind(|k| k.starts_with("fused_"));
         assert!(fused.len() >= 8, "fused artifacts: {}", fused.len());
     }

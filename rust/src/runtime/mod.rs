@@ -12,4 +12,4 @@ pub mod engine;
 pub mod manifest;
 
 pub use engine::{Engine, TensorData};
-pub use manifest::{Manifest, ProgramMeta};
+pub use manifest::{catalog_or_skip, Manifest, ProgramMeta};

@@ -8,7 +8,7 @@
 //! analogue of the paper's number-of-measured-schedules; the
 //! budget-to-stabilize statistic drives Fig. 8.
 
-use crate::costmodel::schedule_latency;
+use crate::costmodel::{CostEvaluator, MemoEvaluator};
 use crate::device::DeviceProfile;
 use crate::graph::{Graph, NodeId};
 use crate::util::Rng;
@@ -58,7 +58,10 @@ pub struct TuneResult {
 }
 
 /// Tune one subgraph. `initial` seeds the population (the reformer passes
-/// the composed mini-subgraph schedule here — §V).
+/// the composed mini-subgraph schedule here — §V). Evaluations run
+/// through a fresh [`MemoEvaluator`], so a mutation re-prices only the
+/// groups it changed; use [`tune_with_evaluator`] to share a warm cache
+/// across rounds (the reformer does, between SPLIT minis and JOIN).
 pub fn tune(
     g: &Graph,
     view: &SubgraphView,
@@ -66,7 +69,30 @@ pub fn tune(
     cfg: &SearchConfig,
     initial: Option<Schedule>,
 ) -> TuneResult {
+    let mut evaluator = MemoEvaluator::new(g, dev);
+    tune_with_evaluator(g, view, cfg, initial, &mut evaluator)
+}
+
+/// [`tune`] with a caller-owned evaluator. The evaluator binds the graph
+/// and device; its cache (if any) survives the call, which is how the
+/// reformer's JOIN round starts warm and how the coordinator reports
+/// per-subgraph hit rates.
+///
+/// Contract: `g` MUST be the graph the evaluator was constructed over —
+/// the search generates schedules against `g` while the evaluator prices
+/// them against its own bound graph, so a mismatch panics (out-of-range
+/// node ids) or silently prices the wrong shapes.
+pub fn tune_with_evaluator(
+    g: &Graph,
+    view: &SubgraphView,
+    cfg: &SearchConfig,
+    initial: Option<Schedule>,
+    evaluator: &mut dyn CostEvaluator,
+) -> TuneResult {
     assert!(!view.is_empty(), "cannot tune an empty subgraph");
+    // a zero budget would leave `best` empty; the tuner always spends at
+    // least one evaluation
+    let budget = cfg.budget.max(1);
     let mut rng = Rng::new(cfg.seed);
     let mut evals = 0usize;
     let mut history = Vec::new();
@@ -74,12 +100,13 @@ pub fn tune(
     let mut last_improve = 0usize;
 
     let eval = |s: Schedule,
+                    evaluator: &mut dyn CostEvaluator,
                     best: &mut Option<(Schedule, f64)>,
                     evals: &mut usize,
                     history: &mut Vec<f64>,
                     last_improve: &mut usize|
      -> f64 {
-        let lat = schedule_latency(g, &s, dev);
+        let lat = evaluator.evaluate_schedule(&s);
         *evals += 1;
         match best {
             Some((_, bl)) if lat >= *bl * 0.99 => {}
@@ -103,19 +130,19 @@ pub fn tune(
     // seed population
     let mut pop: Vec<(Schedule, f64)> = Vec::new();
     if let Some(init) = initial {
-        let lat = eval(init.clone(), &mut best, &mut evals, &mut history,
-                       &mut last_improve);
+        let lat = eval(init.clone(), &mut *evaluator, &mut best, &mut evals,
+                       &mut history, &mut last_improve);
         pop.push((init, lat));
     }
-    while pop.len() < cfg.population && evals < cfg.budget {
+    while pop.len() < cfg.population && evals < budget {
         let s = random_schedule(g, view, &mut rng, cfg.allow_intensive);
-        let lat = eval(s.clone(), &mut best, &mut evals, &mut history,
-                       &mut last_improve);
+        let lat = eval(s.clone(), &mut *evaluator, &mut best, &mut evals,
+                       &mut history, &mut last_improve);
         pop.push((s, lat));
     }
 
     // evolutionary loop: tournament parent -> mutate -> replace worst
-    while evals < cfg.budget {
+    while evals < budget {
         if evals.saturating_sub(last_improve) >= cfg.stabilize_window {
             break; // stabilized
         }
@@ -130,8 +157,8 @@ pub fn tune(
             let parent = if pop[a].1 <= pop[b].1 { a } else { b };
             mutate(g, view, &pop[parent].0, &mut rng, cfg.allow_intensive)
         };
-        let lat = eval(child.clone(), &mut best, &mut evals, &mut history,
-                       &mut last_improve);
+        let lat = eval(child.clone(), &mut *evaluator, &mut best, &mut evals,
+                       &mut history, &mut last_improve);
         // replace current worst if the child is better
         let (worst, _) = pop
             .iter()
@@ -386,6 +413,23 @@ mod tests {
         for w in r.history.windows(2) {
             assert!(w[1] <= w[0] + 1e-15);
         }
+    }
+
+    #[test]
+    fn memoized_tune_matches_direct_eval_path() {
+        // the cache must be an invisible optimization: same seed, same
+        // trajectory, same best — bit for bit — as the uncached path
+        use crate::costmodel::DirectEvaluator;
+        let (g, v) = pair_view();
+        let dev = crate::device::DeviceProfile::kirin990();
+        let cfg = SearchConfig { budget: 300, ..Default::default() };
+        let memo = tune(&g, &v, &dev, &cfg, None);
+        let mut direct = DirectEvaluator::new(&g, &dev);
+        let raw = tune_with_evaluator(&g, &v, &cfg, None, &mut direct);
+        assert_eq!(memo.best_latency, raw.best_latency);
+        assert_eq!(memo.evals, raw.evals);
+        assert_eq!(memo.history, raw.history);
+        assert_eq!(memo.best, raw.best);
     }
 
     #[test]

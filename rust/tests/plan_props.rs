@@ -1,0 +1,89 @@
+//! Property tests for the compiled-plan serialization
+//! (`coordinator::plan`): serialize → parse → re-serialize round-trips
+//! must preserve the schedules and the partition exactly, and malformed
+//! plans must be rejected with errors rather than garbage schedules.
+
+use ago::coordinator::plan::{from_json, to_json};
+use ago::coordinator::{compile, CompileConfig};
+use ago::device::DeviceProfile;
+use ago::ensure;
+use ago::models::{build, InputShape, ModelId};
+use ago::util::propkit::forall;
+use ago::util::Json;
+
+#[test]
+fn roundtrip_preserves_schedules_and_partition() {
+    // random compile configs over the model zoo; every plan must survive
+    // serialize → parse → re-serialize bit-for-bit in structure
+    forall(6, |rng| {
+        let model = *rng.choose(&[ModelId::Mbn, ModelId::Sqn, ModelId::Bt]);
+        let g = build(model, InputShape::Small);
+        let m = compile(&g, &CompileConfig {
+            budget: 150 + rng.range(0, 150),
+            seed: rng.range(1, 1 << 20) as u64,
+            workers: 2,
+            ..CompileConfig::new(if rng.chance(0.5) {
+                DeviceProfile::kirin990()
+            } else {
+                DeviceProfile::qsd810()
+            })
+        });
+        let j = to_json(&m, model.name(), "dev");
+        let text = j.pretty();
+        let j2 = Json::parse(&text).map_err(|e| e.to_string())?;
+        // re-serialize: the parsed document must render identically
+        ensure!(j2 == j, "parse(pretty(j)) != j for {}", model.name());
+        ensure!(j2.pretty() == text, "re-serialization drifted");
+        let plan = from_json(&j2).map_err(|e| e.to_string())?;
+        ensure!(
+            plan.partition.assign == m.partition.assign,
+            "partition drifted: {:?} vs {:?}",
+            plan.partition.assign,
+            m.partition.assign
+        );
+        // FusionGroup/Schedule derive PartialEq: exact structural match
+        ensure!(
+            plan.schedules == m.schedules,
+            "schedules drifted for {}",
+            model.name()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn unknown_group_kind_is_an_error() {
+    let text = r#"{
+        "assign": [0, 0],
+        "schedules": [[{
+            "ops": [0, 1],
+            "kind": "warp",
+            "tile": [1, 1, 8],
+            "layout": "nhwc",
+            "vec": 8, "unroll": 4, "threads": 2
+        }]]
+    }"#;
+    let j = Json::parse(text).unwrap();
+    let err = from_json(&j).expect_err("unknown kind must be rejected");
+    assert!(
+        err.to_string().contains("unknown group kind"),
+        "unexpected error: {err:#}"
+    );
+}
+
+#[test]
+fn missing_tile_and_bad_ops_are_errors() {
+    for bad in [
+        // group with no tile
+        r#"{"assign": [0], "schedules": [[{"ops": [0], "kind": "simple"}]]}"#,
+        // tile of wrong arity
+        r#"{"assign": [0], "schedules": [[{"ops": [0], "kind": "simple",
+            "tile": [1, 1]}]]}"#,
+        // non-numeric op id
+        r#"{"assign": [0], "schedules": [[{"ops": ["x"], "kind": "simple",
+            "tile": [1, 1, 1]}]]}"#,
+    ] {
+        let j = Json::parse(bad).unwrap();
+        assert!(from_json(&j).is_err(), "accepted malformed plan: {bad}");
+    }
+}
