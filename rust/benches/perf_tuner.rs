@@ -1,11 +1,18 @@
 //! L3 perf bench: tuner search throughput (schedule evaluations per
-//! second, direct vs memoized evaluator), partitioner throughput, and
-//! full-model compile wall time — the compile-time hot paths. Feeds
-//! EXPERIMENTS.md §Perf and writes `BENCH_tuner.json` so the perf
-//! trajectory is tracked PR-over-PR.
+//! second, direct vs memoized evaluator), partitioner throughput,
+//! full-model compile wall time, and the TuningDb cold-vs-warm compile
+//! comparison — the compile-time hot paths. Feeds EXPERIMENTS.md §Perf
+//! and writes `BENCH_tuner.json` so the perf trajectory is tracked
+//! PR-over-PR.
+//!
+//! `--quick` shrinks every budget ~10x for the CI smoke run: the numbers
+//! are noisier but the cold-vs-warm comparison and the dedup/hit-rate
+//! assertions still hold, so every CI run produces a `BENCH_tuner.json`
+//! artifact instead of only local runs.
 
 use std::time::Instant;
 
+use ago::coordinator::{compile_with_db, CompileConfig, TuningDb};
 use ago::costmodel::{CostEvaluator, DirectEvaluator, MemoEvaluator};
 use ago::device::DeviceProfile;
 use ago::graph::{Graph, OpKind, Shape, Subgraph};
@@ -36,11 +43,12 @@ fn rep_subgraph() -> (Graph, SubgraphView) {
 }
 
 fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
     let dev = DeviceProfile::kirin990();
     let (g, view) = rep_subgraph();
 
     // search throughput: run a large fixed budget, time it
-    let budget = 50_000;
+    let budget = if quick { 5_000 } else { 50_000 };
     let cfg = SearchConfig {
         budget,
         stabilize_window: budget, // never early-stop: measure raw rate
@@ -62,7 +70,7 @@ fn main() {
     let mvt = build(ModelId::Mvt, InputShape::Large);
     let cfg = ClusterConfig::adaptive(&mvt);
     let t0 = Instant::now();
-    let reps = 50;
+    let reps = if quick { 5 } else { 50 };
     for _ in 0..reps {
         let p = cluster(&mvt, cfg);
         std::hint::black_box(p);
@@ -85,7 +93,7 @@ fn main() {
         .filter(|v| !v.is_empty())
         .max_by_key(|v| (v.complex.len(), v.order.len()))
         .expect("mbn has subgraphs");
-    let budget = 4000;
+    let budget = if quick { 600 } else { 4000 };
     let cfg = SearchConfig {
         budget,
         stabilize_window: budget,
@@ -115,36 +123,99 @@ fn main() {
         hit_rate * 100.0
     );
 
-    // full-model compile wall time at the paper budget
+    // full-model compile wall time (paper budget; ~10x smaller in
+    // --quick so the JSON record names the budget explicitly instead of
+    // baking "20k" into a key that would silently mean two things)
+    let full_budget = if quick { 2_000 } else { 20_000 };
     let t0 = Instant::now();
     let out = ago::coordinator::compile(
         &build(ModelId::Mbn, InputShape::Large),
         &ago::coordinator::CompileConfig {
-            budget: 20_000,
-            ..ago::coordinator::CompileConfig::new(dev)
+            budget: full_budget,
+            ..ago::coordinator::CompileConfig::new(dev.clone())
         },
     );
     let compile_secs = t0.elapsed().as_secs_f64();
     println!(
-        "MBN/large compile @ 20k budget: {compile_secs:.2}s wall \
-         ({} evals, {:.0} evals/s, hit-rate {:.1}%)",
+        "MBN/large compile @ {full_budget} budget: {compile_secs:.2}s wall \
+         ({} evals, {:.0} evals/s, hit-rate {:.1}%, {} classes / {} \
+         subgraphs)",
         out.total_evals,
         out.evals_per_sec,
-        out.cache_hit_rate * 100.0
+        out.cache_hit_rate * 100.0,
+        out.n_classes,
+        out.partition.n_groups,
+    );
+
+    // cold-vs-warm compile through the TuningDb (the acceptance
+    // scenario): first compile dedups structurally identical subgraphs
+    // and fills the db; the second compile of the same model must hit
+    // ≥ 90% of its classes and skip every search
+    let small = build(ModelId::Mbn, InputShape::Small);
+    let ccfg = CompileConfig {
+        budget: if quick { 800 } else { 4000 },
+        workers: 0,
+        ..CompileConfig::new(dev)
+    };
+    let mut db = TuningDb::new();
+    let t0 = Instant::now();
+    let cold = compile_with_db(&small, &ccfg, &mut db);
+    let cold_secs = t0.elapsed().as_secs_f64();
+    let t0 = Instant::now();
+    let warm = compile_with_db(&small, &ccfg, &mut db);
+    let warm_secs = t0.elapsed().as_secs_f64();
+    assert!(
+        cold.tuned_tasks < cold.partition.n_groups,
+        "dedup must tune fewer tasks ({}) than subgraphs ({})",
+        cold.tuned_tasks,
+        cold.partition.n_groups
+    );
+    assert!(
+        warm.class_hit_rate >= 0.9,
+        "warm compile hit-rate {} < 0.9",
+        warm.class_hit_rate
+    );
+    assert_eq!(
+        warm.total_latency, cold.total_latency,
+        "warm compile must adopt the cold compile's schedules"
+    );
+    println!(
+        "MBN/small cold-vs-warm: cold {:.2}s ({} classes / {} subgraphs, \
+         {} tuned) -> warm {:.3}s ({:.0}% hit-rate, {} evals), {:.1}x \
+         compile speedup",
+        cold_secs,
+        cold.n_classes,
+        cold.partition.n_groups,
+        cold.tuned_tasks,
+        warm_secs,
+        warm.class_hit_rate * 100.0,
+        warm.total_evals,
+        cold_secs / warm_secs.max(1e-9),
     );
 
     // perf trajectory record
     let record = obj(vec![
         ("bench", s("perf_tuner")),
         ("model", s("mbn")),
+        ("quick", num(if quick { 1.0 } else { 0.0 })),
         ("budget", num(budget as f64)),
         ("evals_per_sec_direct", num(eps_direct)),
         ("evals_per_sec_memo", num(eps_memo)),
         ("memo_speedup", num(eps_memo / eps_direct)),
         ("cache_hit_rate", num(hit_rate)),
-        ("compile_20k_secs", num(compile_secs)),
-        ("compile_20k_evals_per_sec", num(out.evals_per_sec)),
-        ("compile_20k_cache_hit_rate", num(out.cache_hit_rate)),
+        // renamed from compile_20k_*: the budget varies with --quick, so
+        // the record names it instead of a key silently meaning 2k or 20k
+        ("compile_full_budget", num(full_budget as f64)),
+        ("compile_full_secs", num(compile_secs)),
+        ("compile_full_evals_per_sec", num(out.evals_per_sec)),
+        ("compile_full_cache_hit_rate", num(out.cache_hit_rate)),
+        ("n_subgraphs", num(cold.partition.n_groups as f64)),
+        ("n_classes", num(cold.n_classes as f64)),
+        ("tuned_tasks_cold", num(cold.tuned_tasks as f64)),
+        ("compile_cold_secs", num(cold_secs)),
+        ("compile_warm_secs", num(warm_secs)),
+        ("warm_class_hit_rate", num(warm.class_hit_rate)),
+        ("warm_speedup", num(cold_secs / warm_secs.max(1e-9))),
     ]);
     std::fs::write("BENCH_tuner.json", record.pretty())
         .expect("write BENCH_tuner.json");

@@ -29,6 +29,7 @@ pub fn ansor_compile(
         variant: Variant::AgoNi,
         seed,
         workers: 0,
+        warm_start: true,
     };
     compile(g, &cfg)
 }

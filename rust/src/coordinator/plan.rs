@@ -31,7 +31,9 @@ fn kind_parse(t: &str) -> Result<GroupKind> {
     })
 }
 
-fn group_to_json(g: &FusionGroup) -> Json {
+/// Shared with `tuningdb`: one JSON grammar for fusion groups, whether
+/// the ops are graph node ids (plans) or canonical indices (db entries).
+pub(crate) fn group_to_json(g: &FusionGroup) -> Json {
     obj(vec![
         ("ops", arr(g.ops.iter().map(|&v| num(v as f64)).collect())),
         ("kind", s(kind_str(g.kind))),
@@ -50,7 +52,7 @@ fn group_to_json(g: &FusionGroup) -> Json {
     ])
 }
 
-fn group_from_json(j: &Json) -> Result<FusionGroup> {
+pub(crate) fn group_from_json(j: &Json) -> Result<FusionGroup> {
     let ops = j
         .get("ops")
         .and_then(|o| o.as_arr())
@@ -97,8 +99,16 @@ pub fn to_json(m: &CompiledModel, model_name: &str, device: &str) -> Json {
         ("total_evals", num(m.total_evals as f64)),
         // evals_per_sec is deliberately NOT serialized: it is wall-clock
         // derived, and the plan artifact must stay byte-reproducible for
-        // identical (model, device, seed, budget) compiles
+        // identical (model, device, seed, budget, tuning-db) compiles
         ("cache_hit_rate", num(m.cache_hit_rate)),
+        // tuning provenance: how much structural dedup and TuningDb
+        // warm-starting shaped this compile. Deterministic for a fixed
+        // db state (like total_evals, they differ between a cold and a
+        // warm compile of the same model — the db is an input too).
+        ("n_classes", num(m.n_classes as f64)),
+        ("tuned_tasks", num(m.tuned_tasks as f64)),
+        ("db_hits", num(m.db_hits as f64)),
+        ("class_hit_rate", num(m.class_hit_rate)),
         (
             "assign",
             arr(m.partition.assign.iter().map(|&a| num(a as f64)).collect()),
@@ -211,6 +221,15 @@ mod tests {
         let text = j.pretty();
         let back = from_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(back.model, "sqn");
+        // tuning provenance travels with the plan
+        assert_eq!(
+            j.get("n_classes").and_then(|v| v.as_usize()),
+            Some(m.n_classes)
+        );
+        assert_eq!(
+            j.get("tuned_tasks").and_then(|v| v.as_usize()),
+            Some(m.tuned_tasks)
+        );
         assert_eq!(back.partition.assign, m.partition.assign);
         assert_eq!(back.schedules.len(), m.schedules.len());
         for (a, b) in back.schedules.iter().zip(&m.schedules) {

@@ -1,0 +1,344 @@
+//! TuningDb: a persistable database of tuned schedules keyed by
+//! (device, canonical subgraph fingerprint).
+//!
+//! The coordinator collapses structurally identical subgraphs into
+//! equivalence classes (`graph::fingerprint`), tunes one representative
+//! per class, and records the winner here in CANONICAL-INDEX space: every
+//! group's ops are canonical positions `0..n_ops`, not node ids of any
+//! particular graph. Applying an entry to a concrete subgraph is a
+//! `Schedule::remap` through that subgraph's canonical order, followed by
+//! a legality re-check — so one entry serves every member of the class,
+//! in this compile and in every later compile of any model that contains
+//! the same block.
+//!
+//! Persistence (JSON, alongside `coordinator::plan`) is what turns
+//! per-compile dedup into cross-compile warm starts: `ago compile
+//! --tuning-db db.json` loads the db, compiles (exact same-device hits
+//! skip search entirely; same-structure entries from another device seed
+//! the joint tuning round), and writes the db back with everything newly
+//! tuned. Serialization is deterministic (BTreeMap order) so identical
+//! states produce identical bytes.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, Result};
+
+use crate::tuner::schedule::Schedule;
+use crate::util::json::{arr, num, obj, s, Json};
+
+use super::plan::{group_from_json, group_to_json};
+
+/// One tuned class: the best schedule found for a canonical subgraph
+/// structure on one device under one compiler variant.
+#[derive(Clone, Debug)]
+pub struct DbEntry {
+    pub device: String,
+    /// Compiler variant tag (`Variant::tag`): schedules tuned under an
+    /// ablation (e.g. AGO-NI, which must never emit Intensive groups)
+    /// are not interchangeable with full-AGO schedules, so the variant
+    /// is part of the key — an AGO-NI compile can neither adopt an
+    /// Intensive-fused entry nor pollute the full-AGO namespace with its
+    /// weaker schedules.
+    pub variant: String,
+    /// Canonical fingerprint (`graph::fingerprint::canonical_form`).
+    pub fingerprint: u64,
+    /// Member count of the canonical subgraph; `schedule` covers the
+    /// canonical indices `0..n_ops` exactly once.
+    pub n_ops: usize,
+    /// Best schedule in canonical-index space.
+    pub schedule: Schedule,
+    /// Predicted latency when recorded, seconds (device-specific).
+    pub latency: f64,
+    /// Search evaluations spent to find it.
+    pub evals: usize,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct TuningDb {
+    /// Keyed by (device, variant, fingerprint); BTreeMap keeps lookups,
+    /// any-device scans, and serialization deterministic.
+    entries: BTreeMap<(String, String, u64), DbEntry>,
+}
+
+impl TuningDb {
+    pub fn new() -> TuningDb {
+        TuningDb::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.entries.is_empty()
+    }
+
+    /// Exact hit: same device, same variant, same structure. The
+    /// coordinator adopts the stored schedule without searching.
+    pub fn lookup(
+        &self,
+        device: &str,
+        variant: &str,
+        fingerprint: u64,
+    ) -> Option<&DbEntry> {
+        self.entries
+            .get(&(device.to_string(), variant.to_string(), fingerprint))
+    }
+
+    /// Same structure and variant tuned on ANY device (deterministic:
+    /// smallest device name wins). Schedules do not transfer verbatim
+    /// across SoCs, but they are strong seeds — the coordinator starts
+    /// the joint tuning round from one instead of cold SPLIT minis.
+    pub fn lookup_any(
+        &self,
+        variant: &str,
+        fingerprint: u64,
+    ) -> Option<&DbEntry> {
+        self.entries
+            .iter()
+            .find(|((_, v, f), _)| v == variant && *f == fingerprint)
+            .map(|(_, e)| e)
+    }
+
+    /// Insert, keeping the better (lower-latency) entry when the key
+    /// already exists — repeat compiles with bigger budgets improve the
+    /// db, smaller ones never regress it.
+    pub fn record(&mut self, e: DbEntry) {
+        let key = (e.device.clone(), e.variant.clone(), e.fingerprint);
+        match self.entries.get(&key) {
+            Some(old) if old.latency <= e.latency => {}
+            _ => {
+                self.entries.insert(key, e);
+            }
+        }
+    }
+
+    pub fn entries(&self) -> impl Iterator<Item = &DbEntry> {
+        self.entries.values()
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("version", num(1.0)),
+            (
+                "entries",
+                arr(self.entries.values().map(entry_to_json).collect()),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<TuningDb> {
+        let entries = j
+            .get("entries")
+            .and_then(|e| e.as_arr())
+            .ok_or_else(|| anyhow!("tuning db missing entries"))?;
+        let mut db = TuningDb::new();
+        for e in entries {
+            db.record(entry_from_json(e)?);
+        }
+        Ok(db)
+    }
+
+    pub fn save(&self, path: &str) -> Result<()> {
+        std::fs::write(path, self.to_json().pretty())?;
+        Ok(())
+    }
+
+    pub fn load(path: &str) -> Result<TuningDb> {
+        let text = std::fs::read_to_string(path)?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        TuningDb::from_json(&j)
+    }
+}
+
+fn entry_to_json(e: &DbEntry) -> Json {
+    obj(vec![
+        ("device", s(&e.device)),
+        ("variant", s(&e.variant)),
+        // hex string: a u64 fingerprint does not round-trip through the
+        // JSON number grammar (f64 mantissa)
+        ("fingerprint", s(&format!("{:016x}", e.fingerprint))),
+        ("n_ops", num(e.n_ops as f64)),
+        ("latency_ms", num(e.latency * 1e3)),
+        ("evals", num(e.evals as f64)),
+        (
+            "schedule",
+            arr(e.schedule.groups.iter().map(group_to_json).collect()),
+        ),
+    ])
+}
+
+fn entry_from_json(j: &Json) -> Result<DbEntry> {
+    let device = j
+        .get("device")
+        .and_then(|d| d.as_str())
+        .ok_or_else(|| anyhow!("db entry missing device"))?
+        .to_string();
+    let variant = j
+        .get("variant")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("db entry missing variant"))?
+        .to_string();
+    let fp_hex = j
+        .get("fingerprint")
+        .and_then(|f| f.as_str())
+        .ok_or_else(|| anyhow!("db entry missing fingerprint"))?;
+    let fingerprint = u64::from_str_radix(fp_hex, 16)
+        .map_err(|_| anyhow!("bad fingerprint {fp_hex:?}"))?;
+    let n_ops = j
+        .get("n_ops")
+        .and_then(|n| n.as_usize())
+        .ok_or_else(|| anyhow!("db entry missing n_ops"))?;
+    let groups = j
+        .get("schedule")
+        .and_then(|a| a.as_arr())
+        .ok_or_else(|| anyhow!("db entry missing schedule"))?
+        .iter()
+        .map(group_from_json)
+        .collect::<Result<Vec<_>>>()?;
+    let schedule = Schedule { groups };
+    // a persisted schedule must cover the canonical indices exactly once
+    // — anything else would corrupt every compile that hits it
+    let mut covered: Vec<usize> = schedule
+        .groups
+        .iter()
+        .flat_map(|g| g.ops.iter().copied())
+        .collect();
+    covered.sort_unstable();
+    if covered != (0..n_ops).collect::<Vec<_>>() {
+        return Err(anyhow!(
+            "db entry {fp_hex} does not cover 0..{n_ops} exactly once"
+        ));
+    }
+    Ok(DbEntry {
+        device,
+        variant,
+        fingerprint,
+        n_ops,
+        schedule,
+        latency: j
+            .get("latency_ms")
+            .and_then(|l| l.as_f64())
+            .unwrap_or(f64::INFINITY)
+            * 1e-3,
+        evals: j.get("evals").and_then(|e| e.as_usize()).unwrap_or(0),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tuner::schedule::{FusionGroup, GroupKind, Layout, Tile};
+
+    fn entry(device: &str, fp: u64, lat: f64) -> DbEntry {
+        DbEntry {
+            device: device.to_string(),
+            variant: "ago".to_string(),
+            fingerprint: fp,
+            n_ops: 2,
+            schedule: Schedule {
+                groups: vec![FusionGroup {
+                    ops: vec![0, 1],
+                    kind: GroupKind::Epilogue,
+                    tile: Tile { th: 4, tw: 4, tc: 8 },
+                    vec: 8,
+                    unroll: 4,
+                    threads: 2,
+                    layout: Layout::Nhwc,
+                }],
+            },
+            latency: lat,
+            evals: 100,
+        }
+    }
+
+    #[test]
+    fn record_keeps_better_entry() {
+        let mut db = TuningDb::new();
+        db.record(entry("kirin990", 7, 2.0));
+        db.record(entry("kirin990", 7, 3.0)); // worse: ignored
+        assert_eq!(db.len(), 1);
+        assert_eq!(db.lookup("kirin990", "ago", 7).unwrap().latency, 2.0);
+        db.record(entry("kirin990", 7, 1.0)); // better: replaces
+        assert_eq!(db.lookup("kirin990", "ago", 7).unwrap().latency, 1.0);
+        assert!(db.lookup("qsd810", "ago", 7).is_none());
+        assert!(db.lookup_any("ago", 7).is_some());
+        assert!(db.lookup_any("ago", 8).is_none());
+    }
+
+    #[test]
+    fn lookup_any_is_deterministic() {
+        let mut db = TuningDb::new();
+        db.record(entry("qsd810", 7, 1.0));
+        db.record(entry("kirin990", 7, 2.0));
+        // smallest device name wins regardless of insertion order
+        assert_eq!(db.lookup_any("ago", 7).unwrap().device, "kirin990");
+    }
+
+    #[test]
+    fn variants_are_separate_namespaces() {
+        // an AGO-NI compile must never adopt (or seed from) a full-AGO
+        // schedule — Intensive groups would leak past the ablation
+        let mut db = TuningDb::new();
+        db.record(entry("kirin990", 7, 2.0));
+        assert!(db.lookup("kirin990", "ago-ni", 7).is_none());
+        assert!(db.lookup_any("ago-ni", 7).is_none());
+        let mut ni = entry("kirin990", 7, 9.0);
+        ni.variant = "ago-ni".to_string();
+        db.record(ni);
+        assert_eq!(db.len(), 2);
+        // and the weaker NI schedule does not displace the AGO one
+        assert_eq!(db.lookup("kirin990", "ago", 7).unwrap().latency, 2.0);
+    }
+
+    #[test]
+    fn json_roundtrip() {
+        let mut db = TuningDb::new();
+        db.record(entry("kirin990", 0xdead_beef_0000_0001, 1.5e-3));
+        db.record(entry("qsd810", 42, 2.5e-3));
+        let text = db.to_json().pretty();
+        let back = TuningDb::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.len(), 2);
+        let e = back.lookup("kirin990", "ago", 0xdead_beef_0000_0001).unwrap();
+        assert_eq!(e.variant, "ago");
+        assert_eq!(e.n_ops, 2);
+        assert_eq!(e.evals, 100);
+        assert!((e.latency - 1.5e-3).abs() < 1e-12);
+        assert_eq!(e.schedule.groups.len(), 1);
+        assert_eq!(e.schedule.groups[0].ops, vec![0, 1]);
+        // deterministic bytes for identical state
+        assert_eq!(text, back.to_json().pretty());
+    }
+
+    #[test]
+    fn rejects_corrupt_entries() {
+        // schedule not covering 0..n_ops
+        let bad = r#"{"entries": [{"device": "d", "variant": "ago",
+            "fingerprint": "ff", "n_ops": 3, "latency_ms": 1, "evals": 1,
+            "schedule": [{"ops": [0, 2], "kind": "simple",
+                          "tile": [1, 1, 1]}]}]}"#;
+        assert!(TuningDb::from_json(&Json::parse(bad).unwrap()).is_err());
+        // bad fingerprint hex
+        let bad2 = r#"{"entries": [{"device": "d", "variant": "ago",
+            "fingerprint": "zz", "n_ops": 0, "latency_ms": 1, "evals": 1,
+            "schedule": []}]}"#;
+        assert!(TuningDb::from_json(&Json::parse(bad2).unwrap()).is_err());
+        // missing variant
+        let bad3 = r#"{"entries": [{"device": "d", "fingerprint": "ff",
+            "n_ops": 0, "latency_ms": 1, "evals": 1, "schedule": []}]}"#;
+        assert!(TuningDb::from_json(&Json::parse(bad3).unwrap()).is_err());
+        assert!(TuningDb::from_json(&Json::parse("{}").unwrap()).is_err());
+    }
+
+    #[test]
+    fn save_load_file() {
+        let mut db = TuningDb::new();
+        db.record(entry("kirin990", 9, 1.0));
+        let path = std::env::temp_dir().join("ago_tuningdb_test.json");
+        let path = path.to_str().unwrap();
+        db.save(path).unwrap();
+        let back = TuningDb::load(path).unwrap();
+        assert_eq!(back.len(), 1);
+        std::fs::remove_file(path).ok();
+    }
+}

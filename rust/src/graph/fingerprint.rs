@@ -1,0 +1,442 @@
+//! Canonical subgraph fingerprints: a shape-normalized, node-id-independent
+//! hash of a subgraph's structure, plus the canonical node order that
+//! makes schedules transferable between structurally identical subgraphs.
+//!
+//! Mobile model zoos are dominated by repeated blocks — a MobileNet
+//! partition contains many subgraphs that differ only in node ids. Two
+//! subgraphs with equal fingerprints are candidates for the same tuned
+//! schedule: the coordinator tunes ONE representative per equivalence
+//! class and remaps the winner onto every member through the position map
+//! `rep.order[i] ↔ member.order[i]` (see `coordinator` and `TuningDb`).
+//!
+//! What the fingerprint normalizes away: node ids, node names, the
+//! subgraph's placement inside the parent graph. What it keeps — exactly
+//! the inputs of the cost model — per node: operator kind and intrinsic
+//! attributes, output shape, contraction extent, the output shapes of
+//! external producers feeding the node (they price the group's input
+//! traffic), and whether the node's output crosses the subgraph boundary
+//! (it prices the output write-back); plus the internal edge structure in
+//! canonical positions.
+//!
+//! Equality of fingerprints is a HASH statement; [`verify_isomorphism`]
+//! is the authority. It checks the position map exactly — attributes,
+//! element-wise predecessor lists (list ORDER included, because the cost
+//! model sums traffic and layout-conversion terms in predecessor-list
+//! order and f64 addition is not associative), internal successor sets —
+//! so a verified mapping guarantees bit-identical evaluator latency for a
+//! remapped schedule. Callers must treat a verification failure as "not
+//! the same class", never as an error.
+
+use std::collections::BTreeSet;
+
+use super::dag::{Graph, NodeId};
+use super::op::OpKind;
+
+/// Stable 64-bit FNV-1a streaming hasher. `std`'s hashers are not
+/// guaranteed stable across releases and fingerprints are persisted (the
+/// TuningDb warm-starts *later* compiles), so the hash must be ours.
+#[derive(Clone, Copy, Debug)]
+pub struct Fnv(u64);
+
+impl Default for Fnv {
+    fn default() -> Self {
+        Fnv(0xcbf2_9ce4_8422_2325)
+    }
+}
+
+impl Fnv {
+    pub fn new() -> Fnv {
+        Fnv::default()
+    }
+
+    pub fn write_u64(&mut self, x: u64) {
+        for b in x.to_le_bytes() {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
+    pub fn write_usize(&mut self, x: usize) {
+        self.write_u64(x as u64);
+    }
+
+    pub fn finish(&self) -> u64 {
+        self.0
+    }
+}
+
+/// A subgraph in canonical form: the fingerprint plus the member nodes in
+/// canonical order. Canonical index `i` ↔ `order[i]`; schedules stored in
+/// canonical-index space (TuningDb) apply to any member of the class via
+/// this order.
+#[derive(Clone, Debug)]
+pub struct CanonicalForm {
+    pub fingerprint: u64,
+    /// Member node ids in canonical order (a valid topological order of
+    /// the subgraph's internal DAG).
+    pub order: Vec<NodeId>,
+}
+
+/// Operator-kind tag + intrinsic attributes, hashed stably (discriminant
+/// values are part of the persisted-fingerprint contract — append new
+/// kinds, never renumber).
+fn kind_code(k: &OpKind) -> (u64, [u64; 3]) {
+    match *k {
+        OpKind::Conv2d { kh, kw, stride } => {
+            (1, [kh as u64, kw as u64, stride as u64])
+        }
+        OpKind::Depthwise { kh, kw, stride } => {
+            (2, [kh as u64, kw as u64, stride as u64])
+        }
+        OpKind::Pointwise => (3, [0; 3]),
+        OpKind::MatMul => (4, [0; 3]),
+        OpKind::Add => (5, [0; 3]),
+        OpKind::Mul => (6, [0; 3]),
+        OpKind::BiasAdd => (7, [0; 3]),
+        OpKind::ReLU => (8, [0; 3]),
+        OpKind::ReLU6 => (9, [0; 3]),
+        OpKind::HardSwish => (10, [0; 3]),
+        OpKind::Sigmoid => (11, [0; 3]),
+        OpKind::GELU => (12, [0; 3]),
+        OpKind::Softmax => (13, [0; 3]),
+        OpKind::BatchNorm => (14, [0; 3]),
+        OpKind::LayerNorm => (15, [0; 3]),
+        OpKind::Pad => (16, [0; 3]),
+        OpKind::Reshape => (17, [0; 3]),
+        OpKind::Transpose => (18, [0; 3]),
+        OpKind::Concat => (19, [0; 3]),
+        OpKind::Split => (20, [0; 3]),
+        OpKind::ChannelShuffle => (21, [0; 3]),
+        OpKind::AvgPool { k, stride } => (22, [k as u64, stride as u64, 0]),
+        OpKind::MaxPool { k, stride } => (23, [k as u64, stride as u64, 0]),
+        OpKind::GlobalAvgPool => (24, [0; 3]),
+        OpKind::Scale => (25, [0; 3]),
+    }
+}
+
+/// Hash of everything the cost model reads off one node, independent of
+/// ids: kind + attributes, output shape, contraction extent, external
+/// producer shapes (in predecessor-list order), and the boundary flag
+/// (output escapes the subgraph, or the node is a graph sink).
+fn sig_hash(g: &Graph, v: NodeId, in_sub: &[bool]) -> u64 {
+    let n = g.node(v);
+    let mut h = Fnv::new();
+    let (tag, params) = kind_code(&n.kind);
+    h.write_u64(tag);
+    for p in params {
+        h.write_u64(p);
+    }
+    h.write_usize(n.out_shape.rank());
+    for &d in &n.out_shape.0 {
+        h.write_usize(d);
+    }
+    h.write_usize(n.in_c);
+    // external producers, in predecessor-list order
+    for &p in g.preds(v) {
+        if !in_sub[p] {
+            let s = &g.node(p).out_shape;
+            h.write_usize(s.rank());
+            for &d in &s.0 {
+                h.write_usize(d);
+            }
+        }
+    }
+    h.write_u64(u64::from(escapes_subgraph(g, v, in_sub)));
+    h.finish()
+}
+
+/// Does `v`'s output cross the subgraph boundary? (Graph sinks count —
+/// their output is the model's output.) This is the property
+/// `costmodel::memory_time` prices as a write-back whenever the consumer
+/// is outside the fusion group.
+fn escapes_subgraph(g: &Graph, v: NodeId, in_sub: &[bool]) -> bool {
+    g.succs(v).is_empty() || g.succs(v).iter().any(|&s| !in_sub[s])
+}
+
+/// Compute the canonical form of the subgraph spanned by `members`.
+///
+/// 1. Every member gets an id-free signature hash (see [`sig_hash`]).
+/// 2. Weisfeiler–Lehman refinement folds the internal neighborhood into
+///    each label until structurally distinct nodes separate.
+/// 3. The canonical order is Kahn's algorithm over the internal DAG with
+///    the ready set ordered by (refined label, id): label-identical ready
+///    nodes are WL-symmetric, so the id tie-break cannot change the label
+///    *sequence*; any asymmetry WL missed still lands in the positional
+///    edge set and therefore in the fingerprint.
+/// 4. The fingerprint hashes the signature sequence in canonical order
+///    plus the internal edges as sorted position pairs.
+pub fn canonical_form(g: &Graph, members: &[NodeId]) -> CanonicalForm {
+    let mut in_sub = vec![false; g.len()];
+    for &v in members {
+        in_sub[v] = true;
+    }
+    // initial id-free signatures, kept for the fingerprint loop below
+    // (sig_hash walks predecessor lists — no reason to pay for it twice)
+    let mut init = vec![0u64; g.len()];
+    for &v in members {
+        init[v] = sig_hash(g, v, &in_sub);
+    }
+    let mut label = init.clone();
+    // WL refinement; member count bounds the diameter, a small cap keeps
+    // pathological chains cheap (residual ambiguity is caught by the
+    // positional edge set + verify_isomorphism, not silently merged)
+    for _ in 0..members.len().min(16) {
+        let mut next = label.clone();
+        for &v in members {
+            let mut ins: Vec<u64> = g
+                .preds(v)
+                .iter()
+                .filter(|&&p| in_sub[p])
+                .map(|&p| label[p])
+                .collect();
+            let mut outs: Vec<u64> = g
+                .succs(v)
+                .iter()
+                .filter(|&&s| in_sub[s])
+                .map(|&s| label[s])
+                .collect();
+            ins.sort_unstable();
+            outs.sort_unstable();
+            let mut h = Fnv::new();
+            h.write_u64(label[v]);
+            h.write_usize(ins.len());
+            for x in ins {
+                h.write_u64(x);
+            }
+            h.write_usize(outs.len());
+            for x in outs {
+                h.write_u64(x);
+            }
+            next[v] = h.finish();
+        }
+        for &v in members {
+            label[v] = next[v];
+        }
+    }
+    // canonical topological order over internal edges
+    let mut indeg = vec![0usize; g.len()];
+    for &v in members {
+        indeg[v] = g.preds(v).iter().filter(|&&p| in_sub[p]).count();
+    }
+    let mut ready: BTreeSet<(u64, NodeId)> = members
+        .iter()
+        .filter(|&&v| indeg[v] == 0)
+        .map(|&v| (label[v], v))
+        .collect();
+    let mut order = Vec::with_capacity(members.len());
+    while let Some(&(l, v)) = ready.iter().next() {
+        ready.remove(&(l, v));
+        order.push(v);
+        for &s in g.succs(v) {
+            if in_sub[s] {
+                indeg[s] -= 1;
+                if indeg[s] == 0 {
+                    ready.insert((label[s], s));
+                }
+            }
+        }
+    }
+    debug_assert_eq!(order.len(), members.len(), "subgraph must be acyclic");
+    // fingerprint over id-free signatures + positional internal edges
+    let mut pos = vec![usize::MAX; g.len()];
+    for (i, &v) in order.iter().enumerate() {
+        pos[v] = i;
+    }
+    let mut edges: Vec<(usize, usize)> = Vec::new();
+    for &v in &order {
+        for &p in g.preds(v) {
+            if in_sub[p] {
+                edges.push((pos[p], pos[v]));
+            }
+        }
+    }
+    edges.sort_unstable();
+    let mut h = Fnv::new();
+    h.write_usize(order.len());
+    for &v in &order {
+        h.write_u64(init[v]);
+    }
+    h.write_usize(edges.len());
+    for (a, b) in edges {
+        h.write_usize(a);
+        h.write_usize(b);
+    }
+    CanonicalForm { fingerprint: h.finish(), order }
+}
+
+/// Fingerprint only (convenience for reports).
+pub fn fingerprint(g: &Graph, members: &[NodeId]) -> u64 {
+    canonical_form(g, members).fingerprint
+}
+
+/// Verify, exactly, that `a.order[i] -> b.order[i]` is an
+/// attribute-preserving isomorphism strong enough for bit-identical
+/// schedule pricing:
+/// - node attributes equal at every position (kind, shape, contraction);
+/// - predecessor lists correspond ELEMENT-WISE: internal preds map to the
+///   same canonical position, external preds have equal output shapes
+///   (the cost model iterates predecessor lists in order when summing
+///   input traffic and layout-conversion passes, so list order is part
+///   of the contract);
+/// - internal successor position sets equal, and the boundary flag
+///   (escaping output) agrees (successor *order* never enters a sum —
+///   the model only asks any/all/empty questions of it).
+///
+/// A `false` here means "tune separately", not "error": the fingerprint
+/// is a hash, this is the authority.
+pub fn verify_isomorphism(g: &Graph, a: &CanonicalForm, b: &CanonicalForm) -> bool {
+    if a.order.len() != b.order.len() {
+        return false;
+    }
+    let (mut pos_a, mut pos_b) = (vec![usize::MAX; g.len()], vec![usize::MAX; g.len()]);
+    for (i, (&va, &vb)) in a.order.iter().zip(&b.order).enumerate() {
+        pos_a[va] = i;
+        pos_b[vb] = i;
+    }
+    let in_a: Vec<bool> = pos_a.iter().map(|&p| p != usize::MAX).collect();
+    let in_b: Vec<bool> = pos_b.iter().map(|&p| p != usize::MAX).collect();
+    for (&va, &vb) in a.order.iter().zip(&b.order) {
+        let (na, nb) = (g.node(va), g.node(vb));
+        if na.kind != nb.kind || na.out_shape != nb.out_shape || na.in_c != nb.in_c {
+            return false;
+        }
+        // predecessor lists, element-wise
+        let (pa, pb) = (g.preds(va), g.preds(vb));
+        if pa.len() != pb.len() {
+            return false;
+        }
+        for (&ua, &ub) in pa.iter().zip(pb) {
+            match (in_a[ua], in_b[ub]) {
+                (true, true) => {
+                    if pos_a[ua] != pos_b[ub] {
+                        return false;
+                    }
+                }
+                (false, false) => {
+                    if g.node(ua).out_shape != g.node(ub).out_shape {
+                        return false;
+                    }
+                }
+                _ => return false,
+            }
+        }
+        // internal successor sets + boundary flag
+        let sa: BTreeSet<usize> = g
+            .succs(va)
+            .iter()
+            .filter(|&&s| in_a[s])
+            .map(|&s| pos_a[s])
+            .collect();
+        let sb: BTreeSet<usize> = g
+            .succs(vb)
+            .iter()
+            .filter(|&&s| in_b[s])
+            .map(|&s| pos_b[s])
+            .collect();
+        if sa != sb
+            || escapes_subgraph(g, va, &in_a) != escapes_subgraph(g, vb, &in_b)
+        {
+            return false;
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::op::{OpKind, Shape};
+
+    /// pw -> bias -> dw -> relu block starting from an external feeder.
+    fn block(g: &mut Graph, input: NodeId, tag: &str) -> Vec<NodeId> {
+        let s = Shape::nhwc(1, 14, 14, 32);
+        let pw = g.add(OpKind::Pointwise, &format!("{tag}pw"), s.clone(), 32, &[input]);
+        let b = g.add(OpKind::BiasAdd, &format!("{tag}b"), s.clone(), 0, &[pw]);
+        let dw = g.add(
+            OpKind::Depthwise { kh: 3, kw: 3, stride: 1 },
+            &format!("{tag}dw"),
+            s.clone(),
+            0,
+            &[b],
+        );
+        let r = g.add(OpKind::ReLU, &format!("{tag}r"), s, 0, &[dw]);
+        vec![pw, b, dw, r]
+    }
+
+    #[test]
+    fn repeated_blocks_hash_equal_and_verify() {
+        let mut g = Graph::new("t");
+        let s = Shape::nhwc(1, 14, 14, 32);
+        let i = g.add(OpKind::Pad, "in", s, 0, &[]);
+        let b1 = block(&mut g, i, "a");
+        let b2 = block(&mut g, *b1.last().unwrap(), "b");
+        let (c1, c2) = (canonical_form(&g, &b1), canonical_form(&g, &b2));
+        assert_eq!(c1.fingerprint, c2.fingerprint);
+        assert!(verify_isomorphism(&g, &c1, &c2));
+        assert!(verify_isomorphism(&g, &c2, &c1));
+    }
+
+    #[test]
+    fn different_shapes_hash_differently() {
+        let mut g = Graph::new("t");
+        let s = Shape::nhwc(1, 14, 14, 32);
+        let m = Shape::nhwc(1, 14, 14, 64);
+        let i = g.add(OpKind::Pad, "in", s.clone(), 0, &[]);
+        let p1 = g.add(OpKind::Pointwise, "p1", s, 32, &[i]);
+        let p2 = g.add(OpKind::Pointwise, "p2", m, 32, &[p1]);
+        let f1 = fingerprint(&g, &[p1]);
+        let f2 = fingerprint(&g, &[p2]);
+        assert_ne!(f1, f2);
+    }
+
+    #[test]
+    fn boundary_flag_distinguishes() {
+        // same chain, but one copy's intermediate feeds an external
+        // consumer: output traffic differs, classes must split
+        let mut g = Graph::new("t");
+        let s = Shape::nhwc(1, 8, 8, 16);
+        let i = g.add(OpKind::Pad, "in", s.clone(), 0, &[]);
+        let a1 = g.add(OpKind::Pointwise, "a1", s.clone(), 16, &[i]);
+        let a2 = g.add(OpKind::ReLU, "a2", s.clone(), 0, &[a1]);
+        let b1 = g.add(OpKind::Pointwise, "b1", s.clone(), 16, &[a2]);
+        let b2 = g.add(OpKind::ReLU, "b2", s.clone(), 0, &[b1]);
+        // external tap on b1's output
+        let _tap = g.add(OpKind::Add, "tap", s, 0, &[b1, b2]);
+        let fa = fingerprint(&g, &[a1, a2]);
+        let fb = fingerprint(&g, &[b1, b2]);
+        assert_ne!(fa, fb, "escaping intermediate must split the class");
+    }
+
+    #[test]
+    fn canonical_order_is_topological() {
+        let mut g = Graph::new("t");
+        let s = Shape::nhwc(1, 8, 8, 16);
+        let i = g.add(OpKind::Pad, "in", s.clone(), 0, &[]);
+        let members = block(&mut g, i, "x");
+        let cf = canonical_form(&g, &members);
+        let pos: std::collections::HashMap<NodeId, usize> =
+            cf.order.iter().copied().enumerate().map(|(p, v)| (v, p)).collect();
+        for &v in &members {
+            for &p in g.preds(v) {
+                if let (Some(&pv), Some(&pp)) = (pos.get(&v), pos.get(&p)) {
+                    assert!(pp < pv, "canonical order violates edge {p}->{v}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn fnv_is_stable() {
+        // persisted-fingerprint contract: the FNV-1a reference vector for
+        // the empty input is the offset basis, and one-byte streams match
+        // the classic constants — the hash must never drift across PRs
+        assert_eq!(Fnv::new().finish(), 0xcbf2_9ce4_8422_2325);
+        let mut h = Fnv::new();
+        h.write_u64(0); // eight 0x00 bytes
+        let mut h2 = Fnv::new();
+        h2.write_usize(0);
+        assert_eq!(h.finish(), h2.finish());
+        let mut h3 = Fnv::new();
+        h3.write_u64(1);
+        assert_ne!(h.finish(), h3.finish());
+    }
+}

@@ -3,11 +3,13 @@
 //! resulting subgraphs.
 
 pub mod dag;
+pub mod fingerprint;
 pub mod op;
 pub mod import;
 pub mod subgraph;
 pub mod validate;
 
 pub use dag::{Graph, NodeId};
+pub use fingerprint::{canonical_form, verify_isomorphism, CanonicalForm};
 pub use op::{OpKind, Shape};
 pub use subgraph::{Partition, Subgraph};

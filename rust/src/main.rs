@@ -8,7 +8,9 @@
 //!   devices    list device profiles
 
 use ago::baselines::{ansor_compile, handlib_compile};
-use ago::coordinator::{compile, CompileConfig, Frontend, Variant};
+use ago::coordinator::{
+    compile_with_db, CompileConfig, Frontend, TuningDb, Variant,
+};
 use ago::device::DeviceProfile;
 use ago::graph::Graph;
 use ago::models::{build, InputShape, ModelId};
@@ -60,7 +62,7 @@ fn main() {
                  compile   --model mbn --shape small|middle|large \\\n\
                  \x20         --device kirin990|qsd810 --budget 20000 \\\n\
                  \x20         --variant ago|ni|nr --frontend auto|relay \\\n\
-                 \x20         [--baselines]\n\
+                 \x20         [--baselines] [--tuning-db db.json] [--cold]\n\
                  partition --model mvt --shape large\n\
                  run       --artifacts artifacts [--program NAME | --demo]"
             );
@@ -112,14 +114,35 @@ fn cmd_compile(args: &Args) -> i32 {
         variant,
         seed: args.get_u64("seed", 0xA60),
         workers: args.get_usize("workers", 0),
+        // --cold ignores tuning-db entries on lookup (still records)
+        warm_start: !args.has_flag("cold"),
     };
     log::info!(
         "compiling {mname}/{sname} for {} (budget {budget}, {:?})",
         dev.name,
         variant
     );
+    // --tuning-db db.json: load tuned classes from earlier compiles,
+    // warm-start this one, write everything newly tuned back
+    let db_path = args.get("tuning-db");
+    let mut db = match db_path {
+        Some(p) if std::path::Path::new(p).exists() => {
+            match TuningDb::load(p) {
+                Ok(db) => {
+                    println!("tuning db {p}: {} entries loaded", db.len());
+                    db
+                }
+                Err(e) => {
+                    eprintln!("cannot load tuning db {p}: {e:#}");
+                    return 1;
+                }
+            }
+        }
+        _ => TuningDb::new(),
+    };
+    let prior_entries = db.len();
     let t0 = std::time::Instant::now();
-    let out = compile(&g, &cfg);
+    let out = compile_with_db(&g, &cfg, &mut db);
     println!(
         "{mname} {sname}: {} subgraphs, predicted latency {} ms \
          ({} evals, compile took {:.1}s)",
@@ -128,7 +151,29 @@ fn cmd_compile(args: &Args) -> i32 {
         out.total_evals,
         t0.elapsed().as_secs_f64()
     );
+    println!(
+        "dedup: {} classes / {} subgraphs, {} tuned, {} db hits \
+         ({:.0}% class hit-rate)",
+        out.n_classes,
+        out.partition.n_groups,
+        out.tuned_tasks,
+        out.db_hits,
+        out.class_hit_rate * 100.0
+    );
     println!("{}", out.report.summary("partition"));
+    if let Some(p) = db_path {
+        match db.save(p) {
+            Ok(()) => println!(
+                "tuning db written to {p} ({} entries, {} new)",
+                db.len(),
+                db.len() - prior_entries
+            ),
+            Err(e) => {
+                eprintln!("failed to write tuning db: {e:#}");
+                return 1;
+            }
+        }
+    }
     if let Some(path) = args.get("out") {
         match ago::coordinator::plan::save(&out, &mname, dev.name, path) {
             Ok(()) => println!("plan written to {path}"),

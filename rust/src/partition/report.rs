@@ -1,7 +1,12 @@
 //! Partition statistics for Fig. 14: subgraph counts, weight
 //! distribution in log2 bins, average/median weight, trivial-subgraph
-//! count, and Jain's fairness index.
+//! count, Jain's fairness index — and the structural-equivalence view
+//! (canonical fingerprints + classes) that drives the coordinator's
+//! tune-once-per-class dedup.
 
+use std::collections::HashMap;
+
+use crate::graph::fingerprint::fingerprint;
 use crate::graph::{Graph, Partition};
 use crate::util::stats;
 
@@ -22,10 +27,39 @@ pub struct PartitionReport {
     pub bins: Vec<usize>,
     /// Max complex-operator count in any subgraph.
     pub max_complex: usize,
+    /// Canonical structural fingerprint of each subgraph
+    /// (`graph::fingerprint`), indexed by subgraph id.
+    pub fingerprints: Vec<u64>,
+    /// Structural equivalence classes: subgraph ids grouped by
+    /// fingerprint, classes ordered by first member, members ascending.
+    /// (Fingerprint-keyed; the coordinator additionally verifies the
+    /// isomorphism before transferring schedules across members.)
+    pub classes: Vec<Vec<usize>>,
+    /// `classes.len()` — the number of tuning tasks dedup leaves behind.
+    pub n_classes: usize,
 }
 
 impl PartitionReport {
     pub fn build(g: &Graph, p: &Partition, wp: WeightParams) -> Self {
+        let fingerprints: Vec<u64> = p
+            .subgraphs()
+            .iter()
+            .map(|s| fingerprint(g, &s.nodes))
+            .collect();
+        Self::build_with_fingerprints(g, p, wp, fingerprints)
+    }
+
+    /// [`PartitionReport::build`] with precomputed canonical fingerprints
+    /// (indexed by subgraph id) — the coordinator already runs the WL
+    /// canonicalization for class building and passes the hashes in
+    /// rather than paying for it twice per compile.
+    pub fn build_with_fingerprints(
+        g: &Graph,
+        p: &Partition,
+        wp: WeightParams,
+        fingerprints: Vec<u64>,
+    ) -> Self {
+        assert_eq!(fingerprints.len(), p.n_groups);
         let weights = subgraph_weights(g, p, wp);
         let n_bins = 12;
         let mut bins = vec![0usize; n_bins];
@@ -37,6 +71,17 @@ impl PartitionReport {
             };
             bins[b] += 1;
         }
+        let mut classes: Vec<Vec<usize>> = Vec::new();
+        let mut class_of: HashMap<u64, usize> = HashMap::new();
+        for (i, &fp) in fingerprints.iter().enumerate() {
+            match class_of.get(&fp) {
+                Some(&c) => classes[c].push(i),
+                None => {
+                    class_of.insert(fp, classes.len());
+                    classes.push(vec![i]);
+                }
+            }
+        }
         PartitionReport {
             n_subgraphs: p.n_groups,
             avg_weight: stats::mean(&weights),
@@ -46,21 +91,28 @@ impl PartitionReport {
             bins,
             max_complex: p.complex_counts(g).into_iter().max().unwrap_or(0),
             weights,
+            fingerprints,
+            n_classes: classes.len(),
+            classes,
         }
     }
 
-    /// Render the Fig.14-style summary line.
+    /// Render the Fig.14-style summary line. The class count is labeled
+    /// `fp-classes` because it is fingerprint-keyed (hash only) — the
+    /// coordinator's `dedup:` line reports the verified-isomorphism
+    /// class count, which can differ on a hash collision.
     pub fn summary(&self, label: &str) -> String {
         format!(
             "{label}: {} subgraphs, avg {:.0}, median {:.0}, Jain {:.2}, \
-             trivial(<{}) {}, max-complex {}",
+             trivial(<{}) {}, max-complex {}, fp-classes {}",
             self.n_subgraphs,
             self.avg_weight,
             self.median_weight,
             self.jain,
             TRIVIAL_WEIGHT,
             self.trivial,
-            self.max_complex
+            self.max_complex,
+            self.n_classes
         )
     }
 }
@@ -78,9 +130,11 @@ mod tests {
         // and FEWER trivial subgraphs than Relay on MobileViT.
         let g = build(ModelId::Mvt, InputShape::Large);
         let wp = WeightParams::default();
+        // the real default path (Frontend::Auto → adaptive Td), not the
+        // fixed sweep constant
         let ago = PartitionReport::build(
             &g,
-            &cluster(&g, ClusterConfig::default()),
+            &cluster(&g, ClusterConfig::adaptive(&g)),
             wp,
         );
         let relay = PartitionReport::build(&g, &relay_partition(&g), wp);
@@ -100,6 +154,33 @@ mod tests {
         let r = PartitionReport::build(&g, &p, WeightParams::default());
         assert_eq!(r.bins.iter().sum::<usize>(), r.n_subgraphs);
         assert_eq!(r.weights.len(), r.n_subgraphs);
+    }
+
+    #[test]
+    fn classes_partition_the_subgraphs() {
+        let g = build(ModelId::Mbn, InputShape::Small);
+        for p in [
+            cluster(&g, ClusterConfig::adaptive(&g)),
+            relay_partition(&g),
+        ] {
+            let r = PartitionReport::build(&g, &p, WeightParams::default());
+            assert_eq!(r.fingerprints.len(), r.n_subgraphs);
+            assert_eq!(r.n_classes, r.classes.len());
+            // classes cover every subgraph id exactly once
+            let mut all: Vec<usize> =
+                r.classes.iter().flatten().copied().collect();
+            all.sort_unstable();
+            assert_eq!(all, (0..r.n_subgraphs).collect::<Vec<_>>());
+            // class members share a fingerprint
+            for c in &r.classes {
+                assert!(c.iter().all(|&i| {
+                    r.fingerprints[i] == r.fingerprints[c[0]]
+                }));
+            }
+            // MBN's repeated blocks must actually dedup
+            assert!(r.n_classes < r.n_subgraphs,
+                    "{} classes for {} subgraphs", r.n_classes, r.n_subgraphs);
+        }
     }
 
     #[test]

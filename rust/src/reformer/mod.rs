@@ -138,6 +138,24 @@ pub fn tune_with_reformer_eval(
     result
 }
 
+/// Warm-start path: a stored schedule (a TuningDb entry for the same
+/// structure, e.g. tuned on another device or in an earlier compile)
+/// plays the role the composed mini-subgraph schedule plays in the cold
+/// pipeline — the joint round starts from it directly, spending the
+/// WHOLE budget there instead of funding cold SPLIT minis first. The
+/// seed enters the population like any initial schedule, so a stale or
+/// cross-device entry can only help (the search keeps whatever beats
+/// it).
+pub fn tune_with_reformer_warm(
+    g: &Graph,
+    view: &SubgraphView,
+    cfg: &ReformerConfig,
+    initial: Schedule,
+    evaluator: &mut dyn CostEvaluator,
+) -> TuneResult {
+    tune_with_evaluator(g, view, &cfg.search, Some(initial), evaluator)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -235,6 +253,35 @@ mod tests {
         let cold = tune_with_reformer(&g, &v, &dev, &cfg);
         assert_eq!(cold.best_latency, r.best_latency);
         assert_eq!(cold.evals, r.evals);
+    }
+
+    #[test]
+    fn warm_start_seed_is_never_worse_than_its_seed() {
+        // the TuningDb warm path: seeding the joint round with an earlier
+        // winner can only keep or improve it (the seed joins the
+        // population and the search keeps whatever beats it)
+        let (g, v) = triple();
+        let dev = crate::device::DeviceProfile::kirin990();
+        let cfg = ReformerConfig {
+            search: SearchConfig { budget: 400, ..Default::default() },
+            ..Default::default()
+        };
+        let cold = tune_with_reformer(&g, &v, &dev, &cfg);
+        let mut evaluator = MemoEvaluator::new(&g, &dev);
+        let warm = tune_with_reformer_warm(
+            &g,
+            &v,
+            &cfg,
+            cold.best.clone(),
+            &mut evaluator,
+        );
+        assert!(
+            warm.best_latency <= cold.best_latency * (1.0 + 1e-12),
+            "warm {} vs its seed {}",
+            warm.best_latency,
+            cold.best_latency
+        );
+        assert_eq!(warm.best.op_count(), v.order.len());
     }
 
     #[test]

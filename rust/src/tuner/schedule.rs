@@ -87,6 +87,67 @@ impl Schedule {
     pub fn op_count(&self) -> usize {
         self.groups.iter().map(|g| g.ops.len()).sum()
     }
+
+    /// Rewrite every group's op ids through `map`, preserving group
+    /// segmentation, kinds, knobs, and the POSITIONAL op order (positions
+    /// carry meaning in the cost model: `ops.last()` is the group's
+    /// downstream owner). This is how a schedule tuned on one subgraph
+    /// transfers to a structurally identical one — the map comes from the
+    /// canonical position correspondence (`graph::fingerprint`), in
+    /// either direction: node ids → canonical indices (TuningDb storage)
+    /// or canonical indices → a member's node ids (application).
+    ///
+    /// Returns `None` when an op is missing from the map: the schedule
+    /// and the map belong to different subgraphs (or a persisted
+    /// schedule is corrupt) — callers treat that as a cache miss.
+    pub fn remap(
+        &self,
+        map: &std::collections::HashMap<NodeId, NodeId>,
+    ) -> Option<Schedule> {
+        let groups = self
+            .groups
+            .iter()
+            .map(|grp| {
+                let ops = grp
+                    .ops
+                    .iter()
+                    .map(|v| map.get(v).copied())
+                    .collect::<Option<Vec<_>>>()?;
+                Some(FusionGroup { ops, ..grp.clone() })
+            })
+            .collect::<Option<Vec<_>>>()?;
+        Some(Schedule { groups })
+    }
+
+    /// Legality re-check after a remap: an `Intensive` group must still
+    /// hold exactly two complex operators forming a legal (up → down)
+    /// pair ON THIS GRAPH. Offending groups degrade to `Joint` — same
+    /// membership, no loop fusion, always legal — so a remapped schedule
+    /// can never smuggle an illegal fusion past the cost model. Returns
+    /// the number of degraded groups; a mapping that came from
+    /// [`crate::graph::fingerprint::verify_isomorphism`] degrades none
+    /// (the walk `intensive_legal` does is isomorphism-invariant).
+    pub fn revalidate_legality(&mut self, g: &Graph) -> usize {
+        let mut degraded = 0;
+        for grp in &mut self.groups {
+            if grp.kind != GroupKind::Intensive {
+                continue;
+            }
+            let complex: Vec<NodeId> = grp
+                .ops
+                .iter()
+                .copied()
+                .filter(|&v| g.node(v).kind.is_complex())
+                .collect();
+            let legal = complex.len() == 2
+                && super::legality::intensive_legal(g, complex[0], complex[1]);
+            if !legal {
+                grp.kind = GroupKind::Joint;
+                degraded += 1;
+            }
+        }
+        degraded
+    }
 }
 
 /// A subgraph plus the pre-computed views every tuner component needs.
@@ -206,5 +267,58 @@ mod tests {
         assert_eq!(divisors(12), vec![1, 2, 3, 4, 6, 12]);
         assert_eq!(divisors(7), vec![1, 7]);
         assert_eq!(divisors(1), vec![1]);
+    }
+
+    #[test]
+    fn remap_preserves_structure_and_rejects_partial_maps() {
+        use std::collections::HashMap;
+        let (g, v) = mini();
+        let mut rng = crate::util::Rng::new(5);
+        let s = crate::tuner::search::random_schedule(&g, &v, &mut rng, true);
+        // identity map round-trips exactly
+        let ident: HashMap<_, _> = v.order.iter().map(|&x| (x, x)).collect();
+        assert_eq!(s.remap(&ident).unwrap(), s);
+        // shifted map: segmentation, kinds, and knobs survive
+        let shifted: HashMap<_, _> =
+            v.order.iter().map(|&x| (x, x + 100)).collect();
+        let r = s.remap(&shifted).unwrap();
+        assert_eq!(r.groups.len(), s.groups.len());
+        for (a, b) in r.groups.iter().zip(&s.groups) {
+            assert_eq!(a.kind, b.kind);
+            assert_eq!(a.tile, b.tile);
+            assert_eq!((a.vec, a.unroll, a.threads), (b.vec, b.unroll, b.threads));
+            let expect: Vec<NodeId> = b.ops.iter().map(|&x| x + 100).collect();
+            assert_eq!(a.ops, expect);
+        }
+        // missing ops = different subgraph = cache miss, not a panic
+        let partial: HashMap<_, _> =
+            [(v.order[0], v.order[0])].into_iter().collect();
+        assert!(s.remap(&partial).is_none());
+    }
+
+    #[test]
+    fn revalidate_degrades_illegal_intensive() {
+        // dense-conv downstream is never intensive-legal (§III-B): a
+        // forged Intensive group must degrade to Joint and stay there
+        let mut g = Graph::new("t");
+        let s = Shape::nhwc(1, 14, 14, 32);
+        let i = g.add(OpKind::Pad, "in", s.clone(), 0, &[]);
+        let pw = g.add(OpKind::Pointwise, "pw", s.clone(), 32, &[i]);
+        let cv = g.add(OpKind::Conv2d { kh: 3, kw: 3, stride: 1 }, "cv",
+                       s.clone(), 32, &[pw]);
+        let mut sch = Schedule {
+            groups: vec![FusionGroup {
+                ops: vec![i, pw, cv],
+                kind: GroupKind::Intensive,
+                tile: Tile::whole(&s),
+                vec: 8,
+                unroll: 4,
+                threads: 1,
+                layout: Layout::Nhwc,
+            }],
+        };
+        assert_eq!(sch.revalidate_legality(&g), 1);
+        assert_eq!(sch.groups[0].kind, GroupKind::Joint);
+        assert_eq!(sch.revalidate_legality(&g), 0);
     }
 }

@@ -1,0 +1,217 @@
+//! Property tests for canonical subgraph fingerprints and schedule
+//! remapping — the PR 2 tentpole contract:
+//!
+//! 1. isomorphic subgraphs (same structure, permuted node ids) hash
+//!    equal and verify as isomorphic;
+//! 2. structurally distinct subgraphs on the seed models never collide
+//!    into an unverifiable class (fingerprint equality ⟹ verified
+//!    isomorphism there);
+//! 3. `Schedule::remap` round-trips through canonical-index space and a
+//!    remapped schedule covers the member exactly once with BIT-IDENTICAL
+//!    evaluator latency — the property that makes tune-once-per-class
+//!    sound.
+
+use std::collections::HashMap;
+
+use ago::costmodel::{CostEvaluator, MemoEvaluator};
+use ago::device::DeviceProfile;
+use ago::graph::fingerprint::{canonical_form, verify_isomorphism};
+use ago::graph::{Graph, NodeId, OpKind, Shape};
+use ago::models::{build, InputShape, ModelId};
+use ago::partition::{cluster, ClusterConfig};
+use ago::tuner::schedule::{Schedule, SubgraphView};
+use ago::tuner::search::{tune_with_evaluator, SearchConfig};
+
+/// pw -> (relu | dw) -> add diamond. `swap_branch_insertion` permutes
+/// the node IDS of the two branches without changing the structure (the
+/// add's input list keeps the same semantic order, so the cost model's
+/// predecessor-order contract is preserved).
+fn diamond_block(
+    g: &mut Graph,
+    input: NodeId,
+    tag: &str,
+    swap_branch_insertion: bool,
+) -> Vec<NodeId> {
+    let s = Shape::nhwc(1, 14, 14, 32);
+    let pw = g.add(OpKind::Pointwise, &format!("{tag}.pw"), s.clone(), 32,
+                   &[input]);
+    let (relu, dw);
+    if swap_branch_insertion {
+        dw = g.add(OpKind::Depthwise { kh: 3, kw: 3, stride: 1 },
+                   &format!("{tag}.dw"), s.clone(), 0, &[pw]);
+        relu = g.add(OpKind::ReLU, &format!("{tag}.r"), s.clone(), 0, &[pw]);
+    } else {
+        relu = g.add(OpKind::ReLU, &format!("{tag}.r"), s.clone(), 0, &[pw]);
+        dw = g.add(OpKind::Depthwise { kh: 3, kw: 3, stride: 1 },
+                   &format!("{tag}.dw"), s.clone(), 0, &[pw]);
+    }
+    let add = g.add(OpKind::Add, &format!("{tag}.add"), s, 0, &[relu, dw]);
+    vec![pw, relu, dw, add]
+}
+
+#[test]
+fn permuted_node_ids_hash_equal_and_verify() {
+    let mut g = Graph::new("t");
+    let s = Shape::nhwc(1, 14, 14, 32);
+    let i = g.add(OpKind::Pad, "in", s, 0, &[]);
+    let b1 = diamond_block(&mut g, i, "a", false);
+    let b2 = diamond_block(&mut g, *b1.last().unwrap(), "b", true);
+    let (c1, c2) = (canonical_form(&g, &b1), canonical_form(&g, &b2));
+    assert_eq!(
+        c1.fingerprint, c2.fingerprint,
+        "id permutation must not change the fingerprint"
+    );
+    assert!(verify_isomorphism(&g, &c1, &c2));
+    assert!(verify_isomorphism(&g, &c2, &c1));
+    // canonical orders put corresponding nodes at the same positions
+    for (a, b) in c1.order.iter().zip(&c2.order) {
+        assert_eq!(g.node(*a).kind, g.node(*b).kind);
+    }
+}
+
+/// Classes on the seed models are sound: fingerprint-equal pairs always
+/// pass exact isomorphism verification, and dedup actually happens where
+/// the zoo repeats blocks.
+#[test]
+fn seed_model_classes_verify_and_dedup() {
+    let mut any_dedup = false;
+    for m in [ModelId::Mbn, ModelId::Sqn, ModelId::Mnsn] {
+        let g = build(m, InputShape::Small);
+        let p = cluster(&g, ClusterConfig::adaptive(&g));
+        let views = SubgraphView::all(&g, &p);
+        let canon: Vec<_> = views
+            .iter()
+            .filter(|v| !v.is_empty())
+            .map(|v| canonical_form(&g, &v.order))
+            .collect();
+        let mut distinct = std::collections::BTreeSet::new();
+        for i in 0..canon.len() {
+            distinct.insert(canon[i].fingerprint);
+            for j in (i + 1)..canon.len() {
+                if canon[i].fingerprint == canon[j].fingerprint {
+                    any_dedup = true;
+                    assert!(
+                        verify_isomorphism(&g, &canon[i], &canon[j]),
+                        "{}: fingerprint collision between non-isomorphic \
+                         subgraphs {i} and {j}",
+                        m.name()
+                    );
+                } else {
+                    // distinct fingerprints must not verify — otherwise
+                    // the hash is splitting a real class
+                    assert!(
+                        !verify_isomorphism(&g, &canon[i], &canon[j]),
+                        "{}: isomorphic subgraphs {i}/{j} hashed apart",
+                        m.name()
+                    );
+                }
+            }
+        }
+        assert!(distinct.len() > 1, "{}: degenerate hashing", m.name());
+    }
+    assert!(any_dedup, "seed zoo should contain repeated blocks");
+}
+
+fn canon_to_ids(order: &[NodeId]) -> HashMap<NodeId, NodeId> {
+    order.iter().copied().enumerate().collect()
+}
+
+fn ids_to_canon(order: &[NodeId]) -> HashMap<NodeId, NodeId> {
+    order.iter().copied().enumerate().map(|(i, v)| (v, i)).collect()
+}
+
+#[test]
+fn remap_roundtrips_and_preserves_evaluator_latency() {
+    let dev = DeviceProfile::kirin990();
+    let g = build(ModelId::Mbn, InputShape::Small);
+    let p = cluster(&g, ClusterConfig::adaptive(&g));
+    let views = SubgraphView::all(&g, &p);
+    let canon: Vec<_> =
+        views.iter().map(|v| canonical_form(&g, &v.order)).collect();
+    // group into verified classes
+    let mut classes: Vec<Vec<usize>> = Vec::new();
+    for i in 0..views.len() {
+        if views[i].is_empty() {
+            continue;
+        }
+        let mut placed = false;
+        for cls in classes.iter_mut() {
+            if canon[cls[0]].fingerprint == canon[i].fingerprint
+                && verify_isomorphism(&g, &canon[cls[0]], &canon[i])
+            {
+                cls.push(i);
+                placed = true;
+                break;
+            }
+        }
+        if !placed {
+            classes.push(vec![i]);
+        }
+    }
+    let mut checked_members = 0;
+    for cls in classes.iter().filter(|c| c.len() >= 2) {
+        let rep = cls[0];
+        // tune the representative briefly
+        let mut evaluator = MemoEvaluator::new(&g, &dev);
+        let cfg = SearchConfig { budget: 200, ..Default::default() };
+        let r = tune_with_evaluator(&g, &views[rep], &cfg, None,
+                                    &mut evaluator);
+        // rep -> canonical -> rep is the identity
+        let canonical = r.best.remap(&ids_to_canon(&canon[rep].order))
+            .expect("rep ops are members");
+        let back = canonical.remap(&canon_to_ids(&canon[rep].order))
+            .expect("canonical indices in range");
+        assert_eq!(back, r.best, "canonical round-trip must be identity");
+        for &m in &cls[1..] {
+            let mut s: Schedule = canonical
+                .remap(&canon_to_ids(&canon[m].order))
+                .expect("canonical indices in range");
+            // verified isomorphism: the legality re-check finds nothing
+            assert_eq!(s.revalidate_legality(&g), 0);
+            // coverage: every member op exactly once
+            let mut covered: Vec<NodeId> = s
+                .groups
+                .iter()
+                .flat_map(|grp| grp.ops.clone())
+                .collect();
+            covered.sort_unstable();
+            let mut expect = views[m].order.clone();
+            expect.sort_unstable();
+            assert_eq!(covered, expect, "remap broke the op cover");
+            // bit-identical latency on the member
+            let mut member_eval = MemoEvaluator::new(&g, &dev);
+            let lat = member_eval.evaluate_schedule(&s);
+            assert_eq!(
+                lat, r.best_latency,
+                "remapped member must price identically to the rep"
+            );
+            checked_members += 1;
+        }
+    }
+    assert!(checked_members > 0, "MBN must have a multi-member class");
+}
+
+#[test]
+fn remap_rejects_foreign_maps() {
+    let mut g = Graph::new("t");
+    let s = Shape::nhwc(1, 8, 8, 8);
+    let i = g.add(OpKind::Pad, "in", s.clone(), 0, &[]);
+    let members = diamond_block(&mut g, i, "x", false);
+    let cf = canonical_form(&g, &members);
+    let mut evaluator = MemoEvaluator::new(&g, &DeviceProfile::qsd810());
+    let cfg = SearchConfig { budget: 50, ..Default::default() };
+    let view = SubgraphView {
+        order: cf.order.clone(),
+        complex: cf
+            .order
+            .iter()
+            .copied()
+            .filter(|&v| g.node(v).kind.is_complex())
+            .collect(),
+    };
+    let r = tune_with_evaluator(&g, &view, &cfg, None, &mut evaluator);
+    // a map that misses ops is a cache miss (None), never a panic
+    let partial: HashMap<NodeId, NodeId> =
+        [(members[0], 0)].into_iter().collect();
+    assert!(r.best.remap(&partial).is_none());
+}
