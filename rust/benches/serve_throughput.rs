@@ -1,0 +1,139 @@
+//! Serving throughput bench: the PR acceptance scenario, measured.
+//!
+//! Compiles two seed models through one shared TuningDb (the serve-side
+//! warm-start path), then answers a 1k+ request mixed workload through
+//! the batching scheduler with `SimExecutor`, asserting the acceptance
+//! invariants on every run:
+//!   - zero dropped requests
+//!   - bit-identical stats across two runs at the same seed
+//!   - batched (16) simulated throughput ≥ 2x the batch-size-1 config
+//!
+//! Writes `BENCH_serve.json` next to `BENCH_tuner.json` so serving
+//! throughput is tracked PR-over-PR. `--quick` shrinks the compile
+//! budget and workload for the CI smoke run; the assertions still hold.
+
+use std::sync::Arc;
+use std::time::Instant;
+
+use ago::coordinator::{CompileConfig, TuningDb};
+use ago::device::DeviceProfile;
+use ago::models::{InputShape, ModelId};
+use ago::serve::{
+    mixed_workload, serve, PlanRegistry, ServeConfig, ServeOutcome,
+    SimExecutor,
+};
+use ago::util::json::{num, obj, s};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let dev = DeviceProfile::kirin990();
+    let cfg = CompileConfig {
+        budget: if quick { 400 } else { 2000 },
+        workers: 0,
+        ..CompileConfig::new(dev)
+    };
+
+    // plans via the registry's warm-recompile path: one shared db, so
+    // SQN's compile reuses whatever block structure MBN already tuned
+    let mut db = TuningDb::new();
+    let mut registry = PlanRegistry::new();
+    let t0 = Instant::now();
+    registry
+        .ensure_model(ModelId::Mbn, InputShape::Small, &cfg, &mut db, None)
+        .expect("compile MBN");
+    registry
+        .ensure_model(ModelId::Sqn, InputShape::Small, &cfg, &mut db, None)
+        .expect("compile SQN");
+    let compile_secs = t0.elapsed().as_secs_f64();
+    println!(
+        "compiled {:?} in {compile_secs:.2}s ({} db entries)",
+        registry.models(),
+        db.len()
+    );
+
+    let n = if quick { 1000 } else { 4000 };
+    let seed = 42;
+    let workload = mixed_workload(&registry.models(), n, seed);
+    let run = |max_batch: usize| -> (ServeOutcome, f64) {
+        let t0 = Instant::now();
+        let out = serve(
+            &registry,
+            &ServeConfig { max_batch, queue_depth: 64, workers: 0 },
+            Arc::new(SimExecutor),
+            workload.clone(),
+        )
+        .expect("serve");
+        (out, t0.elapsed().as_secs_f64())
+    };
+
+    let (batched, wall_batched) = run(16);
+    assert_eq!(batched.stats.completed, n, "requests went missing");
+    assert_eq!(batched.stats.dropped, 0, "dropped requests");
+
+    // determinism gate: a second run at the same seed must serialize
+    // bit-identically
+    let (again, _) = run(16);
+    assert_eq!(
+        batched.stats.to_json().pretty(),
+        again.stats.to_json().pretty(),
+        "stats are not bit-identical across runs at the same seed"
+    );
+
+    let (unbatched, wall_unbatched) = run(1);
+    assert_eq!(unbatched.stats.completed, n);
+    let rps_batched = batched.stats.throughput_rps();
+    let rps_unbatched = unbatched.stats.throughput_rps();
+    let speedup = rps_batched / rps_unbatched;
+    assert!(
+        speedup >= 2.0,
+        "batched throughput {rps_batched:.0} rps < 2x unbatched \
+         {rps_unbatched:.0} rps ({speedup:.2}x)"
+    );
+
+    let mean_batch = n as f64 / batched.stats.batches.max(1) as f64;
+    println!(
+        "{n} requests, 2 models: batch1 {rps_unbatched:.0} rps, batch16 \
+         {rps_batched:.0} rps ({speedup:.2}x, mean batch {mean_batch:.1}, \
+         {} stalls)",
+        batched.stats.backpressure_stalls
+    );
+    for (name, m) in &batched.stats.per_model {
+        println!(
+            "  {name}: {} reqs / {} batches, p50 {:.3} ms, p99 {:.3} ms, \
+             {:.0} rps",
+            m.completed,
+            m.batches,
+            m.lat_p50_s * 1e3,
+            m.lat_p99_s * 1e3,
+            m.throughput_rps()
+        );
+    }
+    println!(
+        "wall: batched {wall_batched:.2}s, unbatched {wall_unbatched:.2}s \
+         (scheduler overhead; simulated time is the throughput basis)"
+    );
+
+    let record = obj(vec![
+        ("bench", s("serve_throughput")),
+        ("quick", num(if quick { 1.0 } else { 0.0 })),
+        ("models", s("MBN+SQN/small")),
+        ("requests", num(n as f64)),
+        ("seed", num(seed as f64)),
+        ("compile_secs", num(compile_secs)),
+        ("batch1_rps", num(rps_unbatched)),
+        ("batch16_rps", num(rps_batched)),
+        ("batched_speedup", num(speedup)),
+        ("mean_batch", num(mean_batch)),
+        ("batches", num(batched.stats.batches as f64)),
+        ("backpressure_stalls",
+         num(batched.stats.backpressure_stalls as f64)),
+        ("dropped", num(batched.stats.dropped as f64)),
+        ("serial_ms_batch16", num(batched.stats.serial_s * 1e3)),
+        ("serial_ms_batch1", num(unbatched.stats.serial_s * 1e3)),
+        ("wall_secs_batch16", num(wall_batched)),
+        ("wall_secs_batch1", num(wall_unbatched)),
+    ]);
+    std::fs::write("BENCH_serve.json", record.pretty())
+        .expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json");
+}

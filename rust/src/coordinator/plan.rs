@@ -123,25 +123,60 @@ pub fn to_json(m: &CompiledModel, model_name: &str, device: &str) -> Json {
                 })
                 .collect()),
         ),
+        // raw seconds (like the TuningDb's latency_s): a ms conversion
+        // is not an f64 identity, and the serving layer must replay the
+        // compiler's predicted latencies bit-exactly
         (
-            "subgraph_latency_ms",
-            arr(m
-                .subgraph_latency
-                .iter()
-                .map(|&l| num(l * 1e3))
-                .collect()),
+            "subgraph_latency_s",
+            arr(m.subgraph_latency.iter().map(|&l| num(l)).collect()),
         ),
     ])
 }
 
-/// A plan loaded from disk (schedules + partition; report is not
-/// persisted).
+/// Re-serialize a loaded plan in the exact layout [`to_json`] emits for
+/// the fields a [`LoadedPlan`] carries (the report-derived provenance
+/// fields are compile-time only and not reproduced). Loading the output
+/// yields a bit-identical `LoadedPlan`.
+pub fn loaded_to_json(p: &LoadedPlan) -> Json {
+    obj(vec![
+        ("model", s(&p.model)),
+        ("device", s(&p.device)),
+        ("total_latency_ms", num(p.total_latency_ms)),
+        (
+            "assign",
+            arr(p.partition.assign.iter().map(|&a| num(a as f64)).collect()),
+        ),
+        (
+            "schedules",
+            arr(p
+                .schedules
+                .iter()
+                .map(|sch| {
+                    arr(sch.groups.iter().map(group_to_json).collect())
+                })
+                .collect()),
+        ),
+        (
+            "subgraph_latency_s",
+            arr(p.subgraph_latency.iter().map(|&l| num(l)).collect()),
+        ),
+    ])
+}
+
+/// A plan loaded from disk (schedules + partition + per-subgraph
+/// latencies; report is not persisted). The serving layer
+/// (`serve::PlanRegistry`) consumes this directly, so `from_json`
+/// validates the structural invariants serving relies on: one schedule
+/// and one latency per subgraph, latencies finite and non-negative.
 #[derive(Clone, Debug)]
 pub struct LoadedPlan {
     pub model: String,
     pub device: String,
     pub partition: Partition,
     pub schedules: Vec<Schedule>,
+    /// Per-subgraph predicted latency, seconds (indexed by subgraph id —
+    /// what `serve::SimExecutor` replays).
+    pub subgraph_latency: Vec<f64>,
     pub total_latency_ms: f64,
 }
 
@@ -168,6 +203,31 @@ pub fn from_json(j: &Json) -> Result<LoadedPlan> {
             Ok(Schedule { groups })
         })
         .collect::<Result<Vec<_>>>()?;
+    let partition = Partition::from_assignment(assign);
+    if schedules.len() != partition.n_groups {
+        return Err(anyhow!(
+            "plan has {} schedules for {} subgraphs",
+            schedules.len(),
+            partition.n_groups
+        ));
+    }
+    let subgraph_latency = j
+        .get("subgraph_latency_s")
+        .and_then(|a| a.as_arr())
+        .ok_or_else(|| anyhow!("plan missing subgraph_latency_s"))?
+        .iter()
+        .map(|v| match v.as_f64() {
+            Some(l) if l.is_finite() && l >= 0.0 => Ok(l),
+            _ => Err(anyhow!("bad subgraph latency {v:?}")),
+        })
+        .collect::<Result<Vec<f64>>>()?;
+    if subgraph_latency.len() != partition.n_groups {
+        return Err(anyhow!(
+            "plan has {} subgraph latencies for {} subgraphs",
+            subgraph_latency.len(),
+            partition.n_groups
+        ));
+    }
     Ok(LoadedPlan {
         model: j
             .get("model")
@@ -179,8 +239,9 @@ pub fn from_json(j: &Json) -> Result<LoadedPlan> {
             .and_then(|d| d.as_str())
             .unwrap_or("")
             .to_string(),
-        partition: Partition::from_assignment(assign),
+        partition,
         schedules,
+        subgraph_latency,
         total_latency_ms: j
             .get("total_latency_ms")
             .and_then(|l| l.as_f64())
@@ -242,6 +303,19 @@ mod tests {
             }
         }
         assert!((back.total_latency_ms - m.latency_ms()).abs() < 1e-9);
+        // per-subgraph latencies survive BIT-exactly (raw seconds in the
+        // JSON; the serving layer replays these)
+        assert_eq!(back.subgraph_latency.len(), m.subgraph_latency.len());
+        for (a, b) in back.subgraph_latency.iter().zip(&m.subgraph_latency) {
+            assert_eq!(a.to_bits(), b.to_bits(), "subgraph latency drifted");
+        }
+        // loaded_to_json reproduces a loadable, bit-identical plan
+        let re = from_json(&loaded_to_json(&back)).unwrap();
+        assert_eq!(re.partition.assign, back.partition.assign);
+        assert_eq!(re.schedules, back.schedules);
+        for (a, b) in re.subgraph_latency.iter().zip(&back.subgraph_latency) {
+            assert_eq!(a.to_bits(), b.to_bits());
+        }
     }
 
     #[test]
@@ -269,5 +343,37 @@ mod tests {
                 .unwrap()
         )
         .is_err()); // group missing kind
+        let sched = r#"[[{"ops": [0], "kind": "simple", "tile": [1, 1, 1]}]]"#;
+        // schedule count must match the partition
+        assert!(from_json(
+            &Json::parse(&format!(
+                r#"{{"assign": [0, 1], "schedules": {sched},
+                    "subgraph_latency_s": [0.001, 0.001]}}"#
+            ))
+            .unwrap()
+        )
+        .is_err());
+        // latency vector must match too; entries finite and non-negative
+        for lats in ["[]", "[1.0, 2.0]", "[-1.0]", "[\"x\"]"] {
+            assert!(
+                from_json(
+                    &Json::parse(&format!(
+                        r#"{{"assign": [0], "schedules": {sched},
+                            "subgraph_latency_s": {lats}}}"#
+                    ))
+                    .unwrap()
+                )
+                .is_err(),
+                "accepted bad latencies {lats}"
+            );
+        }
+        // missing latencies entirely
+        assert!(from_json(
+            &Json::parse(&format!(
+                r#"{{"assign": [0], "schedules": {sched}}}"#
+            ))
+            .unwrap()
+        )
+        .is_err());
     }
 }

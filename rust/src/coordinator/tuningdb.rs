@@ -16,8 +16,11 @@
 //! --tuning-db db.json` loads the db, compiles (exact same-device hits
 //! skip search entirely; same-structure entries from another device seed
 //! the joint tuning round), and writes the db back with everything newly
-//! tuned. Serialization is deterministic (BTreeMap order) so identical
-//! states produce identical bytes.
+//! tuned. Serialization is deterministic (BTreeMap order) and byte-stable
+//! under round-trips: latency is stored in raw seconds (`latency_s`)
+//! because a ms conversion is not an f64 identity — `(a * 1e-3) * 1e3 !=
+//! a` for ~15% of doubles — and serialize → load → re-serialize must be
+//! byte-identical (pinned by `tests/tuningdb_props.rs`).
 
 use std::collections::BTreeMap;
 
@@ -119,7 +122,8 @@ impl TuningDb {
 
     pub fn to_json(&self) -> Json {
         obj(vec![
-            ("version", num(1.0)),
+            // version 2: latency_s (raw seconds) replaced latency_ms
+            ("version", num(2.0)),
             (
                 "entries",
                 arr(self.entries.values().map(entry_to_json).collect()),
@@ -128,6 +132,17 @@ impl TuningDb {
     }
 
     pub fn from_json(j: &Json) -> Result<TuningDb> {
+        // a version field, when present, must be ours: v1 stored
+        // latency_ms, and failing per-entry would blame the wrong field
+        if let Some(v) = j.get("version").and_then(|v| v.as_usize()) {
+            if v != 2 {
+                return Err(anyhow!(
+                    "unsupported tuning db version {v} (this build reads \
+                     v2, which stores latency_s in raw seconds); re-tune \
+                     or migrate the db"
+                ));
+            }
+        }
         let entries = j
             .get("entries")
             .and_then(|e| e.as_arr())
@@ -149,6 +164,17 @@ impl TuningDb {
         let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
         TuningDb::from_json(&j)
     }
+
+    /// Load `path` when it exists, start empty otherwise. A corrupt
+    /// existing file is still an error — silently discarding a tuning
+    /// history would force full cold recompiles.
+    pub fn load_or_new(path: &str) -> Result<TuningDb> {
+        if std::path::Path::new(path).exists() {
+            TuningDb::load(path)
+        } else {
+            Ok(TuningDb::new())
+        }
+    }
 }
 
 fn entry_to_json(e: &DbEntry) -> Json {
@@ -159,7 +185,10 @@ fn entry_to_json(e: &DbEntry) -> Json {
         // JSON number grammar (f64 mantissa)
         ("fingerprint", s(&format!("{:016x}", e.fingerprint))),
         ("n_ops", num(e.n_ops as f64)),
-        ("latency_ms", num(e.latency * 1e3)),
+        // raw seconds, no unit conversion: f64 Display is shortest
+        // round-trip, so the stored value survives serialize → parse
+        // exactly and re-serialization is byte-identical
+        ("latency_s", num(e.latency)),
         ("evals", num(e.evals as f64)),
         (
             "schedule",
@@ -210,17 +239,21 @@ fn entry_from_json(j: &Json) -> Result<DbEntry> {
             "db entry {fp_hex} does not cover 0..{n_ops} exactly once"
         ));
     }
+    let latency = match j.get("latency_s").and_then(|l| l.as_f64()) {
+        Some(l) if l.is_finite() && l >= 0.0 => l,
+        _ => {
+            return Err(anyhow!(
+                "db entry {fp_hex} missing or invalid latency_s"
+            ))
+        }
+    };
     Ok(DbEntry {
         device,
         variant,
         fingerprint,
         n_ops,
         schedule,
-        latency: j
-            .get("latency_ms")
-            .and_then(|l| l.as_f64())
-            .unwrap_or(f64::INFINITY)
-            * 1e-3,
+        latency,
         evals: j.get("evals").and_then(|e| e.as_usize()).unwrap_or(0),
     })
 }
@@ -314,20 +347,33 @@ mod tests {
     fn rejects_corrupt_entries() {
         // schedule not covering 0..n_ops
         let bad = r#"{"entries": [{"device": "d", "variant": "ago",
-            "fingerprint": "ff", "n_ops": 3, "latency_ms": 1, "evals": 1,
+            "fingerprint": "ff", "n_ops": 3, "latency_s": 0.001, "evals": 1,
             "schedule": [{"ops": [0, 2], "kind": "simple",
                           "tile": [1, 1, 1]}]}]}"#;
         assert!(TuningDb::from_json(&Json::parse(bad).unwrap()).is_err());
         // bad fingerprint hex
         let bad2 = r#"{"entries": [{"device": "d", "variant": "ago",
-            "fingerprint": "zz", "n_ops": 0, "latency_ms": 1, "evals": 1,
+            "fingerprint": "zz", "n_ops": 0, "latency_s": 0.001, "evals": 1,
             "schedule": []}]}"#;
         assert!(TuningDb::from_json(&Json::parse(bad2).unwrap()).is_err());
         // missing variant
         let bad3 = r#"{"entries": [{"device": "d", "fingerprint": "ff",
-            "n_ops": 0, "latency_ms": 1, "evals": 1, "schedule": []}]}"#;
+            "n_ops": 0, "latency_s": 0.001, "evals": 1, "schedule": []}]}"#;
         assert!(TuningDb::from_json(&Json::parse(bad3).unwrap()).is_err());
+        // missing or negative latency
+        let bad4 = r#"{"entries": [{"device": "d", "variant": "ago",
+            "fingerprint": "ff", "n_ops": 0, "evals": 1, "schedule": []}]}"#;
+        assert!(TuningDb::from_json(&Json::parse(bad4).unwrap()).is_err());
+        let bad5 = r#"{"entries": [{"device": "d", "variant": "ago",
+            "fingerprint": "ff", "n_ops": 0, "latency_s": -1, "evals": 1,
+            "schedule": []}]}"#;
+        assert!(TuningDb::from_json(&Json::parse(bad5).unwrap()).is_err());
         assert!(TuningDb::from_json(&Json::parse("{}").unwrap()).is_err());
+        // a v1 (latency_ms era) db is rejected up front with a version
+        // diagnostic, not a misleading per-entry error
+        let v1 = r#"{"version": 1, "entries": []}"#;
+        let err = TuningDb::from_json(&Json::parse(v1).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("version 1"), "{err:#}");
     }
 
     #[test]
@@ -339,6 +385,9 @@ mod tests {
         db.save(path).unwrap();
         let back = TuningDb::load(path).unwrap();
         assert_eq!(back.len(), 1);
+        assert_eq!(TuningDb::load_or_new(path).unwrap().len(), 1);
         std::fs::remove_file(path).ok();
+        // absent file: fresh db, not an error
+        assert!(TuningDb::load_or_new(path).unwrap().is_empty());
     }
 }

@@ -59,6 +59,14 @@ impl Fnv {
         self.write_u64(x as u64);
     }
 
+    /// Hash raw bytes (names, paths). NOT equivalent to `write_u64` on
+    /// the same bytes — that one streams a fixed 8-byte LE encoding.
+    pub fn write_bytes(&mut self, bytes: &[u8]) {
+        for &b in bytes {
+            self.0 = (self.0 ^ b as u64).wrapping_mul(0x100_0000_01b3);
+        }
+    }
+
     pub fn finish(&self) -> u64 {
         self.0
     }

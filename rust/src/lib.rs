@@ -17,6 +17,7 @@ pub mod models;
 pub mod partition;
 pub mod reformer;
 pub mod runtime;
+pub mod serve;
 pub mod simulator;
 pub mod tuner;
 pub mod util;

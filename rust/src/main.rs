@@ -3,9 +3,12 @@
 //! Subcommands:
 //!   compile    run the full pipeline on a model and report latency
 //!   partition  compare AGO vs Relay partitioning (Fig. 14 view)
+//!   serve      answer a batched multi-model workload from compiled plans
 //!   run        execute AOT artifacts through the PJRT runtime
 //!   models     list available model graphs
 //!   devices    list device profiles
+
+use std::sync::Arc;
 
 use ago::baselines::{ansor_compile, handlib_compile};
 use ago::coordinator::{
@@ -16,6 +19,10 @@ use ago::graph::Graph;
 use ago::models::{build, InputShape, ModelId};
 use ago::partition::{relay_partition, PartitionReport, WeightParams};
 use ago::runtime::{Engine, TensorData};
+use ago::serve::{
+    mixed_workload, serve, Executor, PjrtExecutor, PlanRegistry,
+    ServeConfig, SimExecutor,
+};
 use ago::util::benchkit::{fmt_ms, fmt_x, Table};
 use ago::util::cli::Args;
 use ago::util::{logging, Rng};
@@ -26,6 +33,7 @@ fn main() {
     let code = match args.subcommand.as_deref() {
         Some("compile") => cmd_compile(&args),
         Some("partition") => cmd_partition(&args),
+        Some("serve") => cmd_serve(&args),
         Some("run") => cmd_run(&args),
         Some("models") => {
             for m in ModelId::all() {
@@ -57,13 +65,20 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: ago <compile|partition|run|models|devices> [opts]\n\
+                "usage: ago <compile|partition|serve|run|models|devices> \
+                 [opts]\n\
                  \n\
                  compile   --model mbn --shape small|middle|large \\\n\
                  \x20         --device kirin990|qsd810 --budget 20000 \\\n\
                  \x20         --variant ago|ni|nr --frontend auto|relay \\\n\
                  \x20         [--baselines] [--tuning-db db.json] [--cold]\n\
                  partition --model mvt --shape large\n\
+                 serve     --plans dir [--models mbn,sqn --shape small \\\n\
+                 \x20         --device kirin990 --budget 800] \\\n\
+                 \x20         [--tuning-db db.json] [--requests 1000] \\\n\
+                 \x20         [--seed 42] [--batch 8] [--queue-depth 64] \\\n\
+                 \x20         [--workers 0] [--executor sim|pjrt] \\\n\
+                 \x20         [--stats-out stats.json]\n\
                  run       --artifacts artifacts [--program NAME | --demo]"
             );
             2
@@ -126,19 +141,19 @@ fn cmd_compile(args: &Args) -> i32 {
     // warm-start this one, write everything newly tuned back
     let db_path = args.get("tuning-db");
     let mut db = match db_path {
-        Some(p) if std::path::Path::new(p).exists() => {
-            match TuningDb::load(p) {
-                Ok(db) => {
+        Some(p) => match TuningDb::load_or_new(p) {
+            Ok(db) => {
+                if !db.is_empty() {
                     println!("tuning db {p}: {} entries loaded", db.len());
-                    db
                 }
-                Err(e) => {
-                    eprintln!("cannot load tuning db {p}: {e:#}");
-                    return 1;
-                }
+                db
             }
-        }
-        _ => TuningDb::new(),
+            Err(e) => {
+                eprintln!("cannot load tuning db {p}: {e:#}");
+                return 1;
+            }
+        },
+        None => TuningDb::new(),
     };
     let prior_entries = db.len();
     let t0 = std::time::Instant::now();
@@ -225,6 +240,206 @@ fn cmd_partition(args: &Args) -> i32 {
         if *a > 0 || *r > 0 {
             println!("  [2^{i:2}, 2^{:2}): {a:4} | {r:4}", i + 1);
         }
+    }
+    0
+}
+
+/// `ago serve`: load compiled plans (compiling any missing `--models`
+/// through the shared tuning db first), generate a deterministic mixed
+/// workload, and answer it through the batching scheduler. With the
+/// default `sim` executor the printed stats are bit-reproducible for a
+/// fixed (plans, seed, batch, queue-depth) — worker count changes wall
+/// time only.
+fn cmd_serve(args: &Args) -> i32 {
+    let plans_dir = args.get_or("plans", "plans");
+    let mut registry = match PlanRegistry::load_dir(plans_dir) {
+        Ok(r) => r,
+        Err(e) => {
+            eprintln!("cannot load plans from {plans_dir}: {e:#}");
+            return 1;
+        }
+    };
+    if !registry.is_empty() {
+        println!("{} plan(s) loaded from {plans_dir}", registry.len());
+    }
+    // --models mbn,sqn: compile (through the tuning db, so repeated
+    // block structure warm-starts) any model with no plan yet, and
+    // persist the new plans next to the loaded ones
+    if let Some(list) = args.get("models") {
+        let Some(dev) =
+            DeviceProfile::by_name(args.get_or("device", "kirin990"))
+        else {
+            eprintln!("unknown --device (kirin990|qsd810)");
+            return 2;
+        };
+        let Some(shape) = InputShape::parse(args.get_or("shape", "small"))
+        else {
+            eprintln!("unknown --shape (small|middle|large)");
+            return 2;
+        };
+        let cfg = CompileConfig {
+            budget: args.get_usize("budget", 800),
+            workers: args.get_usize("workers", 0),
+            ..CompileConfig::new(dev)
+        };
+        let db_path = args.get("tuning-db");
+        let mut db = match db_path {
+            Some(p) => match TuningDb::load_or_new(p) {
+                Ok(db) => {
+                    if !db.is_empty() {
+                        println!(
+                            "tuning db {p}: {} entries loaded",
+                            db.len()
+                        );
+                    }
+                    db
+                }
+                Err(e) => {
+                    eprintln!("cannot load tuning db {p}: {e:#}");
+                    return 1;
+                }
+            },
+            None => TuningDb::new(),
+        };
+        for tok in list.split(',').map(str::trim).filter(|t| !t.is_empty())
+        {
+            let Some(id) = ModelId::parse(tok) else {
+                eprintln!("unknown model {tok:?} in --models");
+                return 2;
+            };
+            let had = registry.get(id.name()).is_some();
+            match registry.ensure_model(
+                id,
+                shape,
+                &cfg,
+                &mut db,
+                Some(std::path::Path::new(plans_dir)),
+            ) {
+                Ok(sp) => {
+                    if !had {
+                        println!(
+                            "compiled {} ({} subgraphs, predicted {} ms) \
+                             -> {plans_dir}/",
+                            sp.model,
+                            sp.plan.partition.n_groups,
+                            fmt_ms(sp.plan.total_latency_ms)
+                        );
+                    }
+                }
+                Err(e) => {
+                    eprintln!("cannot compile {tok}: {e:#}");
+                    return 1;
+                }
+            }
+        }
+        if let Some(p) = db_path {
+            if let Err(e) = db.save(p) {
+                eprintln!("failed to write tuning db: {e:#}");
+                return 1;
+            }
+            println!("tuning db written to {p} ({} entries)", db.len());
+        }
+    } else {
+        // compile-side flags only act when --models requests compiles;
+        // accepting them silently would let a user believe their tuning
+        // history was in play when it was not
+        for flag in ["tuning-db", "device", "shape", "budget"] {
+            if args.get(flag).is_some() {
+                eprintln!(
+                    "warning: --{flag} has no effect without --models \
+                     (plans are served as loaded)"
+                );
+            }
+        }
+    }
+    if registry.is_empty() {
+        eprintln!(
+            "no plans to serve: pass --plans DIR containing *.plan.json \
+             files and/or --models mbn,sqn to compile them"
+        );
+        return 2;
+    }
+    let n = args.get_usize("requests", 1000);
+    let seed = args.get_u64("seed", 42);
+    let cfg = ServeConfig {
+        max_batch: args.get_usize("batch", 8),
+        queue_depth: args.get_usize("queue-depth", 64),
+        workers: args.get_usize("workers", 0),
+    };
+    let exec: Arc<dyn Executor> = match args.get_or("executor", "sim") {
+        "sim" => Arc::new(SimExecutor),
+        "pjrt" => {
+            let dir = args.get_or("artifacts", "artifacts");
+            match PjrtExecutor::new(dir) {
+                Ok(e) => Arc::new(e),
+                Err(e) => {
+                    eprintln!(
+                        "cannot open PJRT executor: {e:#}\n\
+                         run `make artifacts` first, or use --executor sim"
+                    );
+                    return 1;
+                }
+            }
+        }
+        other => {
+            eprintln!("unknown --executor {other:?} (sim|pjrt)");
+            return 2;
+        }
+    };
+    let models = registry.models();
+    println!(
+        "serving {n} requests across {models:?} (seed {seed}, batch {}, \
+         queue depth {}, {} executor)",
+        cfg.max_batch,
+        cfg.queue_depth,
+        exec.name()
+    );
+    let workload = mixed_workload(&models, n, seed);
+    let out = match serve(&registry, &cfg, exec, workload) {
+        Ok(o) => o,
+        Err(e) => {
+            eprintln!("serve failed: {e:#}");
+            return 1;
+        }
+    };
+    let st = &out.stats;
+    let mut t = Table::new(&[
+        "model", "reqs", "batches", "mean batch", "p50(ms)", "p99(ms)",
+        "rps",
+    ]);
+    for (name, m) in &st.per_model {
+        t.row(vec![
+            name.clone(),
+            m.completed.to_string(),
+            m.batches.to_string(),
+            format!("{:.1}", m.mean_batch()),
+            fmt_ms(m.lat_p50_s * 1e3),
+            fmt_ms(m.lat_p99_s * 1e3),
+            format!("{:.0}", m.throughput_rps()),
+        ]);
+    }
+    t.print();
+    println!(
+        "total: {}/{} completed, {} dropped, {} batches, {} stalls, \
+         {:.0} rps serial, wall {:.2}s",
+        st.completed,
+        st.requests,
+        st.dropped,
+        st.batches,
+        st.backpressure_stalls,
+        st.throughput_rps(),
+        st.wall_s
+    );
+    if let Some(path) = args.get("stats-out") {
+        if let Err(e) = std::fs::write(path, st.to_json().pretty()) {
+            eprintln!("failed to write {path}: {e}");
+            return 1;
+        }
+        println!("stats written to {path}");
+    }
+    if st.dropped > 0 {
+        eprintln!("ERROR: dropped {} requests", st.dropped);
+        return 1;
     }
     0
 }

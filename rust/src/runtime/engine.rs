@@ -161,15 +161,23 @@ impl Engine {
     }
 
     /// Random weights for every non-activation input of a program (the
-    /// first input is the activation; the rest are parameters).
+    /// first input is the activation; the rest are parameters). The
+    /// stream is derived from the explicit `seed` mixed with the program
+    /// name, so the tensors are a pure function of (program, seed) — not
+    /// of shared RNG state or call order — and every caller (`run_chain`,
+    /// the e2e tests, the serve layer's `PjrtExecutor`) reproduces them
+    /// run-to-run.
     pub fn random_params(
         &self,
         meta: &ProgramMeta,
-        rng: &mut Rng,
+        seed: u64,
     ) -> Vec<TensorData> {
+        let mut h = crate::graph::fingerprint::Fnv::new();
+        h.write_bytes(meta.name.as_bytes());
+        let mut rng = Rng::new(seed ^ h.finish());
         meta.inputs[1..]
             .iter()
-            .map(|m| TensorData::random(&m.shape, rng))
+            .map(|m| TensorData::random(&m.shape, &mut rng))
             .collect()
     }
 
@@ -188,13 +196,15 @@ impl Engine {
         }
         // pre-generate parameters AND pre-convert them to literals: the
         // timed region converts only the flowing activation (§Perf —
-        // parameter conversion dominated the request loop before this)
+        // parameter conversion dominated the request loop before this).
+        // random_params mixes the program name into the seed; the chain
+        // position is mixed in here as well so a chain that repeats a
+        // program still draws independent weights per stage.
         let mut params: Vec<Vec<xla::Literal>> = Vec::new();
         for (i, n) in names.iter().enumerate() {
             let meta = self.manifest.get(n)?.clone();
-            let mut rng = Rng::new(seed ^ ((i as u64) << 8));
             params.push(
-                self.random_params(&meta, &mut rng)
+                self.random_params(&meta, seed ^ ((i as u64) << 8))
                     .iter()
                     .map(|t| t.to_literal())
                     .collect::<Result<Vec<_>>>()?,
@@ -312,6 +322,26 @@ mod tests {
         let w = TensorData::random(&[16, 32], &mut rng);
         let b = TensorData::random(&[32], &mut rng);
         assert!(e.execute("pw_n1h28w28i16o32", &[bad, w, b]).is_err());
+    }
+
+    #[test]
+    fn random_params_are_a_pure_function_of_program_and_seed() {
+        let Some(e) = engine() else { return };
+        let meta = e.manifest.get("pw_n1h28w28i16o32").unwrap().clone();
+        let a = e.random_params(&meta, 7);
+        let b = e.random_params(&meta, 7);
+        assert_eq!(a.len(), meta.inputs.len() - 1);
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.shape, y.shape);
+            assert_eq!(x.data, y.data, "same (program, seed) must repeat");
+        }
+        // a different seed draws a different stream
+        let c = e.random_params(&meta, 8);
+        assert!(a.iter().zip(&c).any(|(x, y)| x.data != y.data));
+        // a different program draws a different stream from the same seed
+        let meta2 = e.manifest.get("dw3_n1h28w28c32").unwrap().clone();
+        let d = e.random_params(&meta2, 7);
+        assert_ne!(d[0].data, a[0].data);
     }
 
     #[test]

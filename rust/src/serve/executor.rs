@@ -1,0 +1,383 @@
+//! The serving execution seam: one trait, two backends.
+//!
+//! [`SimExecutor`] is the backend every checkout can run: it replays the
+//! plan's per-subgraph predicted latencies through the trace-driven cache
+//! simulator (once per plan, at registration — see [`SimProfile`]) and
+//! prices a batch as pure arithmetic over that profile. Deterministic to
+//! the bit, thread-safe, no artifacts required.
+//!
+//! [`PjrtExecutor`] wraps the real `runtime::Engine`: requests execute
+//! actual HLO artifacts on the PJRT CPU client. It needs the AOT artifact
+//! catalog (`make artifacts`), so everything built on it skips gracefully
+//! on a fresh checkout, exactly like the runtime tests.
+//!
+//! The contract between the two: both consume the same [`ServingPlan`]
+//! and produce the same [`Response`] shape with an executed-exactly-once
+//! checksum. Sim latencies are simulated (bit-deterministic); PJRT
+//! latencies are measured wall time (real, not deterministic). The
+//! scheduler and its statistics are backend-agnostic.
+
+use std::collections::BTreeMap;
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::plan::LoadedPlan;
+use crate::device::DeviceProfile;
+use crate::graph::fingerprint::Fnv;
+use crate::runtime::{Engine, TensorData};
+use crate::simulator::trace::tensor_walk;
+use crate::simulator::Hierarchy;
+use crate::util::rng::splitmix64;
+use crate::util::Rng;
+
+use super::registry::ServingPlan;
+use super::{Request, Response};
+
+/// A serving backend. `execute_batch` must be callable from any worker
+/// thread (`&self`; interior mutability where a backend needs state) and
+/// must return one [`Response`] per request, in batch order.
+pub trait Executor: Send + Sync {
+    fn name(&self) -> &'static str;
+
+    fn execute_batch(
+        &self,
+        plan: &ServingPlan,
+        batch: &[Request],
+    ) -> Result<Vec<Response>>;
+}
+
+/// Fraction of each subgraph's predicted latency attributed to
+/// batch-shared work: parameter/weight streaming, which a batched kernel
+/// pays once per weight tile and applies to every request in the batch.
+/// The remaining fraction is per-request activation traffic + compute.
+/// A synthetic decomposition (plans do not carry a weight/activation
+/// split), set to reflect the paper's premise that mobile inference is
+/// memory-bound; the serve bench gates the consequence (batched
+/// throughput ≥ 2x batch-1) rather than the constant.
+pub const WEIGHT_FRACTION: f64 = 0.7;
+
+/// Sampled weight-tile footprint cap: 8192 f32 elements = 32 KiB, an L1/
+/// L2-resident tile on both device profiles. The simulator walks one tile
+/// cold and once warm; the measured cycle ratio is the amortization
+/// factor for requests 2..k of a batch (the tile stays resident while a
+/// batched kernel applies it to every request).
+const SAMPLE_ELEMS_CAP: usize = 8192;
+
+/// Per-plan replay of the predicted subgraph latencies through the cache
+/// simulator, computed once when a plan is registered. Batch pricing is
+/// then arithmetic over the profile — a pure function, so serving stays
+/// deterministic and fast no matter how many requests flow.
+#[derive(Clone, Debug)]
+pub struct SimProfile {
+    /// Per-subgraph batch-shared time, seconds ([`WEIGHT_FRACTION`]).
+    weight_s: Vec<f64>,
+    /// Per-subgraph per-request time, seconds (the rest).
+    act_s: Vec<f64>,
+    /// Warm-over-cold cycle ratio of the sampled weight-tile walk; the
+    /// cost of re-touching resident weights for each additional request.
+    warm_ratio: Vec<f64>,
+    /// Per-batch graph-executor dispatch time, seconds (paid once per
+    /// batch — the same `n_groups * dispatch_us` the compile-side total
+    /// pays once per single-stream inference).
+    dispatch_s: f64,
+}
+
+impl SimProfile {
+    pub fn build(plan: &LoadedPlan, dev: &DeviceProfile) -> SimProfile {
+        let n = plan.subgraph_latency.len();
+        let mut weight_s = Vec::with_capacity(n);
+        let mut act_s = Vec::with_capacity(n);
+        let mut warm_ratio = Vec::with_capacity(n);
+        for &lat in &plan.subgraph_latency {
+            let w = WEIGHT_FRACTION * lat;
+            // exact by Sterbenz's lemma (w ∈ [lat/2, lat]): w + a == lat
+            let a = lat - w;
+            // the weight footprint this latency implies at DRAM
+            // bandwidth, capped to one resident tile
+            let elems = ((w * dev.dram_gbps * 1e9 / 4.0) as usize)
+                .clamp(64, SAMPLE_ELEMS_CAP);
+            let mut h = Hierarchy::for_device(dev);
+            tensor_walk(&mut h, 0, elems, 1);
+            let cold = h.total_cycles;
+            tensor_walk(&mut h, 0, elems, 1);
+            let warm = h.total_cycles - cold;
+            warm_ratio.push(if cold > 0.0 { warm / cold } else { 1.0 });
+            weight_s.push(w);
+            act_s.push(a);
+        }
+        SimProfile {
+            weight_s,
+            act_s,
+            warm_ratio,
+            dispatch_s: plan.partition.n_groups as f64
+                * dev.dispatch_us
+                * 1e-6,
+        }
+    }
+
+    /// Simulated service time of one batch of `k` requests, seconds:
+    /// dispatch once, weights once plus the warm re-touch per additional
+    /// request, activations/compute per request. `k = 1` reproduces the
+    /// plan's predicted single-request latency (subgraph sum + dispatch).
+    pub fn batch_seconds(&self, k: usize) -> f64 {
+        let k = k.max(1);
+        let mut total = self.dispatch_s;
+        for i in 0..self.weight_s.len() {
+            total += self.weight_s[i]
+                * (1.0 + (k - 1) as f64 * self.warm_ratio[i])
+                + k as f64 * self.act_s[i];
+        }
+        total
+    }
+}
+
+/// Deterministic simulated execution — the backend the scheduler tests,
+/// the CI smoke path, and the throughput bench run on every checkout.
+pub struct SimExecutor;
+
+impl Executor for SimExecutor {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn execute_batch(
+        &self,
+        plan: &ServingPlan,
+        batch: &[Request],
+    ) -> Result<Vec<Response>> {
+        if batch.is_empty() {
+            return Ok(Vec::new());
+        }
+        let k = batch.len();
+        // fair share: every request in the batch observes the same
+        // service latency (single simulated device, batch-synchronous)
+        let per_request = plan.sim.batch_seconds(k) / k as f64;
+        Ok(batch
+            .iter()
+            .map(|r| {
+                let mut s = plan.salt ^ r.seed;
+                Response {
+                    id: r.id,
+                    model: r.model.clone(),
+                    batch_size: k,
+                    latency_s: per_request,
+                    checksum: splitmix64(&mut s),
+                }
+            })
+            .collect())
+    }
+}
+
+/// An artifact chain a model serves through: each program's first input
+/// is the previous output (see `Engine::run_chain`).
+#[derive(Clone, Debug)]
+pub struct Chain {
+    pub names: Vec<String>,
+    pub input_shape: Vec<usize>,
+}
+
+/// Real-execution backend over the AOT artifact catalog. Each model is
+/// mapped to a representative artifact chain (plans carry schedules, not
+/// lowered kernels — per-plan artifact emission is a later PR), so this
+/// backend validates the serving machinery end-to-end with real numerics
+/// rather than plan-specific code. Batches execute request-by-request
+/// behind one engine lock: the catalog's kernels are batch-1, so PJRT
+/// serving measures real latencies without the simulator's batch
+/// amortization.
+pub struct PjrtExecutor {
+    engine: Mutex<Engine>,
+    chains: BTreeMap<String, Chain>,
+}
+
+impl PjrtExecutor {
+    /// Open the engine over `artifact_dir` and register default chains
+    /// for the seed serving models (MBN, SQN).
+    pub fn new(artifact_dir: &str) -> Result<PjrtExecutor> {
+        let engine = Engine::new(artifact_dir)
+            .with_context(|| format!("opening artifacts at {artifact_dir}"))?;
+        let mut chains = BTreeMap::new();
+        chains.insert(
+            "MBN".to_string(),
+            Chain {
+                names: vec![
+                    "dw3_n1h14w14c32".to_string(),
+                    "pw_n1h14w14i32o64".to_string(),
+                ],
+                input_shape: vec![1, 14, 14, 32],
+            },
+        );
+        chains.insert(
+            "SQN".to_string(),
+            Chain {
+                names: vec![
+                    "pw_n1h28w28i16o32".to_string(),
+                    "dw3_n1h28w28c32".to_string(),
+                ],
+                input_shape: vec![1, 28, 28, 16],
+            },
+        );
+        Ok(PjrtExecutor { engine: Mutex::new(engine), chains })
+    }
+
+    /// Register (or replace) the chain a model serves through.
+    pub fn set_chain(&mut self, model: &str, chain: Chain) {
+        self.chains.insert(model.to_string(), chain);
+    }
+
+    fn chain_for(&self, model: &str) -> Result<&Chain> {
+        self.chains.get(model).ok_or_else(|| {
+            anyhow!(
+                "no artifact chain registered for model {model:?} \
+                 (known: {:?})",
+                self.chains.keys().collect::<Vec<_>>()
+            )
+        })
+    }
+}
+
+impl Executor for PjrtExecutor {
+    fn name(&self) -> &'static str {
+        "pjrt"
+    }
+
+    fn execute_batch(
+        &self,
+        plan: &ServingPlan,
+        batch: &[Request],
+    ) -> Result<Vec<Response>> {
+        let chain = self.chain_for(&plan.model)?;
+        let mut engine = self.engine.lock().expect("engine mutex");
+        let k = batch.len();
+        let mut out = Vec::with_capacity(k);
+        for r in batch {
+            let mut rng = Rng::new(r.seed);
+            let x = TensorData::random(&chain.input_shape, &mut rng);
+            let t0 = Instant::now();
+            let (y, _) = engine
+                .run_chain(&chain.names, x, r.seed)
+                .with_context(|| {
+                    format!("request {} on model {}", r.id, plan.model)
+                })?;
+            let latency_s = t0.elapsed().as_secs_f64();
+            let mut h = Fnv::new();
+            for v in &y.data {
+                h.write_u64(v.to_bits() as u64);
+            }
+            out.push(Response {
+                id: r.id,
+                model: r.model.clone(),
+                batch_size: k,
+                latency_s,
+                checksum: h.finish(),
+            });
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::testutil::toy_plan;
+    use crate::serve::PlanRegistry;
+
+    fn registered(model: &str, lats_us: &[f64]) -> std::sync::Arc<ServingPlan> {
+        let mut reg = PlanRegistry::new();
+        reg.register(toy_plan(model, "kirin990", lats_us)).unwrap()
+    }
+
+    #[test]
+    fn batch1_matches_plan_prediction() {
+        let sp = registered("T", &[30.0, 90.0, 45.0]);
+        let dev = DeviceProfile::kirin990();
+        let want = (30.0 + 90.0 + 45.0) * 1e-6
+            + 3.0 * dev.dispatch_us * 1e-6;
+        let got = sp.sim.batch_seconds(1);
+        assert!(
+            (got - want).abs() < 1e-15,
+            "batch-1 sim {got} != predicted {want}"
+        );
+    }
+
+    #[test]
+    fn batching_amortizes_shared_work() {
+        let sp = registered("T", &[30.0, 90.0, 45.0]);
+        let per1 = sp.sim.batch_seconds(1);
+        let per8 = sp.sim.batch_seconds(8) / 8.0;
+        let per16 = sp.sim.batch_seconds(16) / 16.0;
+        assert!(per8 < per1, "batch 8 per-request {per8} !< {per1}");
+        assert!(per16 < per8, "batch 16 per-request {per16} !< {per8}");
+        // shared work (dispatch + weights) is the majority of batch-1
+        // time, so deep batches must clear 2x — the bench acceptance bar
+        assert!(
+            per1 / per16 >= 2.0,
+            "batch-16 speedup {:.2} < 2x",
+            per1 / per16
+        );
+    }
+
+    #[test]
+    fn warm_ratio_is_a_real_cache_effect() {
+        let sp = registered("T", &[100.0]);
+        let r = sp.sim.warm_ratio[0];
+        assert!(r > 0.0 && r < 0.5, "warm ratio {r} implausible");
+    }
+
+    #[test]
+    fn sim_executor_is_pure() {
+        let sp = registered("T", &[30.0, 90.0]);
+        let batch: Vec<Request> = (0..5)
+            .map(|i| Request {
+                id: i,
+                model: "T".to_string(),
+                seed: 1000 + i,
+            })
+            .collect();
+        let a = SimExecutor.execute_batch(&sp, &batch).unwrap();
+        let b = SimExecutor.execute_batch(&sp, &batch).unwrap();
+        assert_eq!(a, b);
+        assert!(a.iter().all(|r| r.batch_size == 5));
+        // same latency for all, distinct checksums per seed
+        assert!(a.windows(2).all(|w| w[0].latency_s == w[1].latency_s));
+        assert!(a.windows(2).all(|w| w[0].checksum != w[1].checksum));
+    }
+
+    #[test]
+    fn empty_batch_is_empty() {
+        let sp = registered("T", &[10.0]);
+        assert!(SimExecutor.execute_batch(&sp, &[]).unwrap().is_empty());
+    }
+
+    /// Real PJRT serving — skips (visibly) without the artifact catalog.
+    #[test]
+    fn pjrt_executor_runs_and_is_reproducible() {
+        let Some(dir) = crate::runtime::catalog_or_skip(concat!(
+            env!("CARGO_MANIFEST_DIR"),
+            "/artifacts"
+        )) else {
+            return;
+        };
+        let exec = PjrtExecutor::new(dir.to_str().unwrap()).expect("engine");
+        let sp = registered("MBN", &[30.0, 90.0]);
+        let batch: Vec<Request> = (0..3)
+            .map(|i| Request {
+                id: i,
+                model: "MBN".to_string(),
+                seed: 7 + i,
+            })
+            .collect();
+        let a = exec.execute_batch(&sp, &batch).unwrap();
+        let b = exec.execute_batch(&sp, &batch).unwrap();
+        assert_eq!(a.len(), 3);
+        // outputs (checksums) reproduce run-to-run; latencies are wall
+        // time and may differ
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.checksum, y.checksum, "request {}", x.id);
+        }
+        // unknown model is an error, not a crash
+        let other = registered("UNKNOWN", &[10.0]);
+        assert!(exec.execute_batch(&other, &batch).is_err());
+    }
+}

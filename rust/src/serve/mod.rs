@@ -1,0 +1,149 @@
+//! `ago serve`: a batched multi-model serving layer over compiled plans.
+//!
+//! The compile side of this repo ends at a [`CompiledModel`] persisted as
+//! a plan (`coordinator::plan`); this module is the system that *answers
+//! requests* from those plans — the paper's "execute AGO once before the
+//! long-run deployment" workflow, grown into the ROADMAP's serving north
+//! star. Three pieces:
+//!
+//! - [`PlanRegistry`] (`registry`): loads `*.plan.json` files into
+//!   [`ServingPlan`]s keyed by model name, and — for models with no plan
+//!   on disk — compiles them through the shared [`TuningDb`] so a warm
+//!   recompile of a previously-seen block structure is near-free.
+//! - [`Executor`] (`executor`): the execution seam. [`SimExecutor`]
+//!   replays each plan's per-subgraph predicted latencies through the
+//!   cache simulator — deterministic, runs on any checkout;
+//!   [`PjrtExecutor`] wraps `runtime::Engine` for real PJRT execution
+//!   when the AOT artifact catalog is present.
+//! - [`serve`] (`scheduler`): per-model FIFO queues with a bounded depth
+//!   (backpressure), deterministic round-robin batch formation (never
+//!   more than `max_batch` requests per batch), fan-out over
+//!   `util::ThreadPool`, and per-model latency/throughput statistics.
+//!
+//! Determinism contract: with [`SimExecutor`], the responses and the
+//! serialized stats are bit-identical for a fixed (plans, config,
+//! workload seed) regardless of worker count — batch formation happens on
+//! the driver thread and batch execution is a pure function, so threads
+//! only change wall-clock time. `tests/serve_props.rs` pins this.
+//!
+//! [`CompiledModel`]: crate::coordinator::CompiledModel
+//! [`TuningDb`]: crate::coordinator::TuningDb
+
+pub mod executor;
+pub mod registry;
+pub mod scheduler;
+
+pub use executor::{Chain, Executor, PjrtExecutor, SimExecutor, SimProfile};
+pub use registry::{PlanRegistry, ServingPlan};
+pub use scheduler::{serve, ModelStats, ServeConfig, ServeOutcome, ServeStats};
+
+use crate::util::Rng;
+
+/// One inference request: an id (unique within a workload), the model it
+/// targets (a [`PlanRegistry`] key), and a seed that determines its input
+/// tensors — the whole request is reproducible from these three values.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct Request {
+    pub id: u64,
+    pub model: String,
+    pub seed: u64,
+}
+
+/// The completed form of a [`Request`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct Response {
+    pub id: u64,
+    pub model: String,
+    /// Size of the batch this request was served in.
+    pub batch_size: usize,
+    /// Service latency, seconds. [`SimExecutor`]: the request's fair
+    /// share of the deterministic simulated batch time. [`PjrtExecutor`]:
+    /// measured wall time of the real execution.
+    pub latency_s: f64,
+    /// Executor-computed digest proving the request was executed exactly
+    /// once (simulated executions derive it from the plan + request seed;
+    /// PJRT folds the output tensor bits).
+    pub checksum: u64,
+}
+
+/// Deterministic mixed workload: `n` requests choosing uniformly among
+/// `models`, fully determined by `seed`. The driver behind `ago serve`,
+/// the serve bench, and the scheduler property tests.
+pub fn mixed_workload(models: &[String], n: usize, seed: u64) -> Vec<Request> {
+    assert!(!models.is_empty(), "workload needs at least one model");
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|i| {
+            let model = rng.choose(models).clone();
+            Request { id: i as u64, model, seed: rng.next_u64() }
+        })
+        .collect()
+}
+
+#[cfg(test)]
+pub(crate) mod testutil {
+    use crate::coordinator::plan::LoadedPlan;
+    use crate::graph::Partition;
+    use crate::tuner::schedule::{
+        FusionGroup, GroupKind, Layout, Schedule, Tile,
+    };
+
+    /// Handcrafted plan — one two-op Epilogue group per subgraph, one
+    /// subgraph per entry of `lats_us` (microseconds) — so unit tests
+    /// exercise the serve path without compiling. Shared by the
+    /// executor/registry/scheduler test modules; `tests/serve_props.rs`
+    /// carries its own copy (integration tests cannot reach the
+    /// library's `#[cfg(test)]` items).
+    pub fn toy_plan(
+        model: &str,
+        device: &str,
+        lats_us: &[f64],
+    ) -> LoadedPlan {
+        let n = lats_us.len();
+        LoadedPlan {
+            model: model.to_string(),
+            device: device.to_string(),
+            partition: Partition::from_assignment(
+                (0..n).flat_map(|g| [g, g]).collect(),
+            ),
+            schedules: (0..n)
+                .map(|g| Schedule {
+                    groups: vec![FusionGroup {
+                        ops: vec![2 * g, 2 * g + 1],
+                        kind: GroupKind::Epilogue,
+                        tile: Tile { th: 4, tw: 4, tc: 8 },
+                        vec: 8,
+                        unroll: 4,
+                        threads: 2,
+                        layout: Layout::Nhwc,
+                    }],
+                })
+                .collect(),
+            subgraph_latency: lats_us.iter().map(|l| l * 1e-6).collect(),
+            total_latency_ms: 0.0,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn workload_is_deterministic_and_mixed() {
+        let models = vec!["MBN".to_string(), "SQN".to_string()];
+        let a = mixed_workload(&models, 500, 42);
+        let b = mixed_workload(&models, 500, 42);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 500);
+        // ids are the arrival order
+        assert!(a.iter().enumerate().all(|(i, r)| r.id == i as u64));
+        // both models actually appear
+        for m in &models {
+            assert!(a.iter().any(|r| &r.model == m), "{m} never drawn");
+        }
+        // a different seed draws a different request stream
+        let c = mixed_workload(&models, 500, 43);
+        assert_ne!(a, c);
+    }
+}

@@ -1,0 +1,287 @@
+//! Plan registry: the serving layer's view of compiled models.
+//!
+//! A [`ServingPlan`] is a loaded plan plus everything the serve path
+//! derives once at registration — the resolved [`DeviceProfile`], the
+//! [`SimProfile`] (the cache-simulator replay of the plan's predicted
+//! latencies), and a checksum salt. The registry keys them by model name.
+//!
+//! Plans come from two places:
+//! - `load_dir`: every `*.plan.json` under a directory (what `ago
+//!   compile --out` writes) — the deployment path.
+//! - `ensure_model`: compile a zoo model on the spot through a shared
+//!   [`TuningDb`], so an unseen model whose block structure overlaps
+//!   earlier compiles warm-starts instead of tuning cold. The compiled
+//!   model is round-tripped through the plan JSON before registration,
+//!   so serving from memory is bit-identical to serving the same plan
+//!   from disk.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::coordinator::plan::{self, LoadedPlan};
+use crate::coordinator::{compile_with_db, CompileConfig, TuningDb};
+use crate::device::DeviceProfile;
+use crate::graph::fingerprint::Fnv;
+use crate::models::{build, InputShape, ModelId};
+
+use super::executor::SimProfile;
+
+/// One registered model: the plan and its registration-time derivations.
+#[derive(Clone, Debug)]
+pub struct ServingPlan {
+    pub model: String,
+    pub device: DeviceProfile,
+    pub plan: LoadedPlan,
+    pub sim: SimProfile,
+    /// Mixed into simulated-response checksums so two models never
+    /// produce colliding digests for the same request seed.
+    pub salt: u64,
+}
+
+#[derive(Default)]
+pub struct PlanRegistry {
+    plans: BTreeMap<String, Arc<ServingPlan>>,
+}
+
+impl PlanRegistry {
+    pub fn new() -> PlanRegistry {
+        PlanRegistry::default()
+    }
+
+    pub fn len(&self) -> usize {
+        self.plans.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.plans.is_empty()
+    }
+
+    pub fn get(&self, model: &str) -> Option<Arc<ServingPlan>> {
+        self.plans.get(model).cloned()
+    }
+
+    /// Registered model names, sorted (the BTreeMap order every
+    /// deterministic consumer — batch formation, stats — relies on).
+    pub fn models(&self) -> Vec<String> {
+        self.plans.keys().cloned().collect()
+    }
+
+    /// Register a loaded plan. Rejects plans with no model name, an
+    /// unknown device, or a model that is already registered (two plans
+    /// for one model is a deployment mistake, not a merge).
+    pub fn register(&mut self, plan: LoadedPlan) -> Result<Arc<ServingPlan>> {
+        if plan.model.is_empty() {
+            return Err(anyhow!("plan has no model name"));
+        }
+        let dev = DeviceProfile::by_name(&plan.device).ok_or_else(|| {
+            anyhow!(
+                "plan for model {:?} names unknown device {:?}",
+                plan.model,
+                plan.device
+            )
+        })?;
+        if self.plans.contains_key(&plan.model) {
+            return Err(anyhow!("duplicate plan for model {:?}", plan.model));
+        }
+        let sim = SimProfile::build(&plan, &dev);
+        let mut h = Fnv::new();
+        h.write_bytes(plan.model.as_bytes());
+        h.write_bytes(plan.device.as_bytes());
+        let sp = Arc::new(ServingPlan {
+            model: plan.model.clone(),
+            device: dev,
+            plan,
+            sim,
+            salt: h.finish(),
+        });
+        self.plans.insert(sp.model.clone(), Arc::clone(&sp));
+        Ok(sp)
+    }
+
+    /// Load every `*.plan.json` under `dir`, in file-name order. A
+    /// missing directory yields an empty registry (the caller decides
+    /// whether that is an error); an unparseable plan file is an error —
+    /// serving from a corrupt plan must never start.
+    pub fn load_dir(dir: impl AsRef<Path>) -> Result<PlanRegistry> {
+        let mut reg = PlanRegistry::new();
+        let dir = dir.as_ref();
+        if !dir.is_dir() {
+            return Ok(reg);
+        }
+        let mut paths: Vec<_> = std::fs::read_dir(dir)
+            .with_context(|| format!("reading {}", dir.display()))?
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter(|p| {
+                p.file_name()
+                    .and_then(|n| n.to_str())
+                    .map(|n| n.ends_with(".plan.json"))
+                    .unwrap_or(false)
+            })
+            .collect();
+        paths.sort();
+        for p in paths {
+            let path = p
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {}", p.display()))?;
+            let lp = plan::load(path)
+                .with_context(|| format!("loading plan {path}"))?;
+            reg.register(lp)
+                .with_context(|| format!("registering plan {path}"))?;
+        }
+        Ok(reg)
+    }
+
+    /// Return the registered plan for a zoo model, compiling it through
+    /// `db` first when absent. Overlapping block structure from earlier
+    /// compiles (same db) warm-starts the search — the TuningDb's
+    /// cross-model payoff, now on the serving path.
+    ///
+    /// With `persist_dir`, the freshly compiled plan is also written as
+    /// `<dir>/<model>.plan.json` — the exact bytes this registration was
+    /// parsed from, so a later `load_dir` reproduces this ServingPlan
+    /// bit-for-bit (serve-from-memory == serve-from-disk).
+    pub fn ensure_model(
+        &mut self,
+        id: ModelId,
+        shape: InputShape,
+        cfg: &CompileConfig,
+        db: &mut TuningDb,
+        persist_dir: Option<&Path>,
+    ) -> Result<Arc<ServingPlan>> {
+        if let Some(p) = self.plans.get(id.name()) {
+            return Ok(Arc::clone(p));
+        }
+        let g = build(id, shape);
+        let m = compile_with_db(&g, cfg, db);
+        // round-trip through the serialization so in-memory registration
+        // and load-from-disk produce bit-identical ServingPlans
+        let j = plan::to_json(&m, id.name(), cfg.device.name);
+        if let Some(dir) = persist_dir {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating {}", dir.display()))?;
+            let path = dir.join(format!(
+                "{}.plan.json",
+                id.name().to_ascii_lowercase()
+            ));
+            std::fs::write(&path, j.pretty())
+                .with_context(|| format!("writing {}", path.display()))?;
+        }
+        let lp = plan::from_json(&j)
+            .with_context(|| format!("round-tripping plan for {}", id.name()))?;
+        self.register(lp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::serve::testutil::toy_plan;
+
+    fn toy(model: &str, device: &str) -> LoadedPlan {
+        toy_plan(model, device, &[50.0])
+    }
+
+    #[test]
+    fn register_and_get() {
+        let mut reg = PlanRegistry::new();
+        assert!(reg.is_empty());
+        reg.register(toy("A", "kirin990")).unwrap();
+        reg.register(toy("B", "qsd810")).unwrap();
+        assert_eq!(reg.len(), 2);
+        assert_eq!(reg.models(), vec!["A".to_string(), "B".to_string()]);
+        assert_eq!(reg.get("A").unwrap().device.name, "kirin990");
+        assert!(reg.get("C").is_none());
+        // distinct checksum salts per (model, device)
+        assert_ne!(reg.get("A").unwrap().salt, reg.get("B").unwrap().salt);
+    }
+
+    #[test]
+    fn rejects_bad_plans() {
+        let mut reg = PlanRegistry::new();
+        assert!(reg.register(toy("", "kirin990")).is_err());
+        assert!(reg.register(toy("A", "tpu-v9")).is_err());
+        reg.register(toy("A", "kirin990")).unwrap();
+        let err = reg.register(toy("A", "qsd810")).unwrap_err();
+        assert!(err.to_string().contains("duplicate"), "{err:#}");
+    }
+
+    #[test]
+    fn load_dir_roundtrip() {
+        let dir = std::env::temp_dir().join("ago_registry_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        // two plans plus a decoy that must be ignored
+        let write = |name: &str, model: &str| {
+            let lp = toy(model, "kirin990");
+            let text = plan::loaded_to_json(&lp).pretty();
+            std::fs::write(dir.join(name), text).unwrap();
+        };
+        write("a.plan.json", "A");
+        write("b.plan.json", "B");
+        std::fs::write(dir.join("db.json"), "{not json at all").unwrap();
+        let reg = PlanRegistry::load_dir(&dir).unwrap();
+        assert_eq!(reg.models(), vec!["A".to_string(), "B".to_string()]);
+        // the loaded plan is bit-identical to what was serialized
+        let a = reg.get("A").unwrap();
+        assert_eq!(
+            a.plan.subgraph_latency[0].to_bits(),
+            toy("A", "kirin990").subgraph_latency[0].to_bits()
+        );
+        // a corrupt *.plan.json is an error, not a skip
+        std::fs::write(dir.join("c.plan.json"), "{oops").unwrap();
+        assert!(PlanRegistry::load_dir(&dir).is_err());
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn missing_dir_is_empty_registry() {
+        let reg =
+            PlanRegistry::load_dir("/nonexistent/ago/plans").unwrap();
+        assert!(reg.is_empty());
+    }
+
+    #[test]
+    fn ensure_model_compiles_once_and_warm_starts() {
+        let mut reg = PlanRegistry::new();
+        let mut db = TuningDb::new();
+        let cfg = CompileConfig {
+            budget: 300,
+            workers: 2,
+            ..CompileConfig::new(DeviceProfile::kirin990())
+        };
+        let dir = std::env::temp_dir().join("ago_ensure_model_test");
+        std::fs::remove_dir_all(&dir).ok();
+        let a = reg
+            .ensure_model(
+                ModelId::Sqn,
+                InputShape::Small,
+                &cfg,
+                &mut db,
+                Some(&dir),
+            )
+            .unwrap();
+        assert_eq!(a.model, "SQN");
+        assert!(!db.is_empty(), "compile must populate the tuning db");
+        // second call returns the registered plan without recompiling
+        let b = reg
+            .ensure_model(ModelId::Sqn, InputShape::Small, &cfg, &mut db, None)
+            .unwrap();
+        assert!(Arc::ptr_eq(&a, &b));
+        // the persisted plan reloads into a bit-identical ServingPlan
+        let from_disk = PlanRegistry::load_dir(&dir).unwrap();
+        let d = from_disk.get("SQN").expect("persisted plan loads");
+        assert_eq!(d.plan.subgraph_latency, a.plan.subgraph_latency);
+        assert_eq!(d.plan.partition.assign, a.plan.partition.assign);
+        assert_eq!(d.salt, a.salt);
+        // a second registry over the same db warm-starts: every class
+        // hits, and the served latencies are identical
+        let mut reg2 = PlanRegistry::new();
+        let c = reg2
+            .ensure_model(ModelId::Sqn, InputShape::Small, &cfg, &mut db, None)
+            .unwrap();
+        assert_eq!(c.plan.subgraph_latency, a.plan.subgraph_latency);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,88 @@
+//! Golden-plan regression tests: `compile → serialize` for two small
+//! seed models must match the committed plan JSON byte-for-byte, so a
+//! compiler-side refactor can never silently shift the inputs the
+//! serving layer replays.
+//!
+//! Blessing: goldens regenerate when `AGO_BLESS=1` is set, and are
+//! written (with a loud notice) on first run if absent — commit the
+//! generated files under `tests/goldens/`. A mismatch therefore always
+//! means "the compiler's output changed"; if the change is intentional,
+//! re-bless and commit the diff so it is visible in review.
+//!
+//! Independent of the files, every case also asserts that two in-process
+//! compiles of the same config serialize identically — compile
+//! determinism does not depend on a committed golden.
+
+use ago::coordinator::plan::{from_json, to_json};
+use ago::coordinator::{compile, CompileConfig};
+use ago::device::DeviceProfile;
+use ago::models::{build, InputShape, ModelId};
+use ago::util::Json;
+
+fn golden_path(name: &str) -> std::path::PathBuf {
+    std::path::Path::new(concat!(env!("CARGO_MANIFEST_DIR"), "/tests/goldens"))
+        .join(format!("{name}.plan.json"))
+}
+
+/// Compile a model under the pinned golden config and serialize it.
+fn compile_text(model: ModelId) -> String {
+    let g = build(model, InputShape::Small);
+    // pinned: any change here invalidates the goldens by design
+    let cfg = CompileConfig {
+        budget: 400,
+        workers: 2,
+        ..CompileConfig::new(DeviceProfile::kirin990())
+    };
+    let m = compile(&g, &cfg);
+    to_json(&m, model.name(), "kirin990").pretty() + "\n"
+}
+
+fn check_golden(model: ModelId, name: &str) {
+    let text = compile_text(model);
+    // in-process reproducibility, golden or not: an identical compile
+    // must serialize identically (worker count does not matter — the
+    // pool collects results in task order)
+    assert_eq!(
+        text,
+        compile_text(model),
+        "{name}: two identical compiles serialized differently"
+    );
+    // the serialized plan must load back (it is a serving input)
+    let parsed = Json::parse(text.trim_end()).expect("golden parses");
+    let plan = from_json(&parsed).expect("golden is a loadable plan");
+    assert_eq!(plan.model, model.name());
+    assert_eq!(plan.subgraph_latency.len(), plan.partition.n_groups);
+
+    let path = golden_path(name);
+    let bless = std::env::var("AGO_BLESS").map(|v| v == "1").unwrap_or(false);
+    if bless || !path.exists() {
+        std::fs::create_dir_all(path.parent().unwrap()).expect("goldens dir");
+        std::fs::write(&path, &text).expect("write golden");
+        eprintln!(
+            "BLESSED golden {} ({}): commit it so future runs compare \
+             against these bytes",
+            path.display(),
+            if bless { "AGO_BLESS=1" } else { "absent on first run" }
+        );
+        return;
+    }
+    let committed = std::fs::read_to_string(&path).expect("read golden");
+    assert_eq!(
+        committed,
+        text,
+        "{name}: compile -> serialize no longer matches {}.\n\
+         If this change is intentional, regenerate with \
+         `AGO_BLESS=1 cargo test --test golden_plans` and commit the diff.",
+        path.display()
+    );
+}
+
+#[test]
+fn golden_sqn_small_kirin990() {
+    check_golden(ModelId::Sqn, "sqn_small_kirin990");
+}
+
+#[test]
+fn golden_bt_small_kirin990() {
+    check_golden(ModelId::Bt, "bt_small_kirin990");
+}

@@ -1,0 +1,251 @@
+//! Property tests for the serving scheduler (`serve::scheduler`) over
+//! randomized workloads, batch bounds, queue depths, and worker counts:
+//!
+//! - per-model FIFO fairness: a model's responses complete in its
+//!   arrival order
+//! - no batch ever exceeds the configured bound
+//! - no request is dropped or double-executed
+//! - with `SimExecutor`, responses AND serialized stats are bit-identical
+//!   between a 1-thread and an N-thread run of the same seed
+//!
+//! Plans are handcrafted (no compile), so these run on any checkout in
+//! milliseconds per case.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+
+use ago::coordinator::plan::LoadedPlan;
+use ago::ensure;
+use ago::graph::Partition;
+use ago::serve::{
+    mixed_workload, serve, PlanRegistry, Request, ServeConfig, SimExecutor,
+};
+use ago::tuner::schedule::{FusionGroup, GroupKind, Layout, Schedule, Tile};
+use ago::util::propkit::forall;
+use ago::util::Rng;
+
+/// Handcrafted plan: `lats_us.len()` subgraphs of two ops each. A copy
+/// of `serve::testutil::toy_plan` — integration tests cannot reach the
+/// library's `#[cfg(test)]` items, so keep the two in sync.
+fn toy_plan(model: &str, device: &str, lats_us: &[f64]) -> LoadedPlan {
+    let n = lats_us.len();
+    LoadedPlan {
+        model: model.to_string(),
+        device: device.to_string(),
+        partition: Partition::from_assignment(
+            (0..n).flat_map(|g| [g, g]).collect(),
+        ),
+        schedules: (0..n)
+            .map(|g| Schedule {
+                groups: vec![FusionGroup {
+                    ops: vec![2 * g, 2 * g + 1],
+                    kind: GroupKind::Epilogue,
+                    tile: Tile { th: 4, tw: 4, tc: 8 },
+                    vec: 8,
+                    unroll: 4,
+                    threads: 2,
+                    layout: Layout::Nhwc,
+                }],
+            })
+            .collect(),
+        subgraph_latency: lats_us.iter().map(|l| l * 1e-6).collect(),
+        total_latency_ms: 0.0,
+    }
+}
+
+/// Random registry of 1–3 models with random subgraph counts/latencies.
+fn random_registry(rng: &mut Rng) -> PlanRegistry {
+    let names = ["ALPHA", "BETA", "GAMMA"];
+    let n_models = rng.range(1, 4);
+    let mut reg = PlanRegistry::new();
+    for name in names.iter().take(n_models) {
+        let n_sub = rng.range(1, 7);
+        let lats: Vec<f64> =
+            (0..n_sub).map(|_| 5.0 + rng.f64() * 200.0).collect();
+        let device = if rng.chance(0.5) { "kirin990" } else { "qsd810" };
+        reg.register(toy_plan(name, device, &lats)).unwrap();
+    }
+    reg
+}
+
+#[test]
+fn no_drop_no_dup_fifo_and_batch_bound() {
+    forall(40, |rng| {
+        let reg = random_registry(rng);
+        let n = rng.range(1, 250);
+        let wl = mixed_workload(&reg.models(), n, rng.next_u64());
+        let cfg = ServeConfig {
+            max_batch: rng.range(1, 10),
+            queue_depth: rng.range(1, 20),
+            workers: rng.range(1, 5),
+        };
+        let out = serve(&reg, &cfg, Arc::new(SimExecutor), wl.clone())
+            .map_err(|e| format!("{e:#}"))?;
+        // exactly-once: the response ids are a permutation of the inputs
+        ensure!(
+            out.responses.len() == n,
+            "{} responses for {n} requests",
+            out.responses.len()
+        );
+        let mut ids: Vec<u64> =
+            out.responses.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ensure!(
+            ids == (0..n as u64).collect::<Vec<_>>(),
+            "dropped or duplicated ids"
+        );
+        ensure!(out.stats.dropped == 0, "dropped {}", out.stats.dropped);
+        ensure!(out.stats.completed == n, "completed {}", out.stats.completed);
+        // batch bound
+        ensure!(
+            out.responses.iter().all(|r| {
+                r.batch_size >= 1 && r.batch_size <= cfg.max_batch
+            }),
+            "batch bound {} violated",
+            cfg.max_batch
+        );
+        // per-model FIFO fairness: completion order restricted to one
+        // model equals that model's arrival order
+        let mut arrival: BTreeMap<&str, Vec<u64>> = BTreeMap::new();
+        for r in &wl {
+            arrival.entry(r.model.as_str()).or_default().push(r.id);
+        }
+        let mut completion: BTreeMap<&str, Vec<u64>> = BTreeMap::new();
+        for r in &out.responses {
+            completion.entry(r.model.as_str()).or_default().push(r.id);
+        }
+        ensure!(
+            arrival == completion,
+            "per-model FIFO violated: {arrival:?} vs {completion:?}"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn sim_results_bit_identical_across_worker_counts() {
+    forall(25, |rng| {
+        let reg = random_registry(rng);
+        let n = rng.range(1, 200);
+        let seed = rng.next_u64();
+        let wl = mixed_workload(&reg.models(), n, seed);
+        let base = ServeConfig {
+            max_batch: rng.range(1, 10),
+            queue_depth: rng.range(1, 24),
+            workers: 1,
+        };
+        let one = serve(&reg, &base, Arc::new(SimExecutor), wl.clone())
+            .map_err(|e| format!("{e:#}"))?;
+        for workers in [2, rng.range(3, 8)] {
+            let cfg = ServeConfig { workers, ..base.clone() };
+            let many = serve(&reg, &cfg, Arc::new(SimExecutor), wl.clone())
+                .map_err(|e| format!("{e:#}"))?;
+            // responses: same order, same ids, same batch sizes, same
+            // latency BITS, same checksums
+            ensure!(
+                one.responses.len() == many.responses.len(),
+                "response count differs"
+            );
+            for (a, b) in one.responses.iter().zip(&many.responses) {
+                ensure!(
+                    a.id == b.id
+                        && a.model == b.model
+                        && a.batch_size == b.batch_size
+                        && a.latency_s.to_bits() == b.latency_s.to_bits()
+                        && a.checksum == b.checksum,
+                    "response diverged across worker counts: \
+                     {a:?} vs {b:?} ({workers} workers)"
+                );
+            }
+            // serialized stats: byte-identical
+            ensure!(
+                one.stats.to_json().pretty()
+                    == many.stats.to_json().pretty(),
+                "stats diverged at {workers} workers"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn serve_twice_is_bit_identical() {
+    // same seed, same config -> same everything (run-to-run determinism,
+    // the property the CI smoke diffs via --stats-out)
+    forall(15, |rng| {
+        let reg = random_registry(rng);
+        let wl =
+            mixed_workload(&reg.models(), rng.range(1, 150), rng.next_u64());
+        let cfg = ServeConfig {
+            max_batch: rng.range(1, 9),
+            queue_depth: rng.range(1, 16),
+            workers: 0, // host-sized pool: still deterministic
+        };
+        let a = serve(&reg, &cfg, Arc::new(SimExecutor), wl.clone())
+            .map_err(|e| format!("{e:#}"))?;
+        let b = serve(&reg, &cfg, Arc::new(SimExecutor), wl)
+            .map_err(|e| format!("{e:#}"))?;
+        ensure!(a.responses == b.responses, "responses differ run-to-run");
+        ensure!(
+            a.stats.to_json().pretty() == b.stats.to_json().pretty(),
+            "stats differ run-to-run"
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn acceptance_1k_mixed_two_model_workload() {
+    // the PR acceptance scenario at test scale: 1000 requests over two
+    // models through SimExecutor — zero drops, deterministic, batched
+    // throughput at least 2x the batch-1 configuration
+    let mut reg = PlanRegistry::new();
+    reg.register(toy_plan("MBN", "kirin990", &[30.0, 90.0, 45.0, 120.0]))
+        .unwrap();
+    reg.register(toy_plan("SQN", "qsd810", &[60.0, 20.0, 80.0])).unwrap();
+    let wl = mixed_workload(&reg.models(), 1000, 42);
+    let run = |max_batch: usize| {
+        serve(
+            &reg,
+            &ServeConfig { max_batch, queue_depth: 64, workers: 0 },
+            Arc::new(SimExecutor),
+            wl.clone(),
+        )
+        .unwrap()
+    };
+    let batched = run(16);
+    assert_eq!(batched.stats.completed, 1000);
+    assert_eq!(batched.stats.dropped, 0);
+    let again = run(16);
+    assert_eq!(
+        batched.stats.to_json().pretty(),
+        again.stats.to_json().pretty(),
+        "1k workload stats must be bit-identical across runs"
+    );
+    let unbatched = run(1);
+    assert!(
+        batched.stats.throughput_rps()
+            >= 2.0 * unbatched.stats.throughput_rps(),
+        "batched {:.0} rps < 2x unbatched {:.0} rps",
+        batched.stats.throughput_rps(),
+        unbatched.stats.throughput_rps()
+    );
+}
+
+#[test]
+fn single_request_roundtrip() {
+    let mut reg = PlanRegistry::new();
+    reg.register(toy_plan("SOLO", "kirin990", &[100.0])).unwrap();
+    let wl = vec![Request { id: 0, model: "SOLO".to_string(), seed: 9 }];
+    let out = serve(
+        &reg,
+        &ServeConfig::default(),
+        Arc::new(SimExecutor),
+        wl,
+    )
+    .unwrap();
+    assert_eq!(out.responses.len(), 1);
+    assert_eq!(out.responses[0].batch_size, 1);
+    assert!(out.responses[0].latency_s > 0.0);
+    assert_eq!(out.stats.batches, 1);
+}

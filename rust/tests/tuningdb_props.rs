@@ -1,0 +1,228 @@
+//! Property tests for `coordinator::tuningdb` — the round-trip and
+//! adversarial coverage PR 2 left implicit:
+//!
+//! - serialize → load → re-serialize is byte-identical (the db stores
+//!   latency in raw seconds precisely so no unit conversion can drift
+//!   a bit between cycles)
+//! - corrupt / truncated JSON and coverage-invalid entries are rejected
+//!   with a diagnostic, never a panic
+//! - `record` keeps the lower-latency schedule regardless of insertion
+//!   order
+
+use ago::coordinator::{DbEntry, TuningDb};
+use ago::ensure;
+use ago::tuner::schedule::{FusionGroup, GroupKind, Layout, Schedule, Tile};
+use ago::util::propkit::forall;
+use ago::util::{Json, Rng};
+
+/// Random schedule covering canonical indices `0..n_ops` exactly once:
+/// a random segmentation into groups with random knobs.
+fn random_schedule(rng: &mut Rng, n_ops: usize) -> Schedule {
+    let mut groups = Vec::new();
+    let mut next = 0;
+    while next < n_ops {
+        let take = rng.range(1, (n_ops - next).min(3) + 1);
+        let ops: Vec<usize> = (next..next + take).collect();
+        next += take;
+        groups.push(FusionGroup {
+            ops,
+            kind: *rng.choose(&[
+                GroupKind::Simple,
+                GroupKind::Epilogue,
+                GroupKind::Joint,
+            ]),
+            tile: Tile {
+                th: 1 << rng.range(0, 5),
+                tw: 1 << rng.range(0, 5),
+                tc: 1 << rng.range(0, 6),
+            },
+            vec: *rng.choose(&[1, 4, 8]),
+            unroll: *rng.choose(&[1, 2, 4]),
+            threads: rng.range(1, 5),
+            layout: if rng.chance(0.5) { Layout::Nhwc } else { Layout::Nchw },
+        });
+    }
+    Schedule { groups }
+}
+
+fn random_entry(rng: &mut Rng) -> DbEntry {
+    let n_ops = rng.range(1, 8);
+    DbEntry {
+        device: rng.choose(&["kirin990", "qsd810"]).to_string(),
+        variant: rng.choose(&["ago", "ago-ni", "ago-nr"]).to_string(),
+        fingerprint: rng.next_u64(),
+        n_ops,
+        schedule: random_schedule(rng, n_ops),
+        // an arbitrary f64 in a realistic latency range; raw-seconds
+        // storage must survive it bit-for-bit, nice decimals or not
+        latency: rng.f64() * 1e-2 + f64::MIN_POSITIVE,
+        evals: rng.range(1, 100_000),
+    }
+}
+
+fn random_db(rng: &mut Rng) -> TuningDb {
+    let mut db = TuningDb::new();
+    for _ in 0..rng.range(0, 20) {
+        db.record(random_entry(rng));
+    }
+    db
+}
+
+#[test]
+fn roundtrip_is_byte_identical() {
+    forall(60, |rng| {
+        let db = random_db(rng);
+        let text = db.to_json().pretty();
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        let back = TuningDb::from_json(&j).map_err(|e| format!("{e:#}"))?;
+        ensure!(back.len() == db.len(), "entry count drifted");
+        let text2 = back.to_json().pretty();
+        ensure!(
+            text == text2,
+            "serialize -> load -> re-serialize drifted:\n{text}\nvs\n{text2}"
+        );
+        // and the loaded entries are structurally identical
+        for (a, b) in db.entries().zip(back.entries()) {
+            ensure!(
+                a.device == b.device
+                    && a.variant == b.variant
+                    && a.fingerprint == b.fingerprint
+                    && a.n_ops == b.n_ops
+                    && a.schedule == b.schedule
+                    && a.latency.to_bits() == b.latency.to_bits()
+                    && a.evals == b.evals,
+                "entry drifted through the round-trip"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn truncated_json_is_rejected_not_panicked() {
+    forall(60, |rng| {
+        let db = {
+            let mut db = TuningDb::new();
+            db.record(random_entry(rng));
+            db.record(random_entry(rng));
+            db
+        };
+        let text = db.to_json().pretty();
+        // cut anywhere strictly inside (on a char boundary — the text is
+        // ASCII by construction): the result must never load
+        let cut = rng.range(1, text.len());
+        let truncated = &text[..cut];
+        let loaded = Json::parse(truncated)
+            .map_err(|e| e.to_string())
+            .and_then(|j| {
+                TuningDb::from_json(&j).map_err(|e| format!("{e:#}"))
+            });
+        ensure!(
+            loaded.is_err(),
+            "truncated db (cut at {cut}/{}) loaded successfully",
+            text.len()
+        );
+        Ok(())
+    });
+}
+
+#[test]
+fn coverage_invalid_entries_are_rejected() {
+    // mutate a valid entry's ops so it no longer covers 0..n_ops exactly
+    // once; every mutation must be rejected with a diagnostic
+    forall(40, |rng| {
+        let mut e = random_entry(rng);
+        match rng.range(0, 4) {
+            // drop an op
+            0 => {
+                let g = rng.range(0, e.schedule.groups.len());
+                let grp = &mut e.schedule.groups[g];
+                grp.ops.pop();
+                if grp.ops.is_empty() {
+                    e.schedule.groups.remove(g);
+                }
+            }
+            // duplicate an op
+            1 => {
+                let g = rng.range(0, e.schedule.groups.len());
+                let dup = e.schedule.groups[g].ops[0];
+                e.schedule.groups[g].ops.push(dup);
+            }
+            // point past the canonical range
+            2 => {
+                let g = rng.range(0, e.schedule.groups.len());
+                *e.schedule.groups[g].ops.last_mut().unwrap() =
+                    e.n_ops + rng.range(0, 5);
+            }
+            // lie about n_ops
+            _ => e.n_ops += 1 + rng.range(0, 3),
+        }
+        let mut db = TuningDb::new();
+        db.record(e);
+        let text = db.to_json().pretty();
+        let j = Json::parse(&text).map_err(|e| e.to_string())?;
+        match TuningDb::from_json(&j) {
+            Ok(_) => Err("coverage-invalid entry accepted".to_string()),
+            Err(err) => {
+                let msg = format!("{err:#}");
+                ensure!(
+                    msg.contains("cover"),
+                    "diagnostic does not mention coverage: {msg}"
+                );
+                Ok(())
+            }
+        }
+    });
+}
+
+#[test]
+fn garbage_files_are_errors() {
+    let dir = std::env::temp_dir();
+    for (name, content) in [
+        ("ago_tdb_garbage.json", "hello, not json"),
+        ("ago_tdb_empty.json", ""),
+        ("ago_tdb_wrong_shape.json", r#"{"entries": 42}"#),
+        ("ago_tdb_null.json", "null"),
+    ] {
+        let path = dir.join(name);
+        std::fs::write(&path, content).unwrap();
+        let r = TuningDb::load(path.to_str().unwrap());
+        assert!(r.is_err(), "{name}: garbage loaded successfully");
+        // the error formats as a diagnostic (it did not panic to get here)
+        assert!(!format!("{:#}", r.unwrap_err()).is_empty());
+        std::fs::remove_file(&path).ok();
+    }
+    // missing file: load errors, load_or_new starts empty
+    assert!(TuningDb::load("/nonexistent/ago/db.json").is_err());
+    assert!(TuningDb::load_or_new("/nonexistent/ago/db.json")
+        .unwrap()
+        .is_empty());
+}
+
+#[test]
+fn record_keeps_lower_latency_under_any_insertion_order() {
+    forall(60, |rng| {
+        // n entries sharing one key with distinct latencies, inserted in
+        // random order: the survivor must be the minimum, every time
+        let proto = random_entry(rng);
+        let n = rng.range(2, 10);
+        let mut lats: Vec<f64> =
+            (0..n).map(|i| 1e-3 * (i + 1) as f64 + rng.f64() * 1e-4).collect();
+        let min = lats.iter().cloned().fold(f64::INFINITY, f64::min);
+        rng.shuffle(&mut lats);
+        let mut db = TuningDb::new();
+        for &latency in &lats {
+            db.record(DbEntry { latency, ..proto.clone() });
+        }
+        ensure!(db.len() == 1, "one key produced {} entries", db.len());
+        let got = db
+            .lookup(&proto.device, &proto.variant, proto.fingerprint)
+            .expect("key present")
+            .latency;
+        ensure!(
+            got.to_bits() == min.to_bits(),
+            "kept {got}, expected minimum {min}"
+        );
+        Ok(())
+    });
+}
