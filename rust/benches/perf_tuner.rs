@@ -1,9 +1,11 @@
 //! L3 perf bench: tuner search throughput (schedule evaluations per
-//! second, direct vs memoized evaluator), partitioner throughput,
-//! full-model compile wall time, and the TuningDb cold-vs-warm compile
-//! comparison — the compile-time hot paths. Feeds EXPERIMENTS.md §Perf
-//! and writes `BENCH_tuner.json` so the perf trajectory is tracked
-//! PR-over-PR.
+//! second, direct vs memoized evaluator), the batched-generational
+//! worker-scaling curve (1/2/4/8 workers; gates >=3x evals/sec at 8
+//! workers on >=8-core hosts AND 1-worker batched >= 0.7x the
+//! steady-state lambda=1 loop), partitioner throughput, full-model
+//! compile wall time, and the TuningDb cold-vs-warm compile comparison —
+//! the compile-time hot paths. Feeds EXPERIMENTS.md §Perf and writes
+//! `BENCH_tuner.json` so the perf trajectory is tracked PR-over-PR.
 //!
 //! `--quick` shrinks every budget ~10x for the CI smoke run: the numbers
 //! are noisier but the cold-vs-warm comparison and the dedup/hit-rate
@@ -13,14 +15,18 @@
 use std::time::Instant;
 
 use ago::coordinator::{compile_with_db, CompileConfig, TuningDb};
-use ago::costmodel::{CostEvaluator, DirectEvaluator, MemoEvaluator};
+use ago::costmodel::{
+    CostEvaluator, DirectEvaluator, MemoCache, MemoEvaluator,
+    PricingContext,
+};
 use ago::device::DeviceProfile;
 use ago::graph::{Graph, OpKind, Shape, Subgraph};
 use ago::models::{build, InputShape, ModelId};
 use ago::partition::{cluster, ClusterConfig};
 use ago::tuner::schedule::SubgraphView;
-use ago::tuner::search::{tune, tune_with_evaluator, SearchConfig};
+use ago::tuner::search::{tune, tune_parallel, tune_with_evaluator, SearchConfig};
 use ago::util::json::{num, obj, s};
+use ago::util::ThreadPool;
 
 fn rep_subgraph() -> (Graph, SubgraphView) {
     // representative complicated subgraph: pw -> bias -> relu -> dw ->
@@ -123,6 +129,97 @@ fn main() {
         hit_rate * 100.0
     );
 
+    // --- worker-scaling curve: the batched-generational engine -------
+    // Same heavy MBN subgraph, stabilization disabled, a large lambda so
+    // each generation amortizes fan-out overhead. The candidate stream
+    // is drawn on the driver, so every worker count must return the SAME
+    // bits; only evals/sec moves.
+    let scale_budget = if quick { 6_000 } else { 40_000 };
+    let scfg = SearchConfig {
+        budget: scale_budget,
+        stabilize_window: scale_budget, // never early-stop: raw rate
+        lambda: 256,
+        seed: 7,
+        ..Default::default()
+    };
+    // steady-state baseline: lambda = 1 IS the classic one-candidate
+    // loop (draw, price, reduce) — the pre-batching reference the
+    // 1-worker gate below protects
+    let steady_cfg = SearchConfig { lambda: 1, ..scfg.clone() };
+    let t0 = Instant::now();
+    let mut steady_eval = MemoEvaluator::new(&mbn, &dev);
+    let rs = tune_with_evaluator(&mbn, heavy, &steady_cfg, None,
+                                 &mut steady_eval);
+    let eps_steady = rs.evals as f64 / t0.elapsed().as_secs_f64();
+    let ctx = PricingContext::new(&mbn, &dev);
+    let mut eps_workers: Vec<(usize, f64)> = Vec::new();
+    let mut ref_result: Option<(f64, usize)> = None;
+    for workers in [1usize, 2, 4, 8] {
+        let pool = ThreadPool::new(workers);
+        let mut cache = MemoCache::new();
+        let t0 = Instant::now();
+        let r = tune_parallel(&mbn, heavy, &scfg, None, &ctx, &mut cache,
+                              &pool);
+        let dt = t0.elapsed().as_secs_f64();
+        if let Some((lat, evals)) = ref_result {
+            assert_eq!(
+                r.best_latency, lat,
+                "worker count changed the search result"
+            );
+            assert_eq!(r.evals, evals);
+        } else {
+            ref_result = Some((r.best_latency, r.evals));
+        }
+        eps_workers.push((workers, r.evals as f64 / dt));
+    }
+    let eps_w = |w: usize| {
+        eps_workers.iter().find(|&&(n, _)| n == w).unwrap().1
+    };
+    let scaling = eps_w(8) / eps_w(1);
+    println!(
+        "worker scaling @ lambda 256, {scale_budget} evals: steady(l=1) \
+         {eps_steady:.0}/s, batched 1w {:.0}/s, 2w {:.0}/s, 4w {:.0}/s, \
+         8w {:.0}/s ({scaling:.2}x, bit-identical results)",
+        eps_w(1),
+        eps_w(2),
+        eps_w(4),
+        eps_w(8),
+    );
+    // gate 1: batching must not tax the serial case — 1-worker batched
+    // throughput stays within noise of the steady-state loop (same
+    // memoization, same per-candidate work; only loop structure differs)
+    assert!(
+        eps_w(1) >= 0.7 * eps_steady,
+        "1-worker batched search regressed below steady-state: \
+         {:.0}/s vs {eps_steady:.0}/s",
+        eps_w(1)
+    );
+    // gate 2: the point of the exercise — >=3x evals/sec at 8 workers.
+    // 3x needs >=8 real cores, so the full gate is conditioned on them;
+    // on 4-7 cores demand only that parallelism measurably helps (a
+    // single noisy timing sample on an oversubscribed shared runner
+    // must not fail the bench), and below that report without gating.
+    let cores = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1);
+    if cores >= 8 {
+        assert!(
+            scaling >= 3.0,
+            "worker scaling {scaling:.2}x < 3x on {cores} cores"
+        );
+    } else if cores >= 4 {
+        assert!(
+            scaling >= 1.3,
+            "worker scaling {scaling:.2}x: parallel pricing does not \
+             help at all on {cores} cores"
+        );
+    } else {
+        eprintln!(
+            "note: {cores} cores — worker-scaling gate skipped \
+             (measured {scaling:.2}x; recorded in BENCH_tuner.json)"
+        );
+    }
+
     // full-model compile wall time (paper budget; ~10x smaller in
     // --quick so the JSON record names the budget explicitly instead of
     // baking "20k" into a key that would silently mean two things)
@@ -203,6 +300,16 @@ fn main() {
         ("evals_per_sec_memo", num(eps_memo)),
         ("memo_speedup", num(eps_memo / eps_direct)),
         ("cache_hit_rate", num(hit_rate)),
+        // worker-scaling curve of the batched-generational engine (the
+        // CI gate: w8/w1 >= 3x on >=8-core hosts, and w1 must not fall
+        // below the steady-state lambda=1 baseline)
+        ("scale_budget", num(scale_budget as f64)),
+        ("evals_per_sec_steady", num(eps_steady)),
+        ("evals_per_sec_w1", num(eps_w(1))),
+        ("evals_per_sec_w2", num(eps_w(2))),
+        ("evals_per_sec_w4", num(eps_w(4))),
+        ("evals_per_sec_w8", num(eps_w(8))),
+        ("worker_scaling_8w", num(scaling)),
         // renamed from compile_20k_*: the budget varies with --quick, so
         // the record names it instead of a key silently meaning 2k or 20k
         ("compile_full_budget", num(full_budget as f64)),

@@ -6,7 +6,12 @@
 //! delimiters) and fusion never goes beyond conventional epilogue fusion.
 //! Sharing the engine isolates the paper's contribution from
 //! search-quality noise — exactly what the AGO-vs-Ansor comparison is
-//! meant to measure.
+//! meant to measure. That includes the batched-generational parallel
+//! engine (fitting, since batched candidate evaluation is Ansor's own
+//! trick — Zheng et al., OSDI 2020): this baseline goes through
+//! `coordinator::compile`, so the Fig. 13 ablations stay apples-to-apples
+//! with full AGO at any worker count, and its results are equally
+//! bit-independent of parallelism.
 
 use crate::coordinator::{compile, CompileConfig, CompiledModel, Frontend, Variant};
 use crate::device::DeviceProfile;

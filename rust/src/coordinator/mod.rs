@@ -4,9 +4,16 @@
 //! collapse identical subgraphs into equivalence classes; a TuningDb of
 //! earlier compiles is consulted per class) → reformer (split/join) →
 //! tuner backend (per-CLASS schedule search with the members' budgets
-//! pooled, fanned out over a worker pool; the winner is remapped onto
-//! every class member) → compiled model (schedules + predicted latency +
-//! partition report + dedup/warm-start statistics).
+//! pooled; the winner is remapped onto every class member) → compiled
+//! model (schedules + predicted latency + partition report +
+//! dedup/warm-start statistics).
+//!
+//! Tuning uses TWO-LEVEL scheduling over one shared `ThreadPool`:
+//! classes fan out as tasks, and inside each task the generational
+//! tuner's candidate batches (plus the reformer's SPLIT-mini fan-out)
+//! run on the same pool. Few-class compiles — the common case after
+//! dedup — still saturate every core, and because all reductions are
+//! order-preserving the result is bit-independent of the worker count.
 //!
 //! The ablation variants of §VI-B are first-class: `AgoNi` disables
 //! intensive fusion in the backend, `AgoNr` disables the reformer.
@@ -17,10 +24,11 @@ pub mod tuningdb;
 pub use tuningdb::{DbEntry, TuningDb};
 
 use std::collections::{HashMap, HashSet};
-use std::sync::Arc;
 use std::time::Instant;
 
-use crate::costmodel::{CostEvaluator, EvalStats, MemoEvaluator};
+use crate::costmodel::{
+    CostEvaluator, EvalStats, MemoCache, MemoEvaluator, PricingContext,
+};
 use crate::device::DeviceProfile;
 use crate::graph::fingerprint::{canonical_form, verify_isomorphism, CanonicalForm};
 use crate::graph::{Graph, NodeId, Partition};
@@ -28,7 +36,8 @@ use crate::partition::{
     cluster, relay_partition, ClusterConfig, PartitionReport, WeightParams,
 };
 use crate::reformer::{
-    tune_with_reformer_eval, tune_with_reformer_warm, ReformerConfig,
+    tune_with_reformer_parallel, tune_with_reformer_warm_parallel,
+    ReformerConfig,
 };
 use crate::tuner::schedule::{Schedule, SubgraphView};
 use crate::tuner::search::SearchConfig;
@@ -86,7 +95,10 @@ pub struct CompileConfig {
     pub frontend: Frontend,
     pub variant: Variant,
     pub seed: u64,
-    /// Tuning worker threads (0 = auto).
+    /// Tuning worker threads (0 = auto: available parallelism, the
+    /// `ago compile --workers` default). Changes wall-clock only —
+    /// compiled schedules, plan JSON, and TuningDb bytes are identical
+    /// for any value (CI diffs `--workers 1` vs `--workers 4` compiles).
     pub workers: usize,
     /// Warm-start policy when a [`TuningDb`] entry matches a class
     /// fingerprint: exact same-device hits adopt the stored schedule
@@ -355,25 +367,30 @@ pub fn compile_with_db(
         })
         .collect();
 
-    let garc = Arc::new(g.clone());
-    let dev = Arc::new(cfg.device.clone());
     let variant = cfg.variant;
     let seed = cfg.seed;
+    // ONE pool for both scheduling levels: class tasks fan out across
+    // it, and every class task's per-generation candidate batches (and
+    // its reformer's SPLIT-mini fan-out) run on the SAME pool via nested
+    // `scoped_map` (caller-help makes that deadlock-free). A 2-class
+    // compile therefore no longer caps at 2 busy cores — the generations
+    // of both classes interleave across all workers. Worker count is a
+    // wall-clock knob only: every reduction is order-preserving, so the
+    // compiled model (and plan/TuningDb bytes) are independent of it.
     let pool = if cfg.workers == 0 {
         ThreadPool::for_host()
     } else {
         ThreadPool::new(cfg.workers)
     };
+    // the immutable pricing context is shared by every class task (and
+    // every worker inside them); each class task keeps its own MemoCache
+    // — groups never cross subgraphs, so sharing wider would only add
+    // merge traffic
+    let ctx = PricingContext::new(g, &cfg.device);
     let t_tuning = Instant::now();
     // (class idx, best schedule in rep ids, latency, evals, stats, searched)
     let results: Vec<(usize, Schedule, f64, usize, EvalStats, bool)> = pool
-        .map(tasks, move |(ci, view, budget, rep, mode)| {
-            let g = Arc::clone(&garc);
-            let dev = Arc::clone(&dev);
-            // one evaluator (and thus one group-latency cache) per class
-            // task: groups never cross subgraphs, so sharing wider would
-            // only add lock traffic
-            let mut evaluator = MemoEvaluator::new(&g, &dev);
+        .scoped_map(tasks, |(ci, view, budget, rep, mode)| {
             let search = SearchConfig {
                 budget,
                 stabilize_window: (budget / 4).clamp(16, 256),
@@ -388,24 +405,33 @@ pub fn compile_with_db(
                 enabled: variant != Variant::AgoNr,
                 ..Default::default()
             };
+            let mut cache = MemoCache::new();
             let r = match mode {
                 ClassMode::Hit(s) => {
                     // exact hit: one pricing evaluation, no search
-                    let lat = evaluator.evaluate_schedule(&s);
-                    return (ci, s, lat, 1, evaluator.stats(), false);
+                    let mut shard = ctx.new_shard();
+                    let lat = ctx.price_schedule(&s, None, &mut shard);
+                    return (ci, s, lat, 1, shard.stats, false);
                 }
-                ClassMode::Warm(initial) => tune_with_reformer_warm(
-                    &g,
+                ClassMode::Warm(initial) => tune_with_reformer_warm_parallel(
+                    g,
                     &view,
                     &rcfg,
                     initial,
-                    &mut evaluator,
+                    &ctx,
+                    &mut cache,
+                    &pool,
                 ),
-                ClassMode::Cold => {
-                    tune_with_reformer_eval(&g, &view, &rcfg, &mut evaluator)
-                }
+                ClassMode::Cold => tune_with_reformer_parallel(
+                    g,
+                    &view,
+                    &rcfg,
+                    &ctx,
+                    &mut cache,
+                    &pool,
+                ),
             };
-            (ci, r.best, r.best_latency, r.evals, evaluator.stats(), true)
+            (ci, r.best, r.best_latency, r.evals, cache.stats(), true)
         });
 
     // --- fan the class winners back out onto every member ---
@@ -694,6 +720,31 @@ mod tests {
         assert_eq!(mq.db_hits, 0);
         assert_eq!(mq.tuned_tasks, mq.n_classes);
         assert_eq!(db.len(), 2 * mq.n_classes);
+    }
+
+    #[test]
+    fn workers_change_wall_clock_only() {
+        // the batched-parallel acceptance at the compile level: worker
+        // count must not leak into any compiled artifact
+        let g = build(ModelId::Sqn, InputShape::Small);
+        let mk = |workers| {
+            let cfg = CompileConfig {
+                budget: 700,
+                workers,
+                ..CompileConfig::new(DeviceProfile::kirin990())
+            };
+            let mut db = TuningDb::new();
+            let m = compile_with_db(&g, &cfg, &mut db);
+            (m, db.to_json().pretty())
+        };
+        let (m1, db1) = mk(1);
+        let (m4, db4) = mk(4);
+        assert_eq!(m1.total_latency, m4.total_latency);
+        assert_eq!(m1.total_evals, m4.total_evals);
+        assert_eq!(m1.schedules, m4.schedules);
+        assert_eq!(m1.subgraph_latency, m4.subgraph_latency);
+        assert_eq!(m1.n_classes, m4.n_classes);
+        assert_eq!(db1, db4, "TuningDb bytes depend on worker count");
     }
 
     #[test]

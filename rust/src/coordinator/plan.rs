@@ -99,8 +99,12 @@ pub fn to_json(m: &CompiledModel, model_name: &str, device: &str) -> Json {
         ("total_evals", num(m.total_evals as f64)),
         // evals_per_sec is deliberately NOT serialized: it is wall-clock
         // derived, and the plan artifact must stay byte-reproducible for
-        // identical (model, device, seed, budget, tuning-db) compiles
-        ("cache_hit_rate", num(m.cache_hit_rate)),
+        // identical (model, device, seed, budget, tuning-db) compiles.
+        // cache_hit_rate left the plan when the batched-parallel tuner
+        // landed: per-worker memo SHARDS make hit/miss counts (never
+        // prices) a function of the worker count, and plan bytes must be
+        // independent of --workers. It remains on CompiledModel as a
+        // compile-time diagnostic.
         // tuning provenance: how much structural dedup and TuningDb
         // warm-starting shaped this compile. Deterministic for a fixed
         // db state (like total_evals, they differ between a cold and a

@@ -3,21 +3,33 @@
 //! schedules through this trait instead of calling [`group_latency`] /
 //! [`schedule_latency`] directly.
 //!
-//! Two implementations:
+//! Since the batched-generational tuner landed, the memoizing path is
+//! factored into a concurrency-ready pair:
+//! - [`PricingContext`]: the IMMUTABLE part — graph + device bindings and
+//!   the per-node layout-conversion costs precomputed at construction.
+//!   It is `Sync`; any number of workers price schedules against one
+//!   shared context.
+//! - [`MemoShard`]: the MUTABLE part — a private `GroupKey -> latency`
+//!   map plus the owner-table scratch one pricing pass needs. Each
+//!   worker (or batch chunk) owns a shard; after a generation the shards
+//!   merge into a [`MemoCache`] in submission order. The merge is
+//!   deterministic in every way that matters: a group's price is a pure
+//!   function of (graph, device, group), so two shards can only ever
+//!   disagree on WHICH thread computed a price, never on its bits. Hit
+//!   counts therefore vary with worker count; prices never do (pinned by
+//!   `tests/search_parallel_props.rs`).
+//!
+//! Two `CostEvaluator` implementations remain for serial callers:
 //! - [`DirectEvaluator`] forwards to the roofline model unchanged — the
 //!   reference path, and the right choice for one-shot pricing (handlib).
-//! - [`MemoEvaluator`] caches `group_latency` per canonical [`GroupKey`]
-//!   and replaces the per-evaluation `BTreeMap` layout-crossing scan with
-//!   a flat owner table plus precomputed per-tensor conversion costs.
-//!   An evolutionary mutation changes one or two groups of a schedule, so
-//!   under memoization a schedule evaluation recomputes only the mutated
-//!   groups (everything else is a cache hit) — the incremental cost
-//!   feedback that makes large joint search spaces tractable.
+//! - [`MemoEvaluator`] is now a thin shell over one context + one shard;
+//!   its public surface (and bit-exactness contract) is unchanged.
 //!
-//! Bit-exactness contract: for the same graph and device, both
-//! implementations return *identical* f64 latencies — same functions,
-//! same summation order. Tests in `tests/costmodel_props.rs` and below
-//! pin this for random schedules over the seed models.
+//! Bit-exactness contract: for the same graph and device, every path —
+//! direct, memoized, sharded-parallel — returns *identical* f64
+//! latencies (same functions, same summation order). Tests in
+//! `tests/costmodel_props.rs`, `tests/search_parallel_props.rs`, and
+//! below pin this for random schedules over the seed models.
 
 use std::collections::HashMap;
 
@@ -109,68 +121,84 @@ impl CostEvaluator for DirectEvaluator<'_> {
     }
 }
 
-/// Memoizing evaluator: `group_latency` cached by [`GroupKey`];
-/// layout-conversion costs computed from a flat per-node owner table and
-/// per-node conversion costs precomputed at construction (one division
-/// per graph node instead of one BTreeMap build per evaluation).
-pub struct MemoEvaluator<'a> {
+/// The immutable half of memoized pricing: graph + device bindings and
+/// per-node conversion costs, computed once. `Sync` — share one context
+/// across any number of pricing workers.
+pub struct PricingContext<'a> {
     g: &'a Graph,
     dev: &'a DeviceProfile,
-    cache: HashMap<GroupKey, f64>,
     /// Seconds to transpose node v's output once: 2 * bytes / bandwidth —
     /// exactly the expression `schedule_latency` evaluates inline.
     conv_cost: Vec<f64>,
-    /// Scratch: node -> (group index, layout) for the schedule currently
-    /// being evaluated. Cleared at the start of each evaluation.
-    owner: Vec<Option<(usize, Layout)>>,
-    stats: EvalStats,
 }
 
-impl<'a> MemoEvaluator<'a> {
-    pub fn new(g: &'a Graph, dev: &'a DeviceProfile) -> MemoEvaluator<'a> {
+impl<'a> PricingContext<'a> {
+    pub fn new(g: &'a Graph, dev: &'a DeviceProfile) -> PricingContext<'a> {
         let conv_cost = (0..g.len())
             .map(|v| {
                 let bytes = g.node(v).out_shape.bytes();
                 2.0 * bytes as f64 / dev.bandwidth_for(bytes).max(1.0)
             })
             .collect();
-        MemoEvaluator {
-            g,
-            dev,
-            cache: HashMap::new(),
-            conv_cost,
-            owner: vec![None; g.len()],
+        PricingContext { g, dev, conv_cost }
+    }
+
+    pub fn graph(&self) -> &'a Graph {
+        self.g
+    }
+
+    pub fn device(&self) -> &'a DeviceProfile {
+        self.dev
+    }
+
+    /// A fresh shard with owner-table scratch sized for this graph.
+    pub fn new_shard(&self) -> MemoShard {
+        MemoShard {
+            fresh: HashMap::new(),
+            owner: vec![None; self.g.len()],
             stats: EvalStats::default(),
         }
     }
 
-    /// Number of distinct groups priced so far.
-    pub fn cache_len(&self) -> usize {
-        self.cache.len()
-    }
-}
-
-impl CostEvaluator for MemoEvaluator<'_> {
-    fn evaluate_group(&mut self, grp: &FusionGroup) -> f64 {
-        self.stats.group_evals += 1;
-        if let Some(&lat) = self.cache.get(grp) {
-            self.stats.hits += 1;
+    /// Price one group. Lookup order: the frozen `warm` map (a merged
+    /// cache from earlier generations, if any), then the shard's own
+    /// fresh entries, then compute-and-insert. All three sources return
+    /// the same bits for the same key — pricing is pure — so whether a
+    /// probe hits warm, fresh, or misses cannot change any result.
+    pub fn price_group(
+        &self,
+        grp: &FusionGroup,
+        warm: Option<&HashMap<GroupKey, f64>>,
+        shard: &mut MemoShard,
+    ) -> f64 {
+        shard.stats.group_evals += 1;
+        if let Some(&lat) = warm.and_then(|w| w.get(grp)) {
+            shard.stats.hits += 1;
             return lat;
         }
-        self.stats.misses += 1;
+        if let Some(&lat) = shard.fresh.get(grp) {
+            shard.stats.hits += 1;
+            return lat;
+        }
+        shard.stats.misses += 1;
         let lat = group_latency(self.g, grp, self.dev);
-        self.cache.insert(grp.clone(), lat);
+        shard.fresh.insert(grp.clone(), lat);
         lat
     }
 
-    fn evaluate_schedule(&mut self, s: &Schedule) -> f64 {
-        self.stats.schedule_evals += 1;
-        // Same summation order as `schedule_latency`: groups first, then
-        // conversion passes in group/op/pred iteration order — the two
-        // paths must stay bit-identical.
+    /// Price a whole schedule. Same summation order as
+    /// [`schedule_latency`]: groups first, then conversion passes in
+    /// group/op/pred iteration order — the paths must stay bit-identical.
+    pub fn price_schedule(
+        &self,
+        s: &Schedule,
+        warm: Option<&HashMap<GroupKey, f64>>,
+        shard: &mut MemoShard,
+    ) -> f64 {
+        shard.stats.schedule_evals += 1;
         let mut total = 0.0f64;
         for grp in &s.groups {
-            total += self.evaluate_group(grp);
+            total += self.price_group(grp, warm, shard);
         }
         // invariant: `owner` is all-None between evaluations (it starts
         // that way and the cleanup below restores it), so only the
@@ -178,14 +206,14 @@ impl CostEvaluator for MemoEvaluator<'_> {
         // O(graph), per evaluation
         for (gi, grp) in s.groups.iter().enumerate() {
             for &v in &grp.ops {
-                self.owner[v] = Some((gi, grp.layout));
+                shard.owner[v] = Some((gi, grp.layout));
             }
         }
         for grp in &s.groups {
             for &v in &grp.ops {
-                let (cg, cl) = self.owner[v].expect("op owned by its group");
+                let (cg, cl) = shard.owner[v].expect("op owned by its group");
                 for &p in self.g.preds(v) {
-                    if let Some((pg, pl)) = self.owner[p] {
+                    if let Some((pg, pl)) = shard.owner[p] {
                         if pg != cg && pl != cl {
                             total += self.conv_cost[p];
                         }
@@ -195,14 +223,111 @@ impl CostEvaluator for MemoEvaluator<'_> {
         }
         for grp in &s.groups {
             for &v in &grp.ops {
-                self.owner[v] = None;
+                shard.owner[v] = None;
             }
         }
         total
     }
+}
+
+/// The mutable half: one worker's private memo (`fresh`) plus the
+/// per-pass owner-table scratch. Created by [`PricingContext::new_shard`],
+/// consumed by [`MemoCache::absorb`].
+pub struct MemoShard {
+    fresh: HashMap<GroupKey, f64>,
+    /// Scratch: node -> (group index, layout) for the schedule currently
+    /// being evaluated. Cleared at the end of each evaluation.
+    owner: Vec<Option<(usize, Layout)>>,
+    pub stats: EvalStats,
+}
+
+/// The merged memo a search (or a reformer round, or a coordinator class
+/// task) accumulates across generations: the warm map workers read, plus
+/// aggregated stats. Merging is order-insensitive for prices (pure
+/// functions collide only on equal bits) — submission order is used
+/// anyway so the structure is reproducible run-to-run.
+#[derive(Default)]
+pub struct MemoCache {
+    map: HashMap<GroupKey, f64>,
+    stats: EvalStats,
+}
+
+impl MemoCache {
+    pub fn new() -> MemoCache {
+        MemoCache::default()
+    }
+
+    /// The frozen warm map workers read during a generation.
+    pub fn warm(&self) -> &HashMap<GroupKey, f64> {
+        &self.map
+    }
+
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+
+    pub fn stats(&self) -> EvalStats {
+        self.stats
+    }
+
+    /// Fold a worker's shard in: fresh prices enter the warm map, stats
+    /// accumulate. Duplicate keys across shards carry identical bits
+    /// (purity), so first-write-wins is not a policy choice — it is
+    /// indistinguishable from any other.
+    pub fn absorb(&mut self, shard: MemoShard) {
+        self.stats.merge(&shard.stats);
+        for (k, v) in shard.fresh {
+            self.map.entry(k).or_insert(v);
+        }
+    }
+
+    /// Merge another cache (a mini-subgraph search's private cache, when
+    /// the reformer fans minis out in parallel).
+    pub fn merge(&mut self, other: MemoCache) {
+        self.stats.merge(&other.stats);
+        for (k, v) in other.map {
+            self.map.entry(k).or_insert(v);
+        }
+    }
+}
+
+/// Memoizing evaluator for serial callers: one [`PricingContext`] + one
+/// [`MemoShard`], behind the classic [`CostEvaluator`] surface. The
+/// batched tuner bypasses this shell and drives context + shards
+/// directly; both paths produce identical latencies.
+pub struct MemoEvaluator<'a> {
+    ctx: PricingContext<'a>,
+    shard: MemoShard,
+}
+
+impl<'a> MemoEvaluator<'a> {
+    pub fn new(g: &'a Graph, dev: &'a DeviceProfile) -> MemoEvaluator<'a> {
+        let ctx = PricingContext::new(g, dev);
+        let shard = ctx.new_shard();
+        MemoEvaluator { ctx, shard }
+    }
+
+    /// Number of distinct groups priced so far.
+    pub fn cache_len(&self) -> usize {
+        self.shard.fresh.len()
+    }
+}
+
+impl CostEvaluator for MemoEvaluator<'_> {
+    fn evaluate_group(&mut self, grp: &FusionGroup) -> f64 {
+        self.ctx.price_group(grp, None, &mut self.shard)
+    }
+
+    fn evaluate_schedule(&mut self, s: &Schedule) -> f64 {
+        self.ctx.price_schedule(s, None, &mut self.shard)
+    }
 
     fn stats(&self) -> EvalStats {
-        self.stats
+        self.shard.stats
     }
 }
 
@@ -274,5 +399,58 @@ mod tests {
         assert_eq!(a.group_evals, 8);
         assert!((a.hit_rate() - 0.5).abs() < 1e-12);
         assert_eq!(EvalStats::default().hit_rate(), 0.0);
+    }
+
+    /// Sharded pricing against a shared context: warm-map hits, fresh
+    /// hits, and misses all return identical bits, and absorbing shards
+    /// in any split yields the same merged price map.
+    #[test]
+    fn shards_agree_with_serial_memo_bitwise() {
+        let g = build(ModelId::Sqn, InputShape::Small);
+        let dev = DeviceProfile::kirin990();
+        let p = cluster(&g, ClusterConfig::adaptive(&g));
+        let views = SubgraphView::all(&g, &p);
+        let view = views.iter().find(|v| v.complex.len() >= 2).unwrap();
+        let mut rng = Rng::new(0xA11);
+        let scheds: Vec<_> = (0..40)
+            .map(|_| random_schedule(&g, view, &mut rng, true))
+            .collect();
+
+        let ctx = PricingContext::new(&g, &dev);
+        let mut serial = MemoEvaluator::new(&g, &dev);
+        let serial_lats: Vec<f64> =
+            scheds.iter().map(|s| serial.evaluate_schedule(s)).collect();
+
+        // two-shard split with a mid-run merge into a shared cache
+        let mut cache = MemoCache::new();
+        let (first, second) = scheds.split_at(scheds.len() / 2);
+        let mut sharded_lats = Vec::new();
+        for half in [first, second] {
+            let mut shards: Vec<MemoShard> =
+                (0..2).map(|_| ctx.new_shard()).collect();
+            for (i, s) in half.iter().enumerate() {
+                let lat = ctx.price_schedule(
+                    s,
+                    Some(cache.warm()),
+                    &mut shards[i % 2],
+                );
+                sharded_lats.push(lat);
+            }
+            for shard in shards {
+                cache.absorb(shard);
+            }
+        }
+        assert_eq!(serial_lats, sharded_lats, "sharding changed prices");
+        // merged cache prices equal the serial evaluator's for every key
+        // it holds (hit counts may differ; prices may not)
+        assert_eq!(cache.len(), serial.cache_len());
+        let mut probe = ctx.new_shard();
+        for s in &scheds {
+            for grp in &s.groups {
+                let warm = *cache.warm().get(grp).expect("merged cache covers");
+                let fresh = ctx.price_group(grp, None, &mut probe);
+                assert!(warm == fresh, "merge lost bits: {warm} != {fresh}");
+            }
+        }
     }
 }

@@ -21,7 +21,8 @@
 pub mod evaluator;
 
 pub use evaluator::{
-    CostEvaluator, DirectEvaluator, EvalStats, GroupKey, MemoEvaluator,
+    CostEvaluator, DirectEvaluator, EvalStats, GroupKey, MemoCache,
+    MemoEvaluator, MemoShard, PricingContext,
 };
 
 use crate::device::DeviceProfile;

@@ -71,6 +71,8 @@ fn main() {
                  compile   --model mbn --shape small|middle|large \\\n\
                  \x20         --device kirin990|qsd810 --budget 20000 \\\n\
                  \x20         --variant ago|ni|nr --frontend auto|relay \\\n\
+                 \x20         [--workers N (0 = all cores; wall-clock \\\n\
+                 \x20          only, plan/db bytes are identical)] \\\n\
                  \x20         [--baselines] [--tuning-db db.json] [--cold]\n\
                  partition --model mvt --shape large\n\
                  serve     --plans dir [--models mbn,sqn --shape small \\\n\

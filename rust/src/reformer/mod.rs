@@ -8,11 +8,16 @@
 //! for a final joint tuning round — evading cold-start tuning of the huge
 //! combined space (the paper's answer to Challenge 2).
 
-use crate::costmodel::{CostEvaluator, MemoEvaluator};
+use crate::costmodel::{
+    CostEvaluator, MemoCache, MemoEvaluator, PricingContext,
+};
 use crate::device::DeviceProfile;
 use crate::graph::{Graph, NodeId};
 use crate::tuner::schedule::{Schedule, SubgraphView};
-use crate::tuner::search::{tune_with_evaluator, SearchConfig, TuneResult};
+use crate::tuner::search::{
+    tune_parallel, tune_with_evaluator, SearchConfig, TuneResult,
+};
+use crate::util::ThreadPool;
 
 #[derive(Clone, Debug)]
 pub struct ReformerConfig {
@@ -79,6 +84,35 @@ pub fn join_schedules(minis: Vec<Schedule>) -> Schedule {
     }
 }
 
+// The serial and parallel reformer pipelines differ ONLY in how they
+// drive the tuner (back-to-back vs pool fan-out); every budget/seed/
+// window constant lives in the three helpers below so the two paths
+// cannot drift apart — their bit-identity contract depends on it.
+
+/// Per-mini budget: the split fraction of the subgraph budget, divided
+/// across minis, floored so even tiny allocations buy a real search.
+fn mini_budget_of(budget: usize, split_fraction: f64, n_minis: usize) -> usize {
+    ((budget as f64 * split_fraction) as usize / n_minis.max(1)).max(24)
+}
+
+/// Search config for mini `i` (independent seed stream per mini).
+fn mini_cfg(base: &SearchConfig, mini_budget: usize, i: usize) -> SearchConfig {
+    SearchConfig {
+        budget: mini_budget,
+        stabilize_window: (mini_budget / 4).max(16),
+        seed: base.seed ^ (0x5eed_0000 + i as u64),
+        ..base.clone()
+    }
+}
+
+/// Search config for the JOIN round: whatever the minis left, floored.
+fn join_cfg(base: &SearchConfig, budget: usize, spent: usize) -> SearchConfig {
+    SearchConfig {
+        budget: budget.saturating_sub(spent).max(16),
+        ..base.clone()
+    }
+}
+
 /// Tune one subgraph through the reformer: SPLIT -> tune minis -> JOIN ->
 /// joint tuning seeded with the composed schedule. All rounds share one
 /// [`MemoEvaluator`] cache; see [`tune_with_reformer_eval`].
@@ -111,29 +145,74 @@ pub fn tune_with_reformer_eval(
         return tune_with_evaluator(g, view, &cfg.search, None, evaluator);
     }
     let minis = split(view, g);
-    let mini_budget = ((budget as f64 * cfg.split_fraction) as usize
-        / minis.len().max(1))
-    .max(24);
+    let mini_budget = mini_budget_of(budget, cfg.split_fraction, minis.len());
     let mut spent = 0usize;
     let mut mini_best = Vec::with_capacity(minis.len());
     for (i, mini) in minis.iter().enumerate() {
-        let mcfg = SearchConfig {
-            budget: mini_budget,
-            stabilize_window: (mini_budget / 4).max(16),
-            seed: cfg.search.seed ^ (0x5eed_0000 + i as u64),
-            ..cfg.search.clone()
-        };
+        let mcfg = mini_cfg(&cfg.search, mini_budget, i);
         let r = tune_with_evaluator(g, mini, &mcfg, None, evaluator);
         spent += r.evals;
         mini_best.push(r.best);
     }
     let initial = join_schedules(mini_best);
-    let jcfg = SearchConfig {
-        budget: budget.saturating_sub(spent).max(16),
-        ..cfg.search.clone()
-    };
+    let jcfg = join_cfg(&cfg.search, budget, spent);
     let mut result =
         tune_with_evaluator(g, view, &jcfg, Some(initial), evaluator);
+    result.evals += spent;
+    result
+}
+
+/// The batched-parallel reformer: same divide-and-conquer as
+/// [`tune_with_reformer_eval`], but every level keeps the pool busy.
+/// SPLIT minis — independent searches — fan out as ONE batched pool of
+/// tasks (the serial path runs them back-to-back), each mini itself runs
+/// the generational batched search on the same pool (nested use is
+/// deadlock-free by `scoped_map`'s caller-help rule), and JOIN runs the
+/// batched search seeded with the composed schedule.
+///
+/// Each mini task searches against a PRIVATE [`MemoCache`]; group prices
+/// are pure functions of (graph, device, group), so private caches
+/// cannot change any trajectory — they only change hit counters. After
+/// the minis return, their caches merge into `cache` in mini order, so
+/// the JOIN round starts exactly as warm as the serial path and the
+/// whole result is bit-identical to [`tune_with_reformer_eval`] with a
+/// [`MemoEvaluator`] — for any worker count (pinned by
+/// `tests/search_parallel_props.rs`).
+pub fn tune_with_reformer_parallel(
+    g: &Graph,
+    view: &SubgraphView,
+    cfg: &ReformerConfig,
+    ctx: &PricingContext,
+    cache: &mut MemoCache,
+    pool: &ThreadPool,
+) -> TuneResult {
+    let budget = cfg.search.budget;
+    if !cfg.enabled || view.complex.len() <= 1 {
+        // AGO-NR, or nothing to divide: direct batched tuning
+        return tune_parallel(g, view, &cfg.search, None, ctx, cache, pool);
+    }
+    let minis = split(view, g);
+    let mini_budget = mini_budget_of(budget, cfg.split_fraction, minis.len());
+    let items: Vec<(usize, SubgraphView)> =
+        minis.into_iter().enumerate().collect();
+    let mini_results: Vec<(TuneResult, MemoCache)> =
+        pool.scoped_map(items, |(i, mini)| {
+            let mcfg = mini_cfg(&cfg.search, mini_budget, i);
+            let mut mc = MemoCache::new();
+            let r = tune_parallel(g, &mini, &mcfg, None, ctx, &mut mc, pool);
+            (r, mc)
+        });
+    let mut spent = 0usize;
+    let mut mini_best = Vec::with_capacity(mini_results.len());
+    for (r, mc) in mini_results {
+        spent += r.evals;
+        mini_best.push(r.best);
+        cache.merge(mc);
+    }
+    let initial = join_schedules(mini_best);
+    let jcfg = join_cfg(&cfg.search, budget, spent);
+    let mut result =
+        tune_parallel(g, view, &jcfg, Some(initial), ctx, cache, pool);
     result.evals += spent;
     result
 }
@@ -154,6 +233,20 @@ pub fn tune_with_reformer_warm(
     evaluator: &mut dyn CostEvaluator,
 ) -> TuneResult {
     tune_with_evaluator(g, view, &cfg.search, Some(initial), evaluator)
+}
+
+/// [`tune_with_reformer_warm`] on the batched engine (the coordinator's
+/// warm path under two-level scheduling).
+pub fn tune_with_reformer_warm_parallel(
+    g: &Graph,
+    view: &SubgraphView,
+    cfg: &ReformerConfig,
+    initial: Schedule,
+    ctx: &PricingContext,
+    cache: &mut MemoCache,
+    pool: &ThreadPool,
+) -> TuneResult {
+    tune_parallel(g, view, &cfg.search, Some(initial), ctx, cache, pool)
 }
 
 #[cfg(test)]
@@ -253,6 +346,32 @@ mod tests {
         let cold = tune_with_reformer(&g, &v, &dev, &cfg);
         assert_eq!(cold.best_latency, r.best_latency);
         assert_eq!(cold.evals, r.evals);
+    }
+
+    #[test]
+    fn parallel_reformer_matches_serial_bitwise() {
+        // minis fanned out + batched JOIN must reproduce the serial
+        // shared-evaluator pipeline exactly, for any worker count
+        let (g, v) = triple();
+        let dev = crate::device::DeviceProfile::kirin990();
+        let cfg = ReformerConfig {
+            search: SearchConfig { budget: 400, ..Default::default() },
+            ..Default::default()
+        };
+        let serial = tune_with_reformer(&g, &v, &dev, &cfg);
+        for workers in [1usize, 3] {
+            let pool = crate::util::ThreadPool::new(workers);
+            let ctx = PricingContext::new(&g, &dev);
+            let mut cache = MemoCache::new();
+            let r = tune_with_reformer_parallel(&g, &v, &cfg, &ctx,
+                                                &mut cache, &pool);
+            assert_eq!(r.best, serial.best, "{workers} workers");
+            assert_eq!(r.best_latency, serial.best_latency);
+            assert_eq!(r.evals, serial.evals);
+            assert_eq!(r.history, serial.history);
+            // the merged caches did real work (JOIN started warm)
+            assert!(cache.stats().hits > 0);
+        }
     }
 
     #[test]

@@ -1,19 +1,46 @@
 //! Fixed-size worker pool (substrate — no tokio offline).
 //!
-//! The coordinator tunes many subgraphs concurrently; each tuning task is
-//! CPU-bound search, so a plain thread pool with an MPMC queue built from
-//! `std::sync::mpsc` + a shared receiver behind a mutex is the right tool.
-//! Shutdown is explicit and deterministic (drop closes the channel, workers
-//! drain and exit).
+//! The coordinator tunes many subgraphs concurrently and, since the
+//! batched-generational tuner landed, each tuning task ALSO fans its
+//! per-generation candidate batches out over the same pool (two-level
+//! scheduling: classes x generations). Both levels are CPU-bound, so a
+//! plain thread pool with an MPMC queue built from `std::sync::mpsc` + a
+//! shared receiver behind a mutex is the right tool. Shutdown is explicit
+//! and deterministic (drop closes the channel, workers drain and exit).
+//!
+//! Two submission surfaces:
+//! - [`ThreadPool::execute`] / [`ThreadPool::map`]: `'static` jobs, the
+//!   classic fire-and-forget / collect-in-order pair.
+//! - [`ThreadPool::scoped_map`]: jobs may BORROW from the caller's stack
+//!   (graph views, pricing contexts, candidate buffers) instead of being
+//!   cloned into `'static` closures. The call blocks until every job has
+//!   finished, and the waiting thread *helps drain the queue* while it
+//!   blocks — so nested use (a pool job calling `scoped_map` on the same
+//!   pool) can never deadlock: any thread that waits also executes.
 
+use std::panic::AssertUnwindSafe;
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::{mpsc, Arc, Mutex};
 use std::thread;
 
-type Job = Box<dyn FnOnce() + Send + 'static>;
+type JobFn = Box<dyn FnOnce() + Send + 'static>;
+
+/// A queued unit of work. `done` (scoped jobs only) is decremented by
+/// the EXECUTOR after the closure has been consumed and every one of
+/// its captures dropped — the completion signal `scoped_map` blocks on.
+/// Keeping it outside the closure (rather than as a capture) is what
+/// makes the signal mean "nothing of this job exists anymore", no
+/// matter what the closure body does or captures.
+struct Job {
+    run: JobFn,
+    done: Option<Arc<AtomicUsize>>,
+}
 
 pub struct ThreadPool {
     tx: Option<mpsc::Sender<Job>>,
+    /// Shared with the workers so waiting threads can steal queued jobs
+    /// (the caller-help rule behind `scoped_map`'s deadlock freedom).
+    rx: Arc<Mutex<mpsc::Receiver<Job>>>,
     workers: Vec<thread::JoinHandle<()>>,
     queued: Arc<AtomicUsize>,
 }
@@ -38,8 +65,7 @@ impl ThreadPool {
                         };
                         match job {
                             Ok(job) => {
-                                job();
-                                queued.fetch_sub(1, Ordering::SeqCst);
+                                ThreadPool::run_job(job, &queued);
                             }
                             Err(_) => break, // channel closed: shut down
                         }
@@ -47,7 +73,7 @@ impl ThreadPool {
                     .expect("spawn worker")
             })
             .collect();
-        ThreadPool { tx: Some(tx), workers, queued }
+        ThreadPool { tx: Some(tx), rx, workers, queued }
     }
 
     /// Pool sized to the machine (leaving one core for the leader thread).
@@ -69,38 +95,190 @@ impl ThreadPool {
 
     /// Fire-and-forget submission.
     pub fn execute<F: FnOnce() + Send + 'static>(&self, f: F) {
+        self.submit(Job { run: Box::new(f), done: None });
+    }
+
+    fn submit(&self, job: Job) {
         self.queued.fetch_add(1, Ordering::SeqCst);
         self.tx
             .as_ref()
             .expect("pool already shut down")
-            .send(Box::new(f))
+            .send(job)
             .expect("worker channel closed");
     }
 
+    /// Execute one job on the current thread (worker loop and helping
+    /// callers share this). A panicking closure must not kill the
+    /// executor: scoped jobs forward the payload through their result
+    /// channel, and a dead worker would strand queued jobs. The `done`
+    /// signal fires strictly AFTER the closure and all its captures are
+    /// gone (consumed by the call, or dropped during unwind inside
+    /// catch_unwind) — `scoped_map` relies on that ordering.
+    fn run_job(job: Job, queued: &AtomicUsize) {
+        let Job { run, done } = job;
+        let _ = std::panic::catch_unwind(AssertUnwindSafe(run));
+        queued.fetch_sub(1, Ordering::SeqCst);
+        if let Some(done) = done {
+            done.fetch_sub(1, Ordering::SeqCst);
+        }
+    }
+
+    /// Pop one queued job and run it on the current thread. Returns false
+    /// when there is nothing to steal. This is how blocked `scoped_map`
+    /// callers contribute instead of idling.
+    ///
+    /// MUST be `try_lock`, not `lock`: an idle worker parks itself INSIDE
+    /// the mutex (it blocks in `recv()` while holding the guard), so a
+    /// blocking lock here would strand the caller until a future submit
+    /// wakes that worker — even with the caller's own results already
+    /// delivered. A held mutex implies an idle worker in `recv()`, which
+    /// implies the queue is empty: nothing to steal, return false.
+    fn try_run_one(&self) -> bool {
+        let job = match self.rx.try_lock() {
+            Ok(guard) => guard.try_recv(),
+            Err(_) => return false,
+        };
+        match job {
+            Ok(job) => {
+                ThreadPool::run_job(job, &self.queued);
+                true
+            }
+            Err(_) => false,
+        }
+    }
+
     /// Run `f` over every item, collecting results in input order.
-    /// Blocks until all complete.
+    /// Blocks until all complete. `'static` convenience wrapper over
+    /// [`ThreadPool::scoped_map`].
     pub fn map<T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
     where
         T: Send + 'static,
         R: Send + 'static,
         F: Fn(T) -> R + Send + Sync + 'static,
     {
-        let f = Arc::new(f);
-        let (rtx, rrx) = mpsc::channel::<(usize, R)>();
+        self.scoped_map(items, f)
+    }
+
+    /// [`ThreadPool::map`] for closures and items that borrow from the
+    /// caller's stack: per-generation tuning batches pass `&Graph` /
+    /// `&PricingContext` directly instead of cloning them into `'static`
+    /// closures.
+    ///
+    /// Guarantees:
+    /// - results come back in input order (submission order), so callers
+    ///   reduce deterministically regardless of worker count;
+    /// - the call does not return until every job has run to completion
+    ///   (a panicking job is caught and re-thrown here, after all other
+    ///   jobs finished — nothing keeps borrowing once this frame is
+    ///   gone, which is what makes the lifetime erasure below sound);
+    /// - while waiting, the calling thread drains the shared queue, so a
+    ///   job that itself calls `scoped_map` on the same pool makes
+    ///   progress even on a 1-worker pool (regression-tested below).
+    pub fn scoped_map<'env, T, R, F>(&self, items: Vec<T>, f: F) -> Vec<R>
+    where
+        T: Send + 'env,
+        R: Send + 'env,
+        F: Fn(T) -> R + Sync + 'env,
+    {
         let n = items.len();
-        for (i, item) in items.into_iter().enumerate() {
-            let f = Arc::clone(&f);
-            let rtx = rtx.clone();
-            self.execute(move || {
-                let r = f(item);
-                let _ = rtx.send((i, r));
-            });
+        if n == 0 {
+            return Vec::new();
+        }
+        let (rtx, rrx) =
+            mpsc::channel::<(usize, thread::Result<R>)>();
+        // completion latch: decremented by the EXECUTOR after a job's
+        // closure (and every capture borrowing 'env) has been dropped —
+        // see `run_job`. The result channel alone is not a completion
+        // signal: a worker could be preempted between sending and
+        // dropping the closure, and the drop must not outlive 'env.
+        let inflight = Arc::new(AtomicUsize::new(n));
+        {
+            let f = &f;
+            for (i, item) in items.into_iter().enumerate() {
+                let rtx = rtx.clone();
+                let run: Box<dyn FnOnce() + Send + 'env> =
+                    Box::new(move || {
+                        let r = std::panic::catch_unwind(
+                            AssertUnwindSafe(|| f(item)),
+                        );
+                        // receiver outlives all jobs: this frame holds it
+                        // until every (i, result) arrived
+                        let _ = rtx.send((i, r));
+                    });
+                // SAFETY: the closure box is erased to 'static to enter
+                // the queue, but this frame blocks on `inflight` until
+                // every job closure has been consumed-or-unwound AND
+                // dropped (run_job decrements only after that), so no
+                // borrow of 'env — in the body OR in the captures' Drop
+                // impls — can outlive this call. catch_unwind at both
+                // levels guarantees panics cannot skip the accounting.
+                let run: JobFn = unsafe {
+                    std::mem::transmute::<
+                        Box<dyn FnOnce() + Send + 'env>,
+                        Box<dyn FnOnce() + Send + 'static>,
+                    >(run)
+                };
+                self.submit(Job { run, done: Some(Arc::clone(&inflight)) });
+            }
         }
         drop(rtx);
         let mut out: Vec<Option<R>> = (0..n).map(|_| None).collect();
-        for _ in 0..n {
-            let (i, r) = rrx.recv().expect("worker died");
-            out[i] = Some(r);
+        let mut panic: Option<Box<dyn std::any::Any + Send>> = None;
+        let mut got = 0usize;
+        fn absorb<R>(
+            out: &mut [Option<R>],
+            panic: &mut Option<Box<dyn std::any::Any + Send>>,
+            got: &mut usize,
+            (i, r): (usize, thread::Result<R>),
+        ) {
+            match r {
+                Ok(r) => out[i] = Some(r),
+                Err(p) => {
+                    if panic.is_none() {
+                        *panic = Some(p);
+                    }
+                }
+            }
+            *got += 1;
+        }
+        while got < n {
+            match rrx.try_recv() {
+                Ok(msg) => absorb(&mut out, &mut panic, &mut got, msg),
+                Err(mpsc::TryRecvError::Empty) => {
+                    // help: run someone's queued job instead of idling;
+                    // with nothing queued, block briefly on the result
+                    // channel (short timeout keeps us polling the queue
+                    // in case new helpable jobs arrive)
+                    if !self.try_run_one() {
+                        match rrx.recv_timeout(
+                            std::time::Duration::from_micros(200),
+                        ) {
+                            Ok(msg) => {
+                                absorb(&mut out, &mut panic, &mut got, msg)
+                            }
+                            Err(mpsc::RecvTimeoutError::Timeout) => {}
+                            Err(mpsc::RecvTimeoutError::Disconnected) => {
+                                unreachable!(
+                                    "jobs hold the sender until they report"
+                                )
+                            }
+                        }
+                    }
+                }
+                Err(mpsc::TryRecvError::Disconnected) => {
+                    unreachable!("jobs hold the sender until they report")
+                }
+            }
+        }
+        // all results are in; now wait for the last job OBJECTS to be
+        // destroyed (near-instant — executors decrement right after the
+        // closure call returns). This, not the result count, is what
+        // lets 'env end safely.
+        while inflight.load(Ordering::SeqCst) > 0 {
+            thread::yield_now();
+        }
+        if let Some(p) = panic {
+            std::panic::resume_unwind(p);
         }
         out.into_iter().map(|o| o.unwrap()).collect()
     }
@@ -154,5 +332,89 @@ mod tests {
         assert_eq!(pool.workers(), 1);
         let out = pool.map(vec![1, 2, 3], |x| x + 1);
         assert_eq!(out, vec![2, 3, 4]);
+    }
+
+    #[test]
+    fn scoped_map_borrows_stack_data() {
+        let pool = ThreadPool::new(3);
+        let data: Vec<u64> = (0..100).collect(); // NOT 'static
+        let out =
+            pool.scoped_map((0..100usize).collect(), |i| data[i] * 2);
+        assert_eq!(out, (0..100).map(|x| x * 2).collect::<Vec<u64>>());
+    }
+
+    /// The coordinator's shape: outer scoped_map jobs each run an inner
+    /// scoped_map on the SAME pool. Worst case is a 1-worker pool — the
+    /// outer job occupies the only worker while its inner batch sits in
+    /// the queue, so without caller-help this deadlocks. A watchdog turns
+    /// a hang into a failure instead of a stuck CI job.
+    #[test]
+    fn nested_scoped_map_cannot_deadlock() {
+        for workers in [1usize, 2, 4] {
+            let (done_tx, done_rx) = mpsc::channel();
+            thread::spawn(move || {
+                let pool = ThreadPool::new(workers);
+                let outer: Vec<u64> =
+                    pool.scoped_map((0..6u64).collect(), |i| {
+                        let inner: Vec<u64> = pool
+                            .scoped_map((0..8u64).collect(), |j| i * 10 + j);
+                        inner.iter().sum()
+                    });
+                let _ = done_tx.send(outer);
+            });
+            let outer = done_rx
+                .recv_timeout(std::time::Duration::from_secs(30))
+                .unwrap_or_else(|_| {
+                    panic!("nested scoped_map deadlocked ({workers} workers)")
+                });
+            let expect: Vec<u64> =
+                (0..6u64).map(|i| (0..8u64).map(|j| i * 10 + j).sum()).collect();
+            assert_eq!(outer, expect);
+        }
+    }
+
+    /// Regression: an idle worker parks itself INSIDE the rx mutex
+    /// (blocking `recv()` under the guard). With one slow job on another
+    /// worker and nothing left to steal, the helping caller must fall
+    /// back to waiting on the RESULT channel — a blocking `lock()` in
+    /// the helper would strand it until some future submit woke the
+    /// idle worker, i.e. forever here.
+    #[test]
+    fn scoped_map_returns_while_a_worker_idles_in_recv() {
+        let (done_tx, done_rx) = mpsc::channel();
+        thread::spawn(move || {
+            let pool = ThreadPool::new(2); // one idle, one busy
+            let out = pool.scoped_map(vec![25u64], |ms| {
+                thread::sleep(std::time::Duration::from_millis(ms));
+                ms * 2
+            });
+            let _ = done_tx.send(out);
+        });
+        let out = done_rx
+            .recv_timeout(std::time::Duration::from_secs(30))
+            .expect("helper blocked on the queue mutex (idle-worker livelock)");
+        assert_eq!(out, vec![50]);
+    }
+
+    #[test]
+    fn scoped_map_propagates_panic_after_completion() {
+        let pool = ThreadPool::new(2);
+        let finished = Arc::new(AtomicU64::new(0));
+        let fin = Arc::clone(&finished);
+        let r = std::panic::catch_unwind(AssertUnwindSafe(|| {
+            pool.scoped_map((0..16u64).collect(), |i| {
+                if i == 3 {
+                    panic!("boom {i}");
+                }
+                fin.fetch_add(1, Ordering::SeqCst);
+                i
+            })
+        }));
+        assert!(r.is_err(), "panic must propagate to the caller");
+        // every non-panicking job still ran to completion first
+        assert_eq!(finished.load(Ordering::SeqCst), 15);
+        // and the pool remains usable afterwards
+        let out = pool.map(vec![1, 2, 3], |x| x * 3);
+        assert_eq!(out, vec![3, 6, 9]);
     }
 }

@@ -1,0 +1,267 @@
+//! Property tests for the batched-parallel generational search — the
+//! PR 4 tentpole contract:
+//!
+//! 1. `tune_parallel` is BIT-IDENTICAL to the serial evaluator path for
+//!    any worker count: same best schedule, same latency, same evals
+//!    spent, same best-so-far history — across random subgraphs and the
+//!    seed models;
+//! 2. the reformer's mini-fan-out + batched JOIN reproduces the serial
+//!    shared-evaluator pipeline exactly;
+//! 3. merged memo shards are deterministic where it matters: the price
+//!    map is identical across worker counts (hit/miss COUNTS may differ
+//!    — sharding changes who computes what — but no price ever does);
+//! 4. at the compile level, plan JSON and TuningDb bytes are independent
+//!    of `CompileConfig::workers`.
+
+use ago::costmodel::{MemoCache, MemoEvaluator, PricingContext};
+use ago::ensure;
+use ago::coordinator::{
+    compile_with_db, plan, CompileConfig, TuningDb,
+};
+use ago::device::DeviceProfile;
+use ago::graph::{Graph, NodeId, OpKind, Shape, Subgraph};
+use ago::models::{build, InputShape, ModelId};
+use ago::partition::{cluster, ClusterConfig};
+use ago::reformer::{
+    tune_with_reformer, tune_with_reformer_parallel, ReformerConfig,
+};
+use ago::tuner::schedule::SubgraphView;
+use ago::tuner::search::{tune, tune_parallel, SearchConfig};
+use ago::util::propkit::forall;
+use ago::util::{Rng, ThreadPool};
+
+/// Random complex/simple chain with an occasional residual edge — the
+/// shapes the tuner actually sees, sized to stay fast under `forall`.
+fn random_subgraph(rng: &mut Rng) -> (Graph, SubgraphView) {
+    let mut g = Graph::new("prop");
+    let hw = *rng.choose(&[14usize, 28]);
+    let c = *rng.choose(&[16usize, 32, 64]);
+    let s = Shape::nhwc(1, hw, hw, c);
+    let mut nodes: Vec<NodeId> = Vec::new();
+    let mut cur = g.add(OpKind::Pad, "in", s.clone(), 0, &[]);
+    nodes.push(cur);
+    let n_ops = rng.range(3, 9);
+    let mut res_src: Option<NodeId> = None;
+    for i in 0..n_ops {
+        let roll = rng.range(0, 6);
+        let prev = cur;
+        cur = match roll {
+            0 | 1 => g.add(OpKind::Pointwise, &format!("pw{i}"), s.clone(),
+                           c, &[prev]),
+            2 => g.add(OpKind::Depthwise { kh: 3, kw: 3, stride: 1 },
+                       &format!("dw{i}"), s.clone(), 0, &[prev]),
+            3 => g.add(OpKind::BiasAdd, &format!("b{i}"), s.clone(), 0,
+                       &[prev]),
+            4 => g.add(OpKind::ReLU, &format!("r{i}"), s.clone(), 0,
+                       &[prev]),
+            _ => match res_src.take() {
+                Some(src) if src != prev => g.add(
+                    OpKind::Add,
+                    &format!("add{i}"),
+                    s.clone(),
+                    0,
+                    &[src, prev],
+                ),
+                _ => g.add(OpKind::ReLU6, &format!("r6{i}"), s.clone(), 0,
+                           &[prev]),
+            },
+        };
+        if rng.chance(0.3) {
+            res_src = Some(cur);
+        }
+        nodes.push(cur);
+    }
+    let sub = Subgraph { id: 0, nodes };
+    let view = SubgraphView::new(&g, &sub);
+    (g, view)
+}
+
+fn assert_bit_identical(
+    tag: &str,
+    serial: &ago::tuner::search::TuneResult,
+    parallel: &ago::tuner::search::TuneResult,
+) -> Result<(), String> {
+    ensure!(parallel.best == serial.best, "{tag}: best diverged");
+    ensure!(
+        parallel.best_latency == serial.best_latency,
+        "{tag}: latency {} != {}",
+        parallel.best_latency,
+        serial.best_latency
+    );
+    ensure!(
+        parallel.evals == serial.evals,
+        "{tag}: evals {} != {}",
+        parallel.evals,
+        serial.evals
+    );
+    ensure!(
+        parallel.evals_to_stabilize == serial.evals_to_stabilize,
+        "{tag}: stabilize {} != {}",
+        parallel.evals_to_stabilize,
+        serial.evals_to_stabilize
+    );
+    ensure!(
+        parallel.history == serial.history,
+        "{tag}: history diverged"
+    );
+    Ok(())
+}
+
+/// Acceptance property 1: 1-vs-N-worker bit-identity on random subgraphs.
+#[test]
+fn parallel_search_bit_identical_on_random_subgraphs() {
+    let dev = DeviceProfile::kirin990();
+    // pools are built inside the property: ThreadPool's channel ends are
+    // not RefUnwindSafe, so captured pools would break `forall`'s bound
+    forall(25, |rng| {
+        let (g, view) = random_subgraph(rng);
+        let cfg = SearchConfig {
+            budget: rng.range(40, 220),
+            seed: rng.next_u64(),
+            lambda: *rng.choose(&[1usize, 3, 16, 64]),
+            ..Default::default()
+        };
+        let serial = tune(&g, &view, &dev, &cfg, None);
+        ensure!(
+            serial.history.len() == serial.evals,
+            "history/evals mismatch"
+        );
+        for workers in [1usize, 2, 4] {
+            let pool = ThreadPool::new(workers);
+            let ctx = PricingContext::new(&g, &dev);
+            let mut cache = MemoCache::new();
+            let r = tune_parallel(&g, &view, &cfg, None, &ctx, &mut cache,
+                                  &pool);
+            assert_bit_identical(&format!("{workers} workers"), &serial, &r)?;
+        }
+        Ok(())
+    });
+}
+
+/// Acceptance property 1b: same contract on the seed models' real
+/// subgraphs (heaviest few views of MBN + SQN).
+#[test]
+fn parallel_search_bit_identical_on_seed_models() {
+    let dev = DeviceProfile::qsd810();
+    let pool = ThreadPool::new(4);
+    for m in [ModelId::Mbn, ModelId::Sqn] {
+        let g = build(m, InputShape::Small);
+        let p = cluster(&g, ClusterConfig::adaptive(&g));
+        let mut views = SubgraphView::all(&g, &p);
+        views.retain(|v| !v.is_empty());
+        views.sort_by_key(|v| std::cmp::Reverse((v.complex.len(), v.order.len())));
+        for (i, view) in views.iter().take(3).enumerate() {
+            let cfg = SearchConfig {
+                budget: 150,
+                seed: 0xA60 ^ (i as u64),
+                ..Default::default()
+            };
+            let serial = tune(&g, view, &dev, &cfg, None);
+            let ctx = PricingContext::new(&g, &dev);
+            let mut cache = MemoCache::new();
+            let r = tune_parallel(&g, view, &cfg, None, &ctx, &mut cache,
+                                  &pool);
+            assert_bit_identical(&format!("{}#{i}", m.name()), &serial, &r)
+                .unwrap();
+        }
+    }
+}
+
+/// Acceptance property 2: the reformer pipeline (mini fan-out + warm
+/// JOIN) is bit-identical serial-vs-parallel over random subgraphs.
+#[test]
+fn parallel_reformer_bit_identical() {
+    let dev = DeviceProfile::kirin990();
+    forall(12, |rng| {
+        let pool = ThreadPool::new(3);
+        let (g, view) = random_subgraph(rng);
+        let rcfg = ReformerConfig {
+            search: SearchConfig {
+                budget: rng.range(80, 300),
+                seed: rng.next_u64(),
+                ..Default::default()
+            },
+            ..Default::default()
+        };
+        let serial = tune_with_reformer(&g, &view, &dev, &rcfg);
+        let ctx = PricingContext::new(&g, &dev);
+        let mut cache = MemoCache::new();
+        let r = tune_with_reformer_parallel(&g, &view, &rcfg, &ctx,
+                                            &mut cache, &pool);
+        assert_bit_identical("reformer", &serial, &r)?;
+        ago::ensure!(
+            r.best.op_count() == view.order.len(),
+            "reformer result does not cover the view"
+        );
+        Ok(())
+    });
+}
+
+/// Acceptance property 3: merged memo shards are price-deterministic.
+/// Hit counts may differ across worker counts; the price MAP may not —
+/// same keys, same bits — and it must agree with a serial evaluator.
+#[test]
+fn merged_shards_are_price_deterministic() {
+    let dev = DeviceProfile::qsd810();
+    let (g, view) = {
+        let mut rng = Rng::new(0x5EED);
+        random_subgraph(&mut rng)
+    };
+    let cfg = SearchConfig { budget: 200, ..Default::default() };
+    let mut caches: Vec<MemoCache> = Vec::new();
+    for workers in [1usize, 2, 5] {
+        let pool = ThreadPool::new(workers);
+        let ctx = PricingContext::new(&g, &dev);
+        let mut cache = MemoCache::new();
+        let _ = tune_parallel(&g, &view, &cfg, None, &ctx, &mut cache,
+                              &pool);
+        caches.push(cache);
+    }
+    // serial reference: same candidate stream => same distinct groups
+    let mut serial = MemoEvaluator::new(&g, &dev);
+    let _ = ago::tuner::search::tune_with_evaluator(
+        &g, &view, &cfg, None, &mut serial,
+    );
+    let reference = &caches[0];
+    assert_eq!(reference.len(), serial.cache_len(),
+               "sharding changed the set of groups priced");
+    for cache in &caches[1..] {
+        assert_eq!(cache.len(), reference.len());
+        for (k, v) in reference.warm() {
+            let other = cache.warm().get(k).expect("same key set");
+            assert!(v == other, "price diverged across worker counts");
+        }
+    }
+    // schedule_evals (the evals the coordinator reports) must also agree
+    for cache in &caches {
+        assert_eq!(cache.stats().schedule_evals,
+                   serial.stats().schedule_evals);
+    }
+}
+
+/// Acceptance property 4: compile artifacts are byte-independent of the
+/// worker count — the CLI-level claim CI's workers-independence smoke
+/// makes, pinned here without shelling out.
+#[test]
+fn plan_and_db_bytes_independent_of_workers() {
+    let g = build(ModelId::Mbn, InputShape::Small);
+    let dev = DeviceProfile::kirin990();
+    let mk = |workers: usize| {
+        let cfg = CompileConfig {
+            budget: 600,
+            workers,
+            ..CompileConfig::new(dev.clone())
+        };
+        let mut db = TuningDb::new();
+        let m = compile_with_db(&g, &cfg, &mut db);
+        let plan_json = plan::to_json(&m, "mbn", dev.name).pretty();
+        (plan_json, db.to_json().pretty())
+    };
+    let (plan1, db1) = mk(1);
+    let (plan4, db4) = mk(4);
+    let (plan8, db8) = mk(8);
+    assert_eq!(plan1, plan4, "plan JSON depends on worker count");
+    assert_eq!(plan1, plan8);
+    assert_eq!(db1, db4, "TuningDb bytes depend on worker count");
+    assert_eq!(db1, db8);
+}
