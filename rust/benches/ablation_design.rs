@@ -30,6 +30,8 @@ fn main() {
                         ..Default::default()
                     },
                     enabled: true,
+                    // legacy 24/16 floors — the sweep predates them
+                    ..Default::default()
                 };
                 let r = tune_with_reformer(&ms.graph, &ms.view, &dev, &cfg);
                 per_seed.push(r.best_latency * 1e3);

@@ -35,6 +35,7 @@ pub fn ansor_compile(
         seed,
         workers: 0,
         warm_start: true,
+        partition_candidates: 1,
     };
     compile(g, &cfg)
 }

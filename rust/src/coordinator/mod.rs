@@ -1,47 +1,54 @@
-//! L3 coordinator: the end-to-end AGO compile pipeline (paper Fig. 2).
+//! L3 coordinator: the end-to-end AGO compile pipeline (paper Fig. 2),
+//! structured as EXPLICIT stages (see [`stages`]):
 //!
-//! graph frontend (partition) → structural dedup (canonical fingerprints
-//! collapse identical subgraphs into equivalence classes; a TuningDb of
-//! earlier compiles is consulted per class) → reformer (split/join) →
-//! tuner backend (per-CLASS schedule search with the members' budgets
-//! pooled; the winner is remapped onto every class member) → compiled
-//! model (schedules + predicted latency + partition report +
-//! dedup/warm-start statistics).
+//! ```text
+//! Partition → Dedup → ProbeTune → Select → FullTune → Emit
+//! ```
+//!
+//! graph frontend (partition; optionally K cost-guided candidates) →
+//! structural dedup (canonical fingerprints collapse identical subgraphs
+//! into equivalence classes; a TuningDb of earlier compiles is consulted
+//! per class) → probe/select (only with `partition_candidates > 1`: every
+//! candidate is probe-tuned at a small clamped budget through the shared
+//! fingerprint machinery and the lowest predicted end-to-end latency
+//! wins) → reformer (split/join) → tuner backend (per-CLASS schedule
+//! search with the members' budgets pooled; the winner is remapped onto
+//! every class member) → compiled model (schedules + predicted latency +
+//! partition report + dedup/warm-start + partition-search provenance).
 //!
 //! Tuning uses TWO-LEVEL scheduling over one shared `ThreadPool`:
-//! classes fan out as tasks, and inside each task the generational
-//! tuner's candidate batches (plus the reformer's SPLIT-mini fan-out)
-//! run on the same pool. Few-class compiles — the common case after
-//! dedup — still saturate every core, and because all reductions are
-//! order-preserving the result is bit-independent of the worker count.
+//! classes fan out as tasks (probe tasks fan out across ALL candidates),
+//! and inside each task the generational tuner's candidate batches (plus
+//! the reformer's SPLIT-mini fan-out) run on the same pool. Few-class
+//! compiles — the common case after dedup — still saturate every core,
+//! and because all reductions are order-preserving the result is
+//! bit-independent of the worker count.
 //!
 //! The ablation variants of §VI-B are first-class: `AgoNi` disables
 //! intensive fusion in the backend, `AgoNr` disables the reformer.
 
 pub mod plan;
+pub mod stages;
 pub mod tuningdb;
 
+pub use stages::{PartitionSearch, PROBE_MARGIN, PROBE_SALT};
 pub use tuningdb::{DbEntry, TuningDb};
 
-use std::collections::{HashMap, HashSet};
 use std::time::Instant;
 
-use crate::costmodel::{
-    CostEvaluator, EvalStats, MemoCache, MemoEvaluator, PricingContext,
-};
+use crate::costmodel::PricingContext;
 use crate::device::DeviceProfile;
-use crate::graph::fingerprint::{canonical_form, verify_isomorphism, CanonicalForm};
-use crate::graph::{Graph, NodeId, Partition};
+use crate::graph::{Graph, Partition};
 use crate::partition::{
-    cluster, relay_partition, ClusterConfig, PartitionReport, WeightParams,
+    candidates, relay_partition, Candidate, ClusterConfig, PartitionReport,
 };
-use crate::reformer::{
-    tune_with_reformer_parallel, tune_with_reformer_warm_parallel,
-    ReformerConfig,
-};
-use crate::tuner::schedule::{Schedule, SubgraphView};
-use crate::tuner::search::SearchConfig;
+use crate::tuner::schedule::Schedule;
 use crate::util::ThreadPool;
+
+use stages::{
+    dedup_stage, emit_stage, partition_stage, probe_stage, select_stage,
+    tune_stage, PartitionStage,
+};
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum Variant {
@@ -107,6 +114,16 @@ pub struct CompileConfig {
     /// still populated after tuning) — the cold-compile reference for
     /// benchmarking.
     pub warm_start: bool,
+    /// Number of partition candidates for cost-guided partition search
+    /// (`ago compile --partition-candidates K`). `1` (the default) is
+    /// the historical single-shot pipeline, bit for bit: one partition
+    /// from the frontend, no probe stage, no provenance in the plan.
+    /// `K > 1` sweeps Td scales (and weight-param variants) around the
+    /// base cluster config, probe-tunes every candidate, and full-tunes
+    /// only the probe winner (see `coordinator::stages`). Ignored for
+    /// `Frontend::Relay` (the sweep is only defined for the weighted
+    /// clustering frontend).
+    pub partition_candidates: usize,
 }
 
 impl CompileConfig {
@@ -119,6 +136,7 @@ impl CompileConfig {
             seed: 0xA60,
             workers: 0,
             warm_start: true,
+            partition_candidates: 1,
         }
     }
 }
@@ -151,6 +169,10 @@ pub struct CompiledModel {
     /// `db_hits / n_classes` (0.0 when the model has no subgraphs).
     pub class_hit_rate: f64,
     pub report: PartitionReport,
+    /// Cost-guided partition-search provenance: `Some` iff the compile
+    /// probed more than one candidate (serialized into the plan JSON;
+    /// absent for single-shot compiles so their plan bytes are unchanged).
+    pub partition_search: Option<PartitionSearch>,
 }
 
 impl CompiledModel {
@@ -214,303 +236,112 @@ pub fn compile(g: &Graph, cfg: &CompileConfig) -> CompiledModel {
     compile_with_db(g, cfg, &mut db)
 }
 
-/// How a class task obtains its schedule.
-enum ClassMode {
-    /// No db entry: cold SPLIT/JOIN reformer pipeline.
-    Cold,
-    /// Same structure tuned on another device: the stored schedule
-    /// (already remapped to representative ids) seeds the joint round.
-    Warm(Schedule),
-    /// Exact same-device hit: adopt the stored schedule, skip search.
-    Hit(Schedule),
-}
-
-/// Position maps between a canonical form and concrete node ids.
-fn canon_to_ids(cf: &CanonicalForm) -> HashMap<NodeId, NodeId> {
-    cf.order.iter().copied().enumerate().collect()
-}
-
-fn ids_to_canon(cf: &CanonicalForm) -> HashMap<NodeId, NodeId> {
-    cf.order.iter().copied().enumerate().map(|(i, v)| (v, i)).collect()
-}
-
-/// [`compile`] against a caller-owned [`TuningDb`]. Structurally
-/// identical subgraphs collapse into equivalence classes: one
-/// representative per class is tuned with the members' budgets POOLED,
-/// and the winning schedule is remapped onto every member through the
-/// canonical-position isomorphism (then legality-re-checked and priced
-/// per member). Entries already in the db warm-start or skip the search
-/// (see [`CompileConfig::warm_start`]); everything tuned here is recorded
-/// back, so a second compile of the same or an overlapping model is
-/// near-free.
+/// [`compile`] against a caller-owned [`TuningDb`], composed from the
+/// explicit stage functions in [`stages`]:
+///
+/// 1. **Partition** — the frontend produces one partition, or (with
+///    `partition_candidates > 1` on a cluster frontend) K deterministic
+///    candidates from `partition::candidates`.
+/// 2. **Dedup** — structurally identical subgraphs collapse into
+///    verified equivalence classes with the members' budgets POOLED.
+/// 3. **ProbeTune / Select** (K > 1 only) — every structurally unique
+///    class across all candidates is probe-tuned once at a clamped
+///    budget; candidates are scored by predicted end-to-end latency and
+///    the winner (subject to `PROBE_MARGIN`) proceeds.
+/// 4. **FullTune** — one representative search per class of the chosen
+///    partition; entries already in the db warm-start or skip the search
+///    (see [`CompileConfig::warm_start`]).
+/// 5. **Emit** — winners are remapped onto every member through the
+///    canonical-position isomorphism (legality-re-checked and priced per
+///    member), recorded back into the db, and assembled into the
+///    [`CompiledModel`] — so a second compile of the same or an
+///    overlapping model is near-free.
 pub fn compile_with_db(
     g: &Graph,
     cfg: &CompileConfig,
     db: &mut TuningDb,
 ) -> CompiledModel {
-    let partition = match &cfg.frontend {
-        Frontend::Cluster(c) => cluster(g, *c),
-        Frontend::Auto => cluster(g, ClusterConfig::adaptive(g)),
-        Frontend::Relay => relay_partition(g),
-    };
-    let views = SubgraphView::all(g, &partition);
-
-    // canonical forms once per subgraph; the report reuses the
-    // fingerprints instead of re-running the WL canonicalization
-    let canon: Vec<Option<CanonicalForm>> = views
-        .iter()
-        .map(|v| (!v.is_empty()).then(|| canonical_form(g, &v.order)))
-        .collect();
-    let fingerprints: Vec<u64> = canon
-        .iter()
-        .map(|c| match c {
-            Some(cf) => cf.fingerprint,
-            None => canonical_form(g, &[]).fingerprint,
-        })
-        .collect();
-    let report = PartitionReport::build_with_fingerprints(
-        g,
-        &partition,
-        WeightParams::default(),
-        fingerprints,
-    );
-
-    let budgets = split_budget(cfg.budget, &report.weights);
-    debug_assert!(budgets.iter().sum::<usize>() <= cfg.budget);
-
-    // --- structural equivalence classes over the subgraphs ---
-    // Fingerprint equality nominates a class; verify_isomorphism decides.
-    // A subgraph that fails verification against every candidate becomes
-    // its own class — dedup is best-effort, correctness is not.
-    struct Class {
-        rep: usize,
-        members: Vec<usize>,
-        budget: usize,
-    }
-    let mut classes: Vec<Class> = Vec::new();
-    let mut by_fp: HashMap<u64, Vec<usize>> = HashMap::new();
-    for (i, cf) in canon.iter().enumerate() {
-        let Some(cf) = cf else { continue };
-        let found = by_fp.get(&cf.fingerprint).and_then(|cands| {
-            cands.iter().copied().find(|&c| {
-                verify_isomorphism(
-                    g,
-                    canon[classes[c].rep].as_ref().unwrap(),
-                    cf,
-                )
-            })
-        });
-        match found {
-            Some(c) => {
-                classes[c].members.push(i);
-                classes[c].budget += budgets[i];
+    // ---- Partition stage (frontend / candidate sweep) ----
+    let k = cfg.partition_candidates.max(1);
+    let cluster_base = match &cfg.frontend {
+        Frontend::Cluster(c) => Some(*c),
+        Frontend::Auto => Some(ClusterConfig::adaptive(g)),
+        Frontend::Relay => {
+            if k > 1 {
+                log::warn!(
+                    "--partition-candidates {k} ignored: the candidate \
+                     sweep is only defined for the cluster frontend"
+                );
             }
-            None => {
-                by_fp.entry(cf.fingerprint).or_default().push(classes.len());
-                classes.push(Class {
-                    rep: i,
-                    members: vec![i],
-                    budget: budgets[i],
-                });
-            }
+            None
         }
-    }
-    let n_classes = classes.len();
-    // Fingerprints shared by more than one VERIFIED class are observed
-    // hash collisions between non-isomorphic structures — the db key
-    // cannot tell their schedules apart, so those classes neither
-    // consult nor populate the db (they tune cold every compile).
-    // Cross-compile collisions that were never co-observed remain
-    // possible at ~2^-64 per pair; the n_ops check and the legality
-    // re-check on every remap bound the blast radius.
-    let ambiguous: HashSet<u64> = by_fp
-        .iter()
-        .filter(|(_, cs)| cs.len() > 1)
-        .map(|(&fp, _)| fp)
-        .collect();
+    };
+    let cands: Vec<Candidate> = match cluster_base {
+        None => Vec::new(),
+        // k = 1 yields exactly the base candidate (one cluster() run) —
+        // the generator's own degenerate case, not a hand-rolled copy
+        Some(base) => candidates(g, base, k),
+    };
+    let mut cand_stages: Vec<PartitionStage> = match &cfg.frontend {
+        Frontend::Relay => vec![partition_stage(g, relay_partition(g))],
+        _ => cands
+            .iter()
+            .map(|c| partition_stage(g, c.partition.clone()))
+            .collect(),
+    };
 
-    // --- db consultation, one lookup per class ---
-    let mut db_hits = 0usize;
-    let tasks: Vec<(usize, SubgraphView, usize, usize, ClassMode)> = classes
-        .iter()
-        .enumerate()
-        .map(|(ci, cl)| {
-            let cf = canon[cl.rep].as_ref().unwrap();
-            let to_rep = canon_to_ids(cf);
-            let remap_entry = |e: &DbEntry| -> Option<Schedule> {
-                if e.n_ops != cf.order.len() {
-                    return None; // fingerprint collision across sizes
-                }
-                let mut s = e.schedule.remap(&to_rep)?;
-                s.revalidate_legality(g);
-                Some(s)
-            };
-            let vtag = cfg.variant.tag();
-            let mode = if !cfg.warm_start
-                || ambiguous.contains(&cf.fingerprint)
-            {
-                ClassMode::Cold
-            } else if let Some(s) = db
-                .lookup(cfg.device.name, vtag, cf.fingerprint)
-                .and_then(remap_entry)
-            {
-                db_hits += 1;
-                ClassMode::Hit(s)
-            } else if let Some(s) =
-                db.lookup_any(vtag, cf.fingerprint).and_then(remap_entry)
-            {
-                ClassMode::Warm(s)
-            } else {
-                ClassMode::Cold
-            };
-            (ci, views[cl.rep].clone(), cl.budget, cl.rep, mode)
-        })
-        .collect();
-
-    let variant = cfg.variant;
-    let seed = cfg.seed;
-    // ONE pool for both scheduling levels: class tasks fan out across
-    // it, and every class task's per-generation candidate batches (and
-    // its reformer's SPLIT-mini fan-out) run on the SAME pool via nested
-    // `scoped_map` (caller-help makes that deadlock-free). A 2-class
-    // compile therefore no longer caps at 2 busy cores — the generations
-    // of both classes interleave across all workers. Worker count is a
-    // wall-clock knob only: every reduction is order-preserving, so the
-    // compiled model (and plan/TuningDb bytes) are independent of it.
+    // ONE pool for every scheduling level: probe tasks and class tasks
+    // fan out across it, and inside each task the generational tuner's
+    // candidate batches (and the reformer's SPLIT-mini fan-out) run on
+    // the SAME pool via nested `scoped_map` (caller-help makes that
+    // deadlock-free). Worker count is a wall-clock knob only: every
+    // reduction is order-preserving, so the compiled model (and plan/
+    // TuningDb bytes) are independent of it.
     let pool = if cfg.workers == 0 {
         ThreadPool::for_host()
     } else {
         ThreadPool::new(cfg.workers)
     };
-    // the immutable pricing context is shared by every class task (and
-    // every worker inside them); each class task keeps its own MemoCache
-    // — groups never cross subgraphs, so sharing wider would only add
+    // the immutable pricing context is partition-independent (graph +
+    // device only), so ONE context serves every candidate's probe tasks
+    // AND the winner's full tune; each task keeps its own MemoCache —
+    // groups never cross subgraphs, so sharing wider would only add
     // merge traffic
     let ctx = PricingContext::new(g, &cfg.device);
+
+    // ---- ProbeTune + Select stages (skipped entirely for K = 1) ----
+    let (chosen, partition_search, winner_dedup) = if cand_stages.len() > 1
+    {
+        let mut probe = probe_stage(g, cfg, &cand_stages, &ctx, &pool);
+        let chosen = select_stage(&probe.scores);
+        let wd = probe.dedups.swap_remove(chosen);
+        let search = PartitionSearch {
+            n_candidates: cand_stages.len(),
+            chosen,
+            chosen_label: cands[chosen].label.to_string(),
+            chosen_config: cands[chosen].config,
+            labels: cands.iter().map(|c| c.label.to_string()).collect(),
+            probe_scores: probe.scores,
+            probe_evals: probe.evals,
+            probe_tasks: probe.tasks,
+        };
+        (chosen, Some(search), Some(wd))
+    } else {
+        (0, None, None)
+    };
+    let ps = cand_stages.swap_remove(chosen);
+
+    // ---- Dedup (full budget) + FullTune + Emit ----
+    // class structure is budget-independent, so the winner's probe-time
+    // discovery is re-pooled at full budget instead of re-verifying
+    // every isomorphism
+    let ds = match winner_dedup {
+        Some(wd) => wd.with_budget(&ps, cfg.budget),
+        None => dedup_stage(g, &ps, cfg.budget),
+    };
     let t_tuning = Instant::now();
-    // (class idx, best schedule in rep ids, latency, evals, stats, searched)
-    let results: Vec<(usize, Schedule, f64, usize, EvalStats, bool)> = pool
-        .scoped_map(tasks, |(ci, view, budget, rep, mode)| {
-            let search = SearchConfig {
-                budget,
-                stabilize_window: (budget / 4).clamp(16, 256),
-                // seeded by the REPRESENTATIVE's subgraph id: a singleton
-                // class reproduces the pre-dedup search bit for bit
-                seed: seed ^ ((rep as u64) << 17),
-                allow_intensive: variant != Variant::AgoNi,
-                ..Default::default()
-            };
-            let rcfg = ReformerConfig {
-                search,
-                enabled: variant != Variant::AgoNr,
-                ..Default::default()
-            };
-            let mut cache = MemoCache::new();
-            let r = match mode {
-                ClassMode::Hit(s) => {
-                    // exact hit: one pricing evaluation, no search
-                    let mut shard = ctx.new_shard();
-                    let lat = ctx.price_schedule(&s, None, &mut shard);
-                    return (ci, s, lat, 1, shard.stats, false);
-                }
-                ClassMode::Warm(initial) => tune_with_reformer_warm_parallel(
-                    g,
-                    &view,
-                    &rcfg,
-                    initial,
-                    &ctx,
-                    &mut cache,
-                    &pool,
-                ),
-                ClassMode::Cold => tune_with_reformer_parallel(
-                    g,
-                    &view,
-                    &rcfg,
-                    &ctx,
-                    &mut cache,
-                    &pool,
-                ),
-            };
-            (ci, r.best, r.best_latency, r.evals, cache.stats(), true)
-        });
-
-    // --- fan the class winners back out onto every member ---
-    let n = partition.n_groups;
-    let mut schedules = vec![Schedule { groups: Vec::new() }; n];
-    let mut lats = vec![0.0; n];
-    let mut total_evals = 0;
-    let mut stats = EvalStats::default();
-    let mut tuned_tasks = 0usize;
-    // one shared evaluator prices all remapped member schedules
-    let mut member_eval = MemoEvaluator::new(g, &cfg.device);
-    for (ci, best, best_lat, evals, st, searched) in results {
-        let cl = &classes[ci];
-        let cf_rep = canon[cl.rep].as_ref().unwrap();
-        total_evals += evals;
-        stats.merge(&st);
-        tuned_tasks += usize::from(searched);
-        // record the winner in canonical-index space: it applies to any
-        // isomorphic subgraph, here and in later compiles — unless the
-        // fingerprint is ambiguous (two verified classes collided on
-        // it), in which case a single db entry could serve the wrong
-        // class and warm compiles would silently diverge from cold ones
-        let canonical = best
-            .remap(&ids_to_canon(cf_rep))
-            .expect("schedule ops are subgraph members");
-        if !ambiguous.contains(&cf_rep.fingerprint) {
-            db.record(DbEntry {
-                device: cfg.device.name.to_string(),
-                variant: cfg.variant.tag().to_string(),
-                fingerprint: cf_rep.fingerprint,
-                n_ops: cf_rep.order.len(),
-                schedule: canonical.clone(),
-                latency: best_lat,
-                evals,
-            });
-        }
-        schedules[cl.rep] = best;
-        lats[cl.rep] = best_lat;
-        for &m in &cl.members {
-            if m == cl.rep {
-                continue;
-            }
-            let cf_m = canon[m].as_ref().unwrap();
-            let mut s = canonical
-                .remap(&canon_to_ids(cf_m))
-                .expect("canonical indices in range");
-            // verified isomorphism ⟹ no degradations; the re-check is
-            // the safety net the remap contract promises
-            s.revalidate_legality(g);
-            lats[m] = member_eval.evaluate_schedule(&s);
-            total_evals += 1;
-            schedules[m] = s;
-        }
-    }
-    stats.merge(&member_eval.stats());
-    let tuning_secs = t_tuning.elapsed().as_secs_f64();
-
-    // per-subgraph runtime dispatch: the graph executor pays this once
-    // per subgraph invocation (fragmented partitions lose here)
-    let dispatch = partition.n_groups as f64 * cfg.device.dispatch_us * 1e-6;
-    let total_latency = lats.iter().sum::<f64>() + dispatch;
-    CompiledModel {
-        partition,
-        schedules,
-        subgraph_latency: lats,
-        total_latency,
-        total_evals,
-        cache_hit_rate: stats.hit_rate(),
-        evals_per_sec: stats.schedule_evals as f64 / tuning_secs.max(1e-9),
-        n_classes,
-        tuned_tasks,
-        db_hits,
-        class_hit_rate: if n_classes > 0 {
-            db_hits as f64 / n_classes as f64
-        } else {
-            0.0
-        },
-        report,
-    }
+    let ts = tune_stage(g, cfg, db, &ps, &ds, &ctx, &pool);
+    emit_stage(g, cfg, db, ps, &ds, ts, t_tuning, partition_search)
 }
 
 #[cfg(test)]
@@ -745,6 +576,107 @@ mod tests {
         assert_eq!(m1.subgraph_latency, m4.subgraph_latency);
         assert_eq!(m1.n_classes, m4.n_classes);
         assert_eq!(db1, db4, "TuningDb bytes depend on worker count");
+    }
+
+    #[test]
+    fn partition_candidates_one_is_the_single_shot_pipeline() {
+        // K = 1 must be the historical pipeline bit for bit: no probe
+        // stage, no provenance, identical plan bytes to the default
+        let g = build(ModelId::Sqn, InputShape::Small);
+        let default_cfg = quick_cfg(DeviceProfile::kirin990(), 500);
+        let explicit = CompileConfig {
+            partition_candidates: 1,
+            ..default_cfg.clone()
+        };
+        let a = compile(&g, &default_cfg);
+        let b = compile(&g, &explicit);
+        assert!(a.partition_search.is_none());
+        assert!(b.partition_search.is_none());
+        assert_eq!(a.total_latency, b.total_latency);
+        assert_eq!(a.schedules, b.schedules);
+        let pa = plan::to_json(&a, "sqn", "kirin990").pretty();
+        let pb = plan::to_json(&b, "sqn", "kirin990").pretty();
+        assert_eq!(pa, pb);
+        assert!(!pa.contains("partition_search"));
+    }
+
+    #[test]
+    fn cost_guided_selection_beats_single_shot_on_mbn() {
+        // the acceptance claim at unit scope (the full seed-zoo gate
+        // lives in benches/fig14_partition): at this budget the Td sweep
+        // finds a coarser partition whose full compile is strictly
+        // faster than single-shot adaptive (measured ~0.88x; the probe
+        // gap ~0.73x clears PROBE_MARGIN with room)
+        let g = build(ModelId::Mbn, InputShape::Small);
+        let base = quick_cfg(DeviceProfile::kirin990(), 1200);
+        let ss = compile(&g, &base);
+        let cg_cfg = CompileConfig {
+            partition_candidates: 4,
+            ..base
+        };
+        let cg = compile(&g, &cg_cfg);
+        let se = cg.partition_search.as_ref().expect("provenance for K>1");
+        assert_eq!(se.n_candidates, 4);
+        assert_eq!(se.probe_scores.len(), 4);
+        assert_eq!(se.labels.len(), 4);
+        assert!(se.probe_evals > 0);
+        assert!(se.probe_tasks > 0);
+        assert_ne!(se.chosen, 0, "sweep should displace adaptive here");
+        assert_eq!(se.chosen_label, se.labels[se.chosen]);
+        assert!(
+            cg.total_latency < ss.total_latency,
+            "cost-guided {} !< single-shot {}",
+            cg.total_latency,
+            ss.total_latency
+        );
+        // winner provenance records the config verbatim
+        assert!(se.chosen_config.td > 0.0);
+        // the probe + selection are deterministic: a repeat compile is
+        // bit-identical
+        let again = compile(&g, &cg_cfg);
+        assert_eq!(again.total_latency, cg.total_latency);
+        assert_eq!(again.schedules, cg.schedules);
+        assert_eq!(
+            again.partition_search.as_ref().unwrap().probe_scores,
+            se.probe_scores
+        );
+    }
+
+    #[test]
+    fn cost_guided_plan_and_db_bytes_are_worker_independent() {
+        let g = build(ModelId::Sqn, InputShape::Small);
+        let mk = |workers| {
+            let cfg = CompileConfig {
+                budget: 600,
+                workers,
+                partition_candidates: 4,
+                ..CompileConfig::new(DeviceProfile::kirin990())
+            };
+            let mut db = TuningDb::new();
+            let m = compile_with_db(&g, &cfg, &mut db);
+            (
+                plan::to_json(&m, "sqn", "kirin990").pretty(),
+                db.to_json().pretty(),
+            )
+        };
+        let (p1, d1) = mk(1);
+        let (p4, d4) = mk(4);
+        assert_eq!(p1, p4, "plan bytes depend on worker count");
+        assert_eq!(d1, d4, "TuningDb bytes depend on worker count");
+        assert!(p1.contains("partition_search"));
+    }
+
+    #[test]
+    fn relay_frontend_ignores_partition_candidates() {
+        let g = build(ModelId::Sqn, InputShape::Small);
+        let cfg = CompileConfig {
+            frontend: Frontend::Relay,
+            partition_candidates: 4,
+            ..quick_cfg(DeviceProfile::kirin990(), 400)
+        };
+        let m = compile(&g, &cfg);
+        assert!(m.partition_search.is_none());
+        assert!(m.partition.complex_counts(&g).iter().all(|&c| c <= 1));
     }
 
     #[test]

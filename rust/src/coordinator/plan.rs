@@ -92,7 +92,7 @@ pub(crate) fn group_from_json(j: &Json) -> Result<FusionGroup> {
 
 /// Serialize a compiled model (partition + schedules + metadata).
 pub fn to_json(m: &CompiledModel, model_name: &str, device: &str) -> Json {
-    obj(vec![
+    let mut fields = vec![
         ("model", s(model_name)),
         ("device", s(device)),
         ("total_latency_ms", num(m.total_latency * 1e3)),
@@ -134,7 +134,34 @@ pub fn to_json(m: &CompiledModel, model_name: &str, device: &str) -> Json {
             "subgraph_latency_s",
             arr(m.subgraph_latency.iter().map(|&l| num(l)).collect()),
         ),
-    ])
+    ];
+    // cost-guided partition provenance: only present when the compile
+    // probed more than one candidate, so single-shot plans (the default,
+    // and everything compiled before the stage pipeline landed) keep
+    // their exact bytes. Probe scores are raw seconds — like
+    // subgraph_latency_s, a ms conversion is not an f64 identity.
+    if let Some(se) = &m.partition_search {
+        fields.push((
+            "partition_search",
+            obj(vec![
+                ("n_candidates", num(se.n_candidates as f64)),
+                ("chosen", num(se.chosen as f64)),
+                ("chosen_label", s(&se.chosen_label)),
+                ("chosen_config", se.chosen_config.to_json()),
+                (
+                    "labels",
+                    arr(se.labels.iter().map(|l| s(l)).collect()),
+                ),
+                (
+                    "probe_scores_s",
+                    arr(se.probe_scores.iter().map(|&p| num(p)).collect()),
+                ),
+                ("probe_evals", num(se.probe_evals as f64)),
+                ("probe_tasks", num(se.probe_tasks as f64)),
+            ]),
+        ));
+    }
+    obj(fields)
 }
 
 /// Re-serialize a loaded plan in the exact layout [`to_json`] emits for
@@ -142,7 +169,7 @@ pub fn to_json(m: &CompiledModel, model_name: &str, device: &str) -> Json {
 /// fields are compile-time only and not reproduced). Loading the output
 /// yields a bit-identical `LoadedPlan`.
 pub fn loaded_to_json(p: &LoadedPlan) -> Json {
-    obj(vec![
+    let mut fields = vec![
         ("model", s(&p.model)),
         ("device", s(&p.device)),
         ("total_latency_ms", num(p.total_latency_ms)),
@@ -164,7 +191,13 @@ pub fn loaded_to_json(p: &LoadedPlan) -> Json {
             "subgraph_latency_s",
             arr(p.subgraph_latency.iter().map(|&l| num(l)).collect()),
         ),
-    ])
+    ];
+    if let Some(se) = &p.partition_search {
+        // provenance is carried verbatim (already-parsed Json), so a
+        // load → re-serialize round trip is byte-identical
+        fields.push(("partition_search", se.clone()));
+    }
+    obj(fields)
 }
 
 /// A plan loaded from disk (schedules + partition + per-subgraph
@@ -182,6 +215,13 @@ pub struct LoadedPlan {
     /// what `serve::SimExecutor` replays).
     pub subgraph_latency: Vec<f64>,
     pub total_latency_ms: f64,
+    /// Cost-guided partition provenance, carried as raw Json (absent for
+    /// single-shot plans). Serving never interprets it; it round-trips
+    /// bit-exactly through [`loaded_to_json`] so registry persistence
+    /// (serve-from-memory == serve-from-disk) holds for searched plans
+    /// too. `ClusterConfig::from_json` can decode the `chosen_config`
+    /// field when a reader wants the winning Td back.
+    pub partition_search: Option<Json>,
 }
 
 pub fn from_json(j: &Json) -> Result<LoadedPlan> {
@@ -250,6 +290,7 @@ pub fn from_json(j: &Json) -> Result<LoadedPlan> {
             .get("total_latency_ms")
             .and_then(|l| l.as_f64())
             .unwrap_or(0.0),
+        partition_search: j.get("partition_search").cloned(),
     })
 }
 

@@ -1,0 +1,699 @@
+//! The compile pipeline as EXPLICIT stages with typed artifacts:
+//!
+//! ```text
+//!   Partition --> Dedup --> ProbeTune --> Select --> FullTune --> Emit
+//!   (frontend)   (classes)  (K candidates, shared)   (winner)    (model)
+//! ```
+//!
+//! `compile_with_db` used to be one monolithic function; each box is now
+//! a function over a typed stage artifact, and the driver in
+//! `coordinator::mod` is a thin composition. With a single partition
+//! candidate (the default) the ProbeTune/Select stages are skipped
+//! entirely and the pipeline is the historical single-shot compile,
+//! bit for bit.
+//!
+//! Cost-guided partition search (`--partition-candidates K`) runs the
+//! Partition and Dedup stages once per candidate, probe-tunes every
+//! structurally UNIQUE class across all candidates at a small clamped
+//! budget, scores each candidate by its predicted end-to-end latency
+//! (class probe latency x member count, plus per-subgraph dispatch), and
+//! only the winner proceeds to FullTune. Repeated blocks dedup ACROSS
+//! candidates through the same canonical-fingerprint machinery the
+//! TuningDb uses, so K candidates probe far cheaper than K compiles —
+//! and shared classes contribute identical scores to every candidate
+//! that contains them, which cancels probe noise exactly where
+//! candidates overlap.
+//!
+//! Selection contract (measured across the seed zoo, both devices,
+//! budgets 1.2k-20k, 5 seeds — see `benches/fig14_partition`):
+//! - probe scores systematically flatter coarse candidates (their big
+//!   merged classes are under-tuned at probe budgets on BOTH sides of
+//!   the comparison, while fine candidates pay the dispatch term in
+//!   full), so the baseline is only displaced when the best probe score
+//!   beats it by [`PROBE_MARGIN`]. Every wrong switch observed in
+//!   calibration had a probe gap >= 0.83x; every switch the margin keeps
+//!   was a genuine full-budget win.
+//! - ties (and an empty candidate list) resolve to candidate 0, which is
+//!   the baseline config verbatim — cost-guided selection can therefore
+//!   never pick a partition whose probe score is worse than the
+//!   single-shot default's.
+//!
+//! Probe budget discipline (same shape as [`split_budget`]'s): each
+//! candidate is ALLOCATED `probe_pool_per_candidate` evaluations —
+//! budget/(4K) floored at [`PROBE_POOL_FLOOR`] and ceilinged at
+//! budget/(2K), so the total allocation stays <= budget/2 (budget/4 when
+//! the floor is slack) and a floor can never exceed the compile budget.
+//! The allocation is split across the candidate's classes by weight and
+//! pooled per class like the full compile's budgets. SPEND can exceed
+//! the allocation on multi-complex classes because probe tasks run the
+//! full reformer pipeline with its default floors (24/mini + 16 join):
+//! those floors are deliberately NOT clamped — they are what lets a
+//! probe rank huge merged subgraphs at all (measured: clamping them to
+//! the allocation collapses ranking fidelity to noise). The realized
+//! spend is reported in [`PartitionSearch::probe_evals`] and tracked by
+//! the fig14 bench.
+
+use std::collections::{HashMap, HashSet};
+
+use crate::costmodel::{
+    CostEvaluator, EvalStats, MemoCache, MemoEvaluator, PricingContext,
+};
+use crate::graph::fingerprint::{
+    canonical_form, verify_isomorphism, CanonicalForm,
+};
+use crate::graph::{Graph, NodeId, Partition};
+use crate::partition::{ClusterConfig, PartitionReport, WeightParams};
+use crate::reformer::{
+    tune_with_reformer_parallel, tune_with_reformer_warm_parallel,
+    ReformerConfig,
+};
+use crate::tuner::schedule::{Schedule, SubgraphView};
+use crate::tuner::search::SearchConfig;
+use crate::util::ThreadPool;
+
+use super::{
+    split_budget, CompileConfig, CompiledModel, DbEntry, TuningDb, Variant,
+};
+
+/// Salt mixed into probe-task seeds: probe trajectories must be
+/// independent of the full-tune seed streams (`seed ^ rep << 17`) and of
+/// the candidate enumeration order, so the seed is derived from the
+/// class's canonical fingerprint instead of any positional id.
+pub const PROBE_SALT: u64 = 0x9B0B_5EED;
+
+/// A candidate must beat the baseline's probe score by this margin to
+/// displace it (see the selection contract in the module docs).
+pub const PROBE_MARGIN: f64 = 0.20;
+
+/// Minimum per-candidate probe allocation (subject to the budget/(2K)
+/// ceiling — the floor never exceeds the compile budget).
+pub const PROBE_POOL_FLOOR: usize = 64;
+
+/// Per-candidate probe allocation: budget/(4K) clamped to
+/// [[`PROBE_POOL_FLOOR`], max(budget/(2K), 1)]. The ceiling binds before
+/// the floor, so K * pool <= max(budget/2, K).
+pub fn probe_pool_per_candidate(budget: usize, k: usize) -> usize {
+    let k = k.max(1);
+    (budget / (4 * k))
+        .max(PROBE_POOL_FLOOR)
+        .min((budget / (2 * k)).max(1))
+}
+
+// ---------------------------------------------------------------------------
+// Stage 1: Partition
+// ---------------------------------------------------------------------------
+
+/// Frontend output plus everything later stages derive directly from the
+/// partition: per-subgraph views, canonical forms (fingerprint + order,
+/// computed ONCE and reused by dedup, probe, the report, and the
+/// TuningDb), and the Fig.14 report.
+pub struct PartitionStage {
+    pub partition: Partition,
+    pub views: Vec<SubgraphView>,
+    /// Canonical form per subgraph (`None` for empty subgraphs).
+    pub canon: Vec<Option<CanonicalForm>>,
+    pub report: PartitionReport,
+}
+
+/// Build the Partition stage artifact from a frontend-produced
+/// partition. (The frontend choice itself — cluster config, relay,
+/// candidate sweep — lives in the driver; this stage is the shared
+/// "derive everything from the partition" step.)
+pub fn partition_stage(g: &Graph, partition: Partition) -> PartitionStage {
+    let views = SubgraphView::all(g, &partition);
+    // canonical forms once per subgraph; the report reuses the
+    // fingerprints instead of re-running the WL canonicalization
+    let canon: Vec<Option<CanonicalForm>> = views
+        .iter()
+        .map(|v| (!v.is_empty()).then(|| canonical_form(g, &v.order)))
+        .collect();
+    let fingerprints: Vec<u64> = canon
+        .iter()
+        .map(|c| match c {
+            Some(cf) => cf.fingerprint,
+            None => canonical_form(g, &[]).fingerprint,
+        })
+        .collect();
+    let report = PartitionReport::build_with_fingerprints(
+        g,
+        &partition,
+        WeightParams::default(),
+        fingerprints,
+    );
+    PartitionStage { partition, views, canon, report }
+}
+
+// ---------------------------------------------------------------------------
+// Stage 2: Dedup
+// ---------------------------------------------------------------------------
+
+/// One verified structural-equivalence class among the subgraphs.
+#[derive(Clone)]
+pub struct SubgraphClass {
+    /// Representative subgraph id (first member encountered).
+    pub rep: usize,
+    /// All member subgraph ids, ascending.
+    pub members: Vec<usize>,
+    /// Pooled evaluation budget (sum of the members' splits).
+    pub budget: usize,
+}
+
+/// Classes plus the fingerprints that collided across VERIFIED classes
+/// (those neither consult nor populate the TuningDb — see module docs in
+/// `coordinator`).
+pub struct DedupStage {
+    pub classes: Vec<SubgraphClass>,
+    pub ambiguous: HashSet<u64>,
+}
+
+impl DedupStage {
+    /// Re-pool a different total budget over the SAME class structure.
+    /// Class membership is budget-independent (fingerprints + verified
+    /// isomorphism only), so the driver reuses the winning candidate's
+    /// probe-time discovery at full budget instead of re-running the
+    /// per-subgraph isomorphism verification. Budgets are usize sums
+    /// over the same member sets, so this is exactly what
+    /// [`dedup_stage`] at `budget` would produce.
+    pub fn with_budget(&self, ps: &PartitionStage, budget: usize) -> DedupStage {
+        let budgets = split_budget(budget, &ps.report.weights);
+        DedupStage {
+            classes: self
+                .classes
+                .iter()
+                .map(|cl| SubgraphClass {
+                    rep: cl.rep,
+                    members: cl.members.clone(),
+                    budget: cl.members.iter().map(|&m| budgets[m]).sum(),
+                })
+                .collect(),
+            ambiguous: self.ambiguous.clone(),
+        }
+    }
+}
+
+/// Split `budget` across the subgraphs by report weight, then collapse
+/// structurally identical subgraphs into classes with the members'
+/// budgets POOLED. Fingerprint equality nominates a class;
+/// `verify_isomorphism` decides. A subgraph that fails verification
+/// against every candidate becomes its own class — dedup is best-effort,
+/// correctness is not.
+pub fn dedup_stage(g: &Graph, ps: &PartitionStage, budget: usize) -> DedupStage {
+    let budgets = split_budget(budget, &ps.report.weights);
+    debug_assert!(budgets.iter().sum::<usize>() <= budget);
+    let mut classes: Vec<SubgraphClass> = Vec::new();
+    let mut by_fp: HashMap<u64, Vec<usize>> = HashMap::new();
+    for (i, cf) in ps.canon.iter().enumerate() {
+        let Some(cf) = cf else { continue };
+        let found = by_fp.get(&cf.fingerprint).and_then(|cands| {
+            cands.iter().copied().find(|&c| {
+                verify_isomorphism(
+                    g,
+                    ps.canon[classes[c].rep].as_ref().unwrap(),
+                    cf,
+                )
+            })
+        });
+        match found {
+            Some(c) => {
+                classes[c].members.push(i);
+                classes[c].budget += budgets[i];
+            }
+            None => {
+                by_fp.entry(cf.fingerprint).or_default().push(classes.len());
+                classes.push(SubgraphClass {
+                    rep: i,
+                    members: vec![i],
+                    budget: budgets[i],
+                });
+            }
+        }
+    }
+    // Fingerprints shared by more than one VERIFIED class are observed
+    // hash collisions between non-isomorphic structures — the db key
+    // cannot tell their schedules apart, so those classes neither
+    // consult nor populate the db (they tune cold every compile).
+    // Cross-compile collisions that were never co-observed remain
+    // possible at ~2^-64 per pair; the n_ops check and the legality
+    // re-check on every remap bound the blast radius.
+    let ambiguous: HashSet<u64> = by_fp
+        .iter()
+        .filter(|(_, cs)| cs.len() > 1)
+        .map(|(&fp, _)| fp)
+        .collect();
+    DedupStage { classes, ambiguous }
+}
+
+// ---------------------------------------------------------------------------
+// Stage 3: ProbeTune
+// ---------------------------------------------------------------------------
+
+/// Probe outcome: one predicted end-to-end latency per candidate, plus
+/// the realized probe spend.
+pub struct ProbeStage {
+    /// Predicted end-to-end latency per candidate, seconds. Pure
+    /// function of (graph, device, seed, budget, K) — bit-deterministic
+    /// and worker-count-independent like everything else in the
+    /// pipeline.
+    pub scores: Vec<f64>,
+    /// Cost-model evaluations actually spent probing (allocation plus
+    /// reformer floor overage).
+    pub evals: usize,
+    /// Unique probe tasks after cross-candidate dedup.
+    pub tasks: usize,
+    /// Per-candidate class structure discovered while registering probe
+    /// tasks (budgets are PROBE-pool splits). The driver re-pools the
+    /// winner's at full budget via [`DedupStage::with_budget`] rather
+    /// than re-verifying every isomorphism.
+    pub dedups: Vec<DedupStage>,
+}
+
+/// Probe-tune all candidates. Classes are registered globally: a class
+/// of candidate j that is isomorphic to an already-registered class of
+/// candidate i < j reuses that task's tuned latency outright. Unique
+/// tasks fan out as ONE batch over the shared pool (each task itself
+/// runs the batched reformer on the same pool — the same two-level
+/// scheduling the FullTune stage uses, extended across candidates).
+pub fn probe_stage(
+    g: &Graph,
+    cfg: &CompileConfig,
+    cands: &[PartitionStage],
+    ctx: &PricingContext,
+    pool: &ThreadPool,
+) -> ProbeStage {
+    let k = cands.len();
+    let pool_budget = probe_pool_per_candidate(cfg.budget, k);
+    // global task registry: (owning candidate, rep subgraph id, budget)
+    struct Task {
+        fp: u64,
+        cand: usize,
+        rep: usize,
+        budget: usize,
+    }
+    let mut tasks: Vec<Task> = Vec::new();
+    let mut by_fp: HashMap<u64, Vec<usize>> = HashMap::new();
+    // per candidate: (task index, member count) per class, in class order
+    let mut refs: Vec<Vec<(usize, usize)>> = Vec::with_capacity(k);
+    let mut dedups: Vec<DedupStage> = Vec::with_capacity(k);
+    for (ci, ps) in cands.iter().enumerate() {
+        let ds = dedup_stage(g, ps, pool_budget);
+        let mut r = Vec::with_capacity(ds.classes.len());
+        for cl in &ds.classes {
+            let cf = ps.canon[cl.rep].as_ref().unwrap();
+            let found = by_fp.get(&cf.fingerprint).and_then(|ts| {
+                ts.iter().copied().find(|&t| {
+                    let tk = &tasks[t];
+                    verify_isomorphism(
+                        g,
+                        cands[tk.cand].canon[tk.rep].as_ref().unwrap(),
+                        cf,
+                    )
+                })
+            });
+            let t = match found {
+                Some(t) => t,
+                None => {
+                    by_fp.entry(cf.fingerprint).or_default().push(tasks.len());
+                    tasks.push(Task {
+                        fp: cf.fingerprint,
+                        cand: ci,
+                        rep: cl.rep,
+                        // first occurrence fixes the task budget (later
+                        // candidates' splits may differ; determinism
+                        // needs one rule, and first-wins matches the
+                        // candidate ordering's coarse-first intent)
+                        budget: cl.budget,
+                    });
+                    tasks.len() - 1
+                }
+            };
+            r.push((t, cl.members.len()));
+        }
+        refs.push(r);
+        dedups.push(ds);
+    }
+    let variant = cfg.variant;
+    let seed = cfg.seed;
+    let items: Vec<(u64, usize, SubgraphView)> = tasks
+        .iter()
+        .map(|t| (t.fp, t.budget, cands[t.cand].views[t.rep].clone()))
+        .collect();
+    let tuned: Vec<(f64, usize)> =
+        pool.scoped_map(items, |(fp, budget, view)| {
+            let search = SearchConfig::task(
+                budget,
+                seed ^ PROBE_SALT ^ fp,
+                variant != Variant::AgoNi,
+            );
+            let rcfg = ReformerConfig {
+                search,
+                enabled: variant != Variant::AgoNr,
+                ..Default::default()
+            };
+            let mut cache = MemoCache::new();
+            let r = tune_with_reformer_parallel(
+                g, &view, &rcfg, ctx, &mut cache, pool,
+            );
+            (r.best_latency, r.evals)
+        });
+    let evals = tuned.iter().map(|t| t.1).sum();
+    let scores = refs
+        .iter()
+        .enumerate()
+        .map(|(ci, r)| {
+            r.iter().map(|&(t, m)| tuned[t].0 * m as f64).sum::<f64>()
+                + cands[ci].partition.n_groups as f64
+                    * cfg.device.dispatch_us
+                    * 1e-6
+        })
+        .collect();
+    ProbeStage { scores, evals, tasks: tasks.len(), dedups }
+}
+
+// ---------------------------------------------------------------------------
+// Stage 4: Select
+// ---------------------------------------------------------------------------
+
+/// Pick the winning candidate index from probe scores: strict argmin
+/// (first minimum on ties), but a non-baseline winner must beat the
+/// baseline by [`PROBE_MARGIN`]. An empty score list selects 0.
+pub fn select_stage(scores: &[f64]) -> usize {
+    let mut i_min = 0;
+    for i in 1..scores.len() {
+        if scores[i] < scores[i_min] {
+            i_min = i;
+        }
+    }
+    if i_min != 0 && scores[i_min] < scores[0] * (1.0 - PROBE_MARGIN) {
+        i_min
+    } else {
+        0
+    }
+}
+
+/// Provenance of a cost-guided partition choice, recorded on the
+/// compiled model and in the plan JSON (only when K > 1 — single-shot
+/// plans stay byte-identical to the pre-stage pipeline).
+#[derive(Clone, Debug)]
+pub struct PartitionSearch {
+    pub n_candidates: usize,
+    /// Winning candidate index (0 = the baseline config).
+    pub chosen: usize,
+    pub chosen_label: String,
+    /// The winning cluster config verbatim (Td + weight params).
+    pub chosen_config: ClusterConfig,
+    /// Spec label per candidate, index-aligned with `probe_scores`.
+    pub labels: Vec<String>,
+    /// Probe score per candidate, raw seconds (bit-deterministic).
+    pub probe_scores: Vec<f64>,
+    pub probe_evals: usize,
+    pub probe_tasks: usize,
+}
+
+// ---------------------------------------------------------------------------
+// Stage 5: FullTune
+// ---------------------------------------------------------------------------
+
+/// How a class task obtains its schedule.
+enum ClassMode {
+    /// No db entry: cold SPLIT/JOIN reformer pipeline.
+    Cold,
+    /// Same structure tuned on another device: the stored schedule
+    /// (already remapped to representative ids) seeds the joint round.
+    Warm(Schedule),
+    /// Exact same-device hit: adopt the stored schedule, skip search.
+    Hit(Schedule),
+}
+
+/// Position maps between a canonical form and concrete node ids.
+pub(crate) fn canon_to_ids(cf: &CanonicalForm) -> HashMap<NodeId, NodeId> {
+    cf.order.iter().copied().enumerate().collect()
+}
+
+pub(crate) fn ids_to_canon(cf: &CanonicalForm) -> HashMap<NodeId, NodeId> {
+    cf.order.iter().copied().enumerate().map(|(i, v)| (v, i)).collect()
+}
+
+/// One tuned class, in class-index order.
+pub struct ClassResult {
+    pub class_idx: usize,
+    /// Best schedule in the REPRESENTATIVE's node ids.
+    pub best: Schedule,
+    pub latency: f64,
+    pub evals: usize,
+    pub stats: EvalStats,
+    /// False for exact TuningDb hits (no search ran).
+    pub searched: bool,
+}
+
+pub struct TuneStage {
+    pub results: Vec<ClassResult>,
+    /// Classes whose schedule was adopted from the TuningDb.
+    pub db_hits: usize,
+}
+
+/// Full-budget tuning of every class: consult the TuningDb once per
+/// class, then fan the cold/warm searches out over the shared pool
+/// (two-level scheduling — the per-generation batches of every class
+/// task run on the SAME pool via nested `scoped_map`).
+pub fn tune_stage(
+    g: &Graph,
+    cfg: &CompileConfig,
+    db: &TuningDb,
+    ps: &PartitionStage,
+    ds: &DedupStage,
+    ctx: &PricingContext,
+    pool: &ThreadPool,
+) -> TuneStage {
+    let mut db_hits = 0usize;
+    let tasks: Vec<(usize, SubgraphView, usize, usize, ClassMode)> = ds
+        .classes
+        .iter()
+        .enumerate()
+        .map(|(ci, cl)| {
+            let cf = ps.canon[cl.rep].as_ref().unwrap();
+            let to_rep = canon_to_ids(cf);
+            let remap_entry = |e: &DbEntry| -> Option<Schedule> {
+                if e.n_ops != cf.order.len() {
+                    return None; // fingerprint collision across sizes
+                }
+                let mut s = e.schedule.remap(&to_rep)?;
+                s.revalidate_legality(g);
+                Some(s)
+            };
+            let vtag = cfg.variant.tag();
+            let mode = if !cfg.warm_start
+                || ds.ambiguous.contains(&cf.fingerprint)
+            {
+                ClassMode::Cold
+            } else if let Some(s) = db
+                .lookup(cfg.device.name, vtag, cf.fingerprint)
+                .and_then(remap_entry)
+            {
+                db_hits += 1;
+                ClassMode::Hit(s)
+            } else if let Some(s) =
+                db.lookup_any(vtag, cf.fingerprint).and_then(remap_entry)
+            {
+                ClassMode::Warm(s)
+            } else {
+                ClassMode::Cold
+            };
+            (ci, ps.views[cl.rep].clone(), cl.budget, cl.rep, mode)
+        })
+        .collect();
+
+    let variant = cfg.variant;
+    let seed = cfg.seed;
+    let results: Vec<ClassResult> =
+        pool.scoped_map(tasks, |(ci, view, budget, rep, mode)| {
+            // seeded by the REPRESENTATIVE's subgraph id: a singleton
+            // class reproduces the pre-dedup search bit for bit
+            let search = SearchConfig::task(
+                budget,
+                seed ^ ((rep as u64) << 17),
+                variant != Variant::AgoNi,
+            );
+            let rcfg = ReformerConfig {
+                search,
+                enabled: variant != Variant::AgoNr,
+                ..Default::default()
+            };
+            let mut cache = MemoCache::new();
+            let r = match mode {
+                ClassMode::Hit(s) => {
+                    // exact hit: one pricing evaluation, no search
+                    let mut shard = ctx.new_shard();
+                    let lat = ctx.price_schedule(&s, None, &mut shard);
+                    return ClassResult {
+                        class_idx: ci,
+                        best: s,
+                        latency: lat,
+                        evals: 1,
+                        stats: shard.stats,
+                        searched: false,
+                    };
+                }
+                ClassMode::Warm(initial) => tune_with_reformer_warm_parallel(
+                    g, &view, &rcfg, initial, ctx, &mut cache, pool,
+                ),
+                ClassMode::Cold => tune_with_reformer_parallel(
+                    g, &view, &rcfg, ctx, &mut cache, pool,
+                ),
+            };
+            ClassResult {
+                class_idx: ci,
+                best: r.best,
+                latency: r.best_latency,
+                evals: r.evals,
+                stats: cache.stats(),
+                searched: true,
+            }
+        });
+    TuneStage { results, db_hits }
+}
+
+// ---------------------------------------------------------------------------
+// Stage 6: Emit
+// ---------------------------------------------------------------------------
+
+/// Fan the class winners back out onto every member, record the winners
+/// in the TuningDb (canonical-index space), price the remapped member
+/// schedules, and assemble the [`CompiledModel`].
+#[allow(clippy::too_many_arguments)]
+pub fn emit_stage(
+    g: &Graph,
+    cfg: &CompileConfig,
+    db: &mut TuningDb,
+    ps: PartitionStage,
+    ds: &DedupStage,
+    ts: TuneStage,
+    t_tuning: std::time::Instant,
+    partition_search: Option<PartitionSearch>,
+) -> CompiledModel {
+    let n_classes = ds.classes.len();
+    let n = ps.partition.n_groups;
+    let mut schedules = vec![Schedule { groups: Vec::new() }; n];
+    let mut lats = vec![0.0; n];
+    let mut total_evals = 0;
+    let mut stats = EvalStats::default();
+    let mut tuned_tasks = 0usize;
+    // one shared evaluator prices all remapped member schedules
+    let mut member_eval = MemoEvaluator::new(g, &cfg.device);
+    for r in ts.results {
+        let cl = &ds.classes[r.class_idx];
+        let cf_rep = ps.canon[cl.rep].as_ref().unwrap();
+        total_evals += r.evals;
+        stats.merge(&r.stats);
+        tuned_tasks += usize::from(r.searched);
+        // record the winner in canonical-index space: it applies to any
+        // isomorphic subgraph, here and in later compiles — unless the
+        // fingerprint is ambiguous (two verified classes collided on
+        // it), in which case a single db entry could serve the wrong
+        // class and warm compiles would silently diverge from cold ones
+        let canonical = r
+            .best
+            .remap(&ids_to_canon(cf_rep))
+            .expect("schedule ops are subgraph members");
+        if !ds.ambiguous.contains(&cf_rep.fingerprint) {
+            db.record(DbEntry {
+                device: cfg.device.name.to_string(),
+                variant: cfg.variant.tag().to_string(),
+                fingerprint: cf_rep.fingerprint,
+                n_ops: cf_rep.order.len(),
+                schedule: canonical.clone(),
+                latency: r.latency,
+                evals: r.evals,
+            });
+        }
+        schedules[cl.rep] = r.best;
+        lats[cl.rep] = r.latency;
+        for &m in &cl.members {
+            if m == cl.rep {
+                continue;
+            }
+            let cf_m = ps.canon[m].as_ref().unwrap();
+            let mut s = canonical
+                .remap(&canon_to_ids(cf_m))
+                .expect("canonical indices in range");
+            // verified isomorphism ⟹ no degradations; the re-check is
+            // the safety net the remap contract promises
+            s.revalidate_legality(g);
+            lats[m] = member_eval.evaluate_schedule(&s);
+            total_evals += 1;
+            schedules[m] = s;
+        }
+    }
+    stats.merge(&member_eval.stats());
+    let tuning_secs = t_tuning.elapsed().as_secs_f64();
+
+    // per-subgraph runtime dispatch: the graph executor pays this once
+    // per subgraph invocation (fragmented partitions lose here)
+    let dispatch =
+        ps.partition.n_groups as f64 * cfg.device.dispatch_us * 1e-6;
+    let total_latency = lats.iter().sum::<f64>() + dispatch;
+    CompiledModel {
+        partition: ps.partition,
+        schedules,
+        subgraph_latency: lats,
+        total_latency,
+        total_evals,
+        cache_hit_rate: stats.hit_rate(),
+        evals_per_sec: stats.schedule_evals as f64 / tuning_secs.max(1e-9),
+        n_classes,
+        tuned_tasks,
+        db_hits: ts.db_hits,
+        class_hit_rate: if n_classes > 0 {
+            ts.db_hits as f64 / n_classes as f64
+        } else {
+            0.0
+        },
+        report: ps.report,
+        partition_search,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn probe_pool_floor_and_ceiling() {
+        // default budget, K=4: the fraction binds (budget/16)
+        assert_eq!(probe_pool_per_candidate(20_000, 4), 1250);
+        assert_eq!(probe_pool_per_candidate(2000, 4), 125);
+        // small budget: the floor wants 64, the ceiling budget/(2K) wins
+        assert_eq!(probe_pool_per_candidate(400, 4), 50);
+        // mid budget, more candidates: the 64-eval floor binds
+        assert_eq!(probe_pool_per_candidate(1200, 6), 64);
+        // the floor never exceeds the budget
+        for budget in [0usize, 1, 7, 40, 400, 4000] {
+            for k in [1usize, 2, 4, 8] {
+                let p = probe_pool_per_candidate(budget, k);
+                assert!(p >= 1);
+                assert!(
+                    p <= (budget / (2 * k)).max(1),
+                    "pool {p} above ceiling at budget {budget} k {k}"
+                );
+                // total allocation stays within half the budget (or one
+                // eval per candidate at degenerate budgets)
+                assert!(k * p <= (budget / 2).max(k));
+            }
+        }
+    }
+
+    #[test]
+    fn select_argmin_with_margin() {
+        // baseline wins ties and near-ties
+        assert_eq!(select_stage(&[1.0, 0.9, 0.95]), 0); // 10% < margin
+        assert_eq!(select_stage(&[1.0, 1.0, 1.0]), 0);
+        assert_eq!(select_stage(&[]), 0);
+        assert_eq!(select_stage(&[1.0]), 0);
+        // a decisive candidate displaces it
+        assert_eq!(select_stage(&[1.0, 0.5, 0.95]), 1);
+        assert_eq!(select_stage(&[1.0, 0.9, 0.5]), 2);
+        // first minimum on exact ties between non-baseline candidates
+        assert_eq!(select_stage(&[1.0, 0.5, 0.5]), 1);
+        // exactly at the margin boundary: not strictly below, stay
+        assert_eq!(select_stage(&[1.0, 1.0 - PROBE_MARGIN]), 0);
+    }
+}

@@ -19,6 +19,14 @@
 //!   counts therefore vary with worker count; prices never do (pinned by
 //!   `tests/search_parallel_props.rs`).
 //!
+//! PROBE-SCOPED REUSE: a [`PricingContext`] binds only the graph and the
+//! device — nothing about any partition — so the coordinator constructs
+//! ONE context per compile and shares it across every partition
+//! candidate's probe tasks AND the winner's full-budget tune (the
+//! per-node conversion costs are identical for every candidate by
+//! construction). Only the mutable shards/caches are per task; they are
+//! the part whose sharing pattern must follow the task structure.
+//!
 //! Two `CostEvaluator` implementations remain for serial callers:
 //! - [`DirectEvaluator`] forwards to the roofline model unchanged — the
 //!   reference path, and the right choice for one-shot pricing (handlib).

@@ -71,6 +71,8 @@ fn main() {
                  compile   --model mbn --shape small|middle|large \\\n\
                  \x20         --device kirin990|qsd810 --budget 20000 \\\n\
                  \x20         --variant ago|ni|nr --frontend auto|relay \\\n\
+                 \x20         [--partition-candidates K (cost-guided \\\n\
+                 \x20          partition search; 1 = single-shot)] \\\n\
                  \x20         [--workers N (0 = all cores; wall-clock \\\n\
                  \x20          only, plan/db bytes are identical)] \\\n\
                  \x20         [--baselines] [--tuning-db db.json] [--cold]\n\
@@ -124,6 +126,12 @@ fn cmd_compile(args: &Args) -> i32 {
         _ => Frontend::Auto,
     };
     let budget = args.get_usize("budget", 20_000);
+    // --partition-candidates K: cost-guided partition search (K >= 2
+    // probes a Td/weight sweep and full-tunes the predicted-fastest
+    // candidate; 1 = the single-shot adaptive pipeline, bit-identical
+    // to previous releases)
+    let partition_candidates =
+        args.get_usize("partition-candidates", 1).max(1);
     let cfg = CompileConfig {
         device: dev.clone(),
         budget,
@@ -133,6 +141,7 @@ fn cmd_compile(args: &Args) -> i32 {
         workers: args.get_usize("workers", 0),
         // --cold ignores tuning-db entries on lookup (still records)
         warm_start: !args.has_flag("cold"),
+        partition_candidates,
     };
     log::info!(
         "compiling {mname}/{sname} for {} (budget {budget}, {:?})",
@@ -178,6 +187,21 @@ fn cmd_compile(args: &Args) -> i32 {
         out.class_hit_rate * 100.0
     );
     println!("{}", out.report.summary("partition"));
+    if let Some(se) = &out.partition_search {
+        println!(
+            "partition search: {} candidates probed ({} unique tasks, \
+             {} probe evals), chosen [{}] {} (Td {:.0}, predicted \
+             {} vs baseline {})",
+            se.n_candidates,
+            se.probe_tasks,
+            se.probe_evals,
+            se.chosen,
+            se.chosen_label,
+            se.chosen_config.td,
+            fmt_ms(se.probe_scores[se.chosen] * 1e3),
+            fmt_ms(se.probe_scores[0] * 1e3),
+        );
+    }
     if let Some(p) = db_path {
         match db.save(p) {
             Ok(()) => println!(

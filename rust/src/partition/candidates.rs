@@ -1,0 +1,220 @@
+//! Cost-guided partition candidates: deterministically generate K
+//! diverse partitions for the coordinator's probe/select stages.
+//!
+//! AGO's Algorithm 1 is parameterized by one threshold Td (plus the
+//! Eq.-1 weight parameters), and the pipeline historically hard-committed
+//! to a single heuristic value (`ClusterConfig::adaptive`'s `3.2 x mean`)
+//! before any cost signal existed. The sweep below turns that committed
+//! constant into a searched dimension: candidate 0 is always the
+//! baseline config verbatim (so `--partition-candidates 1` IS the
+//! single-shot pipeline), and further candidates scale Td around it and
+//! vary the weight parameters. Every candidate goes through the same
+//! `cluster()` machinery, so Theorem 1's acyclicity guarantee holds for
+//! all of them by construction.
+//!
+//! The spec list leans COARSE (scales >= 1 first): measured across the
+//! seed zoo, coarser-than-adaptive partitions are where the upside
+//! lives — fewer dispatch boundaries and more multi-complex fusion
+//! opportunity once the reformer divides the big subgraphs — while
+//! finer-than-adaptive candidates almost never win the full-budget
+//! compile. Candidates whose assignment duplicates an earlier one are
+//! dropped (scaling Td often saturates), so `k` is a cap, not a promise.
+//!
+//! Generation is pure (no RNG): the same graph, base config, and k
+//! always produce the same candidate list, which the compile pipeline
+//! relies on for byte-reproducible plans.
+
+use crate::graph::{Graph, Partition};
+
+use super::affix::Quotient;
+use super::cluster::{cluster, cluster_core, ClusterConfig};
+use super::weight::{node_weights, WeightParams};
+
+/// One generated candidate: the exact config that produced it (recorded
+/// verbatim in plan provenance when it wins) plus the partition.
+#[derive(Clone, Debug)]
+pub struct Candidate {
+    /// Human-readable spec tag ("td*2.00", "b=4.00", ...).
+    pub label: &'static str,
+    pub config: ClusterConfig,
+    pub partition: Partition,
+}
+
+/// The sweep: (label, Td scale, weight params). Entry 0 is the baseline.
+/// Scales apply to the base config's Td when the weight params match the
+/// base, and to the family's own adaptive Td otherwise (a different
+/// weight scale makes the base threshold meaningless).
+const SPECS: [(&str, f64, WeightParams); 12] = [
+    ("td*1.00", 1.00, WeightParams { c: 1.0, b: 1.0 }),
+    ("td*2.00", 2.00, WeightParams { c: 1.0, b: 1.0 }),
+    ("td*2.83", 2.83, WeightParams { c: 1.0, b: 1.0 }),
+    ("td*1.41", 1.41, WeightParams { c: 1.0, b: 1.0 }),
+    ("td*4.00", 4.00, WeightParams { c: 1.0, b: 1.0 }),
+    ("td*0.71", 0.71, WeightParams { c: 1.0, b: 1.0 }),
+    ("b=0.25 td*2.00", 2.00, WeightParams { c: 1.0, b: 0.25 }),
+    ("td*0.50", 0.50, WeightParams { c: 1.0, b: 1.0 }),
+    ("b=4.00", 1.00, WeightParams { c: 1.0, b: 4.0 }),
+    ("b=0.25", 1.00, WeightParams { c: 1.0, b: 0.25 }),
+    ("td*5.66", 5.66, WeightParams { c: 1.0, b: 1.0 }),
+    ("b=4.00 td*2.00", 2.00, WeightParams { c: 1.0, b: 4.0 }),
+];
+
+/// Generate up to `k` distinct candidates around `base`. Candidate 0 is
+/// `base` verbatim; the rest walk [`SPECS`] in order, skipping
+/// assignments already seen. Per weight-param family the singleton
+/// quotient and node weights are built once and cloned per Td variant
+/// (the `cluster_core` split exists for exactly this).
+pub fn candidates(g: &Graph, base: ClusterConfig, k: usize) -> Vec<Candidate> {
+    let k = k.max(1);
+    let first = Candidate {
+        label: SPECS[0].0,
+        config: base,
+        partition: cluster(g, base),
+    };
+    let mut seen: Vec<Vec<usize>> = vec![first.partition.assign.clone()];
+    let mut out = vec![first];
+    // (weight params, pristine singleton quotient, node weights,
+    // family-adaptive Td) — one entry per distinct weight family
+    let mut bases: Vec<(WeightParams, Quotient, Vec<f64>, f64)> = Vec::new();
+    for &(label, scale, wp) in SPECS.iter().skip(1) {
+        if out.len() >= k {
+            break;
+        }
+        if g.is_empty() {
+            break; // cluster() of an empty graph is the lone candidate
+        }
+        let bi = match bases.iter().position(|(w, ..)| *w == wp) {
+            Some(i) => i,
+            None => {
+                bases.push((
+                    wp,
+                    Quotient::singletons(g),
+                    node_weights(g, wp),
+                    ClusterConfig::adaptive_with(g, wp).td,
+                ));
+                bases.len() - 1
+            }
+        };
+        let reference =
+            if wp == base.weights { base.td } else { bases[bi].3 };
+        let td = scale * reference;
+        let mut q = bases[bi].1.clone();
+        let mut gw = bases[bi].2.clone();
+        cluster_core(&mut q, &mut gw, td);
+        let partition = q.to_partition(g);
+        if seen.iter().any(|a| *a == partition.assign) {
+            continue;
+        }
+        seen.push(partition.assign.clone());
+        out.push(Candidate {
+            label,
+            config: ClusterConfig { td, weights: wp },
+            partition,
+        });
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::{build, InputShape, ModelId};
+
+    #[test]
+    fn candidate_zero_is_the_base_verbatim() {
+        let g = build(ModelId::Mbn, InputShape::Small);
+        let base = ClusterConfig::adaptive(&g);
+        let cands = candidates(&g, base, 4);
+        assert_eq!(cands[0].config, base);
+        assert_eq!(cands[0].partition.assign, cluster(&g, base).assign);
+        assert_eq!(cands[0].label, "td*1.00");
+    }
+
+    #[test]
+    fn k_one_is_single_shot_only() {
+        let g = build(ModelId::Sqn, InputShape::Small);
+        let cands = candidates(&g, ClusterConfig::adaptive(&g), 1);
+        assert_eq!(cands.len(), 1);
+    }
+
+    #[test]
+    fn zoo_yields_diverse_acyclic_covers() {
+        for m in ModelId::all() {
+            let g = build(m, InputShape::Small);
+            let cands = candidates(&g, ClusterConfig::adaptive(&g), 4);
+            assert!(
+                cands.len() >= 2,
+                "{}: no diversity ({} candidates)",
+                m.name(),
+                cands.len()
+            );
+            assert!(cands.len() <= 4);
+            for c in &cands {
+                assert!(c.partition.is_cover(&g), "{}: not a cover", m.name());
+                assert!(c.partition.is_acyclic(&g), "{}: cyclic", m.name());
+            }
+            // pairwise distinct assignments
+            for (i, a) in cands.iter().enumerate() {
+                for b in &cands[i + 1..] {
+                    assert_ne!(
+                        a.partition.assign, b.partition.assign,
+                        "{}: duplicate candidates {} / {}",
+                        m.name(),
+                        a.label,
+                        b.label
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn generation_is_deterministic() {
+        let g = build(ModelId::Sfn, InputShape::Small);
+        let base = ClusterConfig::adaptive(&g);
+        let a = candidates(&g, base, 6);
+        let b = candidates(&g, base, 6);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(&b) {
+            assert_eq!(x.label, y.label);
+            assert_eq!(x.config, y.config);
+            assert_eq!(x.partition.assign, y.partition.assign);
+        }
+    }
+
+    #[test]
+    fn explicit_base_config_scales_around_its_own_td() {
+        let g = build(ModelId::Mbn, InputShape::Small);
+        let base = ClusterConfig {
+            td: 500.0,
+            weights: crate::partition::WeightParams::default(),
+        };
+        let cands = candidates(&g, base, 3);
+        assert_eq!(cands[0].config.td, 500.0);
+        // default-weight scale specs are relative to the base Td
+        for c in &cands[1..] {
+            if c.config.weights == base.weights {
+                let scale = c.config.td / 500.0;
+                assert!(
+                    (scale - 2.0).abs() < 1e-9
+                        || (scale - 2.83).abs() < 1e-9
+                        || (scale - 1.41).abs() < 1e-9
+                        || (scale - 4.0).abs() < 1e-9
+                        || (scale - 5.66).abs() < 1e-9
+                        || (scale - 0.71).abs() < 1e-9
+                        || (scale - 0.5).abs() < 1e-9,
+                    "unexpected td {}",
+                    c.config.td
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn empty_graph_single_candidate() {
+        let g = Graph::new("empty");
+        let cands = candidates(&g, ClusterConfig::default(), 4);
+        assert_eq!(cands.len(), 1);
+        assert_eq!(cands[0].partition.n_groups, 0);
+    }
+}

@@ -9,12 +9,15 @@
 
 use std::collections::BTreeSet;
 
+use anyhow::{anyhow, Result};
+
 use crate::graph::{Graph, Partition};
+use crate::util::json::{num, obj, Json};
 
 use super::affix::Quotient;
-use super::weight::{node_weights, WeightParams};
+use super::weight::{node_weight, node_weights, WeightParams};
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct ClusterConfig {
     /// Maximum subgraph weight `Td`. Merges stop once the sum would reach
     /// this; trivial subgraphs below it keep growing.
@@ -44,12 +47,19 @@ impl ClusterConfig {
     /// ones, so the default pipeline derives Td from the mean complex-op
     /// weight.
     pub fn adaptive(g: &Graph) -> ClusterConfig {
-        let wp = WeightParams::default();
+        ClusterConfig::adaptive_with(g, WeightParams::default())
+    }
+
+    /// [`ClusterConfig::adaptive`] under explicit weight parameters —
+    /// the candidate generator (`partition::candidates`) sweeps Td
+    /// scales around the adaptive threshold of each weight-param family,
+    /// so the reference point must be computable per family.
+    pub fn adaptive_with(g: &Graph, wp: WeightParams) -> ClusterConfig {
         let complex: Vec<f64> = g
             .nodes
             .iter()
             .filter(|n| n.kind.is_complex())
-            .map(|n| super::weight::node_weight(g, n.id, wp))
+            .map(|n| node_weight(g, n.id, wp))
             .collect();
         let mean = if complex.is_empty() {
             1000.0
@@ -57,6 +67,38 @@ impl ClusterConfig {
             complex.iter().sum::<f64>() / complex.len() as f64
         };
         ClusterConfig { td: (3.2 * mean).max(64.0), weights: wp }
+    }
+
+    /// Serialize for plan provenance: the compiled plan records the
+    /// winning candidate's config verbatim so a later reader (or a
+    /// re-compile) can reproduce the partition without re-running the
+    /// search.
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("td", num(self.td)),
+            ("weight_c", num(self.weights.c)),
+            ("weight_b", num(self.weights.b)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<ClusterConfig> {
+        // every field gets the same discipline: present, finite,
+        // non-negative — a reader reproducing the partition from plan
+        // provenance must never feed garbage into the weight model
+        let field = |k: &str| -> Result<f64> {
+            let v = j
+                .get(k)
+                .and_then(|v| v.as_f64())
+                .ok_or_else(|| anyhow!("cluster config missing {k}"))?;
+            if !v.is_finite() || v < 0.0 {
+                return Err(anyhow!("bad cluster config {k} {v}"));
+            }
+            Ok(v)
+        };
+        Ok(ClusterConfig {
+            td: field("td")?,
+            weights: WeightParams { c: field("weight_c")?, b: field("weight_b")? },
+        })
     }
 }
 
@@ -86,10 +128,21 @@ pub fn cluster(g: &Graph, cfg: ClusterConfig) -> Partition {
     if g.is_empty() {
         return Partition::from_assignment(Vec::new());
     }
-    let w = node_weights(g, cfg.weights);
+    let mut gw = node_weights(g, cfg.weights);
     let mut q = Quotient::singletons(g);
-    // group weight = sum of member weights
-    let mut gw: Vec<f64> = w.clone();
+    cluster_core(&mut q, &mut gw, cfg.td);
+    q.to_partition(g)
+}
+
+/// The contraction loop of Algorithm 1 over a PREPARED quotient: `q` is
+/// the (usually singleton) quotient to contract in place and `gw` the
+/// per-group weight vector (entry v = summed weight of group v's
+/// members; updated in place as groups merge). Extracted from
+/// [`cluster`] so `partition::candidates` can build the singleton
+/// quotient and the node-weight vector ONCE per weight-param family and
+/// clone those per Td variant, instead of re-deriving both from the
+/// graph (edge dedup + stage toposort) for every candidate.
+pub fn cluster_core(q: &mut Quotient, gw: &mut [f64], td: f64) {
     // invariant: every candidate v appears exactly once, under the key
     // (weight_key(gw[v]), v) — gw[v] only changes while v is the
     // surviving node of a contraction, and we re-key it right there
@@ -105,7 +158,7 @@ pub fn cluster(g: &Graph, cfg: ClusterConfig) -> Partition {
         let partner = q
             .affix_set(v)
             .into_iter()
-            .filter(|&u| gw[v] + gw[u] < cfg.td)
+            .filter(|&u| gw[v] + gw[u] < td)
             .min_by(|&a, &b| gw[a].partial_cmp(&gw[b]).unwrap());
         match partner {
             Some(u) => {
@@ -126,7 +179,6 @@ pub fn cluster(g: &Graph, cfg: ClusterConfig) -> Partition {
             }
         }
     }
-    q.to_partition(g)
 }
 
 #[cfg(test)]
@@ -283,6 +335,56 @@ mod tests {
                     );
                 }
             }
+        }
+    }
+
+    #[test]
+    fn cluster_core_on_shared_base_matches_cluster() {
+        // the candidate generator's contract: cloning one prepared
+        // (quotient, weights) base and running the core must equal a
+        // from-scratch cluster() call for every Td
+        let g = build(ModelId::Mbn, InputShape::Small);
+        let wp = WeightParams::default();
+        let base_q = Quotient::singletons(&g);
+        let base_w = node_weights(&g, wp);
+        let atd = ClusterConfig::adaptive(&g).td;
+        for scale in [0.5, 1.0, 2.0, 2.83] {
+            let td = atd * scale;
+            let mut q = base_q.clone();
+            let mut gw = base_w.clone();
+            cluster_core(&mut q, &mut gw, td);
+            let from_core = q.to_partition(&g);
+            let direct = cluster(&g, ClusterConfig { td, weights: wp });
+            assert_eq!(from_core.assign, direct.assign, "Td {td}");
+        }
+    }
+
+    #[test]
+    fn cluster_config_json_roundtrip() {
+        let cfg = ClusterConfig {
+            td: 1234.5,
+            weights: WeightParams { c: 1.0, b: 0.25 },
+        };
+        let back =
+            ClusterConfig::from_json(&crate::util::json::Json::parse(
+                &cfg.to_json().pretty(),
+            )
+            .unwrap())
+            .unwrap();
+        assert_eq!(back, cfg);
+        // malformed: missing field, negative td, negative weight params
+        // (weights get the same discipline as td)
+        for bad in [
+            r#"{"td": 1.0}"#,
+            r#"{"td": -1.0, "weight_c": 1.0, "weight_b": 1.0}"#,
+            r#"{"td": 1.0, "weight_c": -5.0, "weight_b": 1.0}"#,
+            r#"{"td": 1.0, "weight_c": 1.0, "weight_b": -0.5}"#,
+        ] {
+            let j = crate::util::json::Json::parse(bad).unwrap();
+            assert!(
+                ClusterConfig::from_json(&j).is_err(),
+                "accepted bad config {bad}"
+            );
         }
     }
 

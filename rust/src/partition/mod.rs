@@ -4,12 +4,14 @@
 //! Relay-style baseline partitioner, and partition statistics (Fig. 14).
 
 pub mod affix;
+pub mod candidates;
 pub mod cluster;
 pub mod relay;
 pub mod report;
 pub mod weight;
 
-pub use cluster::{cluster, ClusterConfig};
+pub use candidates::{candidates, Candidate};
+pub use cluster::{cluster, cluster_core, ClusterConfig};
 pub use relay::relay_partition;
 pub use report::PartitionReport;
 pub use weight::{node_weight, subgraph_weights, WeightParams};

@@ -16,7 +16,7 @@
 
 use crate::graph::{Graph, Partition};
 
-#[derive(Clone, Copy, Debug)]
+#[derive(Clone, Copy, Debug, PartialEq)]
 pub struct WeightParams {
     /// Slope `c` in Eq. (1).
     pub c: f64,

@@ -28,6 +28,20 @@ pub struct ReformerConfig {
     /// Disable the reformer entirely (AGO-NR ablation): the subgraph is
     /// tuned directly with the whole budget.
     pub enabled: bool,
+    /// Minimum evaluations each SPLIT mini receives, regardless of the
+    /// allocation (a mini below ~a population's worth of samples cannot
+    /// rank segmentations at all). Like `split_budget`'s documented
+    /// floors, this means SPEND can exceed a pathologically small budget:
+    /// a task with M minis pays at least `M * mini_floor + join_floor`.
+    /// The coordinator's partition-candidate probes rely on exactly that
+    /// floor spend — clamping these floors to tiny probe allocations was
+    /// measured to destroy the probe's ranking fidelity (the floors ARE
+    /// the probe's signal on multi-complex subgraphs), so probes keep
+    /// the defaults and the overage is documented instead.
+    pub mini_floor: usize,
+    /// Minimum evaluations of the JOIN round (seeded, so a handful of
+    /// mutations on the composed schedule is already useful).
+    pub join_floor: usize,
 }
 
 impl Default for ReformerConfig {
@@ -36,6 +50,8 @@ impl Default for ReformerConfig {
             split_fraction: 0.5,
             search: SearchConfig::default(),
             enabled: true,
+            mini_floor: 24,
+            join_floor: 16,
         }
     }
 }
@@ -90,9 +106,12 @@ pub fn join_schedules(minis: Vec<Schedule>) -> Schedule {
 // cannot drift apart — their bit-identity contract depends on it.
 
 /// Per-mini budget: the split fraction of the subgraph budget, divided
-/// across minis, floored so even tiny allocations buy a real search.
-fn mini_budget_of(budget: usize, split_fraction: f64, n_minis: usize) -> usize {
-    ((budget as f64 * split_fraction) as usize / n_minis.max(1)).max(24)
+/// across minis, floored (`ReformerConfig::mini_floor`) so even tiny
+/// allocations buy a real search.
+fn mini_budget_of(budget: usize, split_fraction: f64, n_minis: usize,
+                  floor: usize) -> usize {
+    ((budget as f64 * split_fraction) as usize / n_minis.max(1))
+        .max(floor.max(1))
 }
 
 /// Search config for mini `i` (independent seed stream per mini).
@@ -105,10 +124,12 @@ fn mini_cfg(base: &SearchConfig, mini_budget: usize, i: usize) -> SearchConfig {
     }
 }
 
-/// Search config for the JOIN round: whatever the minis left, floored.
-fn join_cfg(base: &SearchConfig, budget: usize, spent: usize) -> SearchConfig {
+/// Search config for the JOIN round: whatever the minis left, floored
+/// (`ReformerConfig::join_floor`).
+fn join_cfg(base: &SearchConfig, budget: usize, spent: usize,
+            floor: usize) -> SearchConfig {
     SearchConfig {
-        budget: budget.saturating_sub(spent).max(16),
+        budget: budget.saturating_sub(spent).max(floor.max(1)),
         ..base.clone()
     }
 }
@@ -145,7 +166,8 @@ pub fn tune_with_reformer_eval(
         return tune_with_evaluator(g, view, &cfg.search, None, evaluator);
     }
     let minis = split(view, g);
-    let mini_budget = mini_budget_of(budget, cfg.split_fraction, minis.len());
+    let mini_budget =
+        mini_budget_of(budget, cfg.split_fraction, minis.len(), cfg.mini_floor);
     let mut spent = 0usize;
     let mut mini_best = Vec::with_capacity(minis.len());
     for (i, mini) in minis.iter().enumerate() {
@@ -155,7 +177,7 @@ pub fn tune_with_reformer_eval(
         mini_best.push(r.best);
     }
     let initial = join_schedules(mini_best);
-    let jcfg = join_cfg(&cfg.search, budget, spent);
+    let jcfg = join_cfg(&cfg.search, budget, spent, cfg.join_floor);
     let mut result =
         tune_with_evaluator(g, view, &jcfg, Some(initial), evaluator);
     result.evals += spent;
@@ -192,7 +214,8 @@ pub fn tune_with_reformer_parallel(
         return tune_parallel(g, view, &cfg.search, None, ctx, cache, pool);
     }
     let minis = split(view, g);
-    let mini_budget = mini_budget_of(budget, cfg.split_fraction, minis.len());
+    let mini_budget =
+        mini_budget_of(budget, cfg.split_fraction, minis.len(), cfg.mini_floor);
     let items: Vec<(usize, SubgraphView)> =
         minis.into_iter().enumerate().collect();
     let mini_results: Vec<(TuneResult, MemoCache)> =
@@ -210,7 +233,7 @@ pub fn tune_with_reformer_parallel(
         cache.merge(mc);
     }
     let initial = join_schedules(mini_best);
-    let jcfg = join_cfg(&cfg.search, budget, spent);
+    let jcfg = join_cfg(&cfg.search, budget, spent, cfg.join_floor);
     let mut result =
         tune_parallel(g, view, &jcfg, Some(initial), ctx, cache, pool);
     result.evals += spent;
@@ -372,6 +395,35 @@ mod tests {
             // the merged caches did real work (JOIN started warm)
             assert!(cache.stats().hits > 0);
         }
+    }
+
+    #[test]
+    fn floors_are_config_and_default_matches_legacy_constants() {
+        // the floors moved from hard-coded constants (24 / 16) into
+        // ReformerConfig; the defaults must reproduce the old pipeline
+        // bit for bit, and custom floors must actually bind
+        let (g, v) = triple();
+        let dev = crate::device::DeviceProfile::kirin990();
+        let base = ReformerConfig {
+            search: SearchConfig { budget: 40, ..Default::default() },
+            ..Default::default()
+        };
+        assert_eq!((base.mini_floor, base.join_floor), (24, 16));
+        // 3 minis at budget 40: floor spend is 3*24 + join
+        let r = tune_with_reformer(&g, &v, &dev, &base);
+        assert!(r.evals >= 3 * 24 + 16, "floor spend missing: {}", r.evals);
+        // floor 1 keeps spend near the allocation instead
+        let lean = ReformerConfig {
+            mini_floor: 1,
+            join_floor: 1,
+            ..base.clone()
+        };
+        let r2 = tune_with_reformer(&g, &v, &dev, &lean);
+        assert!(r2.evals < r.evals, "lean {} !< default {}", r2.evals, r.evals);
+        // a zero floor is clamped to one evaluation, never zero
+        let zero = ReformerConfig { mini_floor: 0, join_floor: 0, ..base };
+        let r3 = tune_with_reformer(&g, &v, &dev, &zero);
+        assert!(r3.evals >= 3 + 1);
     }
 
     #[test]

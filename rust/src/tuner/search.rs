@@ -73,6 +73,27 @@ impl Default for SearchConfig {
     }
 }
 
+impl SearchConfig {
+    /// Per-task search config: a budget with the stabilization window
+    /// derived from it — ONE formula shared by the coordinator's
+    /// full-budget class tasks and the partition-candidate probes
+    /// (probes clamp the budget itself; see
+    /// `coordinator::stages::probe_pool_per_candidate`). The caller
+    /// supplies the seed: class tasks mix the representative's subgraph
+    /// id into the compile seed, probes mix a salt and the class
+    /// fingerprint so probe trajectories are independent of both the
+    /// full-tune streams and the candidate enumeration order.
+    pub fn task(budget: usize, seed: u64, allow_intensive: bool) -> SearchConfig {
+        SearchConfig {
+            budget,
+            stabilize_window: (budget / 4).clamp(16, 256),
+            seed,
+            allow_intensive,
+            ..Default::default()
+        }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct TuneResult {
     pub best: Schedule,

@@ -5,7 +5,8 @@
 use ago::ensure;
 use ago::graph::{Graph, OpKind, Shape};
 use ago::partition::{
-    cluster, relay_partition, subgraph_weights, ClusterConfig, WeightParams,
+    candidates, cluster, relay_partition, subgraph_weights, ClusterConfig,
+    WeightParams,
 };
 use ago::util::propkit::forall;
 use ago::util::Rng;
@@ -137,6 +138,76 @@ fn cluster_never_coarser_than_relay_on_trivial_threshold() {
         ensure!(p.n_groups == g.len(), "td=0 must yield singletons");
         Ok(())
     });
+}
+
+#[test]
+fn candidates_are_acyclic_covers_and_deterministic() {
+    // cost-guided partition search properties on random DAGs: every
+    // generated candidate is an acyclic cover of all nodes (Theorem 1
+    // machinery applies to each), candidate 0 is the base partition
+    // verbatim, assignments are pairwise distinct, and generation is a
+    // pure function of (graph, base, k)
+    forall(60, |rng| {
+        let g = random_graph(rng);
+        let base = ClusterConfig::adaptive(&g);
+        let k = rng.range(1, 7);
+        let cands = candidates(&g, base, k);
+        ensure!(!cands.is_empty() && cands.len() <= k.max(1),
+                "bad candidate count {} for k {k}", cands.len());
+        ensure!(
+            cands[0].partition.assign == cluster(&g, base).assign,
+            "candidate 0 is not the base partition"
+        );
+        for c in &cands {
+            ensure!(c.partition.is_cover(&g), "{}: not a cover", c.label);
+            ensure!(c.partition.is_acyclic(&g), "{}: cyclic", c.label);
+        }
+        for (i, a) in cands.iter().enumerate() {
+            for b in &cands[i + 1..] {
+                ensure!(
+                    a.partition.assign != b.partition.assign,
+                    "duplicate candidates {} / {}",
+                    a.label,
+                    b.label
+                );
+            }
+        }
+        let again = candidates(&g, base, k);
+        ensure!(again.len() == cands.len(), "non-deterministic count");
+        for (x, y) in cands.iter().zip(&again) {
+            ensure!(x.label == y.label, "non-deterministic labels");
+            ensure!(x.config == y.config, "non-deterministic configs");
+            ensure!(
+                x.partition.assign == y.partition.assign,
+                "non-deterministic assignment for {}",
+                x.label
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn candidate_sweep_is_diverse_on_the_zoo() {
+    use ago::models::{build, InputShape, ModelId};
+    for m in ModelId::all() {
+        let g = build(m, InputShape::Small);
+        let cands = candidates(&g, ClusterConfig::adaptive(&g), 4);
+        assert!(
+            cands.len() >= 2,
+            "{}: Td sweep produced no alternative partition",
+            m.name()
+        );
+        // the sweep leans coarse: at least one candidate has fewer
+        // subgraphs than the adaptive baseline
+        assert!(
+            cands[1..]
+                .iter()
+                .any(|c| c.partition.n_groups < cands[0].partition.n_groups),
+            "{}: no coarser candidate",
+            m.name()
+        );
+    }
 }
 
 #[test]

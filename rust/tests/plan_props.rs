@@ -3,7 +3,7 @@
 //! must preserve the schedules and the partition exactly, and malformed
 //! plans must be rejected with errors rather than garbage schedules.
 
-use ago::coordinator::plan::{from_json, to_json};
+use ago::coordinator::plan::{from_json, loaded_to_json, to_json};
 use ago::coordinator::{compile, CompileConfig};
 use ago::device::DeviceProfile;
 use ago::ensure;
@@ -49,6 +49,55 @@ fn roundtrip_preserves_schedules_and_partition() {
         );
         Ok(())
     });
+}
+
+#[test]
+fn partition_search_provenance_roundtrips_bit_exactly() {
+    // a cost-guided compile (K > 1) must carry its provenance through
+    // serialize → load → re-serialize unchanged, and the absence of the
+    // field (single-shot and pre-stage-pipeline plans) must load fine
+    let g = build(ModelId::Sqn, InputShape::Small);
+    let m = compile(&g, &CompileConfig {
+        budget: 400,
+        workers: 2,
+        partition_candidates: 3,
+        ..CompileConfig::new(DeviceProfile::kirin990())
+    });
+    let se = m.partition_search.as_ref().expect("K>1 records provenance");
+    let j = to_json(&m, "sqn", "kirin990");
+    let text = j.pretty();
+    assert!(text.contains("partition_search"));
+    assert!(text.contains("probe_scores_s"));
+    let loaded = from_json(&Json::parse(&text).unwrap()).unwrap();
+    let carried = loaded.partition_search.as_ref().unwrap();
+    // scores survive as raw seconds, bit for bit
+    let scores = carried
+        .get("probe_scores_s")
+        .and_then(|a| a.as_arr())
+        .unwrap();
+    assert_eq!(scores.len(), se.probe_scores.len());
+    for (a, b) in scores.iter().zip(&se.probe_scores) {
+        assert_eq!(a.as_f64().unwrap().to_bits(), b.to_bits());
+    }
+    // the winning config decodes back through ClusterConfig::from_json
+    let cc = ago::partition::ClusterConfig::from_json(
+        carried.get("chosen_config").unwrap(),
+    )
+    .unwrap();
+    assert_eq!(cc, se.chosen_config);
+    // load → re-serialize → load: bytes and provenance stable
+    let re = loaded_to_json(&loaded).pretty();
+    let loaded2 = from_json(&Json::parse(&re).unwrap()).unwrap();
+    assert_eq!(loaded2.partition_search, loaded.partition_search);
+    assert_eq!(loaded_to_json(&loaded2).pretty(), re);
+    // plans without the field still load (and re-serialize without it)
+    let mut single = m.clone();
+    single.partition_search = None;
+    let st = to_json(&single, "sqn", "kirin990").pretty();
+    assert!(!st.contains("partition_search"));
+    let ls = from_json(&Json::parse(&st).unwrap()).unwrap();
+    assert!(ls.partition_search.is_none());
+    assert!(!loaded_to_json(&ls).pretty().contains("partition_search"));
 }
 
 #[test]
