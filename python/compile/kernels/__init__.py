@@ -1,2 +1,2 @@
 # L1 Pallas kernels (interpret=True on CPU) + pure-jnp oracle (ref).
-from . import attention, conv, intensive, matmul, ref  # noqa: F401
+from . import attention, conv, fused, intensive, matmul, ref  # noqa: F401

@@ -1,0 +1,104 @@
+# L1 Pallas kernels: SINGLE-PASS fused chains — the emission counterpart
+# of the rust kernel taxonomy (rust/src/kernels). A streaming group
+# (elementwise chain) or a reduction group (elementwise chain feeding a
+# reduction) costs one pass over the activation: every intermediate lives
+# in the VMEM-resident tile, so the chain pays one read of the input and
+# one write of the result instead of a round-trip per operator. The
+# unfused execution of the same chain runs one artifact per op
+# (`bias_relu` below is the per-op stage), which is exactly the memory
+# traffic the cost model's fused pricing removes.
+#
+# All kernels run with interpret=True (CPU correctness path), NHWC f32,
+# row-band grids — same tiling scheme as conv.py.
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .conv import row_tile
+
+
+# ---------------------------------------------------------------------------
+# per-op stage: one streaming op + epilogue (the unfused fallback unit)
+# ---------------------------------------------------------------------------
+
+def _bias_relu_kernel(x_ref, b_ref, o_ref):
+    o_ref[0] = jnp.maximum(x_ref[0] + b_ref[...], 0.0)
+
+
+def bias_relu(x, b, interpret=True):
+    """x: (N, H, W, C), b: (C,) -> relu(x + b). One streaming op per
+    pass — the stage a fused chain collapses."""
+    n, h, w, c = x.shape
+    th = row_tile(h)
+    return pl.pallas_call(
+        _bias_relu_kernel,
+        grid=(n, h // th),
+        in_specs=[
+            pl.BlockSpec((1, th, w, c), lambda bi, bj: (bi, bj, 0, 0)),
+            pl.BlockSpec((c,), lambda bi, bj: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, th, w, c), lambda bi, bj: (bi, bj, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, w, c), jnp.float32),
+        interpret=interpret,
+    )(x, b)
+
+
+# ---------------------------------------------------------------------------
+# streaming chain: bias + relu + residual add, ONE pass
+# ---------------------------------------------------------------------------
+
+def _stream_chain_kernel(x_ref, r_ref, b_ref, o_ref):
+    # the whole chain operates on the VMEM-resident row band; the
+    # bias/relu intermediate never exists outside the tile
+    o_ref[0] = jnp.maximum(x_ref[0] + b_ref[...], 0.0) + r_ref[0]
+
+
+def stream_chain(x, res, b, interpret=True):
+    """x, res: (N, H, W, C), b: (C,) -> relu(x + b) + res in one pass.
+
+    The single-pass form of a Simple (streaming) fusion group of
+    BiasAdd -> ReLU -> Add."""
+    n, h, w, c = x.shape
+    th = row_tile(h)
+    return pl.pallas_call(
+        _stream_chain_kernel,
+        grid=(n, h // th),
+        in_specs=[
+            pl.BlockSpec((1, th, w, c), lambda bi, bj: (bi, bj, 0, 0)),
+            pl.BlockSpec((1, th, w, c), lambda bi, bj: (bi, bj, 0, 0)),
+            pl.BlockSpec((c,), lambda bi, bj: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, th, w, c), lambda bi, bj: (bi, bj, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, h, w, c), jnp.float32),
+        interpret=interpret,
+    )(x, res, b)
+
+
+# ---------------------------------------------------------------------------
+# reduction chain: bias + relu + global average pool, ONE pass
+# ---------------------------------------------------------------------------
+
+def _stream_reduce_kernel(x_ref, b_ref, o_ref):
+    y = jnp.maximum(x_ref[0] + b_ref[...], 0.0)
+    o_ref[0] = jnp.mean(y, axis=(0, 1))
+
+
+def stream_reduce(x, b, interpret=True):
+    """x: (N, H, W, C), b: (C,) -> global average pool of relu(x + b),
+    shape (N, C), in one pass. The single-pass form of a reduction
+    group: the elementwise prefix is consumed by the reduction while
+    still in VMEM. Grid is (N,) — the spatial extent of one batch
+    element fits a block at catalog shapes."""
+    n, h, w, c = x.shape
+    return pl.pallas_call(
+        _stream_reduce_kernel,
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1, h, w, c), lambda bi: (bi, 0, 0, 0)),
+            pl.BlockSpec((c,), lambda bi: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, c), lambda bi: (bi, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, c), jnp.float32),
+        interpret=interpret,
+    )(x, b)

@@ -143,3 +143,14 @@ def fused_pair_s2(up_kind, x, w1, b1, w2, b2, relu1=True, relu2=True):
     lo = total // 2
     mid = jnp.pad(mid, ((0, 0), (lo, total - lo), (lo, total - lo), (0, 0)))
     return depthwise_bias_relu(mid, w2, b2, stride=2, relu=relu2)
+
+
+def stream_chain(x, res, b):
+    """Single-pass streaming chain: relu(x + b) + res (fused.py)."""
+    return bias_relu(x, b) + res
+
+
+def stream_reduce(x, b):
+    """Single-pass reduction chain: global average pool of relu(x + b),
+    (N, H, W, C) -> (N, C) (fused.py)."""
+    return jnp.mean(bias_relu(x, b), axis=(1, 2))

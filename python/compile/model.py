@@ -19,6 +19,7 @@ import jax.numpy as jnp
 
 from .kernels import attention as attnk
 from .kernels import conv as convk
+from .kernels import fused as fusk
 from .kernels import intensive as intk
 from .kernels import matmul as mmk
 
@@ -85,6 +86,40 @@ def prog_matmul(m, k, n, act=None):
     return ProgramSpec(f"mm_m{m}k{k}n{n}_{a}", fn,
                        (sds(m, k), sds(k, n), sds(n)),
                        {"kind": "mm", "flops": 2 * m * k * n})
+
+
+# ---------------------------------------------------------------------------
+# Single-pass streaming/reduction chain programs (kernel-emission taxonomy:
+# the fused variants rust's `run_group_chain` prefers when the catalog
+# carries them, with `biasrelu` as the per-op fallback stage).
+# ---------------------------------------------------------------------------
+
+def prog_bias_relu(n, h, w, c):
+    def fn(x, b):
+        return (fusk.bias_relu(x, b),)
+    return ProgramSpec(f"biasrelu_n{n}h{h}w{w}c{c}", fn,
+                       (sds(n, h, w, c), sds(c)),
+                       {"kind": "bias_relu", "flops": 2 * n * h * w * c})
+
+
+def prog_fused_stream(n, h, w, c):
+    """BiasAdd -> ReLU -> Add as ONE pass (streaming group)."""
+    def fn(x, res, b):
+        return (fusk.stream_chain(x, res, b),)
+    return ProgramSpec(f"fused_stream_n{n}h{h}w{w}c{c}", fn,
+                       (sds(n, h, w, c), sds(n, h, w, c), sds(c)),
+                       {"kind": "fused_stream",
+                        "flops": 3 * n * h * w * c})
+
+
+def prog_fused_sred(n, h, w, c):
+    """BiasAdd -> ReLU -> GlobalAvgPool as ONE pass (reduction group)."""
+    def fn(x, b):
+        return (fusk.stream_reduce(x, b),)
+    return ProgramSpec(f"fused_sred_n{n}h{h}w{w}c{c}", fn,
+                       (sds(n, h, w, c), sds(c)),
+                       {"kind": "fused_sred",
+                        "flops": 3 * n * h * w * c})
 
 
 # ---------------------------------------------------------------------------
@@ -228,6 +263,13 @@ def build_catalog() -> List[ProgramSpec]:
         cat.append(prog_pw(b, hw, hw, c, 2 * c))
         cat.append(prog_pw(b, hw, hw, 2 * c, c))
         cat.append(prog_dw3(b, hw, hw, 2 * c))
+
+    # --- single-pass streaming/reduction chains (+ per-op fallbacks) ---
+    for (h, c) in ((28, 16), (14, 32)):
+        cat.append(prog_fused_stream(1, h, h, c))
+        cat.append(prog_fused_sred(1, h, h, c))
+        cat.append(prog_bias_relu(1, h, h, c))
+        cat.append(prog_add(1, h, h, c))
 
     # --- stride-2 downsampling blocks (fused + unfused) ---
     cat.append(prog_fused_dw_s2("pw", 1, 28, 28, 16, 32))

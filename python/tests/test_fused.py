@@ -1,0 +1,81 @@
+# Single-pass fused chain kernels (kernels/fused.py) vs the pure-jnp
+# oracle, plus the semantic contract behind rust's run_group_chain: the
+# fused program must equal its per-op stage composition.
+
+import numpy as np
+import jax.numpy as jnp
+import pytest
+
+# the fixed-shape tests carry the correctness signal on their own; the
+# sweep below only runs where hypothesis is available
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+from compile.kernels import fused, ref
+
+RTOL = ATOL = 3e-5
+
+
+def rnd(rng, *shape):
+    return jnp.asarray(rng.standard_normal(shape, dtype=np.float32))
+
+
+def check(got, want):
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=RTOL, atol=ATOL)
+
+
+# --- fixed catalog shapes ---------------------------------------------------
+
+@pytest.mark.parametrize("n,h,w,c", [(1, 28, 28, 16), (1, 14, 14, 32),
+                                     (2, 8, 8, 8)])
+def test_bias_relu(n, h, w, c):
+    rng = np.random.default_rng(10)
+    x, b = rnd(rng, n, h, w, c), rnd(rng, c)
+    check(fused.bias_relu(x, b), ref.bias_relu(x, b))
+
+
+@pytest.mark.parametrize("n,h,w,c", [(1, 28, 28, 16), (1, 14, 14, 32),
+                                     (2, 8, 8, 8)])
+def test_stream_chain(n, h, w, c):
+    rng = np.random.default_rng(11)
+    x, res, b = rnd(rng, n, h, w, c), rnd(rng, n, h, w, c), rnd(rng, c)
+    check(fused.stream_chain(x, res, b), ref.stream_chain(x, res, b))
+
+
+@pytest.mark.parametrize("n,h,w,c", [(1, 28, 28, 16), (1, 14, 14, 32),
+                                     (2, 8, 8, 8)])
+def test_stream_reduce(n, h, w, c):
+    rng = np.random.default_rng(12)
+    x, b = rnd(rng, n, h, w, c), rnd(rng, c)
+    got = fused.stream_reduce(x, b)
+    assert got.shape == (n, c)
+    check(got, ref.stream_reduce(x, b))
+
+
+def test_fused_equals_per_op_stages():
+    # the contract run_group_chain relies on: one fused pass == the
+    # per-op stage composition it replaces
+    rng = np.random.default_rng(13)
+    x, res, b = rnd(rng, 1, 14, 14, 32), rnd(rng, 1, 14, 14, 32), rnd(rng, 32)
+    check(fused.stream_chain(x, res, b), fused.bias_relu(x, b) + res)
+    check(fused.stream_reduce(x, b),
+          jnp.mean(fused.bias_relu(x, b), axis=(1, 2)))
+
+
+# --- hypothesis shape sweep -------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    dims = st.integers(min_value=1, max_value=3)
+
+    @settings(max_examples=10, deadline=None)
+    @given(n=dims, h=st.integers(2, 10), w=st.integers(2, 10),
+           c=st.integers(1, 8))
+    def test_stream_chain_sweep(n, h, w, c):
+        rng = np.random.default_rng(n * 1000 + h * 100 + w * 10 + c)
+        x, res, b = (rnd(rng, n, h, w, c), rnd(rng, n, h, w, c),
+                     rnd(rng, c))
+        check(fused.stream_chain(x, res, b), ref.stream_chain(x, res, b))

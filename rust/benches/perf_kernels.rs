@@ -1,0 +1,282 @@
+//! L3 perf bench: fused micro-kernel execution (`ago::kernels` + the
+//! fused pricing switch). Three gates, all on the MODELED cost (the same
+//! analytical roofline the tuner optimizes, so they are deterministic):
+//!
+//! 1. **per-pattern traffic collapse** — a streaming-dominated chain
+//!    priced as ONE single-pass fused group vs one pass per op. The
+//!    exemplar fused-kernel measurements this models land at 1.04x-1.13x
+//!    end-to-end, so the streaming/reduction chains are gated >= 1.04x
+//!    (the modeled ratio is far higher — the chain stops paying a
+//!    store+reload per op boundary); `Stencil` must be untouched to the
+//!    bit (fusing passes does not change a compute-bound roofline).
+//! 2. **seed-zoo acceptance** — every seed model is compiled UNFUSED,
+//!    then its schedules are repriced under fused execution: never worse
+//!    on any model (pointwise dominance), strictly lower on >= 2 (the
+//!    issue's bar; in practice every model has single-pass groups), and
+//!    bit-equal on every group where fusion is not selected.
+//! 3. **probe-seeding** — `--probe-seed` (FullTune warm-started from the
+//!    probe winners) stays within 5% of the cold full tune on every seed
+//!    model. Seeding changes search trajectories, so exact equality is
+//!    not expected; the recorded ratios track it PR-over-PR.
+//!
+//! `--quick` shrinks the compile budgets ~4x for the CI smoke run and
+//! writes the same `BENCH_kernels.json` record.
+
+use ago::coordinator::{compile, CompileConfig};
+use ago::costmodel::{group_latency, group_latency_fused, schedule_latency,
+                     schedule_latency_fused};
+use ago::device::DeviceProfile;
+use ago::graph::{Graph, NodeId, OpKind, Shape};
+use ago::kernels::{classify_group, count_patterns, counts_line, Pattern};
+use ago::models::{build, InputShape, ModelId};
+use ago::tuner::schedule::{classify, FusionGroup, Layout, Schedule, Tile};
+use ago::util::json::{num, obj, s, Json};
+
+/// Pad source feeding a same-shape op chain; returns the chain's ids
+/// (the source stays outside every group, so the first grouped op pays a
+/// real external-input read).
+fn chain(kinds: &[OpKind]) -> (Graph, Vec<NodeId>) {
+    let mut g = Graph::new("chain");
+    let sh = Shape::nhwc(1, 28, 28, 64);
+    let src = g.add(OpKind::Pad, "src", sh.clone(), 0, &[]);
+    let mut prev = src;
+    let mut ops = Vec::new();
+    for (i, k) in kinds.iter().enumerate() {
+        let id = g.add(k.clone(), &format!("n{i}"), sh.clone(), 64, &[prev]);
+        ops.push(id);
+        prev = id;
+    }
+    (g, ops)
+}
+
+fn group(g: &Graph, ops: Vec<NodeId>) -> FusionGroup {
+    FusionGroup {
+        kind: classify(g, &ops, false),
+        ops,
+        tile: Tile { th: 4, tw: 28, tc: 16 },
+        vec: 8,
+        unroll: 4,
+        threads: 4,
+        layout: Layout::Nhwc,
+    }
+}
+
+/// (unfused per-op-pass latency, fused single-pass latency) for the
+/// whole chain as one group vs one group per op.
+fn fused_vs_per_op(g: &Graph, ops: &[NodeId], dev: &DeviceProfile)
+                   -> (f64, f64, Pattern) {
+    let whole = group(g, ops.to_vec());
+    let pat = classify_group(g, &whole);
+    let fused = Schedule { groups: vec![whole] };
+    let per_op = Schedule {
+        groups: ops.iter().map(|&v| group(g, vec![v])).collect(),
+    };
+    (
+        schedule_latency(g, &per_op, dev),
+        schedule_latency_fused(g, &fused, dev, true),
+        pat,
+    )
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let dev = DeviceProfile::kirin990();
+
+    // --- per-pattern modeled traffic-collapse ratios --------------------
+    let dw = OpKind::Depthwise { kh: 3, kw: 3, stride: 1 };
+    let cases: [(&str, Vec<OpKind>, Pattern); 4] = [
+        ("streaming",
+         vec![OpKind::BiasAdd, OpKind::ReLU, OpKind::Add,
+              OpKind::BiasAdd, OpKind::ReLU, OpKind::Add],
+         Pattern::Streaming),
+        ("reduction",
+         vec![OpKind::BiasAdd, OpKind::ReLU, OpKind::Softmax, OpKind::Add],
+         Pattern::Reduction),
+        ("pipeline",
+         vec![OpKind::Pointwise, OpKind::BiasAdd, OpKind::ReLU],
+         Pattern::Pipeline),
+        ("stencil", vec![dw.clone()], Pattern::Stencil),
+    ];
+    let mut ratio_rows: Vec<(&str, Json)> = Vec::new();
+    let mut ratios = std::collections::BTreeMap::new();
+    for (name, kinds, want) in &cases {
+        let (g, ops) = chain(kinds);
+        let (per_op, fused, pat) = fused_vs_per_op(&g, &ops, &dev);
+        assert_eq!(pat, *want, "{name}: classified {pat:?}");
+        let ratio = per_op / fused;
+        println!(
+            "{name:>9}: per-op {:.1} us, fused {:.1} us -> {ratio:.2}x",
+            per_op * 1e6,
+            fused * 1e6
+        );
+        ratio_rows.push((*name, num(ratio)));
+        ratios.insert(*name, ratio);
+    }
+    // the issue's gate, anchored to the exemplar's measured 1.04x floor:
+    // single-pass patterns on streaming-dominated chains must collapse
+    // real modeled traffic, not round to noise
+    assert!(
+        ratios["streaming"] >= 1.04,
+        "streaming fused ratio {} < 1.04x",
+        ratios["streaming"]
+    );
+    assert!(
+        ratios["reduction"] >= 1.04,
+        "reduction fused ratio {} < 1.04x",
+        ratios["reduction"]
+    );
+    assert!(
+        ratios["pipeline"] > 1.0,
+        "pipeline fusion gained nothing: {}",
+        ratios["pipeline"]
+    );
+    // stencil: a bare complex op is the same single pass either way
+    {
+        let (g, ops) = chain(std::slice::from_ref(&dw));
+        let grp = group(&g, ops);
+        assert_eq!(
+            group_latency_fused(&g, &grp, &dev, true).to_bits(),
+            group_latency(&g, &grp, &dev).to_bits(),
+            "stencil pricing moved under the fused switch"
+        );
+    }
+
+    // --- seed-zoo acceptance: reprice every model's unfused plan -------
+    let model_budget = if quick { 500 } else { 2000 };
+    let mut strict_wins = 0usize;
+    let mut model_rows: Vec<(&str, Json)> = Vec::new();
+    for m in ModelId::all() {
+        let g = build(m, InputShape::Small);
+        let cfg = CompileConfig {
+            budget: model_budget,
+            ..CompileConfig::new(dev.clone())
+        };
+        let out = compile(&g, &cfg);
+        let mut base = 0.0f64;
+        let mut fused = 0.0f64;
+        for sch in &out.schedules {
+            for grp in &sch.groups {
+                let l = group_latency(&g, grp, &dev);
+                let f = group_latency_fused(&g, grp, &dev, true);
+                // dominance per group; bit-equality where fusion is not
+                // selected (Stencil keeps the per-op-pass model)
+                assert!(f <= l, "{}: fused group {f} > per-op {l}", m.name());
+                if !classify_group(&g, grp).single_pass() {
+                    assert_eq!(
+                        f.to_bits(),
+                        l.to_bits(),
+                        "{}: stencil group repriced",
+                        m.name()
+                    );
+                }
+            }
+            base += schedule_latency_fused(&g, sch, &dev, false);
+            fused += schedule_latency_fused(&g, sch, &dev, true);
+        }
+        assert!(
+            fused <= base,
+            "{}: fused repricing worse ({fused} vs {base})",
+            m.name()
+        );
+        if fused < base {
+            strict_wins += 1;
+        }
+        println!(
+            "{:>5}/small: per-op {:.3} ms -> fused {:.3} ms ({:.2}x)",
+            m.name(),
+            base * 1e3,
+            fused * 1e3,
+            base / fused
+        );
+        model_rows.push((
+            m.name(),
+            obj(vec![
+                ("per_op_ms", num(base * 1e3)),
+                ("fused_ms", num(fused * 1e3)),
+                ("speedup", num(base / fused)),
+            ]),
+        ));
+    }
+    assert!(
+        strict_wins >= 2,
+        "fused pricing strictly improved only {strict_wins}/6 models"
+    );
+
+    // --- fused compile: pattern census on MBN ---------------------------
+    let mbn = build(ModelId::Mbn, InputShape::Small);
+    let fused_cfg = CompileConfig {
+        budget: model_budget,
+        fused: true,
+        ..CompileConfig::new(dev.clone())
+    };
+    let fout = compile(&mbn, &fused_cfg);
+    let counts = count_patterns(&mbn, &fout.schedules);
+    let n_groups: usize =
+        fout.schedules.iter().map(|s| s.groups.len()).sum();
+    assert_eq!(counts.iter().sum::<usize>(), n_groups);
+    assert!(
+        fout.patterns.is_some(),
+        "fused compile must tag subgraph patterns"
+    );
+    println!("MBN/small fused compile: {}", counts_line(&counts));
+
+    // --- probe-informed full tune vs cold, whole seed zoo ---------------
+    let probe_budget = if quick { 400 } else { 1600 };
+    let mut seed_rows: Vec<(&str, Json)> = Vec::new();
+    for m in ModelId::all() {
+        let g = build(m, InputShape::Small);
+        let base_cfg = CompileConfig {
+            budget: probe_budget,
+            partition_candidates: 4,
+            ..CompileConfig::new(dev.clone())
+        };
+        let cold = compile(&g, &base_cfg);
+        let seeded_cfg = CompileConfig { probe_seed: true, ..base_cfg };
+        let seeded = compile(&g, &seeded_cfg);
+        let ratio = seeded.total_latency / cold.total_latency;
+        println!(
+            "{:>5}/small probe-seed: cold {:.3} ms, seeded {:.3} ms \
+             ({ratio:.3}x)",
+            m.name(),
+            cold.latency_ms(),
+            seeded.latency_ms()
+        );
+        // seeding reshuffles the FullTune trajectory, so demand
+        // near-never-worse rather than bit-equality; the ratio is
+        // deterministic and recorded below for PR-over-PR tracking
+        assert!(
+            ratio <= 1.05,
+            "{}: probe-seeded compile {ratio:.3}x worse than cold",
+            m.name()
+        );
+        seed_rows.push((m.name(), num(ratio)));
+    }
+
+    // perf trajectory record
+    let record = obj(vec![
+        ("bench", s("perf_kernels")),
+        ("quick", num(if quick { 1.0 } else { 0.0 })),
+        ("model_budget", num(model_budget as f64)),
+        ("probe_budget", num(probe_budget as f64)),
+        // modeled single-pass collapse, per pattern (gate: streaming and
+        // reduction >= 1.04x, stencil identically 1.0)
+        ("traffic_ratio", obj(ratio_rows)),
+        // unfused seed-zoo plans repriced under fused execution
+        ("models", obj(model_rows)),
+        ("fused_strict_wins", num(strict_wins as f64)),
+        // per-pattern group census of a fused MBN compile
+        (
+            "mbn_patterns",
+            obj(ago::kernels::ALL
+                .iter()
+                .zip(&counts)
+                .map(|(p, &c)| (p.name(), num(c as f64)))
+                .collect()),
+        ),
+        // probe-seeded FullTune vs cold (seeded/cold latency ratio)
+        ("probe_seed_ratio", obj(seed_rows)),
+    ]);
+    std::fs::write("BENCH_kernels.json", record.pretty())
+        .expect("write BENCH_kernels.json");
+    println!("wrote BENCH_kernels.json");
+}

@@ -124,6 +124,21 @@ pub struct CompileConfig {
     /// `Frontend::Relay` (the sweep is only defined for the weighted
     /// clustering frontend).
     pub partition_candidates: usize,
+    /// Fused micro-kernel execution (`ago compile --fused`): price
+    /// schedules under single-pass fused group execution
+    /// ([`crate::costmodel::group_latency_fused`]) so the search seeks
+    /// pass-collapsing fusions, and tag every subgraph with its compute
+    /// pattern in the plan. `false` (the default) is the historical
+    /// per-op-pass model bit for bit — plans carry no `patterns` field
+    /// and goldens keep their exact bytes.
+    pub fused: bool,
+    /// Probe-informed full tune (`ago compile --probe-seed`): with
+    /// `partition_candidates > 1`, seed the winner's cold FullTune
+    /// classes with their probe-winning schedules instead of restarting
+    /// the evolutionary search from scratch. Off by default: seeding
+    /// changes search trajectories, so plans differ from (and are gated
+    /// never-worse-than, in `benches/perf_kernels`) the cold path.
+    pub probe_seed: bool,
 }
 
 impl CompileConfig {
@@ -137,6 +152,8 @@ impl CompileConfig {
             workers: 0,
             warm_start: true,
             partition_candidates: 1,
+            fused: false,
+            probe_seed: false,
         }
     }
 }
@@ -173,6 +190,12 @@ pub struct CompiledModel {
     /// probed more than one candidate (serialized into the plan JSON;
     /// absent for single-shot compiles so their plan bytes are unchanged).
     pub partition_search: Option<PartitionSearch>,
+    /// Per-subgraph compute pattern ([`crate::kernels::classify_ops`]),
+    /// indexed by subgraph id. `Some` iff the compile priced fused
+    /// execution ([`CompileConfig::fused`]) — serialized as the plan's
+    /// `patterns` field; absent for unfused compiles so their plan bytes
+    /// are unchanged.
+    pub patterns: Option<Vec<crate::kernels::Pattern>>,
 }
 
 impl CompiledModel {
@@ -307,28 +330,31 @@ pub fn compile_with_db(
     // AND the winner's full tune; each task keeps its own MemoCache —
     // groups never cross subgraphs, so sharing wider would only add
     // merge traffic
-    let ctx = PricingContext::new(g, &cfg.device);
+    let ctx = PricingContext::new_fused(g, &cfg.device, cfg.fused);
 
     // ---- ProbeTune + Select stages (skipped entirely for K = 1) ----
-    let (chosen, partition_search, winner_dedup) = if cand_stages.len() > 1
-    {
-        let mut probe = probe_stage(g, cfg, &cand_stages, &ctx, &pool);
-        let chosen = select_stage(&probe.scores);
-        let wd = probe.dedups.swap_remove(chosen);
-        let search = PartitionSearch {
-            n_candidates: cand_stages.len(),
-            chosen,
-            chosen_label: cands[chosen].label.to_string(),
-            chosen_config: cands[chosen].config,
-            labels: cands.iter().map(|c| c.label.to_string()).collect(),
-            probe_scores: probe.scores,
-            probe_evals: probe.evals,
-            probe_tasks: probe.tasks,
+    let (chosen, partition_search, winner_dedup, probe_seeds) =
+        if cand_stages.len() > 1 {
+            let mut probe = probe_stage(g, cfg, &cand_stages, &ctx, &pool);
+            let chosen = select_stage(&probe.scores);
+            let wd = probe.dedups.swap_remove(chosen);
+            let search = PartitionSearch {
+                n_candidates: cand_stages.len(),
+                chosen,
+                chosen_label: cands[chosen].label.to_string(),
+                chosen_config: cands[chosen].config,
+                labels: cands.iter().map(|c| c.label.to_string()).collect(),
+                probe_scores: probe.scores,
+                probe_evals: probe.evals,
+                probe_tasks: probe.tasks,
+            };
+            // probe-informed full tune: the winner's cold classes resume
+            // from their probe-winning schedules (opt-in)
+            let seeds = cfg.probe_seed.then_some(probe.seeds);
+            (chosen, Some(search), Some(wd), seeds)
+        } else {
+            (0, None, None, None)
         };
-        (chosen, Some(search), Some(wd))
-    } else {
-        (0, None, None)
-    };
     let ps = cand_stages.swap_remove(chosen);
 
     // ---- Dedup (full budget) + FullTune + Emit ----
@@ -340,7 +366,8 @@ pub fn compile_with_db(
         None => dedup_stage(g, &ps, cfg.budget),
     };
     let t_tuning = Instant::now();
-    let ts = tune_stage(g, cfg, db, &ps, &ds, &ctx, &pool);
+    let ts =
+        tune_stage(g, cfg, db, &ps, &ds, probe_seeds.as_ref(), &ctx, &pool);
     emit_stage(g, cfg, db, ps, &ds, ts, t_tuning, partition_search)
 }
 
@@ -677,6 +704,56 @@ mod tests {
         let m = compile(&g, &cfg);
         assert!(m.partition_search.is_none());
         assert!(m.partition.complex_counts(&g).iter().all(|&c| c <= 1));
+    }
+
+    #[test]
+    fn fused_compile_tags_patterns_and_default_does_not() {
+        let g = build(ModelId::Sqn, InputShape::Small);
+        let base = quick_cfg(DeviceProfile::kirin990(), 500);
+        let plain = compile(&g, &base);
+        assert!(plain.patterns.is_none());
+        let fused_cfg = CompileConfig { fused: true, ..base };
+        let m = compile(&g, &fused_cfg);
+        let pats = m.patterns.as_ref().expect("fused compile tags patterns");
+        assert_eq!(pats.len(), m.partition.n_groups);
+        // plan JSON carries the field iff the compile was fused
+        let pj = plan::to_json(&m, "sqn", "kirin990").pretty();
+        assert!(pj.contains("\"patterns\""));
+        let qj = plan::to_json(&plain, "sqn", "kirin990").pretty();
+        assert!(!qj.contains("patterns"));
+        // fused pricing is deterministic like everything else
+        let again = compile(&g, &fused_cfg);
+        assert_eq!(again.total_latency, m.total_latency);
+        assert_eq!(again.schedules, m.schedules);
+        assert_eq!(again.patterns, m.patterns);
+    }
+
+    #[test]
+    fn probe_seeded_compile_is_deterministic_and_keeps_provenance() {
+        let g = build(ModelId::Sqn, InputShape::Small);
+        let cfg = CompileConfig {
+            partition_candidates: 4,
+            probe_seed: true,
+            ..quick_cfg(DeviceProfile::kirin990(), 600)
+        };
+        let a = compile(&g, &cfg);
+        assert!(a.partition_search.is_some());
+        assert!(a.total_latency > 0.0);
+        let b = compile(&g, &cfg);
+        assert_eq!(a.total_latency, b.total_latency);
+        assert_eq!(a.schedules, b.schedules);
+        // the flag is inert without a probe stage (K = 1): identical to
+        // the plain single-shot compile, bit for bit
+        let single = CompileConfig {
+            partition_candidates: 1,
+            probe_seed: true,
+            ..quick_cfg(DeviceProfile::kirin990(), 600)
+        };
+        let plain = CompileConfig { probe_seed: false, ..single.clone() };
+        let s = compile(&g, &single);
+        let p = compile(&g, &plain);
+        assert_eq!(s.total_latency, p.total_latency);
+        assert_eq!(s.schedules, p.schedules);
     }
 
     #[test]

@@ -7,6 +7,7 @@
 use anyhow::{anyhow, Result};
 
 use crate::graph::Partition;
+use crate::kernels::Pattern;
 use crate::tuner::schedule::{FusionGroup, GroupKind, Layout, Schedule, Tile};
 use crate::util::json::{arr, num, obj, s, Json};
 
@@ -161,6 +162,16 @@ pub fn to_json(m: &CompiledModel, model_name: &str, device: &str) -> Json {
             ]),
         ));
     }
+    // per-subgraph compute patterns: only present for fused compiles
+    // (`ago compile --fused`), so unfused plans — the default, and every
+    // plan compiled before the kernels layer landed — keep their exact
+    // bytes
+    if let Some(pats) = &m.patterns {
+        fields.push((
+            "patterns",
+            arr(pats.iter().map(|p| s(p.name())).collect()),
+        ));
+    }
     obj(fields)
 }
 
@@ -197,6 +208,12 @@ pub fn loaded_to_json(p: &LoadedPlan) -> Json {
         // load → re-serialize round trip is byte-identical
         fields.push(("partition_search", se.clone()));
     }
+    if let Some(pats) = &p.patterns {
+        fields.push((
+            "patterns",
+            arr(pats.iter().map(|p| s(p.name())).collect()),
+        ));
+    }
     obj(fields)
 }
 
@@ -222,6 +239,11 @@ pub struct LoadedPlan {
     /// too. `ClusterConfig::from_json` can decode the `chosen_config`
     /// field when a reader wants the winning Td back.
     pub partition_search: Option<Json>,
+    /// Per-subgraph compute pattern tags, present iff the plan came from
+    /// a fused compile (`--fused`). The serving layer uses them to split
+    /// weight-vs-activation traffic per pattern in `SimProfile`; plans
+    /// without the field serve through the legacy arithmetic unchanged.
+    pub patterns: Option<Vec<Pattern>>,
 }
 
 pub fn from_json(j: &Json) -> Result<LoadedPlan> {
@@ -272,6 +294,31 @@ pub fn from_json(j: &Json) -> Result<LoadedPlan> {
             partition.n_groups
         ));
     }
+    let patterns = match j.get("patterns") {
+        None => None,
+        Some(p) => {
+            let names = p
+                .as_arr()
+                .ok_or_else(|| anyhow!("patterns must be an array"))?;
+            if names.len() != partition.n_groups {
+                return Err(anyhow!(
+                    "plan has {} patterns for {} subgraphs",
+                    names.len(),
+                    partition.n_groups
+                ));
+            }
+            Some(
+                names
+                    .iter()
+                    .map(|v| {
+                        v.as_str()
+                            .and_then(Pattern::parse)
+                            .ok_or_else(|| anyhow!("unknown pattern {v:?}"))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            )
+        }
+    };
     Ok(LoadedPlan {
         model: j
             .get("model")
@@ -291,6 +338,7 @@ pub fn from_json(j: &Json) -> Result<LoadedPlan> {
             .and_then(|l| l.as_f64())
             .unwrap_or(0.0),
         partition_search: j.get("partition_search").cloned(),
+        patterns,
     })
 }
 
@@ -361,6 +409,77 @@ mod tests {
         for (a, b) in re.subgraph_latency.iter().zip(&back.subgraph_latency) {
             assert_eq!(a.to_bits(), b.to_bits());
         }
+    }
+
+    #[test]
+    fn fused_plan_roundtrips_byte_exactly_and_unfused_has_no_patterns() {
+        let g = build(ModelId::Sqn, InputShape::Small);
+        let base = CompileConfig {
+            budget: 300,
+            workers: 2,
+            ..CompileConfig::new(DeviceProfile::kirin990())
+        };
+        let fused = compile(&g, &CompileConfig { fused: true, ..base.clone() });
+        let j = to_json(&fused, "sqn", "kirin990");
+        let text = j.pretty();
+        assert!(text.contains("\"patterns\""));
+        let back = from_json(&Json::parse(&text).unwrap()).unwrap();
+        let pats = back.patterns.as_ref().expect("patterns load back");
+        assert_eq!(pats.len(), back.partition.n_groups);
+        assert_eq!(pats, fused.patterns.as_ref().unwrap());
+        // loaded_to_json drops compile-only provenance fields, so the
+        // byte-exactness contract is load → serialize → load → serialize
+        // reaching a fixed point on the first serialization
+        let once = loaded_to_json(&back).pretty();
+        assert!(once.contains("\"patterns\""));
+        let twice =
+            loaded_to_json(&from_json(&Json::parse(&once).unwrap()).unwrap())
+                .pretty();
+        assert_eq!(once, twice, "fused plan round trip not byte-stable");
+        // an unfused compile of the same model carries no patterns field
+        let plain = compile(&g, &base);
+        let pj = to_json(&plain, "sqn", "kirin990").pretty();
+        assert!(!pj.contains("patterns"));
+        assert!(from_json(&Json::parse(&pj).unwrap())
+            .unwrap()
+            .patterns
+            .is_none());
+    }
+
+    #[test]
+    fn rejects_bad_patterns() {
+        let sched = r#"[[{"ops": [0], "kind": "simple", "tile": [1, 1, 1]}]]"#;
+        // wrong length
+        assert!(from_json(
+            &Json::parse(&format!(
+                r#"{{"assign": [0], "schedules": {sched},
+                    "subgraph_latency_s": [0.001],
+                    "patterns": ["streaming", "stencil"]}}"#
+            ))
+            .unwrap()
+        )
+        .is_err());
+        // unknown pattern name
+        assert!(from_json(
+            &Json::parse(&format!(
+                r#"{{"assign": [0], "schedules": {sched},
+                    "subgraph_latency_s": [0.001],
+                    "patterns": ["warp"]}}"#
+            ))
+            .unwrap()
+        )
+        .is_err());
+        // a valid tag parses
+        let ok = from_json(
+            &Json::parse(&format!(
+                r#"{{"assign": [0], "schedules": {sched},
+                    "subgraph_latency_s": [0.001],
+                    "patterns": ["reduction"]}}"#
+            ))
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(ok.patterns, Some(vec![Pattern::Reduction]));
     }
 
     #[test]

@@ -265,6 +265,14 @@ pub struct ProbeStage {
     /// winner's at full budget via [`DedupStage::with_budget`] rather
     /// than re-verifying every isomorphism.
     pub dedups: Vec<DedupStage>,
+    /// Probe-winning schedule per unique task, in CANONICAL-index space
+    /// keyed by class fingerprint with the class op count (the same
+    /// representation [`DbEntry`] uses, so the FullTune stage applies
+    /// them through the identical remap-and-revalidate path).
+    /// Fingerprints observed on more than one verified task are omitted
+    /// — a collided key could seed the wrong class. Consumed by
+    /// `--probe-seed` ([`CompileConfig::probe_seed`]).
+    pub seeds: HashMap<u64, (Schedule, usize)>,
 }
 
 /// Probe-tune all candidates. Classes are registered globally: a class
@@ -337,7 +345,7 @@ pub fn probe_stage(
         .iter()
         .map(|t| (t.fp, t.budget, cands[t.cand].views[t.rep].clone()))
         .collect();
-    let tuned: Vec<(f64, usize)> =
+    let tuned: Vec<(f64, usize, Schedule)> =
         pool.scoped_map(items, |(fp, budget, view)| {
             let search = SearchConfig::task(
                 budget,
@@ -353,7 +361,7 @@ pub fn probe_stage(
             let r = tune_with_reformer_parallel(
                 g, &view, &rcfg, ctx, &mut cache, pool,
             );
-            (r.best_latency, r.evals)
+            (r.best_latency, r.evals, r.best)
         });
     let evals = tuned.iter().map(|t| t.1).sum();
     let scores = refs
@@ -366,7 +374,22 @@ pub fn probe_stage(
                     * 1e-6
         })
         .collect();
-    ProbeStage { scores, evals, tasks: tasks.len(), dedups }
+    // Canonicalize each task's probe winner for `--probe-seed` reuse.
+    // A fingerprint carried by >1 verified tasks is a hash collision
+    // between non-isomorphic structures — drop it (same policy as the
+    // TuningDb's `ambiguous` set).
+    let mut seeds: HashMap<u64, (Schedule, usize)> = HashMap::new();
+    for (t, (_, _, best)) in tasks.iter().zip(&tuned) {
+        if by_fp.get(&t.fp).map(|v| v.len()) != Some(1) {
+            continue;
+        }
+        let cf = cands[t.cand].canon[t.rep].as_ref().unwrap();
+        let canonical = best
+            .remap(&ids_to_canon(cf))
+            .expect("probe schedule ops are subgraph members");
+        seeds.insert(t.fp, (canonical, cf.order.len()));
+    }
+    ProbeStage { scores, evals, tasks: tasks.len(), dedups, seeds }
 }
 
 // ---------------------------------------------------------------------------
@@ -455,12 +478,21 @@ pub struct TuneStage {
 /// class, then fan the cold/warm searches out over the shared pool
 /// (two-level scheduling — the per-generation batches of every class
 /// task run on the SAME pool via nested `scoped_map`).
+///
+/// `probe_seeds` (from [`ProbeStage::seeds`], `Some` only under
+/// `--probe-seed` with K > 1) upgrades classes that would tune COLD to
+/// warm starts from their probe-winning schedules: the probe already
+/// spent evaluations on this exact structure, so the full tune resumes
+/// from its winner instead of a random population. Db entries still
+/// outrank probe seeds (a full-budget winner beats a probe winner), and
+/// ambiguous fingerprints stay cold as always.
 pub fn tune_stage(
     g: &Graph,
     cfg: &CompileConfig,
     db: &TuningDb,
     ps: &PartitionStage,
     ds: &DedupStage,
+    probe_seeds: Option<&HashMap<u64, (Schedule, usize)>>,
     ctx: &PricingContext,
     pool: &ThreadPool,
 ) -> TuneStage {
@@ -472,19 +504,30 @@ pub fn tune_stage(
         .map(|(ci, cl)| {
             let cf = ps.canon[cl.rep].as_ref().unwrap();
             let to_rep = canon_to_ids(cf);
-            let remap_entry = |e: &DbEntry| -> Option<Schedule> {
-                if e.n_ops != cf.order.len() {
+            let remap_canonical = |s: &Schedule, n_ops: usize| {
+                if n_ops != cf.order.len() {
                     return None; // fingerprint collision across sizes
                 }
-                let mut s = e.schedule.remap(&to_rep)?;
+                let mut s = s.remap(&to_rep)?;
                 s.revalidate_legality(g);
                 Some(s)
             };
+            let remap_entry = |e: &DbEntry| -> Option<Schedule> {
+                remap_canonical(&e.schedule, e.n_ops)
+            };
+            let probe_seed = || {
+                probe_seeds
+                    .and_then(|m| m.get(&cf.fingerprint))
+                    .and_then(|(s, n_ops)| remap_canonical(s, *n_ops))
+            };
             let vtag = cfg.variant.tag();
-            let mode = if !cfg.warm_start
-                || ds.ambiguous.contains(&cf.fingerprint)
-            {
+            let mode = if ds.ambiguous.contains(&cf.fingerprint) {
                 ClassMode::Cold
+            } else if !cfg.warm_start {
+                match probe_seed() {
+                    Some(s) => ClassMode::Warm(s),
+                    None => ClassMode::Cold,
+                }
             } else if let Some(s) = db
                 .lookup(cfg.device.name, vtag, cf.fingerprint)
                 .and_then(remap_entry)
@@ -494,6 +537,8 @@ pub fn tune_stage(
             } else if let Some(s) =
                 db.lookup_any(vtag, cf.fingerprint).and_then(remap_entry)
             {
+                ClassMode::Warm(s)
+            } else if let Some(s) = probe_seed() {
                 ClassMode::Warm(s)
             } else {
                 ClassMode::Cold
@@ -577,8 +622,10 @@ pub fn emit_stage(
     let mut total_evals = 0;
     let mut stats = EvalStats::default();
     let mut tuned_tasks = 0usize;
-    // one shared evaluator prices all remapped member schedules
-    let mut member_eval = MemoEvaluator::new(g, &cfg.device);
+    // one shared evaluator prices all remapped member schedules — under
+    // the same pricing mode the class tunes used, so member latencies
+    // are comparable to their class winners' prices
+    let mut member_eval = MemoEvaluator::new_fused(g, &cfg.device, cfg.fused);
     for r in ts.results {
         let cl = &ds.classes[r.class_idx];
         let cf_rep = ps.canon[cl.rep].as_ref().unwrap();
@@ -631,6 +678,16 @@ pub fn emit_stage(
     let dispatch =
         ps.partition.n_groups as f64 * cfg.device.dispatch_us * 1e-6;
     let total_latency = lats.iter().sum::<f64>() + dispatch;
+    // fused compiles tag every subgraph with its compute pattern (the
+    // coarse op-inventory classification — plan consumers like the
+    // serving SimProfile have no schedule in hand); unfused compiles
+    // carry None so their plan bytes are unchanged
+    let patterns = cfg.fused.then(|| {
+        ps.views
+            .iter()
+            .map(|v| crate::kernels::classify_ops(g, &v.order))
+            .collect()
+    });
     CompiledModel {
         partition: ps.partition,
         schedules,
@@ -649,6 +706,7 @@ pub fn emit_stage(
         },
         report: ps.report,
         partition_search,
+        patterns,
     }
 }
 

@@ -14,8 +14,9 @@
 //!   worker (or batch chunk) owns a shard; after a generation the shards
 //!   merge into a [`MemoCache`] in submission order. The merge is
 //!   deterministic in every way that matters: a group's price is a pure
-//!   function of (graph, device, group), so two shards can only ever
-//!   disagree on WHICH thread computed a price, never on its bits. Hit
+//!   function of (graph, device, group, fused flag), so two shards can
+//!   only ever disagree on WHICH thread computed a price, never on its
+//!   bits. Hit
 //!   counts therefore vary with worker count; prices never do (pinned by
 //!   `tests/search_parallel_props.rs`).
 //!
@@ -45,7 +46,7 @@ use crate::device::DeviceProfile;
 use crate::graph::Graph;
 use crate::tuner::schedule::{FusionGroup, Layout, Schedule};
 
-use super::{group_latency, schedule_latency};
+use super::{group_latency_fused, schedule_latency_fused};
 
 /// Canonical identity of a fusion group for memoization: everything
 /// `group_latency` reads — ops, kind, tile, knobs (vec/unroll/threads),
@@ -103,25 +104,36 @@ pub trait CostEvaluator {
 pub struct DirectEvaluator<'a> {
     g: &'a Graph,
     dev: &'a DeviceProfile,
+    fused: bool,
     stats: EvalStats,
 }
 
 impl<'a> DirectEvaluator<'a> {
     pub fn new(g: &'a Graph, dev: &'a DeviceProfile) -> DirectEvaluator<'a> {
-        DirectEvaluator { g, dev, stats: EvalStats::default() }
+        DirectEvaluator::new_fused(g, dev, false)
+    }
+
+    /// Reference path under the fused-execution pricing switch
+    /// ([`super::group_latency_fused`]); `fused = false` is [`Self::new`].
+    pub fn new_fused(
+        g: &'a Graph,
+        dev: &'a DeviceProfile,
+        fused: bool,
+    ) -> DirectEvaluator<'a> {
+        DirectEvaluator { g, dev, fused, stats: EvalStats::default() }
     }
 }
 
 impl CostEvaluator for DirectEvaluator<'_> {
     fn evaluate_group(&mut self, grp: &FusionGroup) -> f64 {
         self.stats.group_evals += 1;
-        group_latency(self.g, grp, self.dev)
+        group_latency_fused(self.g, grp, self.dev, self.fused)
     }
 
     fn evaluate_schedule(&mut self, s: &Schedule) -> f64 {
         self.stats.schedule_evals += 1;
         self.stats.group_evals += s.groups.len() as u64;
-        schedule_latency(self.g, s, self.dev)
+        schedule_latency_fused(self.g, s, self.dev, self.fused)
     }
 
     fn stats(&self) -> EvalStats {
@@ -129,12 +141,17 @@ impl CostEvaluator for DirectEvaluator<'_> {
     }
 }
 
-/// The immutable half of memoized pricing: graph + device bindings and
-/// per-node conversion costs, computed once. `Sync` — share one context
-/// across any number of pricing workers.
+/// The immutable half of memoized pricing: graph + device bindings, the
+/// fused-execution pricing switch, and per-node conversion costs
+/// computed once. `Sync` — share one context across any number of
+/// pricing workers. The fused flag living HERE (not on any shard) is
+/// what makes fused-aware tuning worker-count independent for free:
+/// every shard prices through the same immutable context, so no thread
+/// can ever see a different pricing mode.
 pub struct PricingContext<'a> {
     g: &'a Graph,
     dev: &'a DeviceProfile,
+    fused: bool,
     /// Seconds to transpose node v's output once: 2 * bytes / bandwidth —
     /// exactly the expression `schedule_latency` evaluates inline.
     conv_cost: Vec<f64>,
@@ -142,13 +159,29 @@ pub struct PricingContext<'a> {
 
 impl<'a> PricingContext<'a> {
     pub fn new(g: &'a Graph, dev: &'a DeviceProfile) -> PricingContext<'a> {
+        PricingContext::new_fused(g, dev, false)
+    }
+
+    /// [`Self::new`] with the fused-execution pricing switch
+    /// ([`super::group_latency_fused`]); `fused = false` is the legacy
+    /// model bit for bit.
+    pub fn new_fused(
+        g: &'a Graph,
+        dev: &'a DeviceProfile,
+        fused: bool,
+    ) -> PricingContext<'a> {
         let conv_cost = (0..g.len())
             .map(|v| {
                 let bytes = g.node(v).out_shape.bytes();
                 2.0 * bytes as f64 / dev.bandwidth_for(bytes).max(1.0)
             })
             .collect();
-        PricingContext { g, dev, conv_cost }
+        PricingContext { g, dev, fused, conv_cost }
+    }
+
+    /// Whether this context prices under fused single-pass execution.
+    pub fn fused(&self) -> bool {
+        self.fused
     }
 
     pub fn graph(&self) -> &'a Graph {
@@ -189,7 +222,7 @@ impl<'a> PricingContext<'a> {
             return lat;
         }
         shard.stats.misses += 1;
-        let lat = group_latency(self.g, grp, self.dev);
+        let lat = group_latency_fused(self.g, grp, self.dev, self.fused);
         shard.fresh.insert(grp.clone(), lat);
         lat
     }
@@ -314,7 +347,16 @@ pub struct MemoEvaluator<'a> {
 
 impl<'a> MemoEvaluator<'a> {
     pub fn new(g: &'a Graph, dev: &'a DeviceProfile) -> MemoEvaluator<'a> {
-        let ctx = PricingContext::new(g, dev);
+        MemoEvaluator::new_fused(g, dev, false)
+    }
+
+    /// [`Self::new`] with the fused-execution pricing switch.
+    pub fn new_fused(
+        g: &'a Graph,
+        dev: &'a DeviceProfile,
+        fused: bool,
+    ) -> MemoEvaluator<'a> {
+        let ctx = PricingContext::new_fused(g, dev, fused);
         let shard = ctx.new_shard();
         MemoEvaluator { ctx, shard }
     }
@@ -342,6 +384,7 @@ impl CostEvaluator for MemoEvaluator<'_> {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::costmodel::schedule_latency;
     use crate::models::{build, InputShape, ModelId};
     use crate::partition::{cluster, ClusterConfig};
     use crate::tuner::schedule::SubgraphView;
@@ -376,6 +419,32 @@ mod tests {
             let st = memo.stats();
             assert!(st.hits > 0, "re-evaluation must hit the cache");
             assert!(st.misses > 0);
+        }
+    }
+
+    #[test]
+    fn fused_context_agrees_with_fused_direct_and_dominates() {
+        use crate::costmodel::schedule_latency_fused;
+        let g = build(ModelId::Mbn, InputShape::Small);
+        let dev = DeviceProfile::kirin990();
+        let p = cluster(&g, ClusterConfig::adaptive(&g));
+        let views = SubgraphView::all(&g, &p);
+        let ctx = PricingContext::new_fused(&g, &dev, true);
+        assert!(ctx.fused());
+        let mut shard = ctx.new_shard();
+        let mut direct = DirectEvaluator::new_fused(&g, &dev, true);
+        let mut rng = Rng::new(0xF0);
+        for view in views.iter().filter(|v| !v.is_empty()) {
+            for _ in 0..10 {
+                let s = random_schedule(&g, view, &mut rng, true);
+                let raw = schedule_latency_fused(&g, &s, &dev, true);
+                let via_ctx = ctx.price_schedule(&s, None, &mut shard);
+                let via_direct = direct.evaluate_schedule(&s);
+                assert!(raw == via_ctx, "{raw} != {via_ctx}");
+                assert!(raw == via_direct, "{raw} != {via_direct}");
+                // fused pricing never exceeds the per-op-pass model
+                assert!(raw <= schedule_latency(&g, &s, &dev));
+            }
         }
     }
 

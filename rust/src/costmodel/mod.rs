@@ -30,10 +30,34 @@ use crate::graph::{Graph, NodeId, OpKind};
 use crate::tuner::legality::redundancy_factor;
 use crate::tuner::schedule::{FusionGroup, GroupKind, Layout, Schedule, Tile};
 
-/// Latency of one fusion group, in seconds.
+/// Latency of one fusion group, in seconds (per-op-pass execution).
 pub fn group_latency(g: &Graph, grp: &FusionGroup, dev: &DeviceProfile) -> f64 {
+    group_latency_fused(g, grp, dev, false)
+}
+
+/// [`group_latency`] with the fused-execution switch. With `fused` off
+/// this IS the legacy model, bit for bit. With `fused` on, groups whose
+/// compute pattern is single-pass ([`crate::kernels::Pattern::single_pass`])
+/// drop the exposed-overlap term: one fused pass streams each tensor
+/// once with intermediates pinned in registers, so the prefetcher fully
+/// hides the smaller roofline term instead of exposing a quarter of it.
+/// `Stencil` groups keep the per-op model — fusing passes does not
+/// change a compute-dominated loop nest's roofline.
+///
+/// The fused price is POINTWISE ≤ the per-op price for every schedule
+/// (the dropped term is non-negative), which is what makes repricing an
+/// existing plan under fused execution never-worse by construction.
+pub fn group_latency_fused(
+    g: &Graph,
+    grp: &FusionGroup,
+    dev: &DeviceProfile,
+    fused: bool,
+) -> f64 {
     let compute = compute_time(g, grp, dev);
     let memory = memory_time(g, grp, dev);
+    if fused && crate::kernels::classify_group(g, grp).single_pass() {
+        return compute.max(memory) + dev.launch_us * 1e-6;
+    }
     // Partial overlap: prefetchers hide most of the smaller term but not
     // all of it (pure max() would make equal-compute schedules tie even
     // when one moves 3x the bytes).
@@ -46,8 +70,22 @@ pub fn group_latency(g: &Graph, grp: &FusionGroup, dev: &DeviceProfile) -> f64 {
 /// group in one layout into a group in the other (the transpose the
 /// paper's layout selection inserts at subgraph boundaries).
 pub fn schedule_latency(g: &Graph, s: &Schedule, dev: &DeviceProfile) -> f64 {
-    let mut total: f64 =
-        s.groups.iter().map(|grp| group_latency(g, grp, dev)).sum();
+    schedule_latency_fused(g, s, dev, false)
+}
+
+/// [`schedule_latency`] with the fused-execution switch; `fused = false`
+/// reproduces the legacy sum bit for bit (same accumulation order).
+pub fn schedule_latency_fused(
+    g: &Graph,
+    s: &Schedule,
+    dev: &DeviceProfile,
+    fused: bool,
+) -> f64 {
+    let mut total: f64 = s
+        .groups
+        .iter()
+        .map(|grp| group_latency_fused(g, grp, dev, fused))
+        .sum();
     // map op -> (group index, layout)
     let mut owner: std::collections::BTreeMap<usize, (usize, Layout)> =
         std::collections::BTreeMap::new();
@@ -438,6 +476,39 @@ mod tests {
         t4.threads = 4;
         assert!(group_latency(&g, &t4, &dev)
                 <= group_latency(&g, &t1, &dev) * 1.001);
+    }
+
+    #[test]
+    fn fused_pricing_dominates_pointwise_and_off_is_legacy_bits() {
+        let (g, _) = pair_graph(28, 32);
+        let dev = DeviceProfile::kirin990();
+        let (fs, us) = fused_unfused(28);
+        for s in [&fs, &us] {
+            // fused = false IS the legacy model, bit for bit
+            assert_eq!(
+                schedule_latency_fused(&g, s, &dev, false).to_bits(),
+                schedule_latency(&g, s, &dev).to_bits()
+            );
+            // fused = true never prices a schedule higher
+            assert!(
+                schedule_latency_fused(&g, s, &dev, true)
+                    <= schedule_latency_fused(&g, s, &dev, false)
+            );
+        }
+        // a pipeline group (complex + epilogue tail) strictly improves:
+        // compute and memory are both positive, so the dropped
+        // 0.25*min(compute, memory) term was strictly positive
+        let pipe = grp(vec![0, 1], GroupKind::Epilogue,
+                       Tile { th: 4, tw: 28, tc: 16 });
+        assert!(group_latency_fused(&g, &pipe, &dev, true)
+                < group_latency(&g, &pipe, &dev));
+        // a stencil group (bare complex op) is untouched by the switch
+        let sten = grp(vec![1], GroupKind::Epilogue,
+                       Tile { th: 4, tw: 28, tc: 16 });
+        assert_eq!(
+            group_latency_fused(&g, &sten, &dev, true).to_bits(),
+            group_latency(&g, &sten, &dev).to_bits()
+        );
     }
 
     /// Qualitative agreement with the trace-driven simulator: the fusion

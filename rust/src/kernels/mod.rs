@@ -1,0 +1,275 @@
+//! Compute-pattern classification for fused micro-kernel execution.
+//!
+//! DNNFusion-style taxonomy (PAPERS.md, arXiv 2108.13342): every fusion
+//! group — and, coarser, every subgraph — is classified by the shape of
+//! the loop nest a single-pass fused kernel for it would have. The
+//! pattern decides two things downstream:
+//!
+//! - **pricing** (`costmodel`): single-pass patterns drop the exposed
+//!   compute/memory overlap term in the roofline, because one fused pass
+//!   keeps intermediates in registers instead of store+reload at every
+//!   op boundary — so the evolutionary search *seeks* pass-collapsing
+//!   fusions instead of merely tolerating them;
+//! - **execution** (`runtime::engine` / `python/compile/kernels/fused.py`):
+//!   which PJRT artifact a group dispatches to — a fused single-pass
+//!   program when one exists, or the per-op stage chain otherwise.
+//!
+//! Classification is total and deterministic: a pure function of the
+//! group's `GroupKind` and op inventory, with no tie-breaking — property
+//! tests pin that every group in every seed-zoo model maps to exactly
+//! one pattern.
+
+use crate::graph::{Graph, NodeId, OpKind};
+use crate::tuner::schedule::{FusionGroup, GroupKind, Schedule};
+
+/// Compute pattern of a fused region.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Pattern {
+    /// Elementwise/activation chain: one load, one store, no reduction.
+    /// The canonical single-pass win — traffic drops by the chain length.
+    Streaming,
+    /// Normalization/softmax/pool tails: elementwise work around a
+    /// small-axis reduction. Single-pass with an accumulator.
+    Reduction,
+    /// Conv-ish loop nest (or several co-scheduled ones): compute-bound
+    /// sliding-window reuse. Fusing passes does not change its roofline.
+    Stencil,
+    /// Complex op + simple epilogue fused behind it: the epilogue rides
+    /// the producer's output tile in one pass (conventional fusion).
+    Pipeline,
+}
+
+/// All patterns, in the canonical report/JSON order.
+pub const ALL: [Pattern; 4] =
+    [Pattern::Streaming, Pattern::Reduction, Pattern::Stencil, Pattern::Pipeline];
+
+impl Pattern {
+    pub fn name(self) -> &'static str {
+        match self {
+            Pattern::Streaming => "streaming",
+            Pattern::Reduction => "reduction",
+            Pattern::Stencil => "stencil",
+            Pattern::Pipeline => "pipeline",
+        }
+    }
+
+    pub fn parse(s: &str) -> Option<Pattern> {
+        ALL.into_iter().find(|p| p.name() == s)
+    }
+
+    /// Index into [`ALL`]-ordered count arrays.
+    pub fn index(self) -> usize {
+        match self {
+            Pattern::Streaming => 0,
+            Pattern::Reduction => 1,
+            Pattern::Stencil => 2,
+            Pattern::Pipeline => 3,
+        }
+    }
+
+    /// Whether a fused kernel for this pattern executes as ONE pass over
+    /// the tensor, eliminating the store+reload at each internal op
+    /// boundary. These are the memory-bound patterns where fusion
+    /// changes the roofline; `Stencil` stays compute-dominated and keeps
+    /// the per-op overlap model.
+    pub fn single_pass(self) -> bool {
+        !matches!(self, Pattern::Stencil)
+    }
+}
+
+/// Ops whose fused kernel needs a running accumulator (mean/var/max/sum)
+/// — they pull a `Simple` group from `Streaming` into `Reduction`.
+pub fn is_reduction_op(k: &OpKind) -> bool {
+    matches!(
+        k,
+        OpKind::Softmax
+            | OpKind::BatchNorm
+            | OpKind::LayerNorm
+            | OpKind::AvgPool { .. }
+            | OpKind::MaxPool { .. }
+            | OpKind::GlobalAvgPool
+    )
+}
+
+/// Classify one fusion group. Kind-aware: `GroupKind` already encodes
+/// the complex-op structure the schedule chose, so the pattern refines
+/// it by op inventory only where the kind is ambiguous.
+///
+/// - `Intensive` / `Joint`: ≥2 complex ops — stencil-on-stencil; fusion
+///   redundancy is priced by `legality`, not by pass collapse.
+/// - `Epilogue` with ≥2 ops: complex producer + simple tail = pipeline.
+///   A bare `Epilogue` (the complex op alone) is just the stencil.
+/// - `Simple`: reduction if any member carries an accumulator, else a
+///   pure streaming chain.
+pub fn classify_group(g: &Graph, grp: &FusionGroup) -> Pattern {
+    match grp.kind {
+        GroupKind::Intensive | GroupKind::Joint => Pattern::Stencil,
+        GroupKind::Epilogue => {
+            if grp.ops.len() > 1 {
+                Pattern::Pipeline
+            } else {
+                Pattern::Stencil
+            }
+        }
+        GroupKind::Simple => {
+            if grp.ops.iter().any(|&v| is_reduction_op(&g.node(v).kind)) {
+                Pattern::Reduction
+            } else {
+                Pattern::Streaming
+            }
+        }
+    }
+}
+
+/// Classify a bare op set (a subgraph) with no schedule attached — the
+/// coarse tag the partition report and plan JSON carry. Inventory-only:
+/// complex + simple mix is a pipeline, complex alone a stencil, any
+/// accumulator op a reduction, else streaming.
+pub fn classify_ops(g: &Graph, ops: &[NodeId]) -> Pattern {
+    let n_complex =
+        ops.iter().filter(|&&v| g.node(v).kind.is_complex()).count();
+    if n_complex > 0 {
+        if ops.len() > n_complex {
+            Pattern::Pipeline
+        } else {
+            Pattern::Stencil
+        }
+    } else if ops.iter().any(|&v| is_reduction_op(&g.node(v).kind)) {
+        Pattern::Reduction
+    } else {
+        Pattern::Streaming
+    }
+}
+
+/// Per-pattern group counts over a set of schedules, [`ALL`]-ordered —
+/// what the `ago compile` summary prints and PartitionReport serializes.
+pub fn count_patterns(g: &Graph, schedules: &[Schedule]) -> [usize; 4] {
+    let mut counts = [0usize; 4];
+    for s in schedules {
+        for grp in &s.groups {
+            counts[classify_group(g, grp).index()] += 1;
+        }
+    }
+    counts
+}
+
+/// Render counts as the summary fragment:
+/// `patterns: streaming N, reduction N, stencil N, pipeline N`.
+pub fn counts_line(counts: &[usize; 4]) -> String {
+    let parts: Vec<String> = ALL
+        .iter()
+        .zip(counts)
+        .map(|(p, c)| format!("{} {}", p.name(), c))
+        .collect();
+    format!("patterns: {}", parts.join(", "))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::graph::Shape;
+    use crate::tuner::schedule::{Layout, Tile};
+
+    fn grp(ops: Vec<NodeId>, kind: GroupKind) -> FusionGroup {
+        FusionGroup {
+            ops,
+            kind,
+            tile: Tile { th: 1, tw: 1, tc: 1 },
+            vec: 1,
+            unroll: 1,
+            threads: 1,
+            layout: Layout::Nhwc,
+        }
+    }
+
+    fn toy() -> Graph {
+        let mut g = Graph::new("t");
+        let s = Shape::nhwc(1, 14, 14, 32);
+        let a = g.add(OpKind::Pad, "pad", s.clone(), 0, &[]);
+        let pw = g.add(OpKind::Pointwise, "pw", s.clone(), 32, &[a]);
+        let b = g.add(OpKind::BiasAdd, "b", s.clone(), 0, &[pw]);
+        let r = g.add(OpKind::ReLU, "r", s.clone(), 0, &[b]);
+        let sm = g.add(OpKind::Softmax, "sm", s.clone(), 0, &[r]);
+        let _dw = g.add(
+            OpKind::Depthwise { kh: 3, kw: 3, stride: 1 },
+            "dw",
+            s,
+            0,
+            &[sm],
+        );
+        g
+    }
+
+    #[test]
+    fn group_classification_follows_kind_and_inventory() {
+        let g = toy();
+        // Simple, no reduction op → streaming
+        assert_eq!(
+            classify_group(&g, &grp(vec![0, 2, 3], GroupKind::Simple)),
+            Pattern::Streaming
+        );
+        // Simple with softmax → reduction
+        assert_eq!(
+            classify_group(&g, &grp(vec![3, 4], GroupKind::Simple)),
+            Pattern::Reduction
+        );
+        // bare complex op → stencil; with epilogue tail → pipeline
+        assert_eq!(
+            classify_group(&g, &grp(vec![1], GroupKind::Epilogue)),
+            Pattern::Stencil
+        );
+        assert_eq!(
+            classify_group(&g, &grp(vec![1, 2, 3], GroupKind::Epilogue)),
+            Pattern::Pipeline
+        );
+        // multi-complex kinds → stencil regardless of tail
+        assert_eq!(
+            classify_group(&g, &grp(vec![1, 2, 5], GroupKind::Intensive)),
+            Pattern::Stencil
+        );
+        assert_eq!(
+            classify_group(&g, &grp(vec![1, 5], GroupKind::Joint)),
+            Pattern::Stencil
+        );
+    }
+
+    #[test]
+    fn op_set_classification_is_total() {
+        let g = toy();
+        assert_eq!(classify_ops(&g, &[0, 3]), Pattern::Streaming);
+        assert_eq!(classify_ops(&g, &[4]), Pattern::Reduction);
+        assert_eq!(classify_ops(&g, &[1]), Pattern::Stencil);
+        assert_eq!(classify_ops(&g, &[1, 2, 3]), Pattern::Pipeline);
+    }
+
+    #[test]
+    fn names_round_trip_and_single_pass_set() {
+        for p in ALL {
+            assert_eq!(Pattern::parse(p.name()), Some(p));
+            assert_eq!(ALL[p.index()], p);
+        }
+        assert_eq!(Pattern::parse("conv"), None);
+        assert!(Pattern::Streaming.single_pass());
+        assert!(Pattern::Reduction.single_pass());
+        assert!(Pattern::Pipeline.single_pass());
+        assert!(!Pattern::Stencil.single_pass());
+    }
+
+    #[test]
+    fn counts_and_line() {
+        let g = toy();
+        let s = Schedule {
+            groups: vec![
+                grp(vec![0], GroupKind::Simple),
+                grp(vec![1, 2, 3], GroupKind::Epilogue),
+                grp(vec![4], GroupKind::Simple),
+            ],
+        };
+        let c = count_patterns(&g, &[s]);
+        assert_eq!(c, [1, 1, 0, 1]);
+        assert_eq!(
+            counts_line(&c),
+            "patterns: streaming 1, reduction 1, stencil 0, pipeline 1"
+        );
+    }
+}

@@ -13,6 +13,7 @@ pub mod costmodel;
 pub mod device;
 pub mod experiments;
 pub mod graph;
+pub mod kernels;
 pub mod models;
 pub mod partition;
 pub mod reformer;

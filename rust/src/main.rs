@@ -75,6 +75,9 @@ fn main() {
                  \x20          partition search; 1 = single-shot)] \\\n\
                  \x20         [--workers N (0 = all cores; wall-clock \\\n\
                  \x20          only, plan/db bytes are identical)] \\\n\
+                 \x20         [--fused (single-pass pricing + pattern \\\n\
+                 \x20          tags in the plan)] [--probe-seed (seed \\\n\
+                 \x20          the full tune from probe winners, K>1)] \\\n\
                  \x20         [--baselines] [--tuning-db db.json] [--cold]\n\
                  partition --model mvt --shape large\n\
                  serve     --plans dir [--models mbn,sqn --shape small \\\n\
@@ -142,6 +145,12 @@ fn cmd_compile(args: &Args) -> i32 {
         // --cold ignores tuning-db entries on lookup (still records)
         warm_start: !args.has_flag("cold"),
         partition_candidates,
+        // --fused: price single-pass execution for fusible groups and
+        // tag the emitted plan with per-subgraph patterns
+        fused: args.has_flag("fused"),
+        // --probe-seed: seed the winner's full tune from the probe
+        // stage's best schedules (only acts when K > 1)
+        probe_seed: args.has_flag("probe-seed"),
     };
     log::info!(
         "compiling {mname}/{sname} for {} (budget {budget}, {:?})",
@@ -187,6 +196,7 @@ fn cmd_compile(args: &Args) -> i32 {
         out.class_hit_rate * 100.0
     );
     println!("{}", out.report.summary("partition"));
+    println!("{}", out.report.patterns_line());
     if let Some(se) = &out.partition_search {
         println!(
             "partition search: {} candidates probed ({} unique tasks, \
@@ -260,7 +270,9 @@ fn cmd_partition(args: &Args) -> i32 {
     let relay_r = PartitionReport::build(&g, &relay_p, wp);
     println!("model {}/{} ({} ops)", m.name(), s.name(), g.len());
     println!("{}", ago_r.summary("AGO  "));
+    println!("      {}", ago_r.patterns_line());
     println!("{}", relay_r.summary("Relay"));
+    println!("      {}", relay_r.patterns_line());
     println!("\nweight histogram (log2 bins): AGO | Relay");
     for (i, (a, r)) in ago_r.bins.iter().zip(&relay_r.bins).enumerate() {
         if *a > 0 || *r > 0 {
@@ -397,7 +409,25 @@ fn cmd_serve(args: &Args) -> i32 {
         "pjrt" => {
             let dir = args.get_or("artifacts", "artifacts");
             match PjrtExecutor::new(dir) {
-                Ok(e) => Arc::new(e),
+                Ok(e) => {
+                    // refuse to start (rather than silently degrading or
+                    // failing mid-workload) when the catalog is missing
+                    // any program the served models' chains reference —
+                    // e.g. fused programs a plan expects but `make
+                    // artifacts` was run without
+                    let missing = e.missing_programs(&registry.models());
+                    if !missing.is_empty() {
+                        eprintln!(
+                            "artifacts at {dir} lack program(s) required \
+                             by the served models: {}\n\
+                             re-run `make artifacts`, or use \
+                             --executor sim",
+                            missing.join(", ")
+                        );
+                        return 1;
+                    }
+                    Arc::new(e)
+                }
                 Err(e) => {
                     eprintln!(
                         "cannot open PJRT executor: {e:#}\n\

@@ -37,6 +37,11 @@ pub struct PartitionReport {
     pub classes: Vec<Vec<usize>>,
     /// `classes.len()` — the number of tuning tasks dedup leaves behind.
     pub n_classes: usize,
+    /// Per-pattern subgraph counts from the kernel taxonomy, indexed by
+    /// [`crate::kernels::Pattern::index`]. A subgraph counts toward the
+    /// pattern its full op inventory classifies to — the shape a fused
+    /// compile emits it as when the tuner collapses it to one pass.
+    pub pattern_counts: [usize; 4],
 }
 
 impl PartitionReport {
@@ -82,8 +87,14 @@ impl PartitionReport {
                 }
             }
         }
+        let mut pattern_counts = [0usize; 4];
+        for s in p.subgraphs() {
+            let pat = crate::kernels::classify_ops(g, &s.nodes);
+            pattern_counts[pat.index()] += 1;
+        }
         PartitionReport {
             n_subgraphs: p.n_groups,
+            pattern_counts,
             avg_weight: stats::mean(&weights),
             median_weight: stats::median(&weights),
             jain: stats::jain_index(&weights),
@@ -114,6 +125,39 @@ impl PartitionReport {
             self.max_complex,
             self.n_classes
         )
+    }
+
+    /// The per-pattern counts line printed under [`summary`] by
+    /// `ago compile` — `patterns: streaming N, reduction N, ...`.
+    ///
+    /// [`summary`]: PartitionReport::summary
+    pub fn patterns_line(&self) -> String {
+        crate::kernels::counts_line(&self.pattern_counts)
+    }
+
+    /// JSON form of the report — the machine-readable counterpart of
+    /// [`summary`]/[`patterns_line`], embedded in bench records.
+    ///
+    /// [`summary`]: PartitionReport::summary
+    /// [`patterns_line`]: PartitionReport::patterns_line
+    pub fn to_json(&self) -> crate::util::Json {
+        use crate::util::json::{num, obj};
+        let patterns = obj(
+            crate::kernels::ALL
+                .iter()
+                .map(|p| (p.name(), num(self.pattern_counts[p.index()] as f64)))
+                .collect(),
+        );
+        obj(vec![
+            ("n_subgraphs", num(self.n_subgraphs as f64)),
+            ("avg_weight", num(self.avg_weight)),
+            ("median_weight", num(self.median_weight)),
+            ("jain", num(self.jain)),
+            ("trivial", num(self.trivial as f64)),
+            ("max_complex", num(self.max_complex as f64)),
+            ("fp_classes", num(self.n_classes as f64)),
+            ("pattern_counts", patterns),
+        ])
     }
 }
 
@@ -181,6 +225,28 @@ mod tests {
             assert!(r.n_classes < r.n_subgraphs,
                     "{} classes for {} subgraphs", r.n_classes, r.n_subgraphs);
         }
+    }
+
+    #[test]
+    fn pattern_counts_cover_every_subgraph_and_serialize() {
+        let g = build(ModelId::Mbn, InputShape::Small);
+        let p = relay_partition(&g);
+        let r = PartitionReport::build(&g, &p, WeightParams::default());
+        assert_eq!(r.pattern_counts.iter().sum::<usize>(), r.n_subgraphs);
+        // MBN is conv-dominated: stencil or pipeline subgraphs must exist
+        assert!(r.pattern_counts[2] + r.pattern_counts[3] > 0);
+        assert!(r.patterns_line().starts_with("patterns: streaming "));
+        let j = r.to_json();
+        assert_eq!(
+            j.get("pattern_counts")
+                .and_then(|p| p.get("streaming"))
+                .and_then(|v| v.as_usize()),
+            Some(r.pattern_counts[0])
+        );
+        assert_eq!(
+            j.get("n_subgraphs").and_then(|v| v.as_usize()),
+            Some(r.n_subgraphs)
+        );
     }
 
     #[test]

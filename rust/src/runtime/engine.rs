@@ -181,6 +181,13 @@ impl Engine {
             .collect()
     }
 
+    /// `true` when the artifact catalog provides `name` — the membership
+    /// check behind group-chain fused/per-op selection and the serve
+    /// layer's refuse-to-start validation.
+    pub fn has_program(&self, name: &str) -> bool {
+        self.manifest.programs.contains_key(name)
+    }
+
     /// Execute a chain of artifacts: each program's first input is the
     /// previous output; parameters are seeded deterministically per
     /// program. Returns the final output and total wall time (excluding
@@ -218,6 +225,78 @@ impl Engine {
         }
         Ok((cur, t0.elapsed()))
     }
+
+    /// Execute a chain at GROUP granularity — the runtime half of fused
+    /// micro-kernel execution. Each group runs its single-pass `fused`
+    /// program when the catalog provides it, and falls back to its
+    /// per-op `stages` otherwise, so a plan compiled against a richer
+    /// kernel catalog degrades gracefully on a thinner one. Parameter
+    /// seeds advance by per-op stage position whether or not a group
+    /// fuses, so the fallback path is bit-identical to [`run_chain`]
+    /// over the concatenated stages. Returns the final output, how many
+    /// groups took their fused program, and the timed execution span.
+    ///
+    /// [`run_chain`]: Engine::run_chain
+    pub fn run_group_chain(
+        &mut self,
+        groups: &[GroupChain],
+        x0: TensorData,
+        seed: u64,
+    ) -> Result<(TensorData, usize, Duration)> {
+        // resolve each group to the (program, param-seed) list it runs
+        let mut progs: Vec<(String, u64)> = Vec::new();
+        let mut fused_taken = 0usize;
+        let mut flat = 0u64;
+        for grp in groups {
+            match &grp.fused {
+                Some(f) if self.has_program(f) => {
+                    progs.push((f.clone(), seed ^ (flat << 8)));
+                    fused_taken += 1;
+                }
+                _ => {
+                    for (i, n) in grp.stages.iter().enumerate() {
+                        progs.push((
+                            n.clone(),
+                            seed ^ ((flat + i as u64) << 8),
+                        ));
+                    }
+                }
+            }
+            flat += grp.stages.len() as u64;
+        }
+        for (n, _) in &progs {
+            self.prepare(n)?;
+        }
+        let mut params: Vec<Vec<xla::Literal>> = Vec::new();
+        for (n, s) in &progs {
+            let meta = self.manifest.get(n)?.clone();
+            params.push(
+                self.random_params(&meta, *s)
+                    .iter()
+                    .map(|t| t.to_literal())
+                    .collect::<Result<Vec<_>>>()?,
+            );
+        }
+        let t0 = Instant::now();
+        let mut cur = x0;
+        for ((n, _), ps) in progs.iter().zip(&params) {
+            let mut outs = self.execute_with_params(n, &cur, ps)?;
+            cur = outs.remove(0);
+        }
+        Ok((cur, fused_taken, t0.elapsed()))
+    }
+}
+
+/// One fusion group's executable form: the per-op `stages` it can always
+/// run, plus the single-pass `fused` program name when kernel emission
+/// produced one. [`Engine::run_group_chain`] picks per group at run time
+/// based on catalog membership.
+#[derive(Clone, Debug)]
+pub struct GroupChain {
+    /// Single-pass program covering the whole group, if emitted.
+    pub fused: Option<String>,
+    /// Per-op fallback programs, chain order.
+    pub stages: Vec<String>,
 }
 
 #[cfg(test)]
@@ -298,6 +377,52 @@ mod tests {
             .map(|(a, b)| (a - b).abs())
             .fold(0.0f32, f32::max);
         assert!(max_diff < 1e-3, "max diff {max_diff}");
+    }
+
+    #[test]
+    fn group_chain_prefers_fused_and_falls_back_per_op() {
+        let Some(mut e) = engine() else { return };
+        assert!(e.has_program("pw_n1h14w14i24o48"));
+        assert!(!e.has_program("fused_not_in_catalog"));
+        let mut rng = Rng::new(6);
+        let x = TensorData::random(&[1, 14, 14, 24], &mut rng);
+        let grp = |fused: &str| GroupChain {
+            fused: Some(fused.to_string()),
+            stages: vec![
+                "pw_n1h14w14i24o48".to_string(),
+                "dw3_n1h14w14c48".to_string(),
+            ],
+        };
+        // fused program present: the group runs as one pass
+        let fused_name = "fused_pw_dw_n1h14w14i24a48b48";
+        let (y, taken, _) = e
+            .run_group_chain(&[grp(fused_name)], x.clone(), 11)
+            .expect("fused path");
+        assert_eq!(taken, 1);
+        assert_eq!(y.shape, vec![1, 14, 14, 48]);
+        // deterministic run-to-run
+        let (y2, taken2, _) =
+            e.run_group_chain(&[grp(fused_name)], x.clone(), 11).unwrap();
+        assert_eq!(taken2, 1);
+        assert_eq!(y.data, y2.data);
+        // fused name absent from the catalog: per-op fallback, bit-equal
+        // to the plain chain under the same seed
+        let (yf, taken, _) = e
+            .run_group_chain(&[grp("fused_not_in_catalog")], x.clone(), 11)
+            .expect("fallback");
+        assert_eq!(taken, 0);
+        let (yc, _) = e
+            .run_chain(
+                &[
+                    "pw_n1h14w14i24o48".to_string(),
+                    "dw3_n1h14w14c48".to_string(),
+                ],
+                x,
+                11,
+            )
+            .unwrap();
+        assert_eq!(yf.shape, yc.shape);
+        assert_eq!(yf.data, yc.data);
     }
 
     #[test]

@@ -11,5 +11,5 @@
 pub mod engine;
 pub mod manifest;
 
-pub use engine::{Engine, TensorData};
+pub use engine::{Engine, GroupChain, TensorData};
 pub use manifest::{catalog_or_skip, Manifest, ProgramMeta};

@@ -26,6 +26,7 @@ use anyhow::{anyhow, Context, Result};
 use crate::coordinator::plan::LoadedPlan;
 use crate::device::DeviceProfile;
 use crate::graph::fingerprint::Fnv;
+use crate::kernels::Pattern;
 use crate::runtime::{Engine, TensorData};
 use crate::simulator::trace::tensor_walk;
 use crate::simulator::Hierarchy;
@@ -57,6 +58,14 @@ pub trait Executor: Send + Sync {
 /// memory-bound; the serve bench gates the consequence (batched
 /// throughput ≥ 2x batch-1) rather than the constant.
 pub const WEIGHT_FRACTION: f64 = 0.7;
+
+/// [`WEIGHT_FRACTION`] for subgraphs a fused compile tagged as streaming
+/// or reduction (`plan.patterns`): single-pass groups are dominated by
+/// activation traffic flowing through registers, with a far smaller
+/// resident-parameter footprint than conv/matmul stencils. Plans without
+/// pattern tags (every pre-fusion plan) keep the legacy constant for all
+/// subgraphs, bit-for-bit.
+pub const STREAMING_WEIGHT_FRACTION: f64 = 0.2;
 
 /// Sampled weight-tile footprint cap: 8192 f32 elements = 32 KiB, an L1/
 /// L2-resident tile on both device profiles. The simulator walks one tile
@@ -90,9 +99,23 @@ impl SimProfile {
         let mut weight_s = Vec::with_capacity(n);
         let mut act_s = Vec::with_capacity(n);
         let mut warm_ratio = Vec::with_capacity(n);
-        for &lat in &plan.subgraph_latency {
-            let w = WEIGHT_FRACTION * lat;
-            // exact by Sterbenz's lemma (w ∈ [lat/2, lat]): w + a == lat
+        for (i, &lat) in plan.subgraph_latency.iter().enumerate() {
+            // pattern-tagged plans (fused compiles) split by compute
+            // pattern; untagged plans reproduce the legacy arithmetic
+            let frac = match plan
+                .patterns
+                .as_ref()
+                .and_then(|p| p.get(i))
+                .copied()
+            {
+                Some(Pattern::Streaming) | Some(Pattern::Reduction) => {
+                    STREAMING_WEIGHT_FRACTION
+                }
+                _ => WEIGHT_FRACTION,
+            };
+            let w = frac * lat;
+            // w + a recovers lat to within one ulp (exactly, by
+            // Sterbenz's lemma, when frac >= 0.5)
             let a = lat - w;
             // the weight footprint this latency implies at DRAM
             // bandwidth, capped to one resident tile
@@ -226,6 +249,25 @@ impl PjrtExecutor {
         self.chains.insert(model.to_string(), chain);
     }
 
+    /// Programs the given models' chains reference that the artifact
+    /// catalog does NOT provide, sorted and deduplicated. `ago serve
+    /// --executor pjrt` refuses to start — naming these — instead of
+    /// failing mid-workload when a chain (e.g. one referencing a fused
+    /// program the catalog was built without) cannot execute.
+    pub fn missing_programs(&self, models: &[String]) -> Vec<String> {
+        let engine = self.engine.lock().expect("engine mutex");
+        let mut missing: Vec<String> = models
+            .iter()
+            .filter_map(|m| self.chains.get(m))
+            .flat_map(|c| c.names.iter())
+            .filter(|n| !engine.manifest.programs.contains_key(n.as_str()))
+            .cloned()
+            .collect();
+        missing.sort();
+        missing.dedup();
+        missing
+    }
+
     fn chain_for(&self, model: &str) -> Result<&Chain> {
         self.chains.get(model).ok_or_else(|| {
             anyhow!(
@@ -319,6 +361,33 @@ mod tests {
     }
 
     #[test]
+    fn pattern_tags_shift_the_weight_activation_split() {
+        let mut reg = PlanRegistry::new();
+        let plain = registered("P", &[30.0, 90.0]);
+        // streaming/reduction tags shrink the batch-shared bucket
+        let mut lp = toy_plan("T", "kirin990", &[30.0, 90.0]);
+        lp.patterns = Some(vec![Pattern::Streaming, Pattern::Reduction]);
+        let tagged = reg.register(lp).unwrap();
+        // a single request prices the same either way: the split moves
+        // time between the shared and per-request buckets, not the total
+        let t1 = tagged.sim.batch_seconds(1);
+        let p1 = plain.sim.batch_seconds(1);
+        assert!((t1 - p1).abs() < 1e-12, "batch-1 {t1} vs {p1}");
+        // with less weight traffic to amortize, a deep batch of a
+        // streaming-tagged plan saves less than the conv-heavy default
+        assert!(
+            tagged.sim.batch_seconds(16) > plain.sim.batch_seconds(16),
+            "streaming tags must amortize less across a batch"
+        );
+        // stencil/pipeline tags reproduce the untagged arithmetic to the
+        // bit — and so does the absence of tags (the compat contract)
+        let mut st = toy_plan("S", "kirin990", &[30.0, 90.0]);
+        st.patterns = Some(vec![Pattern::Stencil, Pattern::Pipeline]);
+        let st = reg.register(st).unwrap();
+        assert_eq!(st.sim.batch_seconds(16), plain.sim.batch_seconds(16));
+    }
+
+    #[test]
     fn warm_ratio_is_a_real_cache_effect() {
         let sp = registered("T", &[100.0]);
         let r = sp.sim.warm_ratio[0];
@@ -359,7 +428,23 @@ mod tests {
         )) else {
             return;
         };
-        let exec = PjrtExecutor::new(dir.to_str().unwrap()).expect("engine");
+        let mut exec =
+            PjrtExecutor::new(dir.to_str().unwrap()).expect("engine");
+        // the default chains must be fully backed by the catalog, and a
+        // chain referencing an absent program is reported by name
+        let models = vec!["MBN".to_string(), "SQN".to_string()];
+        assert!(exec.missing_programs(&models).is_empty());
+        exec.set_chain(
+            "X",
+            Chain {
+                names: vec!["fused_not_in_catalog".to_string()],
+                input_shape: vec![1, 4, 4, 8],
+            },
+        );
+        assert_eq!(
+            exec.missing_programs(&["X".to_string()]),
+            vec!["fused_not_in_catalog".to_string()]
+        );
         let sp = registered("MBN", &[30.0, 90.0]);
         let batch: Vec<Request> = (0..3)
             .map(|i| Request {

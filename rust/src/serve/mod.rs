@@ -122,6 +122,7 @@ pub(crate) mod testutil {
             subgraph_latency: lats_us.iter().map(|l| l * 1e-6).collect(),
             total_latency_ms: 0.0,
             partition_search: None,
+            patterns: None,
         }
     }
 }

@@ -1,0 +1,238 @@
+//! Property tests for the fused micro-kernel layer (`ago::kernels` +
+//! fused pricing):
+//!
+//! 1. the pattern taxonomy is TOTAL over the seed zoo: every fusion
+//!    group of every model classifies to exactly one pattern;
+//! 2. fused pricing DOMINATES per-op-pass pricing pointwise (never
+//!    worse on any schedule), and `fused = false` reproduces the legacy
+//!    price to the bit;
+//! 3. a fused [`PricingContext`] keeps `tune_parallel` bit-identical
+//!    across 1/4/8 workers, and a fused compile's plan bytes are
+//!    independent of `--workers` while round-tripping byte-exactly
+//!    through the loaded form;
+//! 4. a warm-seeded tune never returns a schedule priced worse than the
+//!    seed it was given (the probe-seeding satellite's contract).
+
+use ago::coordinator::{compile_with_db, plan, CompileConfig, TuningDb};
+use ago::costmodel::{
+    group_latency, group_latency_fused, schedule_latency,
+    schedule_latency_fused, MemoCache, PricingContext,
+};
+use ago::device::DeviceProfile;
+use ago::ensure;
+use ago::graph::{Graph, OpKind, Shape, Subgraph};
+use ago::kernels::{classify_group, classify_ops, count_patterns};
+use ago::models::{build, InputShape, ModelId};
+use ago::partition::{cluster, ClusterConfig};
+use ago::tuner::schedule::SubgraphView;
+use ago::tuner::search::{random_schedule, tune_parallel, SearchConfig};
+use ago::util::propkit::forall;
+use ago::util::{Json, Rng, ThreadPool};
+
+/// Random chain of streaming/reduction/complex ops — the same shape of
+/// generator `costmodel_props` uses, here biased to include reduction
+/// ops so all four patterns appear across cases.
+fn chain_graph(rng: &mut Rng) -> (Graph, SubgraphView) {
+    let mut g = Graph::new("chain");
+    let hw = *rng.choose(&[7usize, 14, 28]);
+    let c = *rng.choose(&[8usize, 16, 32]);
+    let s = Shape::nhwc(1, hw, hw, c);
+    let n = rng.range(3, 11);
+    let mut prev: Option<usize> = None;
+    for i in 0..n {
+        let kind = match rng.range(0, 6) {
+            0 => OpKind::Pointwise,
+            1 => OpKind::Depthwise { kh: 3, kw: 3, stride: 1 },
+            2 => OpKind::BiasAdd,
+            3 => OpKind::ReLU,
+            4 => OpKind::Softmax,
+            _ => OpKind::Add,
+        };
+        let inputs: Vec<usize> = prev.into_iter().collect();
+        let id = g.add(kind, &format!("n{i}"), s.clone(), c, &inputs);
+        prev = Some(id);
+    }
+    let nodes: Vec<usize> = (0..g.len()).collect();
+    let view = SubgraphView::new(&g, &Subgraph { id: 0, nodes });
+    (g, view)
+}
+
+/// Taxonomy totality over the whole seed zoo: every subgraph's op
+/// inventory and every group of a random schedule classify to exactly
+/// one of the four patterns, and the counts tile the group set.
+#[test]
+fn every_seed_zoo_group_classifies_to_exactly_one_pattern() {
+    let mut rng = Rng::new(0xC1A5);
+    for m in ModelId::all() {
+        let g = build(m, InputShape::Small);
+        let p = cluster(&g, ClusterConfig::adaptive(&g));
+        let mut schedules = Vec::new();
+        let mut n_groups = 0usize;
+        for view in SubgraphView::all(&g, &p) {
+            if view.is_empty() {
+                continue;
+            }
+            // inventory classification is total per subgraph
+            let pat = classify_ops(&g, &view.order);
+            assert_eq!(ago::kernels::ALL[pat.index()], pat, "{}", m.name());
+            let s = random_schedule(&g, &view, &mut rng, true);
+            for grp in &s.groups {
+                // exactly one pattern: classify is a function, and the
+                // pattern self-indexes into the canonical order
+                let gp = classify_group(&g, grp);
+                assert_eq!(ago::kernels::ALL[gp.index()], gp, "{}", m.name());
+                n_groups += 1;
+            }
+            schedules.push(s);
+        }
+        let counts = count_patterns(&g, &schedules);
+        assert_eq!(
+            counts.iter().sum::<usize>(),
+            n_groups,
+            "{}: counts {:?} do not tile {} groups",
+            m.name(),
+            counts,
+            n_groups
+        );
+    }
+}
+
+/// Fused pricing dominance: never worse than the per-op-pass price on
+/// any schedule (group- and schedule-level), and the flag off is the
+/// legacy price to the bit.
+#[test]
+fn fused_pricing_dominates_and_off_is_legacy_bits() {
+    forall(150, |rng| {
+        let (g, view) = chain_graph(rng);
+        let dev = if rng.chance(0.5) {
+            DeviceProfile::kirin990()
+        } else {
+            DeviceProfile::qsd810()
+        };
+        let s = random_schedule(&g, &view, rng, true);
+        let legacy = schedule_latency(&g, &s, &dev);
+        let off = schedule_latency_fused(&g, &s, &dev, false);
+        let on = schedule_latency_fused(&g, &s, &dev, true);
+        ensure!(
+            off.to_bits() == legacy.to_bits(),
+            "fused=false diverged: {off} vs {legacy}"
+        );
+        ensure!(on <= legacy, "fused pricing worse: {on} vs {legacy}");
+        for grp in &s.groups {
+            let lg = group_latency(&g, grp, &dev);
+            let fg = group_latency_fused(&g, grp, &dev, true);
+            ensure!(fg <= lg, "group fused {fg} > per-op {lg}");
+        }
+        Ok(())
+    });
+}
+
+/// A fused pricing context changes WHAT is priced, never the worker-count
+/// determinism: `tune_parallel` under `fused = true` returns the same
+/// bits for 1, 4, and 8 workers.
+#[test]
+fn fused_tuning_is_bit_identical_across_worker_counts() {
+    let dev = DeviceProfile::kirin990();
+    let (g, view) = {
+        let mut rng = Rng::new(0xF05D);
+        chain_graph(&mut rng)
+    };
+    let cfg = SearchConfig { budget: 200, seed: 0xA60, ..Default::default() };
+    let mut results = Vec::new();
+    for workers in [1usize, 4, 8] {
+        let pool = ThreadPool::new(workers);
+        let ctx = PricingContext::new_fused(&g, &dev, true);
+        let mut cache = MemoCache::new();
+        let r = tune_parallel(&g, &view, &cfg, None, &ctx, &mut cache, &pool);
+        results.push(r);
+    }
+    for r in &results[1..] {
+        assert_eq!(
+            r.best_latency.to_bits(),
+            results[0].best_latency.to_bits(),
+            "best latency bits diverged across worker counts"
+        );
+        assert_eq!(r.best, results[0].best, "best schedule diverged");
+        assert_eq!(r.evals, results[0].evals);
+        assert_eq!(r.history, results[0].history);
+    }
+}
+
+/// Compile-level worker independence + byte-exact round-trip: a fused
+/// compile emits identical plan bytes for any `workers`, the bytes carry
+/// the pattern tags, and `loaded_to_json` is a fixed point. An unfused
+/// compile's bytes never mention patterns (the golden-compat contract).
+#[test]
+fn fused_compile_bytes_are_worker_independent_and_round_trip() {
+    let g = build(ModelId::Sqn, InputShape::Small);
+    let mut texts = Vec::new();
+    for workers in [1usize, 4] {
+        let cfg = CompileConfig {
+            budget: 400,
+            workers,
+            fused: true,
+            ..CompileConfig::new(DeviceProfile::kirin990())
+        };
+        let mut db = TuningDb::new();
+        let out = compile_with_db(&g, &cfg, &mut db);
+        texts.push((
+            plan::to_json(&out, "SQN", "kirin990").pretty(),
+            out.total_latency,
+        ));
+    }
+    assert_eq!(texts[0].0, texts[1].0, "plan bytes depend on workers");
+    assert_eq!(texts[0].1.to_bits(), texts[1].1.to_bits());
+    assert!(texts[0].0.contains("\"patterns\""));
+    let lp = plan::from_json(&Json::parse(&texts[0].0).unwrap()).unwrap();
+    assert!(lp.patterns.is_some());
+    let once = plan::loaded_to_json(&lp).pretty();
+    let lp2 = plan::from_json(&Json::parse(&once).unwrap()).unwrap();
+    assert_eq!(once, plan::loaded_to_json(&lp2).pretty());
+    // unfused compile: no pattern field anywhere in the bytes
+    let cfg = CompileConfig {
+        budget: 400,
+        ..CompileConfig::new(DeviceProfile::kirin990())
+    };
+    let mut db = TuningDb::new();
+    let out = compile_with_db(&g, &cfg, &mut db);
+    let plain = plan::to_json(&out, "SQN", "kirin990").pretty();
+    assert!(!plain.contains("patterns"));
+}
+
+/// The probe-seeding contract: a tune warm-started from a schedule never
+/// returns anything priced worse than that seed (the population keeps
+/// its best member, and the seed is evaluated first).
+#[test]
+fn warm_seeded_tune_is_never_worse_than_its_seed() {
+    forall(40, |rng| {
+        let (g, view) = chain_graph(rng);
+        let dev = DeviceProfile::qsd810();
+        let fused = rng.chance(0.5);
+        let seed_sched = random_schedule(&g, &view, rng, true);
+        let seed_price = schedule_latency_fused(&g, &seed_sched, &dev, fused);
+        let cfg = SearchConfig {
+            budget: rng.range(30, 120),
+            seed: rng.next_u64(),
+            ..Default::default()
+        };
+        let pool = ThreadPool::new(3);
+        let ctx = PricingContext::new_fused(&g, &dev, fused);
+        let mut cache = MemoCache::new();
+        let r = tune_parallel(
+            &g,
+            &view,
+            &cfg,
+            Some(seed_sched),
+            &ctx,
+            &mut cache,
+            &pool,
+        );
+        ensure!(
+            r.best_latency <= seed_price,
+            "seeded tune regressed: {} vs seed {}",
+            r.best_latency,
+            seed_price
+        );
+        Ok(())
+    });
+}

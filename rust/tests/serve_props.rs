@@ -51,6 +51,7 @@ fn toy_plan(model: &str, device: &str, lats_us: &[f64]) -> LoadedPlan {
         subgraph_latency: lats_us.iter().map(|l| l * 1e-6).collect(),
         total_latency_ms: 0.0,
         partition_search: None,
+        patterns: None,
     }
 }
 
