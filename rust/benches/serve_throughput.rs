@@ -58,7 +58,12 @@ fn main() {
         let t0 = Instant::now();
         let out = serve(
             &registry,
-            &ServeConfig { max_batch, queue_depth: 64, workers: 0 },
+            &ServeConfig {
+                max_batch,
+                queue_depth: 64,
+                workers: 0,
+                timed: None,
+            },
             Arc::new(SimExecutor),
             workload.clone(),
         )

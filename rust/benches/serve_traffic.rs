@@ -1,0 +1,292 @@
+//! Traffic-replay bench: SLO-aware scheduling on the simulated clock.
+//!
+//! Compiles the two seed models (shared TuningDb, the serve warm-start
+//! path), replays a deterministic bursty open-loop trace through every
+//! scheduling policy, and gates the PR's scheduling claims on every run:
+//!
+//!   - strict-tier win: EDF tier-0 p99 strictly below round-robin's on
+//!     an overloaded bursty trace, with no more tier-0 deadline misses
+//!   - shedding contract: `edf-shed` accounts for every request
+//!     (completed + shed == submitted) and the completed set meets its
+//!     deadlines
+//!   - below the knee: a calm trace under EDF misses zero deadlines and
+//!     sheds nothing
+//!   - hot-swap never-worse: with a 30%-faster recompile candidate the
+//!     swap is accepted and simulated time/tail latency only improve,
+//!     while the workload digest is unchanged (same requests answered)
+//!   - determinism: back-to-back runs serialize bit-identically
+//!
+//! Appends a `traffic` record into `BENCH_serve.json` (merging with the
+//! throughput bench's record when present) so the SLO numbers are
+//! tracked PR-over-PR. `--quick` shrinks the compile budget and trace
+//! length for the CI smoke run; every gate still fires.
+
+use std::collections::BTreeMap;
+use std::sync::Arc;
+use std::time::Instant;
+
+use ago::coordinator::plan::LoadedPlan;
+use ago::coordinator::{CompileConfig, TuningDb};
+use ago::device::DeviceProfile;
+use ago::models::{InputShape, ModelId};
+use ago::serve::{
+    bursty_workload, serve, HotSwapConfig, PlanRegistry, Policy, Request,
+    ServeConfig, ServeOutcome, SimExecutor, TimedConfig, TrafficConfig,
+};
+use ago::util::json::{num, obj, s, Json};
+
+/// Compile the two-model registry through one shared db. Deterministic,
+/// so two calls build bit-identical registries — the hot-swap comparison
+/// needs a fresh one (an accepted swap mutates the registry it serves).
+fn build_registry(quick: bool) -> PlanRegistry {
+    let dev = DeviceProfile::kirin990();
+    let cfg = CompileConfig {
+        budget: if quick { 400 } else { 2000 },
+        workers: 0,
+        ..CompileConfig::new(dev)
+    };
+    let mut db = TuningDb::new();
+    let mut registry = PlanRegistry::new();
+    registry
+        .ensure_model(ModelId::Mbn, InputShape::Small, &cfg, &mut db, None)
+        .expect("compile MBN");
+    registry
+        .ensure_model(ModelId::Sqn, InputShape::Small, &cfg, &mut db, None)
+        .expect("compile SQN");
+    registry
+}
+
+/// Mean batch-1 capacity, requests per second — the knee the traffic
+/// rates are calibrated against.
+fn knee_rps(reg: &PlanRegistry) -> f64 {
+    let b1: Vec<f64> = reg
+        .models()
+        .iter()
+        .map(|m| reg.get(m).unwrap().sim.batch_seconds(1))
+        .collect();
+    b1.len() as f64 / b1.iter().sum::<f64>()
+}
+
+fn run(
+    reg: &PlanRegistry,
+    policy: Policy,
+    hot_swap: Option<HotSwapConfig>,
+    wl: &[Request],
+) -> ServeOutcome {
+    serve(
+        reg,
+        &ServeConfig {
+            max_batch: 8,
+            queue_depth: 64,
+            workers: 0,
+            timed: Some(TimedConfig { policy, hot_swap }),
+        },
+        Arc::new(SimExecutor),
+        wl.to_vec(),
+    )
+    .expect("serve")
+}
+
+/// The per-policy record: SLO observables the bench tracks PR-over-PR.
+fn policy_record(out: &ServeOutcome) -> Json {
+    let t = out.stats.timed.as_ref().expect("timed stats");
+    let n = out.stats.requests.max(1) as f64;
+    let c = out.stats.completed.max(1) as f64;
+    obj(vec![
+        ("completed", num(out.stats.completed as f64)),
+        ("p50_ms", num(t.lat_p50_s * 1e3)),
+        ("p99_ms", num(t.lat_p99_s * 1e3)),
+        ("tier0_p99_ms", num(t.tier0_p99_s * 1e3)),
+        ("deadline_miss_rate", num(t.deadline_misses as f64 / c)),
+        ("tier0_misses", num(t.tier0_misses as f64)),
+        ("shed_rate", num(t.shed as f64 / n)),
+        ("sim_end_ms", num(t.sim_end_s * 1e3)),
+    ])
+}
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let t0 = Instant::now();
+    let registry = build_registry(quick);
+    let compile_secs = t0.elapsed().as_secs_f64();
+    let knee = knee_rps(&registry);
+    println!(
+        "compiled {:?} in {compile_secs:.2}s, knee {knee:.0} rps",
+        registry.models()
+    );
+
+    let n = if quick { 2000 } else { 6000 };
+    let seed = 42;
+    let rate = 1.5 * knee;
+    let slo_s = 20.0 / knee;
+    let tcfg = TrafficConfig { rate_rps: rate, slo_s, ..Default::default() };
+    let wl = bursty_workload(&registry.models(), n, seed, &tcfg);
+
+    let rr = run(&registry, Policy::RoundRobin, None, &wl);
+    let edf = run(&registry, Policy::Edf, None, &wl);
+    let shedding = run(&registry, Policy::EdfShed, None, &wl);
+    let t_rr = rr.stats.timed.as_ref().unwrap();
+    let t_edf = edf.stats.timed.as_ref().unwrap();
+    let t_shed = shedding.stats.timed.as_ref().unwrap();
+    for (name, out) in
+        [("rr", &rr), ("edf", &edf), ("edf-shed", &shedding)]
+    {
+        let t = out.stats.timed.as_ref().unwrap();
+        println!(
+            "{name:>8}: p50 {:.1} ms, p99 {:.1} ms, tier-0 p99 {:.1} ms, \
+             {} misses ({} tier-0), {} shed",
+            t.lat_p50_s * 1e3,
+            t.lat_p99_s * 1e3,
+            t.tier0_p99_s * 1e3,
+            t.deadline_misses,
+            t.tier0_misses,
+            t.shed
+        );
+    }
+
+    // gate: deadline-aware formation wins the strict tier outright on an
+    // overloaded bursty trace
+    assert!(t_edf.tier0_completed > 0, "trace never hit the strict tier");
+    assert!(
+        t_edf.tier0_p99_s < t_rr.tier0_p99_s,
+        "EDF tier-0 p99 {:.1} ms !< RR tier-0 p99 {:.1} ms",
+        t_edf.tier0_p99_s * 1e3,
+        t_rr.tier0_p99_s * 1e3
+    );
+    assert!(
+        t_edf.tier0_misses <= t_rr.tier0_misses,
+        "EDF tier-0 misses {} > RR {}",
+        t_edf.tier0_misses,
+        t_rr.tier0_misses
+    );
+    // neither RR nor EDF sheds, so both answer the same request set
+    assert_eq!(rr.stats.workload_digest, edf.stats.workload_digest);
+
+    // gate: explicit overload policy — everything is accounted for and
+    // what completes, completes in time
+    assert_eq!(
+        shedding.stats.completed + shedding.shed.len(),
+        n,
+        "edf-shed lost requests"
+    );
+    assert_eq!(
+        t_shed.deadline_misses, 0,
+        "edf-shed let a completed request miss its deadline"
+    );
+
+    // gate: below the knee nothing misses and nothing is shed
+    let calm_cfg = TrafficConfig {
+        rate_rps: 0.4 * knee,
+        slo_s,
+        diurnal_amp: 0.3,
+        burst_prob: 0.0,
+        ..Default::default()
+    };
+    let calm_wl =
+        bursty_workload(&registry.models(), n.min(2000), 7, &calm_cfg);
+    let calm = run(&registry, Policy::Edf, None, &calm_wl);
+    let t_calm = calm.stats.timed.as_ref().unwrap();
+    assert_eq!(t_calm.deadline_misses, 0, "calm trace missed deadlines");
+    assert_eq!(t_calm.shed, 0);
+    println!(
+        "    calm: p99 {:.1} ms, 0 misses below the knee",
+        t_calm.lat_p99_s * 1e3
+    );
+
+    // gate: hot-swap never-worse. A 30%-faster candidate clears the
+    // probe margin; the swapped run must only improve simulated time and
+    // tail latency, answering the exact same request set.
+    let candidates: BTreeMap<String, LoadedPlan> = registry
+        .models()
+        .iter()
+        .map(|m| {
+            let mut p = registry.get(m).unwrap().plan.clone();
+            for l in &mut p.subgraph_latency {
+                *l *= 0.7;
+            }
+            p.total_latency_ms *= 0.7;
+            (m.clone(), p)
+        })
+        .collect();
+    let hs = HotSwapConfig::new(Arc::new(move |m: &str| {
+        candidates.get(m).cloned()
+    }));
+    let swapped = run(&build_registry(quick), Policy::Edf, Some(hs), &wl);
+    let t_on = swapped.stats.timed.as_ref().unwrap();
+    assert!(
+        !t_on.swaps.is_empty() && t_on.swaps.iter().all(|sw| sw.accepted),
+        "30%-faster candidates must be accepted: {:?}",
+        t_on.swaps
+    );
+    assert!(
+        swapped.stats.serial_s <= edf.stats.serial_s,
+        "hot-swap made simulated time worse: {:.1} ms > {:.1} ms",
+        swapped.stats.serial_s * 1e3,
+        edf.stats.serial_s * 1e3
+    );
+    assert!(
+        t_on.lat_p99_s <= t_edf.lat_p99_s,
+        "hot-swap made p99 worse: {:.1} ms > {:.1} ms",
+        t_on.lat_p99_s * 1e3,
+        t_edf.lat_p99_s * 1e3
+    );
+    assert_eq!(
+        swapped.stats.workload_digest, edf.stats.workload_digest,
+        "hot-swap changed the served request set"
+    );
+    println!(
+        "hot-swap: {} swaps accepted at {:.1} ms, p99 {:.1} -> {:.1} ms",
+        t_on.swaps.len(),
+        t_on.swaps[0].at_s * 1e3,
+        t_edf.lat_p99_s * 1e3,
+        t_on.lat_p99_s * 1e3
+    );
+
+    // gate: run-to-run determinism of the whole timed path
+    let again = run(&registry, Policy::Edf, None, &wl);
+    assert_eq!(
+        edf.stats.to_json().pretty(),
+        again.stats.to_json().pretty(),
+        "timed stats are not bit-identical across runs"
+    );
+
+    let record = obj(vec![
+        ("quick", num(if quick { 1.0 } else { 0.0 })),
+        ("models", s("MBN+SQN/small")),
+        ("requests", num(n as f64)),
+        ("seed", num(seed as f64)),
+        ("knee_rps", num(knee)),
+        ("rate_rps", num(rate)),
+        ("slo_ms", num(slo_s * 1e3)),
+        ("rr", policy_record(&rr)),
+        ("edf", policy_record(&edf)),
+        ("edf_shed", policy_record(&shedding)),
+        ("calm_edf", policy_record(&calm)),
+        (
+            "hot_swap",
+            obj(vec![
+                ("swaps_accepted", num(t_on.swaps.len() as f64)),
+                ("swap_at_ms", num(t_on.swaps[0].at_s * 1e3)),
+                ("p99_off_ms", num(t_edf.lat_p99_s * 1e3)),
+                ("p99_on_ms", num(t_on.lat_p99_s * 1e3)),
+                ("serial_off_ms", num(edf.stats.serial_s * 1e3)),
+                ("serial_on_ms", num(swapped.stats.serial_s * 1e3)),
+            ]),
+        ),
+    ]);
+    // merge: the throughput bench writes a flat record into the same
+    // file — keep it and add (or replace) the `traffic` section
+    let merged = match std::fs::read_to_string("BENCH_serve.json")
+        .ok()
+        .and_then(|text| Json::parse(&text).ok())
+    {
+        Some(Json::Obj(mut m)) => {
+            m.insert("traffic".to_string(), record);
+            Json::Obj(m)
+        }
+        _ => obj(vec![("traffic", record)]),
+    };
+    std::fs::write("BENCH_serve.json", merged.pretty())
+        .expect("write BENCH_serve.json");
+    println!("wrote BENCH_serve.json (traffic section)");
+}

@@ -20,8 +20,9 @@ use ago::models::{build, InputShape, ModelId};
 use ago::partition::{relay_partition, PartitionReport, WeightParams};
 use ago::runtime::{Engine, TensorData};
 use ago::serve::{
-    mixed_workload, serve, Executor, PjrtExecutor, PlanRegistry,
-    ServeConfig, SimExecutor,
+    bursty_workload, mixed_workload, serve, Executor, HotSwapConfig,
+    PjrtExecutor, PlanRegistry, Policy, ServeConfig, SimExecutor,
+    TimedConfig, TrafficConfig,
 };
 use ago::util::benchkit::{fmt_ms, fmt_x, Table};
 use ago::util::cli::Args;
@@ -85,7 +86,13 @@ fn main() {
                  \x20         [--tuning-db db.json] [--requests 1000] \\\n\
                  \x20         [--seed 42] [--batch 8] [--queue-depth 64] \\\n\
                  \x20         [--workers 0] [--executor sim|pjrt] \\\n\
-                 \x20         [--stats-out stats.json]\n\
+                 \x20         [--stats-out stats.json] \\\n\
+                 \x20         [--arrival-rate RPS (open-loop timed mode: \\\n\
+                 \x20          bursty trace on a simulated clock) \\\n\
+                 \x20          --slo-ms 50 --policy rr|edf|edf-shed \\\n\
+                 \x20          --hot-swap (background recompile + atomic \\\n\
+                 \x20          plan swap) --swap-margin 0.2 \\\n\
+                 \x20          --swap-budget 1600]\n\
                  run       --artifacts artifacts [--program NAME | --demo]"
             );
             2
@@ -283,11 +290,14 @@ fn cmd_partition(args: &Args) -> i32 {
 }
 
 /// `ago serve`: load compiled plans (compiling any missing `--models`
-/// through the shared tuning db first), generate a deterministic mixed
-/// workload, and answer it through the batching scheduler. With the
+/// through the shared tuning db first), generate a deterministic
+/// workload, and answer it through the batching scheduler. Without
+/// `--arrival-rate` this is the legacy closed-loop mixed workload;
+/// with it, an open-loop bursty trace on a simulated clock with
+/// SLO-aware batch formation (`--slo-ms`, `--policy`) and optional
+/// background recompile + atomic plan hot-swap (`--hot-swap`). With the
 /// default `sim` executor the printed stats are bit-reproducible for a
-/// fixed (plans, seed, batch, queue-depth) — worker count changes wall
-/// time only.
+/// fixed (plans, seed, flags) — worker count changes wall time only.
 fn cmd_serve(args: &Args) -> i32 {
     let plans_dir = args.get_or("plans", "plans");
     let mut registry = match PlanRegistry::load_dir(plans_dir) {
@@ -378,15 +388,27 @@ fn cmd_serve(args: &Args) -> i32 {
             println!("tuning db written to {p} ({} entries)", db.len());
         }
     } else {
-        // compile-side flags only act when --models requests compiles;
-        // accepting them silently would let a user believe their tuning
-        // history was in play when it was not
-        for flag in ["tuning-db", "device", "shape", "budget"] {
+        // compile-side flags only act when --models requests compiles
+        // (--shape/--device also steer --hot-swap recompiles); accepting
+        // them silently would let a user believe their tuning history
+        // was in play when it was not
+        for flag in ["tuning-db", "budget"] {
             if args.get(flag).is_some() {
                 eprintln!(
                     "warning: --{flag} has no effect without --models \
                      (plans are served as loaded)"
                 );
+            }
+        }
+        if !args.has_flag("hot-swap") {
+            for flag in ["device", "shape"] {
+                if args.get(flag).is_some() {
+                    eprintln!(
+                        "warning: --{flag} has no effect without \
+                         --models or --hot-swap (plans are served as \
+                         loaded)"
+                    );
+                }
             }
         }
     }
@@ -399,10 +421,83 @@ fn cmd_serve(args: &Args) -> i32 {
     }
     let n = args.get_usize("requests", 1000);
     let seed = args.get_u64("seed", 42);
+    // --arrival-rate switches to the open-loop timed mode: a bursty
+    // arrival trace on a simulated clock with SLO-aware batch formation
+    let timed_mode = args.get("arrival-rate").is_some();
+    if !timed_mode {
+        for flag in ["slo-ms", "policy", "swap-margin", "swap-budget"] {
+            if args.get(flag).is_some() {
+                eprintln!("--{flag} requires --arrival-rate");
+                return 2;
+            }
+        }
+        if args.has_flag("hot-swap") {
+            eprintln!("--hot-swap requires --arrival-rate");
+            return 2;
+        }
+    }
+    let timed = if timed_mode {
+        let Some(policy) = Policy::parse(args.get_or("policy", "edf"))
+        else {
+            eprintln!("unknown --policy (rr|edf|edf-shed)");
+            return 2;
+        };
+        let hot_swap = if args.has_flag("hot-swap") {
+            let budget = args.get_usize("swap-budget", 1600);
+            let Some(shape) =
+                InputShape::parse(args.get_or("shape", "small"))
+            else {
+                eprintln!("unknown --shape (small|middle|large)");
+                return 2;
+            };
+            // each model recompiles (fresh, at a larger budget) for the
+            // device its serving plan names; non-zoo models get no
+            // candidate and simply keep serving their current plan
+            let devices: std::collections::BTreeMap<String, String> =
+                registry
+                    .models()
+                    .iter()
+                    .map(|m| {
+                        let d = registry.get(m).unwrap().plan.device.clone();
+                        (m.clone(), d)
+                    })
+                    .collect();
+            let recompile = move |model: &str| -> Option<
+                ago::coordinator::plan::LoadedPlan,
+            > {
+                let id = ModelId::parse(model)?;
+                let dev = DeviceProfile::by_name(devices.get(model)?)?;
+                let cfg = CompileConfig {
+                    budget,
+                    workers: 1,
+                    ..CompileConfig::new(dev)
+                };
+                let g = build(id, shape);
+                let mut db = TuningDb::new();
+                let m = compile_with_db(&g, &cfg, &mut db);
+                let j = ago::coordinator::plan::to_json(
+                    &m,
+                    id.name(),
+                    cfg.device.name,
+                );
+                ago::coordinator::plan::from_json(&j).ok()
+            };
+            let mut hs = HotSwapConfig::new(Arc::new(recompile));
+            hs.margin = args
+                .get_f64("swap-margin", ago::coordinator::PROBE_MARGIN);
+            Some(hs)
+        } else {
+            None
+        };
+        Some(TimedConfig { policy, hot_swap })
+    } else {
+        None
+    };
     let cfg = ServeConfig {
         max_batch: args.get_usize("batch", 8),
         queue_depth: args.get_usize("queue-depth", 64),
         workers: args.get_usize("workers", 0),
+        timed,
     };
     let exec: Arc<dyn Executor> = match args.get_or("executor", "sim") {
         "sim" => Arc::new(SimExecutor),
@@ -450,7 +545,16 @@ fn cmd_serve(args: &Args) -> i32 {
         cfg.queue_depth,
         exec.name()
     );
-    let workload = mixed_workload(&models, n, seed);
+    let workload = if timed_mode {
+        let tcfg = TrafficConfig {
+            rate_rps: args.get_f64("arrival-rate", 100.0),
+            slo_s: args.get_f64("slo-ms", 50.0) * 1e-3,
+            ..Default::default()
+        };
+        bursty_workload(&models, n, seed, &tcfg)
+    } else {
+        mixed_workload(&models, n, seed)
+    };
     let out = match serve(&registry, &cfg, exec, workload) {
         Ok(o) => o,
         Err(e) => {
@@ -486,6 +590,30 @@ fn cmd_serve(args: &Args) -> i32 {
         st.throughput_rps(),
         st.wall_s
     );
+    if let Some(ts) = &st.timed {
+        println!(
+            "timed ({}): shed {}, deadline misses {} ({} tier-0), \
+             p50 {} / p99 {} ms (tier-0 p99 {} ms), sim end {:.2}s",
+            ts.policy.as_str(),
+            ts.shed,
+            ts.deadline_misses,
+            ts.tier0_misses,
+            fmt_ms(ts.lat_p50_s * 1e3),
+            fmt_ms(ts.lat_p99_s * 1e3),
+            fmt_ms(ts.tier0_p99_s * 1e3),
+            ts.sim_end_s
+        );
+        for sw in &ts.swaps {
+            println!(
+                "hot-swap {}: batch-1 {} -> {} ms, {} (at sim {:.2}s)",
+                sw.model,
+                fmt_ms(sw.old_batch1_s * 1e3),
+                fmt_ms(sw.new_batch1_s * 1e3),
+                if sw.accepted { "accepted" } else { "rejected (margin)" },
+                sw.at_s
+            );
+        }
+    }
     if let Some(path) = args.get("stats-out") {
         if let Err(e) = std::fs::write(path, st.to_json().pretty()) {
             eprintln!("failed to write {path}: {e}");
@@ -493,7 +621,10 @@ fn cmd_serve(args: &Args) -> i32 {
         }
         println!("stats written to {path}");
     }
-    if st.dropped > 0 {
+    // closed-loop serving structurally answers everything, so a drop is
+    // a hard failure; in timed mode `dropped` is the shed count — an
+    // overload-policy observable, not an error
+    if st.timed.is_none() && st.dropped > 0 {
         eprintln!("ERROR: dropped {} requests", st.dropped);
         return 1;
     }

@@ -398,11 +398,7 @@ mod tests {
     fn sim_executor_is_pure() {
         let sp = registered("T", &[30.0, 90.0]);
         let batch: Vec<Request> = (0..5)
-            .map(|i| Request {
-                id: i,
-                model: "T".to_string(),
-                seed: 1000 + i,
-            })
+            .map(|i| Request::closed(i, "T", 1000 + i))
             .collect();
         let a = SimExecutor.execute_batch(&sp, &batch).unwrap();
         let b = SimExecutor.execute_batch(&sp, &batch).unwrap();
@@ -447,11 +443,7 @@ mod tests {
         );
         let sp = registered("MBN", &[30.0, 90.0]);
         let batch: Vec<Request> = (0..3)
-            .map(|i| Request {
-                id: i,
-                model: "MBN".to_string(),
-                seed: 7 + i,
-            })
+            .map(|i| Request::closed(i, "MBN", 7 + i))
             .collect();
         let a = exec.execute_batch(&sp, &batch).unwrap();
         let b = exec.execute_batch(&sp, &batch).unwrap();

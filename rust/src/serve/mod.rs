@@ -15,16 +15,22 @@
 //!   cache simulator — deterministic, runs on any checkout;
 //!   [`PjrtExecutor`] wraps `runtime::Engine` for real PJRT execution
 //!   when the AOT artifact catalog is present.
-//! - [`serve`] (`scheduler`): per-model FIFO queues with a bounded depth
-//!   (backpressure), deterministic round-robin batch formation (never
-//!   more than `max_batch` requests per batch), fan-out over
-//!   `util::ThreadPool`, and per-model latency/throughput statistics.
+//! - [`serve`] (`scheduler`): two scheduling modes behind one entry
+//!   point. The legacy *closed-loop* mode (per-model FIFO queues with a
+//!   bounded depth, deterministic round-robin batch formation, thread-
+//!   pool fan-out) is preserved bit-for-bit for workloads with no
+//!   arrival trace. The *timed* mode runs a simulated clock over an
+//!   open-loop arrival trace: earliest-deadline-first batch formation
+//!   with cost-model-priced batch sizing, explicit overload policy
+//!   (fair-share admission, priority tiers, deadline-miss shedding),
+//!   and background recompilation with atomic plan hot-swap.
 //!
 //! Determinism contract: with [`SimExecutor`], the responses and the
-//! serialized stats are bit-identical for a fixed (plans, config,
-//! workload seed) regardless of worker count — batch formation happens on
-//! the driver thread and batch execution is a pure function, so threads
-//! only change wall-clock time. `tests/serve_props.rs` pins this.
+//! serialized stats are bit-identical for a fixed (plans, config, seed,
+//! arrival trace) regardless of worker count — batch formation happens
+//! on the driver thread, batch execution is a pure function, and the
+//! hot-swap activation point is a simulated-clock boundary rather than
+//! a wall-clock race. `tests/serve_props.rs` pins this.
 //!
 //! [`CompiledModel`]: crate::coordinator::CompiledModel
 //! [`TuningDb`]: crate::coordinator::TuningDb
@@ -34,19 +40,47 @@ pub mod registry;
 pub mod scheduler;
 
 pub use executor::{Chain, Executor, PjrtExecutor, SimExecutor, SimProfile};
-pub use registry::{PlanRegistry, ServingPlan};
-pub use scheduler::{serve, ModelStats, ServeConfig, ServeOutcome, ServeStats};
+pub use registry::{PlanRegistry, ServingPlan, SwapOutcome};
+pub use scheduler::{
+    serve, HotSwapConfig, ModelStats, Policy, ServeConfig, ServeOutcome,
+    ServeStats, SwapStats, TimedConfig, TimedStats,
+};
 
 use crate::util::Rng;
 
 /// One inference request: an id (unique within a workload), the model it
-/// targets (a [`PlanRegistry`] key), and a seed that determines its input
-/// tensors — the whole request is reproducible from these three values.
-#[derive(Clone, Debug, PartialEq, Eq)]
+/// targets (a [`PlanRegistry`] key), a seed that determines its input
+/// tensors, and — for open-loop (timed) workloads — an arrival time, an
+/// SLO deadline, and a priority tier on the simulated clock. The whole
+/// request is reproducible from these values.
+#[derive(Clone, Debug, PartialEq)]
 pub struct Request {
     pub id: u64,
     pub model: String,
     pub seed: u64,
+    /// Arrival time on the simulated clock, seconds. Closed-loop
+    /// workloads use 0 (everything available at t=0).
+    pub arrival_s: f64,
+    /// Absolute SLO deadline on the simulated clock, seconds.
+    /// `f64::INFINITY` = no SLO (every closed-loop request).
+    pub deadline_s: f64,
+    /// Priority tier: 0 is the strict-SLO tier; higher tiers carry
+    /// looser deadlines and are shed first under overload.
+    pub tier: u8,
+}
+
+impl Request {
+    /// A closed-loop request: available immediately, no deadline.
+    pub fn closed(id: u64, model: impl Into<String>, seed: u64) -> Request {
+        Request {
+            id,
+            model: model.into(),
+            seed,
+            arrival_s: 0.0,
+            deadline_s: f64::INFINITY,
+            tier: 0,
+        }
+    }
 }
 
 /// The completed form of a [`Request`].
@@ -68,16 +102,116 @@ pub struct Response {
 
 /// Deterministic mixed workload: `n` requests choosing uniformly among
 /// `models`, fully determined by `seed`. The driver behind `ago serve`,
-/// the serve bench, and the scheduler property tests.
+/// the serve bench, and the scheduler property tests. Closed-loop: every
+/// request is available at t=0 with no deadline.
 pub fn mixed_workload(models: &[String], n: usize, seed: u64) -> Vec<Request> {
     assert!(!models.is_empty(), "workload needs at least one model");
     let mut rng = Rng::new(seed);
     (0..n)
         .map(|i| {
             let model = rng.choose(models).clone();
-            Request { id: i as u64, model, seed: rng.next_u64() }
+            Request::closed(i as u64, model, rng.next_u64())
         })
         .collect()
+}
+
+/// Shape of the open-loop arrival process for [`bursty_workload`]:
+/// exponential inter-arrival gaps at a diurnally modulated rate, with
+/// heavy-tail (Pareto) burst clumps arriving together, and two priority
+/// tiers with different SLO budgets. Every field feeds a pure function
+/// of the workload seed.
+#[derive(Clone, Debug)]
+pub struct TrafficConfig {
+    /// Mean arrival rate, requests per second.
+    pub rate_rps: f64,
+    /// Tier-0 SLO budget, seconds; `deadline = arrival + slo` (scaled
+    /// by [`tier_slo_scale`](Self::tier_slo_scale) for tier 1).
+    pub slo_s: f64,
+    /// Amplitude of the sinusoidal rate modulation (0 = flat).
+    pub diurnal_amp: f64,
+    /// Period of the rate modulation, seconds.
+    pub diurnal_period_s: f64,
+    /// Probability that an arrival point is a Pareto burst clump.
+    pub burst_prob: f64,
+    /// Pareto tail index for burst size (`u^(-1/alpha)`); lower = heavier.
+    pub burst_alpha: f64,
+    /// Hard cap on a single burst clump.
+    pub burst_max: usize,
+    /// Probability a request lands in tier 0 (the strict-SLO tier).
+    pub tier_prob: f64,
+    /// Tier-1 SLO multiplier (relaxed tier).
+    pub tier_slo_scale: f64,
+}
+
+impl Default for TrafficConfig {
+    fn default() -> Self {
+        TrafficConfig {
+            rate_rps: 100.0,
+            slo_s: 0.050,
+            diurnal_amp: 0.6,
+            diurnal_period_s: 10.0,
+            burst_prob: 0.03,
+            burst_alpha: 1.3,
+            burst_max: 64,
+            tier_prob: 0.25,
+            tier_slo_scale: 4.0,
+        }
+    }
+}
+
+/// Deterministic open-loop bursty workload: `n` requests on a simulated
+/// arrival clock, fully determined by `(models, n, seed, cfg)`. The
+/// arrival process is exponential gaps at rate `λ(t) = rate_rps · (1 +
+/// diurnal_amp · sin(2πt/period))`, with each arrival point expanding
+/// into a Pareto-sized clump (all sharing one arrival time) with
+/// probability `burst_prob`. Requests are emitted in arrival order with
+/// `id` = arrival index.
+pub fn bursty_workload(
+    models: &[String],
+    n: usize,
+    seed: u64,
+    cfg: &TrafficConfig,
+) -> Vec<Request> {
+    assert!(!models.is_empty(), "workload needs at least one model");
+    let mut rng = Rng::new(seed);
+    let mut out = Vec::with_capacity(n);
+    let mut t = 0.0_f64;
+    while out.len() < n {
+        let mut burst = 1usize;
+        if cfg.burst_prob > 0.0 && rng.chance(cfg.burst_prob) {
+            let u = rng.f64().max(1e-12);
+            burst = (u.powf(-1.0 / cfg.burst_alpha) as usize)
+                .clamp(1, cfg.burst_max);
+        }
+        for _ in 0..burst {
+            if out.len() >= n {
+                break;
+            }
+            let model = rng.choose(models).clone();
+            let seed_r = rng.next_u64();
+            let tier = if rng.chance(cfg.tier_prob) { 0u8 } else { 1u8 };
+            let slo = cfg.slo_s
+                * if tier == 0 { 1.0 } else { cfg.tier_slo_scale };
+            out.push(Request {
+                id: out.len() as u64,
+                model,
+                seed: seed_r,
+                arrival_s: t,
+                deadline_s: t + slo,
+                tier,
+            });
+        }
+        let lam = (cfg.rate_rps
+            * (1.0
+                + cfg.diurnal_amp
+                    * (2.0 * std::f64::consts::PI * t
+                        / cfg.diurnal_period_s)
+                        .sin()))
+        .max(1e-9);
+        let gap = -((1.0 - rng.f64()).max(1e-300)).ln() / lam;
+        t += gap;
+    }
+    out
 }
 
 #[cfg(test)]
@@ -146,6 +280,40 @@ mod tests {
         }
         // a different seed draws a different request stream
         let c = mixed_workload(&models, 500, 43);
+        assert_ne!(a, c);
+        // closed-loop requests carry no clock: t=0, no deadline
+        assert!(a
+            .iter()
+            .all(|r| r.arrival_s == 0.0 && r.deadline_s == f64::INFINITY));
+    }
+
+    #[test]
+    fn bursty_workload_is_deterministic_and_well_formed() {
+        let models = vec!["MBN".to_string(), "SQN".to_string()];
+        let cfg = TrafficConfig { rate_rps: 200.0, ..Default::default() };
+        let a = bursty_workload(&models, 1000, 7, &cfg);
+        let b = bursty_workload(&models, 1000, 7, &cfg);
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 1000);
+        // ids are the arrival order and arrivals are non-decreasing
+        for w in a.windows(2) {
+            assert_eq!(w[1].id, w[0].id + 1);
+            assert!(w[1].arrival_s >= w[0].arrival_s);
+        }
+        // deadlines respect the tier SLO budgets exactly
+        for r in &a {
+            let scale = if r.tier == 0 { 1.0 } else { cfg.tier_slo_scale };
+            assert_eq!(r.deadline_s, r.arrival_s + cfg.slo_s * scale);
+        }
+        // both tiers and both models appear; bursts produce shared
+        // arrival instants somewhere in 1000 draws at burst_prob=0.03
+        assert!(a.iter().any(|r| r.tier == 0));
+        assert!(a.iter().any(|r| r.tier == 1));
+        assert!(a
+            .windows(2)
+            .any(|w| w[0].arrival_s == w[1].arrival_s));
+        // a different seed draws a different trace
+        let c = bursty_workload(&models, 1000, 8, &cfg);
         assert_ne!(a, c);
     }
 }

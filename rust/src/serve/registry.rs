@@ -14,10 +14,23 @@
 //!   model is round-tripped through the plan JSON before registration,
 //!   so serving from memory is bit-identical to serving the same plan
 //!   from disk.
+//!
+//! While serving, a plan can be replaced atomically via [`hot_swap`]:
+//! the map holds `Arc<ServingPlan>`, so a swap is one pointer store
+//! behind an `RwLock` — in-flight batches keep the Arc they cloned at
+//! formation time and are never disturbed, and any batch formed after
+//! the swap sees the new plan in full. A candidate is accepted only
+//! when its predicted batch-1 latency beats the serving plan's by the
+//! coordinator's probe margin (the PR 5 never-worse rule), so a swap
+//! can only speed the service up. The checksum salt depends on (model,
+//! device) alone, so swapped plans keep response checksums — and the
+//! workload digest — stable.
+//!
+//! [`hot_swap`]: PlanRegistry::hot_swap
 
 use std::collections::BTreeMap;
 use std::path::Path;
-use std::sync::Arc;
+use std::sync::{Arc, RwLock};
 
 use anyhow::{anyhow, Context, Result};
 
@@ -41,9 +54,21 @@ pub struct ServingPlan {
     pub salt: u64,
 }
 
+/// Decision record of one [`PlanRegistry::hot_swap`] call.
+#[derive(Clone, Debug, PartialEq)]
+pub struct SwapOutcome {
+    pub model: String,
+    /// Predicted batch-1 latency of the plan that was serving, seconds.
+    pub old_batch1_s: f64,
+    /// Predicted batch-1 latency of the candidate, seconds.
+    pub new_batch1_s: f64,
+    /// True iff the candidate cleared the margin and was swapped in.
+    pub accepted: bool,
+}
+
 #[derive(Default)]
 pub struct PlanRegistry {
-    plans: BTreeMap<String, Arc<ServingPlan>>,
+    plans: RwLock<BTreeMap<String, Arc<ServingPlan>>>,
 }
 
 impl PlanRegistry {
@@ -51,28 +76,31 @@ impl PlanRegistry {
         PlanRegistry::default()
     }
 
+    fn read(&self) -> std::sync::RwLockReadGuard<'_, BTreeMap<String, Arc<ServingPlan>>> {
+        self.plans.read().expect("plan registry lock")
+    }
+
     pub fn len(&self) -> usize {
-        self.plans.len()
+        self.read().len()
     }
 
     pub fn is_empty(&self) -> bool {
-        self.plans.is_empty()
+        self.read().is_empty()
     }
 
     pub fn get(&self, model: &str) -> Option<Arc<ServingPlan>> {
-        self.plans.get(model).cloned()
+        self.read().get(model).cloned()
     }
 
     /// Registered model names, sorted (the BTreeMap order every
     /// deterministic consumer — batch formation, stats — relies on).
     pub fn models(&self) -> Vec<String> {
-        self.plans.keys().cloned().collect()
+        self.read().keys().cloned().collect()
     }
 
-    /// Register a loaded plan. Rejects plans with no model name, an
-    /// unknown device, or a model that is already registered (two plans
-    /// for one model is a deployment mistake, not a merge).
-    pub fn register(&mut self, plan: LoadedPlan) -> Result<Arc<ServingPlan>> {
+    /// Derive everything serving needs from a loaded plan. Rejects plans
+    /// with no model name or an unknown device.
+    fn build(plan: LoadedPlan) -> Result<Arc<ServingPlan>> {
         if plan.model.is_empty() {
             return Err(anyhow!("plan has no model name"));
         }
@@ -83,22 +111,62 @@ impl PlanRegistry {
                 plan.device
             )
         })?;
-        if self.plans.contains_key(&plan.model) {
-            return Err(anyhow!("duplicate plan for model {:?}", plan.model));
-        }
         let sim = SimProfile::build(&plan, &dev);
         let mut h = Fnv::new();
         h.write_bytes(plan.model.as_bytes());
         h.write_bytes(plan.device.as_bytes());
-        let sp = Arc::new(ServingPlan {
+        Ok(Arc::new(ServingPlan {
             model: plan.model.clone(),
             device: dev,
             plan,
             sim,
             salt: h.finish(),
-        });
-        self.plans.insert(sp.model.clone(), Arc::clone(&sp));
+        }))
+    }
+
+    /// Register a loaded plan. Rejects plans with no model name, an
+    /// unknown device, or a model that is already registered (two plans
+    /// for one model is a deployment mistake, not a merge — replacing a
+    /// serving plan is [`hot_swap`](Self::hot_swap)'s job).
+    pub fn register(&mut self, plan: LoadedPlan) -> Result<Arc<ServingPlan>> {
+        let sp = Self::build(plan)?;
+        let mut plans = self.plans.write().expect("plan registry lock");
+        if plans.contains_key(&sp.model) {
+            return Err(anyhow!("duplicate plan for model {:?}", sp.model));
+        }
+        plans.insert(sp.model.clone(), Arc::clone(&sp));
         Ok(sp)
+    }
+
+    /// Atomically replace a serving plan with a recompiled candidate —
+    /// iff the candidate's predicted batch-1 latency beats the serving
+    /// plan's by more than `margin` (the coordinator's probe rule:
+    /// `new < old * (1 - margin)`). The swap is a single Arc store under
+    /// the write lock: batches formed before it keep executing their old
+    /// plan untouched; batches formed after it see the candidate in
+    /// full. No partially-applied plan is ever observable. Errors if the
+    /// candidate is malformed or the model was never registered.
+    pub fn hot_swap(
+        &self,
+        plan: LoadedPlan,
+        margin: f64,
+    ) -> Result<SwapOutcome> {
+        let cand = Self::build(plan)?;
+        let mut plans = self.plans.write().expect("plan registry lock");
+        let cur = plans.get(&cand.model).ok_or_else(|| {
+            anyhow!(
+                "hot-swap for model {:?} which was never registered",
+                cand.model
+            )
+        })?;
+        let old_batch1_s = cur.sim.batch_seconds(1);
+        let new_batch1_s = cand.sim.batch_seconds(1);
+        let accepted = new_batch1_s < old_batch1_s * (1.0 - margin);
+        let model = cand.model.clone();
+        if accepted {
+            plans.insert(model.clone(), cand);
+        }
+        Ok(SwapOutcome { model, old_batch1_s, new_batch1_s, accepted })
     }
 
     /// Load every `*.plan.json` under `dir`, in file-name order. A
@@ -151,8 +219,8 @@ impl PlanRegistry {
         db: &mut TuningDb,
         persist_dir: Option<&Path>,
     ) -> Result<Arc<ServingPlan>> {
-        if let Some(p) = self.plans.get(id.name()) {
-            return Ok(Arc::clone(p));
+        if let Some(p) = self.get(id.name()) {
+            return Ok(p);
         }
         let g = build(id, shape);
         let m = compile_with_db(&g, cfg, db);
@@ -206,6 +274,39 @@ mod tests {
         reg.register(toy("A", "kirin990")).unwrap();
         let err = reg.register(toy("A", "qsd810")).unwrap_err();
         assert!(err.to_string().contains("duplicate"), "{err:#}");
+    }
+
+    #[test]
+    fn hot_swap_respects_margin_and_never_tears() {
+        let mut reg = PlanRegistry::new();
+        reg.register(toy_plan("A", "kirin990", &[100.0])).unwrap();
+        let before = reg.get("A").unwrap();
+        // 10% faster is inside a 20% margin: rejected, plan untouched
+        let out = reg
+            .hot_swap(toy_plan("A", "kirin990", &[90.0]), 0.20)
+            .unwrap();
+        assert!(!out.accepted, "{out:?}");
+        assert!(Arc::ptr_eq(&before, &reg.get("A").unwrap()));
+        // 50% faster clears the margin: swapped in one Arc store
+        let out = reg
+            .hot_swap(toy_plan("A", "kirin990", &[50.0]), 0.20)
+            .unwrap();
+        assert!(out.accepted, "{out:?}");
+        assert!(out.new_batch1_s < out.old_batch1_s * 0.8);
+        let after = reg.get("A").unwrap();
+        assert!(!Arc::ptr_eq(&before, &after));
+        // salt is (model, device)-derived: response checksums and the
+        // workload digest survive the swap
+        assert_eq!(before.salt, after.salt);
+        // the displaced Arc is whole — an in-flight batch that cloned it
+        // before the swap still executes the old plan, not a torn one
+        assert_eq!(before.plan.subgraph_latency, vec![100.0e-6]);
+        assert_eq!(after.plan.subgraph_latency, vec![50.0e-6]);
+        // swapping a model that was never registered is an error
+        let err = reg
+            .hot_swap(toy_plan("B", "kirin990", &[10.0]), 0.20)
+            .unwrap_err();
+        assert!(err.to_string().contains("never registered"), "{err:#}");
     }
 
     #[test]

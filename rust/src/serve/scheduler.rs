@@ -1,32 +1,69 @@
-//! Batching scheduler: per-model FIFO queues, bounded depth
-//! (backpressure), deterministic round-robin batch formation, thread-pool
-//! fan-out, per-model statistics.
+//! Batching scheduler: one entry point, two scheduling modes.
 //!
-//! The design splits *batch formation* from *batch execution*. Admission
-//! and batching run on the driver thread: requests enter their model's
-//! FIFO queue in global arrival order until a queue hits `queue_depth`
-//! (which stalls the arrival stream — backpressure, counted, never a
-//! drop), then the queues drain into batches round-robin across models in
-//! name order, never more than `max_batch` requests per batch and always
-//! from the queue front. Only execution fans out over the worker pool,
-//! and `ThreadPool::map` collects results in submission order — so the
-//! set of batches, their composition, and the response order are a pure
+//! **Closed-loop (legacy)** — `cfg.timed == None`: per-model FIFO queues
+//! with a bounded depth (backpressure, counted, never a drop), then the
+//! queues drain into batches round-robin across models in name order,
+//! never more than `max_batch` requests per batch and always from the
+//! queue front. Only execution fans out over the worker pool, and
+//! `ThreadPool::map` collects results in submission order — so the set
+//! of batches, their composition, and the response order are a pure
 //! function of (plans, config, workload), and worker count changes
-//! wall-clock time only. That is the whole determinism argument; the
-//! property tests in `tests/serve_props.rs` hold it to the bit.
+//! wall-clock time only. This path is preserved bit-for-bit: a workload
+//! with no arrival trace serializes exactly the stats it always has.
+//!
+//! **Timed (simulated clock)** — `cfg.timed == Some(..)`: the workload
+//! is an open-loop arrival trace (`Request::arrival_s`/`deadline_s`),
+//! and the scheduler advances a deterministic simulated clock over it.
+//! Batch formation is policy-driven ([`Policy`]):
+//!
+//! - `RoundRobin`: the legacy formation rule replayed on the clock —
+//!   the baseline the bench compares against.
+//! - `Edf`: earliest-deadline-first with cost-model-priced sizing. The
+//!   model whose queue front holds the tightest deadline is served
+//!   first; a batch stops growing when the [`SimProfile`]-predicted
+//!   finish time of the next admit would breach the tightest *still
+//!   meetable* deadline in the batch (deadlines already missed at
+//!   formation time do not constrain growth — a backlogged batch still
+//!   fills to `max_batch`, which is what keeps EDF's throughput at
+//!   round-robin parity under overload). Nothing is shed; misses are
+//!   counted.
+//! - `EdfShed`: `Edf` plus explicit overload policy. Admission is
+//!   fair-share — each model's queue is bounded at `queue_depth`, and
+//!   overflow evicts the worst entry (lowest tier first, then latest
+//!   deadline) instead of stalling the arrival stream; at formation
+//!   time, queue-front entries that cannot meet their deadline even in
+//!   a batch of one are shed. Shed requests are counted per model and
+//!   in total: `dropped` becomes a policy observable.
+//!
+//! In timed mode batches execute inline on the driver thread — the
+//! simulated SoC is a single device, so there is no concurrency to
+//! exploit and worker count is trivially irrelevant to the results. The
+//! pool still earns its keep: background recompilation for plan
+//! hot-swap ([`HotSwapConfig`]) runs on it while the clock advances,
+//! and the results are joined at a deterministic simulated-clock
+//! activation point (never mid-batch) and applied in model-name order
+//! through [`PlanRegistry::hot_swap`]'s margin gate. Responses and
+//! serialized stats are therefore a pure function of (plans, config,
+//! seed, arrival trace) for any worker count.
 //!
 //! Statistics follow the same contract: everything in
 //! [`ServeStats::to_json`] is deterministic (simulated/serial time,
-//! counts, per-model latency percentiles, a workload digest). Wall-clock
-//! measurements stay in [`ServeStats::wall_s`], which is deliberately NOT
-//! serialized.
+//! counts, per-model latency percentiles, a workload digest, and — in
+//! timed mode only — a `timed` block with SLO/shedding/swap
+//! observables). Wall-clock measurements stay in [`ServeStats::wall_s`],
+//! which is deliberately NOT serialized.
+//!
+//! [`SimProfile`]: super::executor::SimProfile
 
 use std::collections::{BTreeMap, BTreeSet, VecDeque};
-use std::sync::Arc;
+use std::fmt;
+use std::sync::{mpsc, Arc};
 use std::time::Instant;
 
-use anyhow::{anyhow, Result};
+use anyhow::{anyhow, bail, Result};
 
+use crate::coordinator::plan::LoadedPlan;
+use crate::coordinator::PROBE_MARGIN;
 use crate::util::json::{num, obj, s, Json};
 use crate::util::rng::splitmix64;
 use crate::util::{stats, ThreadPool};
@@ -35,19 +72,125 @@ use super::executor::Executor;
 use super::registry::{PlanRegistry, ServingPlan};
 use super::{Request, Response};
 
+/// Batch-formation policy for the timed (simulated-clock) mode.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Policy {
+    /// Legacy round-robin formation replayed on the clock (baseline).
+    RoundRobin,
+    /// Earliest-deadline-first, cost-priced batch sizing, no shedding.
+    Edf,
+    /// EDF plus fair-share eviction and deadline-miss shedding.
+    EdfShed,
+}
+
+impl Policy {
+    pub fn parse(text: &str) -> Option<Policy> {
+        match text {
+            "rr" | "round-robin" => Some(Policy::RoundRobin),
+            "edf" => Some(Policy::Edf),
+            "edf-shed" => Some(Policy::EdfShed),
+            _ => None,
+        }
+    }
+
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Policy::RoundRobin => "rr",
+            Policy::Edf => "edf",
+            Policy::EdfShed => "edf-shed",
+        }
+    }
+}
+
+/// Fraction of the trace (by last arrival time) after which the
+/// background recompile results are joined and applied: early enough
+/// that most of the trace serves from the better plan, late enough that
+/// a real recompile has had wall-clock time to finish.
+pub const DEFAULT_SWAP_AT_FRAC: f64 = 0.25;
+
+/// Background recompilation + atomic hot-swap, for the timed mode.
+///
+/// `recompile` runs once per served model on the worker pool while the
+/// simulated clock advances; `None` means "no candidate" (recompile
+/// found nothing better or failed softly). Results are joined at the
+/// first batch-formation point whose simulated time reaches `at_frac ×
+/// last_arrival` and applied in model-name order through
+/// [`PlanRegistry::hot_swap`] with `margin` — which makes the swap set,
+/// and everything downstream of it, deterministic even though the
+/// recompile itself runs concurrently with serving.
+#[derive(Clone)]
+pub struct HotSwapConfig {
+    pub recompile: Arc<dyn Fn(&str) -> Option<LoadedPlan> + Send + Sync>,
+    /// Never-worse margin: accept only `new < old * (1 - margin)`.
+    pub margin: f64,
+    /// Activation point as a fraction of the last arrival time.
+    pub at_frac: f64,
+}
+
+impl HotSwapConfig {
+    /// Coordinator defaults: the PR 5 probe margin, activation at a
+    /// quarter of the trace.
+    pub fn new(
+        recompile: Arc<dyn Fn(&str) -> Option<LoadedPlan> + Send + Sync>,
+    ) -> HotSwapConfig {
+        HotSwapConfig {
+            recompile,
+            margin: PROBE_MARGIN,
+            at_frac: DEFAULT_SWAP_AT_FRAC,
+        }
+    }
+}
+
+impl fmt::Debug for HotSwapConfig {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("HotSwapConfig")
+            .field("margin", &self.margin)
+            .field("at_frac", &self.at_frac)
+            .field("recompile", &"<fn>")
+            .finish()
+    }
+}
+
+/// Timed-mode configuration; `ServeConfig::timed == Some(..)` selects
+/// the simulated-clock scheduler.
+#[derive(Clone, Debug)]
+pub struct TimedConfig {
+    pub policy: Policy,
+    pub hot_swap: Option<HotSwapConfig>,
+}
+
+impl Default for TimedConfig {
+    fn default() -> TimedConfig {
+        TimedConfig { policy: Policy::Edf, hot_swap: None }
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
     /// Largest batch ever formed (≥ 1).
     pub max_batch: usize,
-    /// Per-model queue bound (≥ 1); a full queue stalls admission.
+    /// Per-model queue bound (≥ 1). Closed-loop: a full queue stalls
+    /// admission. Timed: arrivals are open-loop (nothing stalls); the
+    /// bound is each model's fair share, enforced by eviction under
+    /// `Policy::EdfShed` and ignored otherwise.
     pub queue_depth: usize,
-    /// Worker threads for batch execution (0 = size to the host).
+    /// Worker threads (0 = size to the host). Closed-loop: batch
+    /// execution fan-out. Timed: background recompile only — execution
+    /// is inline (single simulated device).
     pub workers: usize,
+    /// `Some(..)` runs the simulated-clock scheduler; `None` is the
+    /// legacy closed-loop path, preserved bit-for-bit.
+    pub timed: Option<TimedConfig>,
 }
 
 impl Default for ServeConfig {
     fn default() -> ServeConfig {
-        ServeConfig { max_batch: 8, queue_depth: 64, workers: 0 }
+        ServeConfig {
+            max_batch: 8,
+            queue_depth: 64,
+            workers: 0,
+            timed: None,
+        }
     }
 }
 
@@ -58,6 +201,8 @@ pub struct ModelStats {
     pub max_batch_seen: usize,
     /// Total service time across this model's batches, seconds.
     pub busy_s: f64,
+    /// Requests of this model shed by policy (timed mode; 0 otherwise).
+    pub shed: usize,
     pub lat_min_s: f64,
     pub lat_mean_s: f64,
     pub lat_p50_s: f64,
@@ -79,6 +224,39 @@ impl ModelStats {
     }
 }
 
+/// One hot-swap decision, stamped with the simulated clock.
+#[derive(Clone, Debug)]
+pub struct SwapStats {
+    pub model: String,
+    pub old_batch1_s: f64,
+    pub new_batch1_s: f64,
+    pub accepted: bool,
+    /// Simulated time at which the decision was applied, seconds.
+    pub at_s: f64,
+}
+
+/// Timed-mode observables. Latencies here are arrival→completion on the
+/// simulated clock (response time), not bare service time — the number
+/// an SLO is written against.
+#[derive(Clone, Debug)]
+pub struct TimedStats {
+    pub policy: Policy,
+    /// Requests shed by policy; equals `ServeStats::dropped`.
+    pub shed: usize,
+    /// Completed requests that finished after their deadline.
+    pub deadline_misses: usize,
+    pub tier0_completed: usize,
+    pub tier0_misses: usize,
+    /// Response-time percentiles over all completed requests.
+    pub lat_p50_s: f64,
+    pub lat_p99_s: f64,
+    /// p99 over the strict-SLO tier only (what the traffic bench gates).
+    pub tier0_p99_s: f64,
+    /// Simulated clock when the last batch finished, seconds.
+    pub sim_end_s: f64,
+    pub swaps: Vec<SwapStats>,
+}
+
 #[derive(Clone, Debug)]
 pub struct ServeStats {
     pub executor: String,
@@ -86,11 +264,13 @@ pub struct ServeStats {
     pub queue_depth: usize,
     pub requests: usize,
     pub completed: usize,
-    /// Requests admitted but never answered. Structurally zero — requests
-    /// only leave a queue into a batch — and reported so the serving
-    /// acceptance ("zero dropped") is an observable, not an assumption.
+    /// Requests admitted but never answered. Closed-loop: structurally
+    /// zero — requests only leave a queue into a batch — and reported so
+    /// the serving acceptance ("zero dropped") is an observable, not an
+    /// assumption. Timed: the shed count — a policy observable.
     pub dropped: usize,
-    /// Times the arrival stream stalled on a full queue.
+    /// Times the arrival stream stalled on a full queue (closed-loop
+    /// only; timed arrivals are open-loop and never stall).
     pub backpressure_stalls: usize,
     pub batches: usize,
     /// Total service time as if batches ran back-to-back on one device,
@@ -106,6 +286,10 @@ pub struct ServeStats {
     /// serving the same workload identically produce the same digest.
     pub workload_digest: u64,
     pub per_model: BTreeMap<String, ModelStats>,
+    /// Present iff the timed scheduler ran. Legacy serializations carry
+    /// no `timed` key (and no per-model `shed` key) — byte-compatible
+    /// with every stats file written before the simulated clock existed.
+    pub timed: Option<TimedStats>,
 }
 
 impl ServeStats {
@@ -123,25 +307,26 @@ impl ServeStats {
             .per_model
             .iter()
             .map(|(name, m)| {
-                (
-                    name.clone(),
-                    obj(vec![
-                        ("completed", num(m.completed as f64)),
-                        ("batches", num(m.batches as f64)),
-                        ("mean_batch", num(m.mean_batch())),
-                        ("max_batch", num(m.max_batch_seen as f64)),
-                        ("busy_ms", num(m.busy_s * 1e3)),
-                        ("throughput_rps", num(m.throughput_rps())),
-                        ("lat_min_ms", num(m.lat_min_s * 1e3)),
-                        ("lat_mean_ms", num(m.lat_mean_s * 1e3)),
-                        ("lat_p50_ms", num(m.lat_p50_s * 1e3)),
-                        ("lat_p99_ms", num(m.lat_p99_s * 1e3)),
-                        ("lat_max_ms", num(m.lat_max_s * 1e3)),
-                    ]),
-                )
+                let mut fields = vec![
+                    ("completed", num(m.completed as f64)),
+                    ("batches", num(m.batches as f64)),
+                    ("mean_batch", num(m.mean_batch())),
+                    ("max_batch", num(m.max_batch_seen as f64)),
+                    ("busy_ms", num(m.busy_s * 1e3)),
+                    ("throughput_rps", num(m.throughput_rps())),
+                    ("lat_min_ms", num(m.lat_min_s * 1e3)),
+                    ("lat_mean_ms", num(m.lat_mean_s * 1e3)),
+                    ("lat_p50_ms", num(m.lat_p50_s * 1e3)),
+                    ("lat_p99_ms", num(m.lat_p99_s * 1e3)),
+                    ("lat_max_ms", num(m.lat_max_s * 1e3)),
+                ];
+                if self.timed.is_some() {
+                    fields.push(("shed", num(m.shed as f64)));
+                }
+                (name.clone(), obj(fields))
             })
             .collect();
-        obj(vec![
+        let mut top = vec![
             ("executor", s(&self.executor)),
             ("max_batch", num(self.max_batch as f64)),
             ("queue_depth", num(self.queue_depth as f64)),
@@ -155,20 +340,57 @@ impl ServeStats {
             // hex: a u64 does not survive the JSON number grammar
             ("workload_digest", s(&format!("{:016x}", self.workload_digest))),
             ("models", Json::Obj(models)),
-        ])
+        ];
+        if let Some(t) = &self.timed {
+            let swaps = t
+                .swaps
+                .iter()
+                .map(|sw| {
+                    obj(vec![
+                        ("model", s(&sw.model)),
+                        ("old_batch1_ms", num(sw.old_batch1_s * 1e3)),
+                        ("new_batch1_ms", num(sw.new_batch1_s * 1e3)),
+                        ("accepted", Json::Bool(sw.accepted)),
+                        ("at_ms", num(sw.at_s * 1e3)),
+                    ])
+                })
+                .collect();
+            top.push((
+                "timed",
+                obj(vec![
+                    ("policy", s(t.policy.as_str())),
+                    ("shed", num(t.shed as f64)),
+                    ("deadline_misses", num(t.deadline_misses as f64)),
+                    ("tier0_completed", num(t.tier0_completed as f64)),
+                    ("tier0_misses", num(t.tier0_misses as f64)),
+                    ("lat_p50_ms", num(t.lat_p50_s * 1e3)),
+                    ("lat_p99_ms", num(t.lat_p99_s * 1e3)),
+                    ("tier0_p99_ms", num(t.tier0_p99_s * 1e3)),
+                    ("sim_end_ms", num(t.sim_end_s * 1e3)),
+                    ("swaps", Json::Arr(swaps)),
+                ]),
+            ));
+        }
+        obj(top)
     }
 }
 
 pub struct ServeOutcome {
     /// All responses, in completion order (deterministic: batch
-    /// formation order, request order within each batch).
+    /// formation order, request order within each batch). In timed mode
+    /// `latency_s` is the arrival→completion response time.
     pub responses: Vec<Response>,
+    /// Requests shed by policy, in shed order (always empty outside
+    /// `Policy::EdfShed`). `responses` and `shed` together account for
+    /// every submitted request exactly once.
+    pub shed: Vec<Request>,
     pub stats: ServeStats,
 }
 
 /// Serve a workload to completion. Fails fast if any request names a
 /// model with no registered plan (serving must never silently drop), or
-/// if the executor reports an execution error.
+/// if the executor reports an execution error. `cfg.timed` selects the
+/// scheduling mode; see the module docs.
 pub fn serve(
     registry: &PlanRegistry,
     cfg: &ServeConfig,
@@ -182,6 +404,20 @@ pub fn serve(
             return Err(anyhow!("no plan registered for model {m:?}"));
         }
     }
+    match &cfg.timed {
+        None => serve_closed(registry, cfg, exec, requests, models),
+        Some(tc) => serve_timed(registry, cfg, tc, exec, requests, models),
+    }
+}
+
+/// The legacy closed-loop scheduler, bit-for-bit.
+fn serve_closed(
+    registry: &PlanRegistry,
+    cfg: &ServeConfig,
+    exec: Arc<dyn Executor>,
+    requests: Vec<Request>,
+    models: BTreeSet<String>,
+) -> Result<ServeOutcome> {
     let max_batch = cfg.max_batch.max(1);
     let queue_depth = cfg.queue_depth.max(1);
     let pool = if cfg.workers == 0 {
@@ -202,6 +438,9 @@ pub fn serve(
     let mut serial_s = 0.0f64;
     // per model: (batches, busy seconds, max batch seen)
     let mut busy: BTreeMap<String, (usize, f64, usize)> = BTreeMap::new();
+    // per model latencies, accumulated in collection order — one pass,
+    // not an O(models · responses) end-of-serve refilter
+    let mut lats: BTreeMap<String, Vec<f64>> = BTreeMap::new();
 
     while arrivals.peek().is_some()
         || queues.values().any(|q| !q.is_empty())
@@ -241,24 +480,38 @@ pub fn serve(
         }
         // execution fan-out; map() returns results in submission order,
         // so collection below is worker-count independent
+        let meta: Vec<(String, usize)> = wave
+            .iter()
+            .map(|(p, b)| (p.model.clone(), b.len()))
+            .collect();
         let ex = Arc::clone(&exec);
         let results = pool.map(wave, move |(plan, batch)| {
             ex.execute_batch(&plan, &batch)
         });
-        for res in results {
+        for ((model, batch_len), res) in meta.into_iter().zip(results) {
             let rs = res?;
             if rs.is_empty() {
-                continue;
+                // an executor that swallows a batch would undercount
+                // `completed` without tripping any observable
+                bail!(
+                    "executor {:?} returned no responses for a \
+                     non-empty batch of {batch_len} requests on model \
+                     {model:?}",
+                    exec.name()
+                );
             }
             // batch service time: each response carries its share, so
             // the sum is the batch's total regardless of backend
             let batch_time: f64 = rs.iter().map(|r| r.latency_s).sum();
             serial_s += batch_time;
             batches_total += 1;
-            let e = busy.entry(rs[0].model.clone()).or_insert((0, 0.0, 0));
+            let e = busy.entry(model.clone()).or_insert((0, 0.0, 0));
             e.0 += 1;
             e.1 += batch_time;
             e.2 = e.2.max(rs.len());
+            lats.entry(model)
+                .or_default()
+                .extend(rs.iter().map(|r| r.latency_s));
             responses.extend(rs);
         }
     }
@@ -266,30 +519,24 @@ pub fn serve(
 
     let mut per_model = BTreeMap::new();
     for (name, (batches, busy_s, max_batch_seen)) in busy {
-        let lats: Vec<f64> = responses
-            .iter()
-            .filter(|r| r.model == name)
-            .map(|r| r.latency_s)
-            .collect();
+        let l = lats.remove(&name).unwrap_or_default();
         per_model.insert(
             name,
             ModelStats {
-                completed: lats.len(),
+                completed: l.len(),
                 batches,
                 max_batch_seen,
                 busy_s,
-                lat_min_s: lats.iter().cloned().fold(f64::INFINITY, f64::min),
-                lat_mean_s: stats::mean(&lats),
-                lat_p50_s: stats::percentile(&lats, 50.0),
-                lat_p99_s: stats::percentile(&lats, 99.0),
-                lat_max_s: lats.iter().cloned().fold(0.0, f64::max),
+                shed: 0,
+                lat_min_s: l.iter().cloned().fold(f64::INFINITY, f64::min),
+                lat_mean_s: stats::mean(&l),
+                lat_p50_s: stats::percentile(&l, 50.0),
+                lat_p99_s: stats::percentile(&l, 99.0),
+                lat_max_s: l.iter().cloned().fold(0.0, f64::max),
             },
         );
     }
-    let workload_digest = responses.iter().fold(0u64, |acc, r| {
-        let mut x = r.checksum ^ r.id.rotate_left(17);
-        acc ^ splitmix64(&mut x)
-    });
+    let workload_digest = digest(&responses);
     let completed = responses.len();
     let stats = ServeStats {
         executor: exec.name().to_string(),
@@ -304,15 +551,380 @@ pub fn serve(
         wall_s,
         workload_digest,
         per_model,
+        timed: None,
     };
-    Ok(ServeOutcome { responses, stats })
+    Ok(ServeOutcome { responses, shed: Vec::new(), stats })
+}
+
+fn digest(responses: &[Response]) -> u64 {
+    responses.iter().fold(0u64, |acc, r| {
+        let mut x = r.checksum ^ r.id.rotate_left(17);
+        acc ^ splitmix64(&mut x)
+    })
+}
+
+/// EDF queue ordering key. Deadlines are validated non-negative, so the
+/// IEEE-754 bit pattern orders like the float; the globally unique id
+/// breaks ties, making the key total.
+fn edf_key(r: &Request) -> (u64, u64) {
+    (r.deadline_s.to_bits(), r.id)
+}
+
+/// Insert into a model queue in policy order; under `EdfShed`, an
+/// overfull queue evicts its worst entry (lowest priority tier first,
+/// then latest deadline, then newest) into `shed` — fair-share
+/// admission: one hot model cannot grow past its bound.
+fn enqueue(
+    q: &mut VecDeque<Request>,
+    r: Request,
+    policy: Policy,
+    queue_depth: usize,
+    shed: &mut Vec<Request>,
+) {
+    match policy {
+        Policy::RoundRobin => {
+            let pos = q.partition_point(|x| x.id <= r.id);
+            q.insert(pos, r);
+        }
+        Policy::Edf | Policy::EdfShed => {
+            let key = edf_key(&r);
+            let pos = q.partition_point(|x| edf_key(x) <= key);
+            q.insert(pos, r);
+        }
+    }
+    if policy == Policy::EdfShed && q.len() > queue_depth {
+        let worst = (0..q.len())
+            .max_by_key(|&j| (q[j].tier, edf_key(&q[j])))
+            .expect("non-empty queue");
+        shed.push(q.remove(worst).expect("index in bounds"));
+    }
+}
+
+/// The simulated-clock scheduler. See the module docs for the policy
+/// contract and the determinism argument.
+fn serve_timed(
+    registry: &PlanRegistry,
+    cfg: &ServeConfig,
+    tc: &TimedConfig,
+    exec: Arc<dyn Executor>,
+    requests: Vec<Request>,
+    models: BTreeSet<String>,
+) -> Result<ServeOutcome> {
+    for r in &requests {
+        if !(r.arrival_s >= 0.0) || r.deadline_s.is_nan() {
+            bail!(
+                "request {} has invalid clock fields (arrival {}, \
+                 deadline {})",
+                r.id,
+                r.arrival_s,
+                r.deadline_s
+            );
+        }
+    }
+    let max_batch = cfg.max_batch.max(1);
+    let queue_depth = cfg.queue_depth.max(1);
+    let policy = tc.policy;
+    let model_names: Vec<String> = models.iter().cloned().collect();
+
+    let t0 = Instant::now();
+    let n_requests = requests.len();
+    let mut reqs = requests;
+    reqs.sort_by_key(|r| (r.arrival_s.to_bits(), r.id));
+    let last_arrival = reqs.last().map(|r| r.arrival_s).unwrap_or(0.0);
+
+    // background recompile: one task per served model on the pool; the
+    // channel collects (model, candidate) in completion order, the join
+    // below re-sorts into model order so the swap set is deterministic
+    let mut swap_join: Option<(
+        mpsc::Receiver<(String, Option<LoadedPlan>)>,
+        usize,
+    )> = None;
+    let _pool; // keeps recompile workers alive for the whole serve
+    let swap_at = if let Some(hs) = &tc.hot_swap {
+        let pool = if cfg.workers == 0 {
+            ThreadPool::for_host()
+        } else {
+            ThreadPool::new(cfg.workers)
+        };
+        let (tx, rx) = mpsc::channel();
+        for m in &model_names {
+            let tx = tx.clone();
+            let recompile = Arc::clone(&hs.recompile);
+            let m = m.clone();
+            pool.execute(move || {
+                let cand = recompile(&m);
+                let _ = tx.send((m, cand));
+            });
+        }
+        swap_join = Some((rx, model_names.len()));
+        _pool = Some(pool);
+        hs.at_frac * last_arrival
+    } else {
+        _pool = None;
+        f64::INFINITY
+    };
+    let mut swap_pending = swap_join.is_some();
+    let mut swaps: Vec<SwapStats> = Vec::new();
+    let mut apply_swaps = |t_now: f64,
+                           swaps: &mut Vec<SwapStats>|
+     -> Result<()> {
+        let (rx, n) = swap_join.take().expect("join armed");
+        let hs = tc.hot_swap.as_ref().expect("hot-swap configured");
+        let mut got: BTreeMap<String, Option<LoadedPlan>> = BTreeMap::new();
+        for _ in 0..n {
+            let (m, cand) = rx.recv().map_err(|_| {
+                anyhow!("a hot-swap recompile task died without a result")
+            })?;
+            got.insert(m, cand);
+        }
+        for (_, cand) in got {
+            let Some(lp) = cand else { continue };
+            let out = registry.hot_swap(lp, hs.margin)?;
+            swaps.push(SwapStats {
+                model: out.model,
+                old_batch1_s: out.old_batch1_s,
+                new_batch1_s: out.new_batch1_s,
+                accepted: out.accepted,
+                at_s: t_now,
+            });
+        }
+        Ok(())
+    };
+
+    let mut queues: BTreeMap<String, VecDeque<Request>> = models
+        .iter()
+        .map(|m| (m.clone(), VecDeque::new()))
+        .collect();
+    let mut arrivals = reqs.into_iter().peekable();
+    let mut t = 0.0f64;
+    let mut rr_cursor = 0usize;
+    let mut responses: Vec<Response> = Vec::with_capacity(n_requests);
+    let mut shed: Vec<Request> = Vec::new();
+    let mut batches_total = 0usize;
+    let mut serial_s = 0.0f64;
+    let mut busy: BTreeMap<String, (usize, f64, usize)> = BTreeMap::new();
+    let mut lats: BTreeMap<String, Vec<f64>> = BTreeMap::new();
+    let mut all_lats: Vec<f64> = Vec::with_capacity(n_requests);
+    let mut tier0_lats: Vec<f64> = Vec::new();
+    let mut misses = 0usize;
+    let mut tier0_misses = 0usize;
+    let mut tier0_completed = 0usize;
+
+    while arrivals.peek().is_some()
+        || queues.values().any(|q| !q.is_empty())
+    {
+        if queues.values().all(|q| q.is_empty()) {
+            // idle: jump the clock to the next arrival
+            t = t.max(arrivals.peek().expect("loop invariant").arrival_s);
+        }
+        while arrivals
+            .peek()
+            .map_or(false, |r| r.arrival_s <= t)
+        {
+            let r = arrivals.next().expect("peeked");
+            let q = queues.get_mut(&r.model).expect("validated above");
+            enqueue(q, r, policy, queue_depth, &mut shed);
+        }
+        if queues.values().all(|q| q.is_empty()) {
+            continue; // everything admitted at t was evicted
+        }
+        // deterministic activation: the recompile results join at the
+        // first formation point past swap_at — between batches, never
+        // inside one, and at the same simulated instant on every run
+        if swap_pending && t >= swap_at {
+            swap_pending = false;
+            apply_swaps(t, &mut swaps)?;
+        }
+        // pick the model to serve
+        let m: String = match policy {
+            Policy::RoundRobin => {
+                let k = model_names.len();
+                let mut chosen = None;
+                for off in 0..k {
+                    let name = &model_names[(rr_cursor + off) % k];
+                    if !queues[name].is_empty() {
+                        rr_cursor = (rr_cursor + off + 1) % k;
+                        chosen = Some(name.clone());
+                        break;
+                    }
+                }
+                chosen.expect("some queue is non-empty")
+            }
+            Policy::Edf | Policy::EdfShed => model_names
+                .iter()
+                .filter(|name| !queues[*name].is_empty())
+                .min_by_key(|name| edf_key(&queues[*name][0]))
+                .expect("some queue is non-empty")
+                .clone(),
+        };
+        // fetch the plan at formation time: a hot-swap applied above is
+        // visible from this batch on; in-flight Arcs are never touched
+        let plan = registry.get(&m).expect("validated above");
+        let b1 = plan.sim.batch_seconds(1);
+        let q = queues.get_mut(&m).expect("validated above");
+        if policy == Policy::EdfShed {
+            // shed what cannot meet its deadline even in a batch of one
+            while q.front().map_or(false, |r| r.deadline_s < t + b1) {
+                shed.push(q.pop_front().expect("checked non-empty"));
+            }
+            if q.is_empty() {
+                continue;
+            }
+        }
+        // batch formation
+        let mut batch = vec![q.pop_front().expect("checked non-empty")];
+        match policy {
+            Policy::RoundRobin => {
+                while batch.len() < max_batch {
+                    let Some(r) = q.pop_front() else { break };
+                    batch.push(r);
+                }
+            }
+            Policy::Edf | Policy::EdfShed => {
+                // the tightest deadline still meetable at formation
+                // time; already-late members do NOT constrain growth, so
+                // a backlogged batch still fills to max_batch
+                let mut constraint = if t + b1 <= batch[0].deadline_s {
+                    batch[0].deadline_s
+                } else {
+                    f64::INFINITY
+                };
+                while !q.is_empty() && batch.len() < max_batch {
+                    let cand_deadline =
+                        q.front().expect("checked non-empty").deadline_s;
+                    let fin = t + plan.sim.batch_seconds(batch.len() + 1);
+                    if fin > constraint {
+                        break;
+                    }
+                    if fin > cand_deadline && t + b1 <= cand_deadline {
+                        // meetable solo; admitting it here would turn a
+                        // hit into a miss
+                        break;
+                    }
+                    batch.push(q.pop_front().expect("checked non-empty"));
+                    if fin <= cand_deadline {
+                        constraint = constraint.min(cand_deadline);
+                    }
+                }
+            }
+        }
+        // execute inline: the simulated SoC is a single device, so the
+        // clock advances by exactly one batch at a time and results are
+        // worker-count independent by construction
+        let rs = exec.execute_batch(&plan, &batch)?;
+        if rs.len() != batch.len() {
+            bail!(
+                "executor {:?} returned {} responses for a batch of {} \
+                 requests on model {m:?}",
+                exec.name(),
+                rs.len(),
+                batch.len()
+            );
+        }
+        let svc: f64 = rs.iter().map(|r| r.latency_s).sum();
+        let end = t + svc;
+        serial_s += svc;
+        batches_total += 1;
+        let e = busy.entry(m.clone()).or_insert((0, 0.0, 0));
+        e.0 += 1;
+        e.1 += svc;
+        e.2 = e.2.max(rs.len());
+        let lv = lats.entry(m).or_default();
+        for (req, mut resp) in batch.into_iter().zip(rs) {
+            // response time: queueing + service on the simulated clock
+            let lat = end - req.arrival_s;
+            resp.latency_s = lat;
+            all_lats.push(lat);
+            lv.push(lat);
+            if end > req.deadline_s {
+                misses += 1;
+                if req.tier == 0 {
+                    tier0_misses += 1;
+                }
+            }
+            if req.tier == 0 {
+                tier0_completed += 1;
+                tier0_lats.push(lat);
+            }
+            responses.push(resp);
+        }
+        t = end;
+    }
+    if swap_pending {
+        // trace ended before the activation point; join for reporting
+        apply_swaps(t, &mut swaps)?;
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+
+    let mut shed_by_model: BTreeMap<&str, usize> = BTreeMap::new();
+    for r in &shed {
+        *shed_by_model.entry(r.model.as_str()).or_default() += 1;
+    }
+    let mut per_model = BTreeMap::new();
+    for name in &model_names {
+        let (batches, busy_s, max_batch_seen) =
+            busy.get(name).copied().unwrap_or((0, 0.0, 0));
+        let l = lats.remove(name).unwrap_or_default();
+        per_model.insert(
+            name.clone(),
+            ModelStats {
+                completed: l.len(),
+                batches,
+                max_batch_seen,
+                busy_s,
+                shed: shed_by_model.get(name.as_str()).copied().unwrap_or(0),
+                lat_min_s: if l.is_empty() {
+                    0.0
+                } else {
+                    l.iter().cloned().fold(f64::INFINITY, f64::min)
+                },
+                lat_mean_s: stats::mean(&l),
+                lat_p50_s: stats::percentile(&l, 50.0),
+                lat_p99_s: stats::percentile(&l, 99.0),
+                lat_max_s: l.iter().cloned().fold(0.0, f64::max),
+            },
+        );
+    }
+    let workload_digest = digest(&responses);
+    let completed = responses.len();
+    debug_assert_eq!(completed + shed.len(), n_requests);
+    let timed = TimedStats {
+        policy,
+        shed: shed.len(),
+        deadline_misses: misses,
+        tier0_completed,
+        tier0_misses,
+        lat_p50_s: stats::percentile(&all_lats, 50.0),
+        lat_p99_s: stats::percentile(&all_lats, 99.0),
+        tier0_p99_s: stats::percentile(&tier0_lats, 99.0),
+        sim_end_s: t,
+        swaps,
+    };
+    let stats = ServeStats {
+        executor: exec.name().to_string(),
+        max_batch,
+        queue_depth,
+        requests: n_requests,
+        completed,
+        dropped: shed.len(),
+        backpressure_stalls: 0,
+        batches: batches_total,
+        serial_s,
+        wall_s,
+        workload_digest,
+        per_model,
+        timed: Some(timed),
+    };
+    Ok(ServeOutcome { responses, shed, stats })
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::serve::testutil::toy_plan;
-    use crate::serve::{mixed_workload, SimExecutor};
+    use crate::serve::{
+        bursty_workload, mixed_workload, SimExecutor, TrafficConfig,
+    };
 
     fn two_model_registry() -> PlanRegistry {
         let mut reg = PlanRegistry::new();
@@ -322,19 +934,45 @@ mod tests {
         reg
     }
 
+    /// Mean batch-1 capacity of the registry, requests per second — the
+    /// knee rate the SLO tests are calibrated against.
+    fn knee_rps(reg: &PlanRegistry) -> f64 {
+        let b1: Vec<f64> = reg
+            .models()
+            .iter()
+            .map(|m| reg.get(m).unwrap().sim.batch_seconds(1))
+            .collect();
+        b1.len() as f64 / b1.iter().sum::<f64>()
+    }
+
+    fn timed_cfg(policy: Policy) -> ServeConfig {
+        ServeConfig {
+            max_batch: 8,
+            queue_depth: 64,
+            workers: 1,
+            timed: Some(TimedConfig { policy, hot_swap: None }),
+        }
+    }
+
     #[test]
     fn serves_everything_exactly_once() {
         let reg = two_model_registry();
         let wl = mixed_workload(&reg.models(), 300, 7);
         let out = serve(
             &reg,
-            &ServeConfig { max_batch: 8, queue_depth: 16, workers: 2 },
+            &ServeConfig {
+                max_batch: 8,
+                queue_depth: 16,
+                workers: 2,
+                timed: None,
+            },
             Arc::new(SimExecutor),
             wl,
         )
         .unwrap();
         assert_eq!(out.stats.completed, 300);
         assert_eq!(out.stats.dropped, 0);
+        assert!(out.shed.is_empty());
         let mut ids: Vec<u64> = out.responses.iter().map(|r| r.id).collect();
         ids.sort_unstable();
         assert_eq!(ids, (0..300).collect::<Vec<u64>>());
@@ -363,11 +1001,7 @@ mod tests {
     #[test]
     fn unknown_model_fails_fast() {
         let reg = two_model_registry();
-        let wl = vec![Request {
-            id: 0,
-            model: "GPT-17".to_string(),
-            seed: 1,
-        }];
+        let wl = vec![Request::closed(0, "GPT-17", 1)];
         let err = serve(
             &reg,
             &ServeConfig::default(),
@@ -384,7 +1018,12 @@ mod tests {
         let wl = mixed_workload(&reg.models(), 200, 11);
         let out = serve(
             &reg,
-            &ServeConfig { max_batch: 4, queue_depth: 1, workers: 1 },
+            &ServeConfig {
+                max_batch: 4,
+                queue_depth: 1,
+                workers: 1,
+                timed: None,
+            },
             Arc::new(SimExecutor),
             wl,
         )
@@ -403,7 +1042,12 @@ mod tests {
     fn stats_json_is_deterministic_and_wall_free() {
         let reg = two_model_registry();
         let wl = mixed_workload(&reg.models(), 400, 3);
-        let cfg = ServeConfig { max_batch: 8, queue_depth: 32, workers: 0 };
+        let cfg = ServeConfig {
+            max_batch: 8,
+            queue_depth: 32,
+            workers: 0,
+            timed: None,
+        };
         let a = serve(&reg, &cfg, Arc::new(SimExecutor), wl.clone()).unwrap();
         let b = serve(&reg, &cfg, Arc::new(SimExecutor), wl).unwrap();
         let ja = a.stats.to_json().pretty();
@@ -415,6 +1059,9 @@ mod tests {
         // sanity of the serialized surface the CI smoke greps for
         assert!(ja.contains("\"completed\": 400"), "{ja}");
         assert!(ja.contains("\"dropped\": 0"), "{ja}");
+        // legacy serializations must not grow timed-mode keys
+        assert!(!ja.contains("\"timed\""), "{ja}");
+        assert!(!ja.contains("\"shed\""), "{ja}");
         // wall time itself is still measured
         assert!(a.stats.wall_s > 0.0);
     }
@@ -426,7 +1073,12 @@ mod tests {
         let run = |max_batch| {
             serve(
                 &reg,
-                &ServeConfig { max_batch, queue_depth: 64, workers: 2 },
+                &ServeConfig {
+                    max_batch,
+                    queue_depth: 64,
+                    workers: 2,
+                    timed: None,
+                },
                 Arc::new(SimExecutor),
                 wl.clone(),
             )
@@ -444,5 +1096,180 @@ mod tests {
         // same work either way
         assert_eq!(b1.completed, b16.completed);
         assert_eq!(b1.workload_digest, b16.workload_digest);
+    }
+
+    // ---- timed (simulated clock) mode --------------------------------
+
+    #[test]
+    fn calm_trace_meets_every_deadline_under_edf() {
+        let reg = two_model_registry();
+        let knee = knee_rps(&reg);
+        let cfg = TrafficConfig {
+            rate_rps: 0.4 * knee,
+            slo_s: 20.0 / knee,
+            diurnal_amp: 0.3,
+            burst_prob: 0.0,
+            ..Default::default()
+        };
+        let wl = bursty_workload(&reg.models(), 1000, 101, &cfg);
+        for policy in [Policy::Edf, Policy::EdfShed] {
+            let out = serve(
+                &reg,
+                &timed_cfg(policy),
+                Arc::new(SimExecutor),
+                wl.clone(),
+            )
+            .unwrap();
+            let t = out.stats.timed.as_ref().unwrap();
+            assert_eq!(out.stats.completed, 1000, "{policy:?}");
+            assert_eq!(t.deadline_misses, 0, "{policy:?}");
+            assert_eq!(t.shed, 0, "{policy:?}");
+        }
+    }
+
+    #[test]
+    fn edf_shed_accounts_for_every_request_under_overload() {
+        let reg = two_model_registry();
+        let knee = knee_rps(&reg);
+        let cfg = TrafficConfig {
+            rate_rps: 3.0 * knee,
+            slo_s: 8.0 / knee,
+            burst_prob: 0.05,
+            burst_max: 96,
+            ..Default::default()
+        };
+        let wl = bursty_workload(&reg.models(), 1200, 303, &cfg);
+        let mut sc = timed_cfg(Policy::EdfShed);
+        sc.queue_depth = 32;
+        let out =
+            serve(&reg, &sc, Arc::new(SimExecutor), wl).unwrap();
+        let t = out.stats.timed.as_ref().unwrap();
+        assert!(t.shed > 0, "3x-knee overload must shed");
+        assert_eq!(out.stats.dropped, t.shed);
+        assert_eq!(out.stats.completed + out.shed.len(), 1200);
+        let mut ids: Vec<u64> = out
+            .responses
+            .iter()
+            .map(|r| r.id)
+            .chain(out.shed.iter().map(|r| r.id))
+            .collect();
+        ids.sort_unstable();
+        assert_eq!(ids, (0..1200).collect::<Vec<u64>>());
+        // the completed set met its deadlines — that is what shedding buys
+        assert_eq!(t.deadline_misses, 0);
+        // per-model shed counts roll up to the total
+        let s: usize =
+            out.stats.per_model.values().map(|m| m.shed).sum();
+        assert_eq!(s, t.shed);
+    }
+
+    #[test]
+    fn timed_stats_json_carries_the_timed_block() {
+        let reg = two_model_registry();
+        let knee = knee_rps(&reg);
+        let cfg = TrafficConfig {
+            rate_rps: knee,
+            slo_s: 10.0 / knee,
+            ..Default::default()
+        };
+        let wl = bursty_workload(&reg.models(), 300, 9, &cfg);
+        let out = serve(
+            &reg,
+            &timed_cfg(Policy::Edf),
+            Arc::new(SimExecutor),
+            wl,
+        )
+        .unwrap();
+        let j = out.stats.to_json().pretty();
+        assert!(j.contains("\"timed\""), "{j}");
+        assert!(j.contains("\"policy\": \"edf\""), "{j}");
+        assert!(j.contains("\"tier0_p99_ms\""), "{j}");
+        assert!(j.contains("\"shed\""), "{j}");
+        assert!(!j.contains("wall"), "{j}");
+    }
+
+    #[test]
+    fn hot_swap_applies_at_the_activation_point_and_respects_margin() {
+        let reg = two_model_registry();
+        let knee = knee_rps(&reg);
+        let tcfg = TrafficConfig {
+            rate_rps: 1.5 * knee,
+            slo_s: 20.0 / knee,
+            ..Default::default()
+        };
+        let wl = bursty_workload(&reg.models(), 800, 21, &tcfg);
+        let base = serve(
+            &reg,
+            &timed_cfg(Policy::Edf),
+            Arc::new(SimExecutor),
+            wl.clone(),
+        )
+        .unwrap();
+        // 30% faster candidates clear the 20% margin
+        let faster = |m: &str| -> Option<LoadedPlan> {
+            match m {
+                "MBN" => {
+                    Some(toy_plan("MBN", "kirin990", &[21.0, 63.0, 31.5]))
+                }
+                "SQN" => Some(toy_plan("SQN", "kirin990", &[42.0, 14.0])),
+                _ => None,
+            }
+        };
+        let mut sc = timed_cfg(Policy::Edf);
+        sc.timed.as_mut().unwrap().hot_swap =
+            Some(HotSwapConfig::new(Arc::new(faster)));
+        let reg2 = two_model_registry();
+        let on = serve(&reg2, &sc, Arc::new(SimExecutor), wl.clone())
+            .unwrap();
+        let ts = on.stats.timed.as_ref().unwrap();
+        assert_eq!(ts.swaps.len(), 2);
+        assert!(ts.swaps.iter().all(|sw| sw.accepted), "{:?}", ts.swaps);
+        // the swap happened mid-trace, not at the end
+        assert!(ts.swaps[0].at_s < ts.sim_end_s);
+        // never-worse: faster plans can only shrink simulated time, and
+        // the served set (digest) is identical — no request disturbed
+        assert!(on.stats.serial_s <= base.stats.serial_s);
+        assert!(ts.lat_p99_s <= base.stats.timed.as_ref().unwrap().lat_p99_s);
+        assert_eq!(on.stats.workload_digest, base.stats.workload_digest);
+        // a 10% improvement is inside the margin: rejected, and the run
+        // is bit-identical to hot-swap disabled
+        let slight = |m: &str| -> Option<LoadedPlan> {
+            match m {
+                "MBN" => {
+                    Some(toy_plan("MBN", "kirin990", &[27.0, 81.0, 40.5]))
+                }
+                "SQN" => Some(toy_plan("SQN", "kirin990", &[54.0, 18.0])),
+                _ => None,
+            }
+        };
+        let mut sc = timed_cfg(Policy::Edf);
+        sc.timed.as_mut().unwrap().hot_swap =
+            Some(HotSwapConfig::new(Arc::new(slight)));
+        let reg3 = two_model_registry();
+        let rej = serve(&reg3, &sc, Arc::new(SimExecutor), wl).unwrap();
+        let tr = rej.stats.timed.as_ref().unwrap();
+        assert!(tr.swaps.iter().all(|sw| !sw.accepted), "{:?}", tr.swaps);
+        // rejected swaps leave responses bit-identical to disabled
+        assert_eq!(rej.responses, base.responses);
+        assert_eq!(rej.stats.workload_digest, base.stats.workload_digest);
+        assert_eq!(
+            rej.stats.serial_s.to_bits(),
+            base.stats.serial_s.to_bits()
+        );
+    }
+
+    #[test]
+    fn invalid_clock_fields_are_rejected() {
+        let reg = two_model_registry();
+        let mut r = Request::closed(0, "MBN", 1);
+        r.arrival_s = -1.0;
+        let err = serve(
+            &reg,
+            &timed_cfg(Policy::Edf),
+            Arc::new(SimExecutor),
+            vec![r],
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("invalid clock"), "{err:#}");
     }
 }

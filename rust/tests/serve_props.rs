@@ -2,25 +2,40 @@
 //! randomized workloads, batch bounds, queue depths, and worker counts:
 //!
 //! - per-model FIFO fairness: a model's responses complete in its
-//!   arrival order
+//!   arrival order (closed-loop mode)
 //! - no batch ever exceeds the configured bound
-//! - no request is dropped or double-executed
+//! - no request is dropped or double-executed; in timed mode, completed
+//!   and shed requests partition the workload under every policy
 //! - with `SimExecutor`, responses AND serialized stats are bit-identical
-//!   between a 1-thread and an N-thread run of the same seed
+//!   between a 1-thread and an N-thread run of the same seed — in both
+//!   scheduling modes, with and without hot-swap
+//! - hot-swap atomicity: an executor only ever observes whole plans,
+//!   with at most one switch point per model, and a margin-rejected
+//!   swap leaves the run bit-identical to hot-swap disabled
+//! - the serialized stats key sets are pinned: legacy serializations
+//!   carry exactly the pre-clock keys, timed ones add exactly `timed`
+//!   and the per-model `shed`
+//! - the scheduling win itself: EDF beats round-robin on strict-tier
+//!   tail latency for an overloaded bursty trace
 //!
 //! Plans are handcrafted (no compile), so these run on any checkout in
 //! milliseconds per case.
 
 use std::collections::BTreeMap;
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
+
+use anyhow::Result;
 
 use ago::coordinator::plan::LoadedPlan;
 use ago::ensure;
 use ago::graph::Partition;
 use ago::serve::{
-    mixed_workload, serve, PlanRegistry, Request, ServeConfig, SimExecutor,
+    bursty_workload, mixed_workload, serve, Executor, HotSwapConfig,
+    PlanRegistry, Policy, Request, Response, ServeConfig, ServingPlan,
+    SimExecutor, TimedConfig, TrafficConfig,
 };
 use ago::tuner::schedule::{FusionGroup, GroupKind, Layout, Schedule, Tile};
+use ago::util::json::Json;
 use ago::util::propkit::forall;
 use ago::util::Rng;
 
@@ -70,6 +85,35 @@ fn random_registry(rng: &mut Rng) -> PlanRegistry {
     reg
 }
 
+/// Mean batch-1 capacity of a registry, requests per second — the knee
+/// rate the timed-mode tests calibrate their traffic against.
+fn knee_rps(reg: &PlanRegistry) -> f64 {
+    let b1: Vec<f64> = reg
+        .models()
+        .iter()
+        .map(|m| reg.get(m).unwrap().sim.batch_seconds(1))
+        .collect();
+    b1.len() as f64 / b1.iter().sum::<f64>()
+}
+
+fn timed_cfg(policy: Policy) -> ServeConfig {
+    ServeConfig {
+        max_batch: 8,
+        queue_depth: 64,
+        workers: 1,
+        timed: Some(TimedConfig { policy, hot_swap: None }),
+    }
+}
+
+/// The bench-scale two-model registry used by the fixed-scenario tests.
+fn bench_registry() -> PlanRegistry {
+    let mut reg = PlanRegistry::new();
+    reg.register(toy_plan("MBN", "kirin990", &[300.0, 900.0, 450.0, 1200.0]))
+        .unwrap();
+    reg.register(toy_plan("SQN", "qsd810", &[600.0, 200.0, 800.0])).unwrap();
+    reg
+}
+
 #[test]
 fn no_drop_no_dup_fifo_and_batch_bound() {
     forall(40, |rng| {
@@ -80,6 +124,7 @@ fn no_drop_no_dup_fifo_and_batch_bound() {
             max_batch: rng.range(1, 10),
             queue_depth: rng.range(1, 20),
             workers: rng.range(1, 5),
+            timed: None,
         };
         let out = serve(&reg, &cfg, Arc::new(SimExecutor), wl.clone())
             .map_err(|e| format!("{e:#}"))?;
@@ -135,6 +180,7 @@ fn sim_results_bit_identical_across_worker_counts() {
             max_batch: rng.range(1, 10),
             queue_depth: rng.range(1, 24),
             workers: 1,
+            timed: None,
         };
         let one = serve(&reg, &base, Arc::new(SimExecutor), wl.clone())
             .map_err(|e| format!("{e:#}"))?;
@@ -182,6 +228,7 @@ fn serve_twice_is_bit_identical() {
             max_batch: rng.range(1, 9),
             queue_depth: rng.range(1, 16),
             workers: 0, // host-sized pool: still deterministic
+            timed: None,
         };
         let a = serve(&reg, &cfg, Arc::new(SimExecutor), wl.clone())
             .map_err(|e| format!("{e:#}"))?;
@@ -209,7 +256,12 @@ fn acceptance_1k_mixed_two_model_workload() {
     let run = |max_batch: usize| {
         serve(
             &reg,
-            &ServeConfig { max_batch, queue_depth: 64, workers: 0 },
+            &ServeConfig {
+                max_batch,
+                queue_depth: 64,
+                workers: 0,
+                timed: None,
+            },
             Arc::new(SimExecutor),
             wl.clone(),
         )
@@ -238,7 +290,7 @@ fn acceptance_1k_mixed_two_model_workload() {
 fn single_request_roundtrip() {
     let mut reg = PlanRegistry::new();
     reg.register(toy_plan("SOLO", "kirin990", &[100.0])).unwrap();
-    let wl = vec![Request { id: 0, model: "SOLO".to_string(), seed: 9 }];
+    let wl = vec![Request::closed(0, "SOLO", 9)];
     let out = serve(
         &reg,
         &ServeConfig::default(),
@@ -250,4 +302,456 @@ fn single_request_roundtrip() {
     assert_eq!(out.responses[0].batch_size, 1);
     assert!(out.responses[0].latency_s > 0.0);
     assert_eq!(out.stats.batches, 1);
+}
+
+// ---- timed (simulated clock) mode -----------------------------------
+
+#[test]
+fn timed_accounting_holds_under_every_policy() {
+    // completed + shed partition the workload for any policy, any trace
+    // intensity — nothing vanishes, nothing is answered twice
+    forall(12, |rng| {
+        let reg = random_registry(rng);
+        let knee = knee_rps(&reg);
+        let n = rng.range(100, 600);
+        let tcfg = TrafficConfig {
+            rate_rps: (0.5 + 2.5 * rng.f64()) * knee,
+            slo_s: (4.0 + 12.0 * rng.f64()) / knee,
+            burst_prob: 0.04,
+            ..Default::default()
+        };
+        let wl = bursty_workload(&reg.models(), n, rng.next_u64(), &tcfg);
+        let max_batch = rng.range(1, 12);
+        let queue_depth = rng.range(4, 48);
+        for policy in [Policy::RoundRobin, Policy::Edf, Policy::EdfShed] {
+            let cfg = ServeConfig {
+                max_batch,
+                queue_depth,
+                workers: 1,
+                timed: Some(TimedConfig { policy, hot_swap: None }),
+            };
+            let out = serve(&reg, &cfg, Arc::new(SimExecutor), wl.clone())
+                .map_err(|e| format!("{e:#}"))?;
+            let t = out.stats.timed.as_ref().expect("timed stats");
+            ensure!(
+                out.stats.completed + out.shed.len() == n,
+                "{policy:?}: {} completed + {} shed != {n}",
+                out.stats.completed,
+                out.shed.len()
+            );
+            ensure!(
+                out.stats.dropped == out.shed.len()
+                    && t.shed == out.shed.len(),
+                "{policy:?}: shed accounting disagrees"
+            );
+            if policy != Policy::EdfShed {
+                ensure!(
+                    out.shed.is_empty(),
+                    "{policy:?} must never shed, shed {}",
+                    out.shed.len()
+                );
+            }
+            // the union of response ids and shed ids is the workload
+            let mut ids: Vec<u64> = out
+                .responses
+                .iter()
+                .map(|r| r.id)
+                .chain(out.shed.iter().map(|r| r.id))
+                .collect();
+            ids.sort_unstable();
+            ensure!(
+                ids == (0..n as u64).collect::<Vec<_>>(),
+                "{policy:?}: completed+shed is not a partition"
+            );
+            // per-model rollups agree with the totals
+            let c: usize =
+                out.stats.per_model.values().map(|m| m.completed).sum();
+            let s: usize =
+                out.stats.per_model.values().map(|m| m.shed).sum();
+            ensure!(c == out.stats.completed, "{policy:?}: completed rollup");
+            ensure!(s == t.shed, "{policy:?}: shed rollup");
+            ensure!(
+                out.responses
+                    .iter()
+                    .all(|r| r.batch_size >= 1 && r.batch_size <= max_batch),
+                "{policy:?}: batch bound violated"
+            );
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn timed_results_bit_identical_across_worker_counts() {
+    // the extended determinism contract: on the simulated clock the
+    // worker pool only hosts background recompiles, so responses and
+    // stats must be bit-identical at any worker count — for every
+    // policy, and with hot-swap enabled (the join is clock-anchored)
+    let reg = bench_registry();
+    let knee = knee_rps(&reg);
+    let tcfg = TrafficConfig {
+        rate_rps: 1.5 * knee,
+        slo_s: 20.0 / knee,
+        ..Default::default()
+    };
+    let wl = bursty_workload(&reg.models(), 800, 42, &tcfg);
+    for policy in [Policy::RoundRobin, Policy::Edf, Policy::EdfShed] {
+        let run = |workers: usize| {
+            let cfg = ServeConfig { workers, ..timed_cfg(policy) };
+            serve(&reg, &cfg, Arc::new(SimExecutor), wl.clone()).unwrap()
+        };
+        let one = run(1);
+        for workers in [4, 8] {
+            let many = run(workers);
+            for (a, b) in one.responses.iter().zip(&many.responses) {
+                assert!(
+                    a.id == b.id
+                        && a.latency_s.to_bits() == b.latency_s.to_bits()
+                        && a.checksum == b.checksum,
+                    "{policy:?}: response diverged at {workers} workers: \
+                     {a:?} vs {b:?}"
+                );
+            }
+            assert_eq!(one.shed, many.shed, "{policy:?} at {workers}");
+            assert_eq!(
+                one.stats.to_json().pretty(),
+                many.stats.to_json().pretty(),
+                "{policy:?}: stats diverged at {workers} workers"
+            );
+        }
+    }
+    // hot-swap enabled: the recompile runs on the pool, but the join is
+    // anchored to the simulated clock — still worker-count independent
+    let faster = |m: &str| -> Option<LoadedPlan> {
+        match m {
+            "MBN" => Some(toy_plan(
+                "MBN",
+                "kirin990",
+                &[210.0, 630.0, 315.0, 840.0],
+            )),
+            "SQN" => Some(toy_plan("SQN", "qsd810", &[420.0, 140.0, 560.0])),
+            _ => None,
+        }
+    };
+    let run_hs = |workers: usize| {
+        let reg = bench_registry(); // fresh: an accepted swap mutates it
+        let mut cfg = ServeConfig { workers, ..timed_cfg(Policy::Edf) };
+        cfg.timed.as_mut().unwrap().hot_swap =
+            Some(HotSwapConfig::new(Arc::new(faster)));
+        serve(&reg, &cfg, Arc::new(SimExecutor), wl.clone()).unwrap()
+    };
+    let one = run_hs(1);
+    assert!(
+        one.stats
+            .timed
+            .as_ref()
+            .unwrap()
+            .swaps
+            .iter()
+            .any(|sw| sw.accepted),
+        "the 30%-faster candidates must clear the margin"
+    );
+    for workers in [4, 8] {
+        let many = run_hs(workers);
+        assert_eq!(one.responses, many.responses, "hot-swap at {workers}");
+        assert_eq!(
+            one.stats.to_json().pretty(),
+            many.stats.to_json().pretty(),
+            "hot-swap stats diverged at {workers} workers"
+        );
+    }
+}
+
+/// Wraps the simulated backend and records a whole-plan signature per
+/// executed batch — the probe for the "no torn plan" property.
+#[derive(Default)]
+struct RecordingExecutor {
+    /// (model, signature of every subgraph latency bit) per batch, in
+    /// execution order.
+    seen: Mutex<Vec<(String, u64)>>,
+}
+
+impl Executor for RecordingExecutor {
+    fn name(&self) -> &'static str {
+        "sim"
+    }
+
+    fn execute_batch(
+        &self,
+        plan: &ServingPlan,
+        batch: &[Request],
+    ) -> Result<Vec<Response>> {
+        let sig = plan
+            .plan
+            .subgraph_latency
+            .iter()
+            .fold(0xcbf29ce484222325u64, |acc, l| {
+                (acc ^ l.to_bits()).wrapping_mul(0x100000001b3)
+            });
+        self.seen.lock().unwrap().push((plan.model.clone(), sig));
+        SimExecutor.execute_batch(plan, batch)
+    }
+}
+
+/// Collapse each model's per-batch signature stream into its run-length
+/// shape: a torn or flapping plan shows up as more than one transition.
+fn signature_runs(seen: &[(String, u64)]) -> BTreeMap<String, Vec<u64>> {
+    let mut runs: BTreeMap<String, Vec<u64>> = BTreeMap::new();
+    for (m, sig) in seen {
+        let r = runs.entry(m.clone()).or_default();
+        if r.last() != Some(sig) {
+            r.push(*sig);
+        }
+    }
+    runs
+}
+
+#[test]
+fn hot_swap_never_serves_a_torn_plan() {
+    let knee = knee_rps(&bench_registry());
+    let tcfg = TrafficConfig {
+        rate_rps: 1.5 * knee,
+        slo_s: 20.0 / knee,
+        ..Default::default()
+    };
+    let wl = bursty_workload(
+        &bench_registry().models(),
+        600,
+        77,
+        &tcfg,
+    );
+
+    // accepted swaps: every batch sees exactly the old plan or exactly
+    // the new one, with a single switch point per model
+    let faster = |m: &str| -> Option<LoadedPlan> {
+        match m {
+            "MBN" => Some(toy_plan(
+                "MBN",
+                "kirin990",
+                &[210.0, 630.0, 315.0, 840.0],
+            )),
+            "SQN" => Some(toy_plan("SQN", "qsd810", &[420.0, 140.0, 560.0])),
+            _ => None,
+        }
+    };
+    let reg = bench_registry();
+    let mut cfg = timed_cfg(Policy::Edf);
+    cfg.timed.as_mut().unwrap().hot_swap =
+        Some(HotSwapConfig::new(Arc::new(faster)));
+    let rec = Arc::new(RecordingExecutor::default());
+    let on = serve(&reg, &cfg, rec.clone(), wl.clone()).unwrap();
+    assert!(on
+        .stats
+        .timed
+        .as_ref()
+        .unwrap()
+        .swaps
+        .iter()
+        .all(|sw| sw.accepted));
+    let runs = signature_runs(&rec.seen.lock().unwrap());
+    for (m, r) in &runs {
+        assert_eq!(
+            r.len(),
+            2,
+            "{m}: expected exactly one plan switch, saw runs {r:?}"
+        );
+    }
+
+    // margin-rejected swaps: the executor sees one plan per model for
+    // the whole run, and the run is bit-identical to hot-swap disabled
+    let base = serve(
+        &bench_registry(),
+        &timed_cfg(Policy::Edf),
+        Arc::new(SimExecutor),
+        wl.clone(),
+    )
+    .unwrap();
+    let slight = |m: &str| -> Option<LoadedPlan> {
+        match m {
+            "MBN" => Some(toy_plan(
+                "MBN",
+                "kirin990",
+                &[270.0, 810.0, 405.0, 1080.0],
+            )),
+            "SQN" => Some(toy_plan("SQN", "qsd810", &[540.0, 180.0, 720.0])),
+            _ => None,
+        }
+    };
+    let mut cfg = timed_cfg(Policy::Edf);
+    cfg.timed.as_mut().unwrap().hot_swap =
+        Some(HotSwapConfig::new(Arc::new(slight)));
+    let rec = Arc::new(RecordingExecutor::default());
+    let rej = serve(&bench_registry(), &cfg, rec.clone(), wl).unwrap();
+    assert!(rej
+        .stats
+        .timed
+        .as_ref()
+        .unwrap()
+        .swaps
+        .iter()
+        .all(|sw| !sw.accepted));
+    let runs = signature_runs(&rec.seen.lock().unwrap());
+    for (m, r) in &runs {
+        assert_eq!(r.len(), 1, "{m}: rejected swap must not change the plan");
+    }
+    assert_eq!(rej.responses, base.responses);
+    assert_eq!(rej.stats.workload_digest, base.stats.workload_digest);
+    assert_eq!(
+        rej.stats.serial_s.to_bits(),
+        base.stats.serial_s.to_bits()
+    );
+}
+
+/// Keys of a serialized object, in emission (sorted) order.
+fn keys(j: &Json) -> Vec<String> {
+    match j {
+        Json::Obj(m) => m.keys().cloned().collect(),
+        other => panic!("expected an object, got {other:?}"),
+    }
+}
+
+#[test]
+fn stats_key_sets_are_pinned() {
+    const LEGACY_TOP: &[&str] = &[
+        "backpressure_stalls",
+        "batches",
+        "completed",
+        "dropped",
+        "executor",
+        "max_batch",
+        "models",
+        "queue_depth",
+        "requests",
+        "serial_ms",
+        "throughput_rps",
+        "workload_digest",
+    ];
+    const LEGACY_MODEL: &[&str] = &[
+        "batches",
+        "busy_ms",
+        "completed",
+        "lat_max_ms",
+        "lat_mean_ms",
+        "lat_min_ms",
+        "lat_p50_ms",
+        "lat_p99_ms",
+        "max_batch",
+        "mean_batch",
+        "throughput_rps",
+    ];
+    const TIMED_BLOCK: &[&str] = &[
+        "deadline_misses",
+        "lat_p50_ms",
+        "lat_p99_ms",
+        "policy",
+        "shed",
+        "sim_end_ms",
+        "swaps",
+        "tier0_completed",
+        "tier0_misses",
+        "tier0_p99_ms",
+    ];
+    let reg = bench_registry();
+
+    // legacy mode: exactly the pre-clock serialization surface, so stats
+    // files written before the simulated clock existed stay byte-stable
+    let wl = mixed_workload(&reg.models(), 200, 5);
+    let legacy = serve(
+        &reg,
+        &ServeConfig {
+            max_batch: 8,
+            queue_depth: 32,
+            workers: 1,
+            timed: None,
+        },
+        Arc::new(SimExecutor),
+        wl,
+    )
+    .unwrap();
+    let j = legacy.stats.to_json();
+    assert_eq!(keys(&j), LEGACY_TOP, "legacy top-level keys moved");
+    let Json::Obj(top) = &j else { unreachable!() };
+    let Json::Obj(models) = &top["models"] else {
+        panic!("models is not an object")
+    };
+    for (name, mj) in models {
+        assert_eq!(keys(mj), LEGACY_MODEL, "legacy keys moved for {name}");
+    }
+
+    // timed mode: the same surface plus exactly `timed` at the top and
+    // `shed` per model
+    let knee = knee_rps(&reg);
+    let tcfg = TrafficConfig {
+        rate_rps: knee,
+        slo_s: 10.0 / knee,
+        ..Default::default()
+    };
+    let wl = bursty_workload(&reg.models(), 200, 5, &tcfg);
+    let timed = serve(
+        &reg,
+        &timed_cfg(Policy::EdfShed),
+        Arc::new(SimExecutor),
+        wl,
+    )
+    .unwrap();
+    let j = timed.stats.to_json();
+    let mut want_top: Vec<String> =
+        LEGACY_TOP.iter().map(|k| k.to_string()).collect();
+    want_top.push("timed".to_string());
+    want_top.sort();
+    assert_eq!(keys(&j), want_top, "timed top-level keys moved");
+    let Json::Obj(top) = &j else { unreachable!() };
+    assert_eq!(keys(&top["timed"]), TIMED_BLOCK, "timed block keys moved");
+    let mut want_model: Vec<String> =
+        LEGACY_MODEL.iter().map(|k| k.to_string()).collect();
+    want_model.push("shed".to_string());
+    want_model.sort();
+    let Json::Obj(models) = &top["models"] else {
+        panic!("models is not an object")
+    };
+    for (name, mj) in models {
+        assert_eq!(keys(mj), want_model, "timed keys moved for {name}");
+    }
+}
+
+#[test]
+fn edf_beats_round_robin_on_the_strict_tier() {
+    // the scheduling win the traffic bench gates in CI, pinned at test
+    // scale: on an overloaded bursty trace, deadline-aware formation
+    // pulls the strict tier's tail latency below the deadline-blind
+    // baseline without giving up any completed work
+    let reg = bench_registry();
+    let knee = knee_rps(&reg);
+    let tcfg = TrafficConfig {
+        rate_rps: 1.5 * knee,
+        slo_s: 20.0 / knee,
+        ..Default::default()
+    };
+    let wl = bursty_workload(&reg.models(), 2000, 42, &tcfg);
+    let run = |policy| {
+        serve(&reg, &timed_cfg(policy), Arc::new(SimExecutor), wl.clone())
+            .unwrap()
+    };
+    let rr = run(Policy::RoundRobin);
+    let edf = run(Policy::Edf);
+    let tr = rr.stats.timed.as_ref().unwrap();
+    let te = edf.stats.timed.as_ref().unwrap();
+    assert!(te.tier0_completed > 0, "trace must exercise the strict tier");
+    assert!(
+        te.tier0_p99_s < tr.tier0_p99_s,
+        "EDF tier-0 p99 {:.1} ms !< RR tier-0 p99 {:.1} ms",
+        te.tier0_p99_s * 1e3,
+        tr.tier0_p99_s * 1e3
+    );
+    assert!(
+        te.tier0_misses <= tr.tier0_misses,
+        "EDF tier-0 misses {} > RR {}",
+        te.tier0_misses,
+        tr.tier0_misses
+    );
+    // neither policy sheds: the served set is identical, only the order
+    // (and therefore the response times) differs
+    assert_eq!(rr.stats.completed, 2000);
+    assert_eq!(edf.stats.completed, 2000);
+    assert_eq!(rr.stats.workload_digest, edf.stats.workload_digest);
 }
