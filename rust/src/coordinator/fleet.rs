@@ -1,0 +1,534 @@
+//! Fleet compile farm: zoo-wide compiles (N models x M devices) that
+//! share one TuningDb, with cross-compile structure dedup and
+//! incremental recompiles.
+//!
+//! Compiling a model zoo one `compile_with_db` at a time already
+//! warm-starts later models from earlier ones, but it serializes the
+//! expensive part (class tuning) and makes the db's final contents
+//! depend on compile order (whichever model tunes a shared block first
+//! fixes its seed stream). The fleet pipeline restructures the same
+//! work around a **class ledger**:
+//!
+//! 1. **Prep** (parallel): every job's partition + dedup stages run on
+//!    the shared pool — cheap, independent, and exactly the stages the
+//!    per-job compile would run.
+//! 2. **Ledger** (the tentpole): all jobs' classes are registered in
+//!    CANONICAL JOB ORDER — jobs sorted by (device, model, shape), so
+//!    the caller's ordering (CLI order, shuffles, partial zoos) can
+//!    never change ownership. The first job to register a (device,
+//!    variant, fingerprint) key OWNS it: its representative subgraph
+//!    fixes the task's seed (`seed ^ rep << 17`) and pooled budget, the
+//!    same values its own FullTune stage would use. Keys already in the
+//!    db are skipped (cross-RUN dedup); keys claimed by an earlier job
+//!    are skipped (cross-MODEL dedup — a block tuned for any model
+//!    serves every model that contains it). Fingerprints that collide
+//!    across structurally different subgraphs of DIFFERENT jobs —
+//!    which no single compile could ever co-observe — are detected by
+//!    cross-graph isomorphism verification
+//!    ([`crate::graph::fingerprint::verify_isomorphism_cross`]) and
+//!    quarantined exactly like a within-compile collision: they neither
+//!    consult nor populate the shared db. Ledger tasks tune on the
+//!    shared pool in device-sorted waves (later devices warm-seed from
+//!    earlier ones via `lookup_any`, matching sequential-compile
+//!    behavior), through the same [`run_class_search`] code path the
+//!    FullTune stage uses — bit-identical schedules by construction.
+//! 3. **Assemble** (per job): each job runs the ordinary
+//!    `compile_with_db` against a snapshot of the post-ledger db. Every
+//!    non-ambiguous class is an exact db hit, so this phase is
+//!    pricing + plan assembly, not search — and because each job sees
+//!    the same frozen snapshot, plan bytes are independent of job
+//!    order, worker count, and shard layout.
+//!
+//! **Incremental recompile** falls out of the same machinery: a warm
+//! `compile_with_db` against the accumulated db IS the incremental
+//! path — untouched blocks hit the db (spliced), new fingerprints tune
+//! (retuned). [`incremental_recompile`] runs it and reports the diff
+//! against the previous plan; the splice invariant (spliced plan bytes
+//! == a cold full recompile against the same db) holds by construction
+//! because there is no separate splice code path to diverge. Pinned in
+//! `tests/fleet_faults.rs`.
+
+use std::collections::{BTreeMap, HashSet};
+
+use crate::costmodel::PricingContext;
+use crate::device::DeviceProfile;
+use crate::graph::fingerprint::verify_isomorphism_cross;
+use crate::graph::Graph;
+use crate::models::{build, InputShape, ModelId};
+use crate::partition::{candidates, relay_partition, ClusterConfig};
+use crate::tuner::schedule::Schedule;
+use crate::util::json::{num, obj, Json};
+use crate::util::ThreadPool;
+
+use super::plan::{self, LoadedPlan};
+use super::stages::{
+    canon_to_ids, dedup_stage, ids_to_canon, partition_stage,
+    run_class_search, DedupStage, PartitionStage,
+};
+use super::{
+    compile_with_db, CompileConfig, CompiledModel, DbEntry, Frontend,
+    TuningDb,
+};
+
+/// One compile job: a model at an input shape for a device. The
+/// fleet-wide config (variant, budget, seed, frontend) comes from the
+/// base [`CompileConfig`]; only these three vary per job.
+#[derive(Clone, Debug)]
+pub struct FleetJob {
+    pub model: ModelId,
+    pub shape: InputShape,
+    pub device: DeviceProfile,
+}
+
+impl FleetJob {
+    /// Canonical sort key: device-major so ledger waves group by device,
+    /// then model, then shape (ascending resolution).
+    fn key(&self) -> (&'static str, &'static str, usize) {
+        (self.device.name, self.model.name(), self.shape.hw())
+    }
+
+    /// Stable per-job label, e.g. `mbn-small-kirin990` — plan filenames
+    /// (`<label>.plan.json`) and stats keys.
+    pub fn label(&self) -> String {
+        format!(
+            "{}-{}-{}",
+            self.model.name().to_ascii_lowercase(),
+            self.shape.name(),
+            self.device.name
+        )
+    }
+}
+
+/// Sort by [`FleetJob::key`] and drop exact duplicates: everything
+/// downstream (ledger ownership, seeds, wave order) is a function of
+/// this canonical list, never of the caller's ordering.
+fn canonical_jobs(jobs: &[FleetJob]) -> Vec<FleetJob> {
+    let mut jobs = jobs.to_vec();
+    jobs.sort_by(|a, b| a.key().cmp(&b.key()));
+    jobs.dedup_by(|a, b| a.key() == b.key());
+    jobs
+}
+
+/// Per-job compile config: the fleet pins the policy knobs that the
+/// ledger already decided (single-shot partition, warm start so ledger
+/// entries are adopted as exact hits) and passes the rest through.
+fn job_config(base: &CompileConfig, job: &FleetJob) -> CompileConfig {
+    CompileConfig {
+        device: job.device.clone(),
+        partition_candidates: 1,
+        probe_seed: false,
+        warm_start: true,
+        ..base.clone()
+    }
+}
+
+/// The single-shot partition for a job — the exact `k = 1` path of
+/// `compile_with_db`, so phase-1 preps and phase-3 compiles see the
+/// same partition (ledger classes must be the classes the per-job
+/// compile will look up).
+fn single_shot_partition(g: &Graph, frontend: &Frontend) -> PartitionStage {
+    match frontend {
+        Frontend::Relay => partition_stage(g, relay_partition(g)),
+        Frontend::Cluster(c) => {
+            partition_stage(g, candidates(g, *c, 1).swap_remove(0).partition)
+        }
+        Frontend::Auto => partition_stage(
+            g,
+            candidates(g, ClusterConfig::adaptive(g), 1)
+                .swap_remove(0)
+                .partition,
+        ),
+    }
+}
+
+struct JobPrep {
+    g: Graph,
+    ps: PartitionStage,
+    ds: DedupStage,
+}
+
+/// Fleet-level counters, serialized into the CLI's `--stats-out` and
+/// `benches/fleet_compile`'s BENCH_fleet.json.
+#[derive(Clone, Debug, Default)]
+pub struct FleetStats {
+    /// Jobs actually compiled (after canonical dedup).
+    pub jobs: usize,
+    /// Class instances across all jobs (Σ per-job `n_classes`).
+    pub classes: usize,
+    /// Class instances skipped by the ledger because their fingerprint
+    /// is ambiguous (within-job collisions ∪ cross-job collisions).
+    pub ambiguous: usize,
+    /// Unique (device, fingerprint) keys already in the db before this
+    /// run (cross-run warm starts).
+    pub prior_hits: usize,
+    /// Ledger tasks tuned this run — the unique structures across the
+    /// whole zoo that were not already known.
+    pub ledger_tasks: usize,
+    /// Search evaluations spent by the ledger.
+    pub ledger_evals: usize,
+    /// Σ per-job `db_hits` in the assemble phase (classes spliced from
+    /// the shared db).
+    pub fleet_hits: usize,
+    /// Σ per-job `tuned_tasks` in the assemble phase (ambiguous
+    /// fingerprints re-tune per job, by design).
+    pub tuned_tasks: usize,
+    /// `fleet_hits / classes` — the fleet-level class hit rate. A warm
+    /// rerun over an unchanged zoo is 1.0; a cold run still clears the
+    /// cross-model dedup ratio.
+    pub hit_rate: f64,
+}
+
+impl FleetStats {
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("jobs", num(self.jobs as f64)),
+            ("classes", num(self.classes as f64)),
+            ("ambiguous", num(self.ambiguous as f64)),
+            ("prior_hits", num(self.prior_hits as f64)),
+            ("ledger_tasks", num(self.ledger_tasks as f64)),
+            ("ledger_evals", num(self.ledger_evals as f64)),
+            ("fleet_hits", num(self.fleet_hits as f64)),
+            ("tuned_tasks", num(self.tuned_tasks as f64)),
+            ("hit_rate", num(self.hit_rate)),
+        ])
+    }
+}
+
+pub struct FleetOutcome {
+    /// The canonical job list, index-aligned with `models`.
+    pub jobs: Vec<FleetJob>,
+    pub models: Vec<CompiledModel>,
+    pub stats: FleetStats,
+}
+
+/// Compile a zoo against a shared [`TuningDb`] (see the module docs for
+/// the three phases). On return `db` holds the merged result: its
+/// contents are a pure function of (canonical job list, base config,
+/// prior db entries) — independent of the caller's job ordering and of
+/// `base.workers`, which changes wall-clock only. Pinned in
+/// `tests/fleet_props.rs`.
+pub fn fleet_compile(
+    jobs: &[FleetJob],
+    base: &CompileConfig,
+    db: &mut TuningDb,
+) -> FleetOutcome {
+    let jobs = canonical_jobs(jobs);
+    let pool = if base.workers == 0 {
+        ThreadPool::for_host()
+    } else {
+        ThreadPool::new(base.workers)
+    };
+    let vtag = base.variant.tag();
+    let mut stats = FleetStats { jobs: jobs.len(), ..Default::default() };
+
+    // ---- Phase 1: per-job preps, in parallel ----
+    let preps: Vec<JobPrep> = pool.scoped_map(jobs.clone(), |job| {
+        let g = build(job.model, job.shape);
+        let ps = single_shot_partition(&g, &base.frontend);
+        let ds = dedup_stage(&g, &ps, base.budget);
+        JobPrep { g, ps, ds }
+    });
+
+    // ---- Phase 2a: fleet-wide ambiguity ----
+    // Within-job collisions are already known per job; cross-job
+    // collisions need the cross-graph verifier. The first job (canonical
+    // order) to carry a fingerprint anchors it; every later job's class
+    // with the same fingerprint is verified against the anchor. A
+    // conservative union: one bad pairing quarantines the fingerprint
+    // for the whole fleet.
+    let mut fleet_ambiguous: HashSet<u64> = preps
+        .iter()
+        .flat_map(|p| p.ds.ambiguous.iter().copied())
+        .collect();
+    let mut anchor: BTreeMap<u64, (usize, usize)> = BTreeMap::new();
+    for (ji, prep) in preps.iter().enumerate() {
+        for cl in &prep.ds.classes {
+            let cf = prep.ps.canon[cl.rep].as_ref().unwrap();
+            match anchor.get(&cf.fingerprint) {
+                None => {
+                    anchor.insert(cf.fingerprint, (ji, cl.rep));
+                }
+                Some(&(aj, arep)) => {
+                    let acf = preps[aj].ps.canon[arep].as_ref().unwrap();
+                    if !verify_isomorphism_cross(&preps[aj].g, acf, &prep.g, cf)
+                    {
+                        fleet_ambiguous.insert(cf.fingerprint);
+                    }
+                }
+            }
+        }
+    }
+
+    // ---- Phase 2b: ledger registration, canonical job order ----
+    struct LedgerTask {
+        job: usize,
+        rep: usize,
+        budget: usize,
+        fp: u64,
+    }
+    let mut waves: BTreeMap<&'static str, Vec<LedgerTask>> = BTreeMap::new();
+    let mut claimed: HashSet<(&'static str, u64)> = HashSet::new();
+    let mut prior: HashSet<(&'static str, u64)> = HashSet::new();
+    for (ji, (job, prep)) in jobs.iter().zip(&preps).enumerate() {
+        for cl in &prep.ds.classes {
+            let cf = prep.ps.canon[cl.rep].as_ref().unwrap();
+            let fp = cf.fingerprint;
+            if fleet_ambiguous.contains(&fp) {
+                stats.ambiguous += 1;
+                continue;
+            }
+            let key = (job.device.name, fp);
+            if claimed.contains(&key) || prior.contains(&key) {
+                continue;
+            }
+            // n_ops must match, same guard the FullTune remap applies: a
+            // colliding prior entry of another size is no hit
+            let hit = db
+                .lookup(job.device.name, vtag, fp)
+                .map_or(false, |e| e.n_ops == cf.order.len());
+            if hit {
+                prior.insert(key);
+                continue;
+            }
+            claimed.insert(key);
+            waves.entry(job.device.name).or_default().push(LedgerTask {
+                job: ji,
+                rep: cl.rep,
+                budget: cl.budget,
+                fp,
+            });
+        }
+    }
+    stats.prior_hits = prior.len();
+
+    // ---- Phase 2c: tune the ledger, one wave per device ----
+    // Waves run in device-name order so a later device's classes
+    // warm-seed (`lookup_any`) from earlier devices' fresh entries —
+    // the same cross-device seeding sequential compiles get. Within a
+    // wave, seeds are resolved sequentially against the frozen db, then
+    // the searches fan out over the shared pool.
+    for (dev, tasks) in &waves {
+        let items: Vec<(usize, usize, usize, Option<Schedule>)> = tasks
+            .iter()
+            .map(|t| {
+                let prep = &preps[t.job];
+                let cf = prep.ps.canon[t.rep].as_ref().unwrap();
+                let initial = db.lookup_any(vtag, t.fp).and_then(|e| {
+                    if e.n_ops != cf.order.len() {
+                        return None;
+                    }
+                    let mut s = e.schedule.remap(&canon_to_ids(cf))?;
+                    s.revalidate_legality(&prep.g);
+                    Some(s)
+                });
+                (t.job, t.rep, t.budget, initial)
+            })
+            .collect();
+        let tuned: Vec<(Schedule, f64, usize)> =
+            pool.scoped_map(items, |(ji, rep, budget, initial)| {
+                let prep = &preps[ji];
+                let ctx = PricingContext::new_fused(
+                    &prep.g,
+                    &jobs[ji].device,
+                    base.fused,
+                );
+                let (best, latency, evals, _) = run_class_search(
+                    &prep.g,
+                    base.variant,
+                    base.seed ^ ((rep as u64) << 17),
+                    &prep.ps.views[rep],
+                    budget,
+                    initial,
+                    &ctx,
+                    &pool,
+                );
+                (best, latency, evals)
+            });
+        for (t, (best, latency, evals)) in tasks.iter().zip(tuned) {
+            let cf = preps[t.job].ps.canon[t.rep].as_ref().unwrap();
+            let canonical = best
+                .remap(&ids_to_canon(cf))
+                .expect("schedule ops are subgraph members");
+            db.record(DbEntry {
+                device: dev.to_string(),
+                variant: vtag.to_string(),
+                fingerprint: t.fp,
+                n_ops: cf.order.len(),
+                schedule: canonical,
+                latency,
+                evals,
+            });
+            stats.ledger_evals += evals;
+        }
+        stats.ledger_tasks += tasks.len();
+    }
+
+    // ---- Phase 3: assemble each job against the frozen snapshot ----
+    // Every job compiles against the same post-ledger snapshot, so no
+    // job's output can depend on another's phase-3 side effects. New
+    // entries (ambiguous fingerprints re-tuning cold) fold into the
+    // final db EXCEPT the ambiguous ones — same policy as emit_stage,
+    // extended to collisions only the fleet can see.
+    let snapshot = db.clone();
+    let mut final_db = db.clone();
+    let mut models = Vec::with_capacity(jobs.len());
+    for (job, prep) in jobs.iter().zip(&preps) {
+        let cfg = job_config(base, job);
+        let mut jdb = snapshot.clone();
+        let m = compile_with_db(&prep.g, &cfg, &mut jdb);
+        stats.classes += m.n_classes;
+        stats.fleet_hits += m.db_hits;
+        stats.tuned_tasks += m.tuned_tasks;
+        for e in jdb.entries() {
+            if !fleet_ambiguous.contains(&e.fingerprint) {
+                final_db.record(e.clone());
+            }
+        }
+        models.push(m);
+    }
+    *db = final_db;
+    stats.hit_rate = if stats.classes > 0 {
+        stats.fleet_hits as f64 / stats.classes as f64
+    } else {
+        0.0
+    };
+    FleetOutcome { jobs, models, stats }
+}
+
+/// What an incremental recompile did, relative to the previous plan.
+#[derive(Clone, Debug)]
+pub struct IncrementalReport {
+    /// Classes that ran a search (new or changed fingerprints, plus
+    /// ambiguous ones — `CompiledModel::tuned_tasks`).
+    pub retuned: usize,
+    /// Classes spliced from the db without search
+    /// (`CompiledModel::db_hits`).
+    pub spliced: usize,
+    /// Subgraphs whose schedule differs from the previous plan's (all
+    /// of them, when the partition itself changed).
+    pub changed_subgraphs: usize,
+    /// Plan bytes identical to the previous plan.
+    pub identical: bool,
+}
+
+pub struct IncrementalOutcome {
+    pub model: CompiledModel,
+    /// The new plan, serialized (the byte-comparison artifact).
+    pub plan: Json,
+    pub report: IncrementalReport,
+}
+
+/// Recompile `g` against the accumulated db and diff against the
+/// previous plan. The "splice" is the warm-start path itself: classes
+/// whose fingerprints survive the edit hit the db and adopt their
+/// stored schedules, new fingerprints tune — so the spliced plan is
+/// byte-identical to a cold full recompile against the same db BY
+/// CONSTRUCTION (there is no second splice code path to diverge;
+/// pinned in `tests/fleet_faults.rs`). An unmodified model retunes
+/// nothing and reproduces `prev`'s durable content byte-for-byte
+/// (`report.identical`), whatever compile `prev` came from — the db
+/// already holds every one of its classes.
+pub fn incremental_recompile(
+    g: &Graph,
+    base: &CompileConfig,
+    db: &mut TuningDb,
+    prev: &LoadedPlan,
+) -> IncrementalOutcome {
+    if prev.device != base.device.name {
+        log::warn!(
+            "incremental recompile targets device {} but previous plan \
+             was for {}; expect a full retune",
+            base.device.name,
+            prev.device
+        );
+    }
+    let cfg = CompileConfig {
+        partition_candidates: 1,
+        probe_seed: false,
+        warm_start: true,
+        ..base.clone()
+    };
+    let m = compile_with_db(g, &cfg, db);
+    let plan = plan::to_json(&m, &prev.model, cfg.device.name);
+    // compare in the LOADED domain: `to_json` carries compile-time
+    // provenance (total_evals, tuned_tasks, ...) that `from_json`
+    // deliberately drops, so raw to_json bytes would never equal a
+    // re-serialized previous plan. What "identical" promises is that
+    // the durable plan content — partition, schedules, latencies,
+    // search provenance, patterns — is unchanged, which is exactly
+    // what survives a load. The fleet CLI skips the rewrite when this
+    // holds, so an unmodified model's plan FILE keeps its exact bytes.
+    let identical = match plan::from_json(&plan) {
+        Ok(lp) => {
+            plan::loaded_to_json(&lp).pretty()
+                == plan::loaded_to_json(prev).pretty()
+        }
+        Err(_) => false,
+    };
+    let changed_subgraphs = if m.partition.assign == prev.partition.assign {
+        m.schedules
+            .iter()
+            .zip(&prev.schedules)
+            .filter(|(a, b)| a != b)
+            .count()
+    } else {
+        // repartitioned: subgraph ids no longer correspond
+        m.partition.n_groups.max(prev.partition.n_groups)
+    };
+    let report = IncrementalReport {
+        retuned: m.tuned_tasks,
+        spliced: m.db_hits,
+        changed_subgraphs,
+        identical,
+    };
+    IncrementalOutcome { model: m, plan, report }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn job(m: ModelId, s: InputShape, d: DeviceProfile) -> FleetJob {
+        FleetJob { model: m, shape: s, device: d }
+    }
+
+    #[test]
+    fn canonical_jobs_sorts_and_dedups() {
+        let a = job(
+            ModelId::Sqn,
+            InputShape::Middle,
+            DeviceProfile::qsd810(),
+        );
+        let b = job(
+            ModelId::Mbn,
+            InputShape::Small,
+            DeviceProfile::kirin990(),
+        );
+        let c = job(
+            ModelId::Mbn,
+            InputShape::Large,
+            DeviceProfile::kirin990(),
+        );
+        let canon =
+            canonical_jobs(&[a.clone(), c.clone(), b.clone(), a.clone()]);
+        let keys: Vec<_> = canon.iter().map(|j| j.key()).collect();
+        // device-major, then model, then shape hw; duplicate `a` dropped
+        assert_eq!(keys, vec![b.key(), c.key(), a.key()]);
+        // shuffled input: same canonical list
+        let canon2 = canonical_jobs(&[c, a, b]);
+        assert_eq!(
+            canon2.iter().map(|j| j.key()).collect::<Vec<_>>(),
+            keys
+        );
+    }
+
+    #[test]
+    fn labels_are_stable_and_filename_safe() {
+        let j = job(
+            ModelId::Mbn,
+            InputShape::Small,
+            DeviceProfile::kirin990(),
+        );
+        assert_eq!(j.label(), "mbn-small-kirin990");
+    }
+}

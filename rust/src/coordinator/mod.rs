@@ -27,11 +27,17 @@
 //! The ablation variants of §VI-B are first-class: `AgoNi` disables
 //! intensive fusion in the backend, `AgoNr` disables the reformer.
 
+pub mod fleet;
 pub mod plan;
 pub mod stages;
 pub mod tuningdb;
 
+pub use fleet::{
+    fleet_compile, incremental_recompile, FleetJob, FleetOutcome, FleetStats,
+    IncrementalOutcome, IncrementalReport,
+};
 pub use stages::{PartitionSearch, PROBE_MARGIN, PROBE_SALT};
+pub use tuningdb::sharded::{ShardFault, ShardStore};
 pub use tuningdb::{DbEntry, TuningDb};
 
 use std::time::Instant;

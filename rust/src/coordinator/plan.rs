@@ -345,8 +345,9 @@ pub fn from_json(j: &Json) -> Result<LoadedPlan> {
 /// Write to a file (pretty JSON).
 pub fn save(m: &CompiledModel, model_name: &str, device: &str,
             path: &str) -> Result<()> {
-    std::fs::write(path, to_json(m, model_name, device).pretty())?;
-    Ok(())
+    // temp-file + rename, same contract as `TuningDb::save`: a crash
+    // mid-save can never leave a torn plan for `serve` to choke on
+    super::tuningdb::write_atomic(path, &to_json(m, model_name, device).pretty())
 }
 
 /// Read from a file.

@@ -474,6 +474,42 @@ pub struct TuneStage {
     pub db_hits: usize,
 }
 
+/// Run ONE class's schedule search exactly as the FullTune stage does:
+/// same `SearchConfig::task` (the caller passes the fully mixed task
+/// seed, e.g. `cfg.seed ^ (rep << 17)`), same reformer gating by
+/// variant, warm-seeded when `initial` is `Some`. Shared by
+/// [`tune_stage`] and the fleet class ledger (`coordinator::fleet`):
+/// the fleet's ownership rule moves WHICH compile tunes a class, and
+/// bit-identical results require the HOW to be this one code path.
+pub(crate) fn run_class_search(
+    g: &Graph,
+    variant: Variant,
+    task_seed: u64,
+    view: &SubgraphView,
+    budget: usize,
+    initial: Option<Schedule>,
+    ctx: &PricingContext,
+    pool: &ThreadPool,
+) -> (Schedule, f64, usize, EvalStats) {
+    let search =
+        SearchConfig::task(budget, task_seed, variant != Variant::AgoNi);
+    let rcfg = ReformerConfig {
+        search,
+        enabled: variant != Variant::AgoNr,
+        ..Default::default()
+    };
+    let mut cache = MemoCache::new();
+    let r = match initial {
+        Some(s) => tune_with_reformer_warm_parallel(
+            g, view, &rcfg, s, ctx, &mut cache, pool,
+        ),
+        None => tune_with_reformer_parallel(
+            g, view, &rcfg, ctx, &mut cache, pool,
+        ),
+    };
+    (r.best, r.best_latency, r.evals, cache.stats())
+}
+
 /// Full-budget tuning of every class: consult the TuningDb once per
 /// class, then fan the cold/warm searches out over the shared pool
 /// (two-level scheduling — the per-generation batches of every class
@@ -551,20 +587,7 @@ pub fn tune_stage(
     let seed = cfg.seed;
     let results: Vec<ClassResult> =
         pool.scoped_map(tasks, |(ci, view, budget, rep, mode)| {
-            // seeded by the REPRESENTATIVE's subgraph id: a singleton
-            // class reproduces the pre-dedup search bit for bit
-            let search = SearchConfig::task(
-                budget,
-                seed ^ ((rep as u64) << 17),
-                variant != Variant::AgoNi,
-            );
-            let rcfg = ReformerConfig {
-                search,
-                enabled: variant != Variant::AgoNr,
-                ..Default::default()
-            };
-            let mut cache = MemoCache::new();
-            let r = match mode {
+            let initial = match mode {
                 ClassMode::Hit(s) => {
                     // exact hit: one pricing evaluation, no search
                     let mut shard = ctx.new_shard();
@@ -578,19 +601,27 @@ pub fn tune_stage(
                         searched: false,
                     };
                 }
-                ClassMode::Warm(initial) => tune_with_reformer_warm_parallel(
-                    g, &view, &rcfg, initial, ctx, &mut cache, pool,
-                ),
-                ClassMode::Cold => tune_with_reformer_parallel(
-                    g, &view, &rcfg, ctx, &mut cache, pool,
-                ),
+                ClassMode::Warm(initial) => Some(initial),
+                ClassMode::Cold => None,
             };
+            // seeded by the REPRESENTATIVE's subgraph id: a singleton
+            // class reproduces the pre-dedup search bit for bit
+            let (best, latency, evals, stats) = run_class_search(
+                g,
+                variant,
+                seed ^ ((rep as u64) << 17),
+                &view,
+                budget,
+                initial,
+                ctx,
+                pool,
+            );
             ClassResult {
                 class_idx: ci,
-                best: r.best,
-                latency: r.best_latency,
-                evals: r.evals,
-                stats: cache.stats(),
+                best,
+                latency,
+                evals,
+                stats,
                 searched: true,
             }
         });

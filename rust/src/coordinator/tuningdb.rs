@@ -22,14 +22,39 @@
 //! a` for ~15% of doubles — and serialize → load → re-serialize must be
 //! byte-identical (pinned by `tests/tuningdb_props.rs`).
 
-use std::collections::BTreeMap;
+pub mod sharded;
 
-use anyhow::{anyhow, Result};
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, Context, Result};
 
 use crate::tuner::schedule::Schedule;
 use crate::util::json::{arr, num, obj, s, Json};
 
 use super::plan::{group_from_json, group_to_json};
+
+/// Write `text` to `path` atomically: write a uniquely-named temp file in
+/// the same directory, then rename it over the target. A crash mid-write
+/// leaves the old file intact (plus at worst an orphan `.tmp-*`) — it can
+/// never leave a torn target, which for the TuningDb would corrupt every
+/// later compile. Same-directory placement keeps the rename on one
+/// filesystem, where it is atomic.
+pub(crate) fn write_atomic(path: &str, text: &str) -> Result<()> {
+    static NONCE: AtomicU64 = AtomicU64::new(0);
+    let tmp = format!(
+        "{path}.tmp-{}-{}",
+        std::process::id(),
+        NONCE.fetch_add(1, Ordering::Relaxed)
+    );
+    std::fs::write(&tmp, text).with_context(|| format!("writing {tmp}"))?;
+    if let Err(e) = std::fs::rename(&tmp, path) {
+        // leave no orphan when the rename itself fails
+        std::fs::remove_file(&tmp).ok();
+        return Err(e).with_context(|| format!("renaming {tmp} over {path}"));
+    }
+    Ok(())
+}
 
 /// One tuned class: the best schedule found for a canonical subgraph
 /// structure on one device under one compiler variant.
@@ -105,11 +130,17 @@ impl TuningDb {
 
     /// Insert, keeping the better (lower-latency) entry when the key
     /// already exists — repeat compiles with bigger budgets improve the
-    /// db, smaller ones never regress it.
+    /// db, smaller ones never regress it. Exact latency ties break by a
+    /// structural total order (see [`entry_rank`]), never by insertion
+    /// order: the resolved entry for a key is the MINIMUM of everything
+    /// recorded under it, so a merged db is a pure function of the entry
+    /// set — independent of shard layout, writer interleaving, or compile
+    /// ordering (the fleet's merge contract, pinned in
+    /// `tests/fleet_props.rs`).
     pub fn record(&mut self, e: DbEntry) {
         let key = (e.device.clone(), e.variant.clone(), e.fingerprint);
         match self.entries.get(&key) {
-            Some(old) if old.latency <= e.latency => {}
+            Some(old) if entry_rank(old) <= entry_rank(&e) => {}
             _ => {
                 self.entries.insert(key, e);
             }
@@ -154,20 +185,30 @@ impl TuningDb {
         Ok(db)
     }
 
+    /// Persist via temp-file + rename ([`write_atomic`]): a crash
+    /// mid-save leaves the previous db readable instead of a torn JSON
+    /// file that would hard-fail every later compile.
     pub fn save(&self, path: &str) -> Result<()> {
-        std::fs::write(path, self.to_json().pretty())?;
-        Ok(())
+        write_atomic(path, &self.to_json().pretty())
     }
 
+    /// Load a db file. Every failure names the path: "cannot load
+    /// tuning db X: ..." with the parse or validation diagnostic nested.
     pub fn load(path: &str) -> Result<TuningDb> {
-        let text = std::fs::read_to_string(path)?;
-        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
-        TuningDb::from_json(&j)
+        let inner = || -> Result<TuningDb> {
+            let text = std::fs::read_to_string(path)?;
+            let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+            TuningDb::from_json(&j)
+        };
+        inner().with_context(|| format!("tuning db {path}"))
     }
 
-    /// Load `path` when it exists, start empty otherwise. A corrupt
-    /// existing file is still an error — silently discarding a tuning
-    /// history would force full cold recompiles.
+    /// Load `path` when it exists, start empty otherwise. The two cases
+    /// are deliberately distinct: MISSING means a fresh db (first run),
+    /// while an existing-but-unparseable file is a hard error carrying
+    /// the path and parse diagnostic — silently discarding a tuning
+    /// history (e.g. one truncated by a crash before `save` was atomic)
+    /// would force full cold recompiles and mask the corruption.
     pub fn load_or_new(path: &str) -> Result<TuningDb> {
         if std::path::Path::new(path).exists() {
             TuningDb::load(path)
@@ -175,6 +216,25 @@ impl TuningDb {
             Ok(TuningDb::new())
         }
     }
+}
+
+/// Total-order rank of an entry under its (device, variant, fingerprint)
+/// key: latency first — non-negative finite f64, so the raw bit pattern
+/// is order-preserving — then op count, the schedule's structural `Ord`,
+/// and finally evals DESCENDING (more search evidence ranks better).
+/// Descending matters: a warm compile re-records every db hit as
+/// (same latency, same schedule, evals=1), and that must never displace
+/// the original tuned entry — warm recompiles leave db bytes unchanged.
+/// Equal ranks cover every serialized non-key field, so rank-equal
+/// entries are byte-identical on disk and "keep the old one" loses no
+/// information.
+fn entry_rank(e: &DbEntry) -> (u64, usize, &Schedule, std::cmp::Reverse<usize>) {
+    (
+        e.latency.to_bits(),
+        e.n_ops,
+        &e.schedule,
+        std::cmp::Reverse(e.evals),
+    )
 }
 
 fn entry_to_json(e: &DbEntry) -> Json {

@@ -1,0 +1,344 @@
+//! Sharded TuningDb storage: one directory of K shard files instead of
+//! one monolithic JSON file, so a fleet of concurrent compiles can share
+//! a corpus without serializing on a single writer.
+//!
+//! Layout: entries are bucketed by fingerprint prefix — shard index
+//! `(fp >> 56) * K / 256`, monotone in the fingerprint's top byte and
+//! exact for any K ≤ 256 — into files named `shard-III-of-KKK.json`.
+//! Each shard is the v2 db schema plus a `{shard, of}` header, written
+//! atomically via temp-file + rename ([`super::write_atomic`]) under a
+//! per-shard lock file, and merged with the shard's previous contents at
+//! write time, so concurrent writers union instead of clobbering.
+//!
+//! Merge contract: loading merges every shard's entries through
+//! [`TuningDb::record`], whose min-(latency, structural rank) resolution
+//! is a TOTAL order per key — the merged db is a pure function of the
+//! entry set, independent of shard count, file order, or writer
+//! interleaving ([`ShardStore::load_merged`] even folds shards written
+//! at a DIFFERENT K, so resharding is just saving at the new K).
+//!
+//! Fault policy: a shard that cannot be trusted — torn JSON, wrong
+//! schema version, an entry failing coverage validation, or a header
+//! that contradicts the file name — is reported as a [`ShardFault`]
+//! naming the file while every healthy shard still loads. Faulted files
+//! are left in place for forensics; [`ShardStore::quarantine`] renames
+//! them aside so the next save cannot resurrect or overwrite them.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::{arr, num, obj, Json};
+
+use super::{entry_to_json, write_atomic, TuningDb};
+
+/// Hard upper bound on the shard count: the bucket function uses the
+/// fingerprint's top byte, so more than 256 shards could not all be
+/// non-aliased.
+pub const MAX_SHARDS: usize = 256;
+
+/// Shard index of a fingerprint for a K-shard store: monotone in the
+/// top byte, balanced for uniformly distributed fingerprints (FNV/WL
+/// fingerprints are), and exact (no empty alias ranges) for K ≤ 256.
+pub fn shard_of(fingerprint: u64, k: usize) -> usize {
+    let k = k.clamp(1, MAX_SHARDS);
+    ((fingerprint >> 56) as usize * k) >> 8
+}
+
+/// One untrusted shard file: the path (diagnostics must name the file)
+/// and why it was rejected.
+#[derive(Clone, Debug)]
+pub struct ShardFault {
+    pub path: String,
+    pub reason: String,
+}
+
+/// A sharded TuningDb directory. `k` is the shard count this store
+/// WRITES at; loading folds whatever shard files exist, at any K.
+pub struct ShardStore {
+    dir: PathBuf,
+    k: usize,
+}
+
+/// Lock-file guard: created with `create_new` (exclusive), removed on
+/// drop — including early returns — so a writer can never leak a held
+/// lock on the success or error paths. (A crashed process can: lock
+/// acquisition steals locks after a bounded retry window.)
+struct LockGuard(PathBuf);
+
+impl Drop for LockGuard {
+    fn drop(&mut self) {
+        std::fs::remove_file(&self.0).ok();
+    }
+}
+
+fn acquire_lock(path: PathBuf) -> LockGuard {
+    for attempt in 0..500u32 {
+        match std::fs::OpenOptions::new()
+            .write(true)
+            .create_new(true)
+            .open(&path)
+        {
+            Ok(_) => return LockGuard(path),
+            Err(_) if attempt < 499 => {
+                std::thread::sleep(std::time::Duration::from_millis(2));
+            }
+            Err(_) => {
+                // ~1s of contention on a lock that should be held for
+                // one read-merge-write: almost certainly a crashed
+                // writer's orphan. Steal it — best-effort cross-process
+                // coherence beats deadlock (in-process fleet compiles
+                // funnel through one save and never contend).
+                log::warn!(
+                    "stealing stale shard lock {} after retries",
+                    path.display()
+                );
+                std::fs::remove_file(&path).ok();
+                return LockGuard(path);
+            }
+        }
+    }
+    unreachable!("loop returns on every branch of the last attempt")
+}
+
+/// Parse `shard-III-of-KKK.json` → (shard index, shard count).
+fn parse_shard_name(name: &str) -> Option<(usize, usize)> {
+    let rest = name.strip_prefix("shard-")?.strip_suffix(".json")?;
+    let (i, k) = rest.split_once("-of-")?;
+    Some((i.parse().ok()?, k.parse().ok()?))
+}
+
+impl ShardStore {
+    /// Open (not create) a store over `dir` writing `k` shards
+    /// (clamped to 1..=[`MAX_SHARDS`]). The directory is created lazily
+    /// on first save.
+    pub fn new(dir: impl AsRef<Path>, k: usize) -> ShardStore {
+        ShardStore {
+            dir: dir.as_ref().to_path_buf(),
+            k: k.clamp(1, MAX_SHARDS),
+        }
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    pub fn shards(&self) -> usize {
+        self.k
+    }
+
+    /// Path of write-shard `i` under this store's K.
+    pub fn shard_path(&self, i: usize) -> PathBuf {
+        self.dir.join(format!("shard-{i:03}-of-{:03}.json", self.k))
+    }
+
+    /// Every `shard-*-of-*.json` under the directory (any K), sorted by
+    /// file name. A missing directory is an empty store.
+    fn shard_files(&self) -> Vec<(PathBuf, usize, usize)> {
+        let Ok(rd) = std::fs::read_dir(&self.dir) else {
+            return Vec::new();
+        };
+        let mut files: Vec<(PathBuf, usize, usize)> = rd
+            .filter_map(|e| e.ok().map(|e| e.path()))
+            .filter_map(|p| {
+                let (i, k) = p
+                    .file_name()
+                    .and_then(|n| n.to_str())
+                    .and_then(parse_shard_name)?;
+                Some((p, i, k))
+            })
+            .collect();
+        files.sort();
+        files
+    }
+
+    /// Read one shard file into a db, enforcing the shard header against
+    /// the file name (a mis-labeled shard means something other than
+    /// this store wrote it — its contents cannot be trusted to be where
+    /// the bucket function will look for them again).
+    fn load_shard(path: &Path, i: usize, k: usize) -> Result<TuningDb> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("{e}"))?;
+        let header = |field: &str| j.get(field).and_then(|v| v.as_usize());
+        if header("shard") != Some(i) || header("of") != Some(k) {
+            return Err(anyhow!(
+                "shard header {:?}-of-{:?} does not match file name \
+                 ({i}-of-{k})",
+                header("shard"),
+                header("of"),
+            ));
+        }
+        // the v2 entry schema and per-entry coverage validation are the
+        // flat db's, verbatim
+        let db = TuningDb::from_json(&j)?;
+        for e in db.entries() {
+            let want = shard_of(e.fingerprint, k);
+            if want != i {
+                return Err(anyhow!(
+                    "entry {:016x} belongs in shard {want}, not {i}",
+                    e.fingerprint
+                ));
+            }
+        }
+        Ok(db)
+    }
+
+    /// Merge every healthy shard into one db; untrusted shards become
+    /// [`ShardFault`]s (in file-name order) instead of failing the load.
+    /// The merged db is a pure function of the healthy entry set.
+    pub fn load_merged(&self) -> (TuningDb, Vec<ShardFault>) {
+        let mut db = TuningDb::new();
+        let mut faults = Vec::new();
+        for (path, i, k) in self.shard_files() {
+            match Self::load_shard(&path, i, k) {
+                Ok(part) => {
+                    for e in part.entries() {
+                        db.record(e.clone());
+                    }
+                }
+                Err(e) => faults.push(ShardFault {
+                    path: path.display().to_string(),
+                    reason: format!("{e:#}"),
+                }),
+            }
+        }
+        (db, faults)
+    }
+
+    /// Persist `db`, merged with what the store already holds. Per
+    /// shard: take the shard's lock, merge the bucket with the shard's
+    /// current (healthy) contents, write atomically. Concurrent savers
+    /// therefore UNION — neither can clobber entries the other just
+    /// wrote (pinned by `tests/fleet_props.rs`). Shard files written at
+    /// a different K are folded into the input and deleted after the
+    /// rewrite, so saving IS resharding; faulted files are skipped here
+    /// (never merged, never deleted — see [`Self::quarantine`]).
+    pub fn save(&self, db: &TuningDb) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating {}", self.dir.display()))?;
+        // fold parseable foreign-K shards (resharding input)
+        let foreign: Vec<(PathBuf, usize, usize)> = self
+            .shard_files()
+            .into_iter()
+            .filter(|&(_, _, k)| k != self.k)
+            .collect();
+        let mut input = db.clone();
+        let mut consumed: Vec<PathBuf> = Vec::new();
+        for (path, i, k) in &foreign {
+            if let Ok(part) = Self::load_shard(path, *i, *k) {
+                for e in part.entries() {
+                    input.record(e.clone());
+                }
+                consumed.push(path.clone());
+            }
+        }
+        for shard in 0..self.k {
+            let path = self.shard_path(shard);
+            let bucket: Vec<_> = input
+                .entries()
+                .filter(|e| shard_of(e.fingerprint, self.k) == shard)
+                .cloned()
+                .collect();
+            let _lock = acquire_lock(self.dir.join(format!(
+                "shard-{shard:03}-of-{:03}.lock",
+                self.k
+            )));
+            // merge with the shard's current contents under the lock —
+            // a concurrent writer's entries survive; an unreadable
+            // current shard contributes nothing (it is a fault for
+            // load_merged to report, not silently-absorbed data)
+            let mut merged = TuningDb::new();
+            if path.exists() {
+                if let Ok(cur) = Self::load_shard(&path, shard, self.k) {
+                    for e in cur.entries() {
+                        merged.record(e.clone());
+                    }
+                }
+            }
+            for e in bucket {
+                merged.record(e);
+            }
+            let text = obj(vec![
+                ("version", num(2.0)),
+                ("shard", num(shard as f64)),
+                ("of", num(self.k as f64)),
+                (
+                    "entries",
+                    arr(merged.entries().map(entry_to_json).collect()),
+                ),
+            ])
+            .pretty();
+            let spath = path
+                .to_str()
+                .ok_or_else(|| anyhow!("non-utf8 path {}", path.display()))?;
+            write_atomic(spath, &text)?;
+        }
+        for path in consumed {
+            std::fs::remove_file(&path).ok();
+        }
+        Ok(())
+    }
+
+    /// Rename faulted shard files aside (`<file>.quarantined-<nonce>`)
+    /// so reloads stop tripping on them and saves cannot overwrite the
+    /// evidence. Returns the new paths, in input order.
+    pub fn quarantine(&self, faults: &[ShardFault]) -> Vec<String> {
+        static NONCE: AtomicU64 = AtomicU64::new(0);
+        faults
+            .iter()
+            .filter_map(|f| {
+                let to = format!(
+                    "{}.quarantined-{}-{}",
+                    f.path,
+                    std::process::id(),
+                    NONCE.fetch_add(1, Ordering::Relaxed)
+                );
+                std::fs::rename(&f.path, &to).ok()?;
+                Some(to)
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_of_is_monotone_balanced_and_in_range() {
+        for k in [1usize, 2, 4, 16, 256] {
+            let mut prev = 0;
+            for top in 0..=255u64 {
+                let s = shard_of(top << 56, k);
+                assert!(s < k, "shard {s} out of range for k {k}");
+                assert!(s >= prev, "not monotone at top byte {top}");
+                prev = s;
+            }
+            // exact coverage: top byte 255 lands in the last shard
+            assert_eq!(shard_of(u64::MAX, k), k - 1);
+            assert_eq!(shard_of(0, k), 0);
+        }
+        // low bits never matter
+        assert_eq!(shard_of(0x0123_4567_89ab_cdef, 16), shard_of(0x0100_0000_0000_0000, 16));
+        // clamped: k = 0 behaves as 1, k > 256 as 256
+        assert_eq!(shard_of(u64::MAX, 0), 0);
+        assert_eq!(shard_of(u64::MAX, 1000), 255);
+    }
+
+    #[test]
+    fn shard_name_roundtrip() {
+        assert_eq!(parse_shard_name("shard-003-of-016.json"), Some((3, 16)));
+        assert_eq!(parse_shard_name("shard-0-of-1.json"), Some((0, 1)));
+        assert_eq!(parse_shard_name("shard-003-of-016.json.quarantined-1-0"), None);
+        assert_eq!(parse_shard_name("db.json"), None);
+        assert_eq!(parse_shard_name("shard-x-of-1.json"), None);
+        let st = ShardStore::new("/tmp/nowhere", 16);
+        let p = st.shard_path(3);
+        assert_eq!(
+            parse_shard_name(p.file_name().unwrap().to_str().unwrap()),
+            Some((3, 16))
+        );
+    }
+}

@@ -292,10 +292,25 @@ pub fn fingerprint(g: &Graph, members: &[NodeId]) -> u64 {
 /// A `false` here means "tune separately", not "error": the fingerprint
 /// is a hash, this is the authority.
 pub fn verify_isomorphism(g: &Graph, a: &CanonicalForm, b: &CanonicalForm) -> bool {
+    verify_isomorphism_cross(g, a, g, b)
+}
+
+/// [`verify_isomorphism`] across TWO graphs: `a` is a subgraph of `ga`,
+/// `b` of `gb`. Same position-wise contract — this is what lets the
+/// fleet class ledger (`coordinator::fleet`) detect a fingerprint
+/// carried by non-isomorphic subgraphs of *different models*, which no
+/// single compile would ever co-observe.
+pub fn verify_isomorphism_cross(
+    ga: &Graph,
+    a: &CanonicalForm,
+    gb: &Graph,
+    b: &CanonicalForm,
+) -> bool {
     if a.order.len() != b.order.len() {
         return false;
     }
-    let (mut pos_a, mut pos_b) = (vec![usize::MAX; g.len()], vec![usize::MAX; g.len()]);
+    let (mut pos_a, mut pos_b) =
+        (vec![usize::MAX; ga.len()], vec![usize::MAX; gb.len()]);
     for (i, (&va, &vb)) in a.order.iter().zip(&b.order).enumerate() {
         pos_a[va] = i;
         pos_b[vb] = i;
@@ -303,12 +318,12 @@ pub fn verify_isomorphism(g: &Graph, a: &CanonicalForm, b: &CanonicalForm) -> bo
     let in_a: Vec<bool> = pos_a.iter().map(|&p| p != usize::MAX).collect();
     let in_b: Vec<bool> = pos_b.iter().map(|&p| p != usize::MAX).collect();
     for (&va, &vb) in a.order.iter().zip(&b.order) {
-        let (na, nb) = (g.node(va), g.node(vb));
+        let (na, nb) = (ga.node(va), gb.node(vb));
         if na.kind != nb.kind || na.out_shape != nb.out_shape || na.in_c != nb.in_c {
             return false;
         }
         // predecessor lists, element-wise
-        let (pa, pb) = (g.preds(va), g.preds(vb));
+        let (pa, pb) = (ga.preds(va), gb.preds(vb));
         if pa.len() != pb.len() {
             return false;
         }
@@ -320,7 +335,7 @@ pub fn verify_isomorphism(g: &Graph, a: &CanonicalForm, b: &CanonicalForm) -> bo
                     }
                 }
                 (false, false) => {
-                    if g.node(ua).out_shape != g.node(ub).out_shape {
+                    if ga.node(ua).out_shape != gb.node(ub).out_shape {
                         return false;
                     }
                 }
@@ -328,20 +343,20 @@ pub fn verify_isomorphism(g: &Graph, a: &CanonicalForm, b: &CanonicalForm) -> bo
             }
         }
         // internal successor sets + boundary flag
-        let sa: BTreeSet<usize> = g
+        let sa: BTreeSet<usize> = ga
             .succs(va)
             .iter()
             .filter(|&&s| in_a[s])
             .map(|&s| pos_a[s])
             .collect();
-        let sb: BTreeSet<usize> = g
+        let sb: BTreeSet<usize> = gb
             .succs(vb)
             .iter()
             .filter(|&&s| in_b[s])
             .map(|&s| pos_b[s])
             .collect();
         if sa != sb
-            || escapes_subgraph(g, va, &in_a) != escapes_subgraph(g, vb, &in_b)
+            || escapes_subgraph(ga, va, &in_a) != escapes_subgraph(gb, vb, &in_b)
         {
             return false;
         }

@@ -12,7 +12,8 @@ use std::sync::Arc;
 
 use ago::baselines::{ansor_compile, handlib_compile};
 use ago::coordinator::{
-    compile_with_db, CompileConfig, Frontend, TuningDb, Variant,
+    compile_with_db, fleet_compile, incremental_recompile, CompileConfig,
+    FleetJob, Frontend, ShardStore, TuningDb, Variant,
 };
 use ago::device::DeviceProfile;
 use ago::graph::Graph;
@@ -26,6 +27,7 @@ use ago::serve::{
 };
 use ago::util::benchkit::{fmt_ms, fmt_x, Table};
 use ago::util::cli::Args;
+use ago::util::json::{arr, num, obj, s};
 use ago::util::{logging, Rng};
 
 fn main() {
@@ -33,6 +35,7 @@ fn main() {
     let args = Args::from_env(true);
     let code = match args.subcommand.as_deref() {
         Some("compile") => cmd_compile(&args),
+        Some("fleet") => cmd_fleet(&args),
         Some("partition") => cmd_partition(&args),
         Some("serve") => cmd_serve(&args),
         Some("run") => cmd_run(&args),
@@ -66,9 +69,20 @@ fn main() {
         }
         _ => {
             eprintln!(
-                "usage: ago <compile|partition|serve|run|models|devices> \
-                 [opts]\n\
+                "usage: ago <compile|fleet|partition|serve|run|models|\
+                 devices> [opts]\n\
                  \n\
+                 fleet     --models all|mbn,sqn --devices kirin990,qsd810 \\\n\
+                 \x20         --shapes small[,middle,large] --budget 800 \\\n\
+                 \x20         [--db-dir DIR --shards K (sharded tuning db; \\\n\
+                 \x20          merged on load, written atomically)] \\\n\
+                 \x20         [--plans-out DIR] [--merged-out db.json] \\\n\
+                 \x20         [--stats-out stats.json] [--workers 0] \\\n\
+                 \x20         [--seed N] [--variant ago|ni|nr] \\\n\
+                 \x20         [--incremental (diff each model against its \\\n\
+                 \x20          previous plan in --plans-out: splice \\\n\
+                 \x20          unchanged classes, retune new ones)] \\\n\
+                 \x20         [--quarantine (move faulted shards aside)]\n\
                  compile   --model mbn --shape small|middle|large \\\n\
                  \x20         --device kirin990|qsd810 --budget 20000 \\\n\
                  \x20         --variant ago|ni|nr --frontend auto|relay \\\n\
@@ -83,7 +97,8 @@ fn main() {
                  partition --model mvt --shape large\n\
                  serve     --plans dir [--models mbn,sqn --shape small \\\n\
                  \x20         --device kirin990 --budget 800] \\\n\
-                 \x20         [--tuning-db db.json] [--requests 1000] \\\n\
+                 \x20         [--tuning-db db.json | --db-dir DIR \\\n\
+                 \x20          --shards K] [--requests 1000] \\\n\
                  \x20         [--seed 42] [--batch 8] [--queue-depth 64] \\\n\
                  \x20         [--workers 0] [--executor sim|pjrt] \\\n\
                  \x20         [--stats-out stats.json] \\\n\
@@ -262,6 +277,315 @@ fn cmd_compile(args: &Args) -> i32 {
     0
 }
 
+/// `ago fleet`: compile a zoo (N models x M devices x shapes)
+/// concurrently against a shared — optionally sharded — tuning db.
+/// Blocks shared across models/devices tune ONCE (the fleet class
+/// ledger); the merged db and every plan are byte-identical for any
+/// `--workers`, `--shards`, and job ordering. `--incremental` diffs
+/// each model against its previous plan instead: classes whose
+/// fingerprints survived the edit splice from the db without search.
+fn cmd_fleet(args: &Args) -> i32 {
+    // ---- job matrix ----
+    let mspec = args.get_or("models", "all");
+    let models: Vec<ModelId> = if mspec == "all" {
+        ModelId::all().to_vec()
+    } else {
+        let mut v = Vec::new();
+        for tok in mspec.split(',').map(str::trim).filter(|t| !t.is_empty())
+        {
+            let Some(id) = ModelId::parse(tok) else {
+                eprintln!("unknown model {tok:?} in --models");
+                return 2;
+            };
+            v.push(id);
+        }
+        v
+    };
+    let mut devices = Vec::new();
+    for tok in args
+        .get_or("devices", "kirin990")
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+    {
+        let Some(d) = DeviceProfile::by_name(tok) else {
+            eprintln!("unknown device {tok:?} in --devices (kirin990|qsd810)");
+            return 2;
+        };
+        devices.push(d);
+    }
+    let mut shapes = Vec::new();
+    for tok in args
+        .get_or("shapes", "small")
+        .split(',')
+        .map(str::trim)
+        .filter(|t| !t.is_empty())
+    {
+        let Some(sh) = InputShape::parse(tok) else {
+            eprintln!("unknown shape {tok:?} in --shapes (small|middle|large)");
+            return 2;
+        };
+        shapes.push(sh);
+    }
+    if models.is_empty() || devices.is_empty() || shapes.is_empty() {
+        eprintln!("empty --models/--devices/--shapes");
+        return 2;
+    }
+    let jobs: Vec<FleetJob> = models
+        .iter()
+        .flat_map(|&model| {
+            devices.iter().flat_map(move |device| {
+                shapes.iter().map(move |&shape| FleetJob {
+                    model,
+                    shape,
+                    device: device.clone(),
+                })
+            })
+        })
+        .collect();
+    let base = CompileConfig {
+        budget: args.get_usize("budget", 800),
+        workers: args.get_usize("workers", 0),
+        seed: args.get_u64("seed", 0xA60),
+        variant: Variant::parse(args.get_or("variant", "ago"))
+            .unwrap_or(Variant::Ago),
+        ..CompileConfig::new(devices[0].clone())
+    };
+
+    // ---- shared tuning db: sharded directory, or in-memory ----
+    let store = args
+        .get("db-dir")
+        .map(|d| ShardStore::new(d, args.get_usize("shards", 4)));
+    let mut db = TuningDb::new();
+    if let Some(store) = &store {
+        let (loaded, faults) = store.load_merged();
+        for f in &faults {
+            eprintln!("shard fault: {}: {}", f.path, f.reason);
+        }
+        if !faults.is_empty() {
+            if args.has_flag("quarantine") {
+                for q in store.quarantine(&faults) {
+                    println!("quarantined {q}");
+                }
+            } else {
+                eprintln!(
+                    "{} faulted shard(s) skipped; re-run with \
+                     --quarantine to move them aside",
+                    faults.len()
+                );
+            }
+        }
+        if !loaded.is_empty() {
+            println!(
+                "sharded tuning db {}: {} entries loaded",
+                store.dir().display(),
+                loaded.len()
+            );
+        }
+        db = loaded;
+    }
+
+    let plans_dir = args.get("plans-out");
+    let t0 = std::time::Instant::now();
+    let stats_json;
+    if args.has_flag("incremental") {
+        // ---- incremental: each job diffs against its previous plan ----
+        let Some(pdir) = plans_dir else {
+            eprintln!(
+                "--incremental requires --plans-out DIR (where the \
+                 previous plans live)"
+            );
+            return 2;
+        };
+        let mut rows = Vec::new();
+        let (mut retuned, mut spliced) = (0usize, 0usize);
+        for job in &jobs {
+            let label = job.label();
+            let path = format!("{pdir}/{label}.plan.json");
+            let cfg = CompileConfig {
+                device: job.device.clone(),
+                ..base.clone()
+            };
+            let g = build(job.model, job.shape);
+            if !std::path::Path::new(&path).exists() {
+                // no previous plan: a plain full compile through the db
+                let m = compile_with_db(&g, &cfg, &mut db);
+                if let Err(e) = ago::coordinator::plan::save(
+                    &m,
+                    job.model.name(),
+                    cfg.device.name,
+                    &path,
+                ) {
+                    eprintln!("failed to write plan {path}: {e:#}");
+                    return 1;
+                }
+                println!(
+                    "{label}: no previous plan, full compile \
+                     ({} tuned, {} db hits)",
+                    m.tuned_tasks, m.db_hits
+                );
+                retuned += m.tuned_tasks;
+                spliced += m.db_hits;
+                rows.push(obj(vec![
+                    ("job", s(&label)),
+                    ("retuned", num(m.tuned_tasks as f64)),
+                    ("spliced", num(m.db_hits as f64)),
+                    ("identical", num(0.0)),
+                ]));
+                continue;
+            }
+            let prev = match ago::coordinator::plan::load(&path) {
+                Ok(p) => p,
+                Err(e) => {
+                    eprintln!("cannot load previous plan {path}: {e:#}");
+                    return 1;
+                }
+            };
+            let out = incremental_recompile(&g, &cfg, &mut db, &prev);
+            let r = &out.report;
+            println!(
+                "{label}: {} retuned, {} spliced, {} changed \
+                 subgraph(s){}",
+                r.retuned,
+                r.spliced,
+                r.changed_subgraphs,
+                if r.identical { " — plan unchanged" } else { "" }
+            );
+            if !r.identical {
+                if let Err(e) = ago::coordinator::plan::save(
+                    &out.model,
+                    job.model.name(),
+                    cfg.device.name,
+                    &path,
+                ) {
+                    eprintln!("failed to write plan {path}: {e:#}");
+                    return 1;
+                }
+            }
+            retuned += r.retuned;
+            spliced += r.spliced;
+            rows.push(obj(vec![
+                ("job", s(&label)),
+                ("retuned", num(r.retuned as f64)),
+                ("spliced", num(r.spliced as f64)),
+                ("identical", num(f64::from(u8::from(r.identical)))),
+            ]));
+        }
+        println!(
+            "incremental: {} retuned, {} spliced across {} job(s), \
+             wall {:.1}s",
+            retuned,
+            spliced,
+            jobs.len(),
+            t0.elapsed().as_secs_f64()
+        );
+        stats_json = obj(vec![
+            ("mode", s("incremental")),
+            ("retuned", num(retuned as f64)),
+            ("spliced", num(spliced as f64)),
+            ("jobs", arr(rows)),
+        ]);
+    } else {
+        // ---- full fleet compile ----
+        let out = fleet_compile(&jobs, &base, &mut db);
+        let st = &out.stats;
+        println!(
+            "fleet: {} jobs, {} class instances -> {} ledger tasks tuned \
+             ({} prior db hits, {} ambiguous), class hit rate {:.0}%, \
+             wall {:.1}s",
+            st.jobs,
+            st.classes,
+            st.ledger_tasks,
+            st.prior_hits,
+            st.ambiguous,
+            st.hit_rate * 100.0,
+            t0.elapsed().as_secs_f64()
+        );
+        for (job, m) in out.jobs.iter().zip(&out.models) {
+            println!(
+                "  {:26} {:3} subgraphs, {:3} classes, {:3} db hits, \
+                 predicted {} ms",
+                job.label(),
+                m.partition.n_groups,
+                m.n_classes,
+                m.db_hits,
+                fmt_ms(m.latency_ms())
+            );
+        }
+        if let Some(pdir) = plans_dir {
+            if let Err(e) = std::fs::create_dir_all(pdir) {
+                eprintln!("cannot create {pdir}: {e}");
+                return 1;
+            }
+            for (job, m) in out.jobs.iter().zip(&out.models) {
+                let path = format!("{pdir}/{}.plan.json", job.label());
+                if let Err(e) = ago::coordinator::plan::save(
+                    m,
+                    job.model.name(),
+                    job.device.name,
+                    &path,
+                ) {
+                    eprintln!("failed to write plan {path}: {e:#}");
+                    return 1;
+                }
+            }
+            println!("{} plan(s) written to {pdir}/", out.jobs.len());
+        }
+        stats_json = obj(vec![
+            ("mode", s("fleet")),
+            ("fleet", st.to_json()),
+            (
+                "jobs",
+                arr(out
+                    .jobs
+                    .iter()
+                    .zip(&out.models)
+                    .map(|(job, m)| {
+                        obj(vec![
+                            ("job", s(&job.label())),
+                            ("latency_ms", num(m.latency_ms())),
+                            ("n_classes", num(m.n_classes as f64)),
+                            ("db_hits", num(m.db_hits as f64)),
+                            ("tuned_tasks", num(m.tuned_tasks as f64)),
+                        ])
+                    })
+                    .collect()),
+            ),
+        ]);
+    }
+
+    // ---- persist the shared db ----
+    if let Some(store) = &store {
+        if let Err(e) = store.save(&db) {
+            eprintln!("failed to write sharded tuning db: {e:#}");
+            return 1;
+        }
+        println!(
+            "sharded tuning db written to {} ({} entries, {} shards)",
+            store.dir().display(),
+            db.len(),
+            store.shards()
+        );
+    }
+    // --merged-out: one flat file with the merged db — the canonical
+    // byte-comparison artifact (CI diffs it across worker/shard counts)
+    if let Some(p) = args.get("merged-out") {
+        if let Err(e) = db.save(p) {
+            eprintln!("failed to write merged db {p}: {e:#}");
+            return 1;
+        }
+        println!("merged db written to {p} ({} entries)", db.len());
+    }
+    if let Some(p) = args.get("stats-out") {
+        if let Err(e) = std::fs::write(p, stats_json.pretty()) {
+            eprintln!("failed to write {p}: {e}");
+            return 1;
+        }
+        println!("stats written to {p}");
+    }
+    0
+}
+
 fn cmd_partition(args: &Args) -> i32 {
     let Some((m, s, g)) = model_graph(args) else {
         eprintln!("unknown --model or --shape");
@@ -330,40 +654,71 @@ fn cmd_serve(args: &Args) -> i32 {
             workers: args.get_usize("workers", 0),
             ..CompileConfig::new(dev)
         };
-        let db_path = args.get("tuning-db");
-        let mut db = match db_path {
-            Some(p) => match TuningDb::load_or_new(p) {
-                Ok(db) => {
-                    if !db.is_empty() {
-                        println!(
-                            "tuning db {p}: {} entries loaded",
-                            db.len()
-                        );
-                    }
-                    db
-                }
-                Err(e) => {
-                    eprintln!("cannot load tuning db {p}: {e:#}");
-                    return 1;
-                }
-            },
-            None => TuningDb::new(),
-        };
+        let mut ids = Vec::new();
         for tok in list.split(',').map(str::trim).filter(|t| !t.is_empty())
         {
             let Some(id) = ModelId::parse(tok) else {
                 eprintln!("unknown model {tok:?} in --models");
                 return 2;
             };
-            let had = registry.get(id.name()).is_some();
-            match registry.ensure_model(
-                id,
-                shape,
-                &cfg,
-                &mut db,
-                Some(std::path::Path::new(plans_dir)),
-            ) {
-                Ok(sp) => {
+            ids.push(id);
+        }
+        // --db-dir DIR [--shards K]: sharded tuning db (the fleet
+        // farm's store); --tuning-db FILE: the legacy flat file
+        let db_path = args.get("tuning-db");
+        let store = args
+            .get("db-dir")
+            .map(|d| ShardStore::new(d, args.get_usize("shards", 4)));
+        if store.is_some() && db_path.is_some() {
+            eprintln!("--db-dir and --tuning-db are mutually exclusive");
+            return 2;
+        }
+        let mut db = if let Some(store) = &store {
+            let (db, faults) = store.load_merged();
+            for f in &faults {
+                eprintln!("shard fault: {}: {}", f.path, f.reason);
+            }
+            if !db.is_empty() {
+                println!(
+                    "sharded tuning db {}: {} entries loaded",
+                    store.dir().display(),
+                    db.len()
+                );
+            }
+            db
+        } else {
+            match db_path {
+                Some(p) => match TuningDb::load_or_new(p) {
+                    Ok(db) => {
+                        if !db.is_empty() {
+                            println!(
+                                "tuning db {p}: {} entries loaded",
+                                db.len()
+                            );
+                        }
+                        db
+                    }
+                    Err(e) => {
+                        eprintln!("cannot load tuning db {p}: {e:#}");
+                        return 1;
+                    }
+                },
+                None => TuningDb::new(),
+            }
+        };
+        // absent models compile as ONE fleet over the shared db:
+        // shared blocks tune once, db contents are order-independent
+        let had: Vec<bool> =
+            ids.iter().map(|id| registry.get(id.name()).is_some()).collect();
+        match registry.ensure_zoo(
+            &ids,
+            shape,
+            &cfg,
+            &mut db,
+            Some(std::path::Path::new(plans_dir)),
+        ) {
+            Ok(plans) => {
+                for (sp, had) in plans.iter().zip(&had) {
                     if !had {
                         println!(
                             "compiled {} ({} subgraphs, predicted {} ms) \
@@ -374,11 +729,22 @@ fn cmd_serve(args: &Args) -> i32 {
                         );
                     }
                 }
-                Err(e) => {
-                    eprintln!("cannot compile {tok}: {e:#}");
-                    return 1;
-                }
             }
+            Err(e) => {
+                eprintln!("cannot compile --models: {e:#}");
+                return 1;
+            }
+        }
+        if let Some(store) = &store {
+            if let Err(e) = store.save(&db) {
+                eprintln!("failed to write sharded tuning db: {e:#}");
+                return 1;
+            }
+            println!(
+                "sharded tuning db written to {} ({} entries)",
+                store.dir().display(),
+                db.len()
+            );
         }
         if let Some(p) = db_path {
             if let Err(e) = db.save(p) {
@@ -392,7 +758,7 @@ fn cmd_serve(args: &Args) -> i32 {
         // (--shape/--device also steer --hot-swap recompiles); accepting
         // them silently would let a user believe their tuning history
         // was in play when it was not
-        for flag in ["tuning-db", "budget"] {
+        for flag in ["tuning-db", "db-dir", "budget"] {
             if args.get(flag).is_some() {
                 eprintln!(
                     "warning: --{flag} has no effect without --models \

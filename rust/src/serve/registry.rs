@@ -35,7 +35,9 @@ use std::sync::{Arc, RwLock};
 use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::plan::{self, LoadedPlan};
-use crate::coordinator::{compile_with_db, CompileConfig, TuningDb};
+use crate::coordinator::{
+    compile_with_db, fleet_compile, CompileConfig, FleetJob, TuningDb,
+};
 use crate::device::DeviceProfile;
 use crate::graph::fingerprint::Fnv;
 use crate::models::{build, InputShape, ModelId};
@@ -241,6 +243,60 @@ impl PlanRegistry {
             .with_context(|| format!("round-tripping plan for {}", id.name()))?;
         self.register(lp)
     }
+
+    /// [`ensure_model`](Self::ensure_model) for a whole zoo: the models
+    /// not yet registered compile as ONE fleet
+    /// ([`crate::coordinator::fleet_compile`]) over the shared db, so
+    /// blocks shared across the missing models tune once and the db's
+    /// final contents are independent of the order `ids` lists them in.
+    /// Already-registered models are untouched. Returns the serving
+    /// plans in `ids` order.
+    pub fn ensure_zoo(
+        &mut self,
+        ids: &[ModelId],
+        shape: InputShape,
+        cfg: &CompileConfig,
+        db: &mut TuningDb,
+        persist_dir: Option<&Path>,
+    ) -> Result<Vec<Arc<ServingPlan>>> {
+        let jobs: Vec<FleetJob> = ids
+            .iter()
+            .filter(|id| self.get(id.name()).is_none())
+            .map(|&model| FleetJob {
+                model,
+                shape,
+                device: cfg.device.clone(),
+            })
+            .collect();
+        if !jobs.is_empty() {
+            // fleet_compile canonicalizes (sorts, dedups) internally
+            let out = fleet_compile(&jobs, cfg, db);
+            for (job, m) in out.jobs.iter().zip(&out.models) {
+                let j = plan::to_json(m, job.model.name(), cfg.device.name);
+                if let Some(dir) = persist_dir {
+                    std::fs::create_dir_all(dir)
+                        .with_context(|| format!("creating {}", dir.display()))?;
+                    let path = dir.join(format!(
+                        "{}.plan.json",
+                        job.model.name().to_ascii_lowercase()
+                    ));
+                    std::fs::write(&path, j.pretty())
+                        .with_context(|| format!("writing {}", path.display()))?;
+                }
+                let lp = plan::from_json(&j).with_context(|| {
+                    format!("round-tripping plan for {}", job.model.name())
+                })?;
+                self.register(lp)?;
+            }
+        }
+        ids.iter()
+            .map(|id| {
+                self.get(id.name()).ok_or_else(|| {
+                    anyhow!("model {} missing after fleet compile", id.name())
+                })
+            })
+            .collect()
+    }
 }
 
 #[cfg(test)]
@@ -384,5 +440,66 @@ mod tests {
             .unwrap();
         assert_eq!(c.plan.subgraph_latency, a.plan.subgraph_latency);
         std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn ensure_zoo_fleet_compiles_missing_models() {
+        let mut reg = PlanRegistry::new();
+        let mut db = TuningDb::new();
+        let cfg = CompileConfig {
+            budget: 300,
+            workers: 2,
+            ..CompileConfig::new(DeviceProfile::kirin990())
+        };
+        let plans = reg
+            .ensure_zoo(
+                &[ModelId::Sqn, ModelId::Mbn],
+                InputShape::Small,
+                &cfg,
+                &mut db,
+                None,
+            )
+            .unwrap();
+        // returned in ids order; registry in name order
+        assert_eq!(plans.len(), 2);
+        assert_eq!(plans[0].model, "SQN");
+        assert_eq!(plans[1].model, "MBN");
+        assert_eq!(
+            reg.models(),
+            vec!["MBN".to_string(), "SQN".to_string()]
+        );
+        assert!(!db.is_empty(), "fleet compile must populate the db");
+        // a second call is a no-op returning the same Arcs
+        let again = reg
+            .ensure_zoo(
+                &[ModelId::Sqn, ModelId::Mbn],
+                InputShape::Small,
+                &cfg,
+                &mut db,
+                None,
+            )
+            .unwrap();
+        assert!(Arc::ptr_eq(&plans[0], &again[0]));
+        // a solo warm compile against the fleet db reproduces the
+        // fleet-compiled plan (every class hits the shared entries)
+        let mut solo_reg = PlanRegistry::new();
+        let mut solo_db = db.clone();
+        let solo = solo_reg
+            .ensure_model(
+                ModelId::Sqn,
+                InputShape::Small,
+                &cfg,
+                &mut solo_db,
+                None,
+            )
+            .unwrap();
+        assert_eq!(
+            solo.plan.subgraph_latency,
+            plans[0].plan.subgraph_latency
+        );
+        assert_eq!(
+            solo.plan.partition.assign,
+            plans[0].plan.partition.assign
+        );
     }
 }

@@ -13,7 +13,7 @@ use crate::graph::{Graph, NodeId, Partition, Subgraph};
 /// Output tile of a fusion group. For NHWC tensors: `th x tw` spatial
 /// rows/cols and `tc` channels; for matmul outputs (M, N): `th` rows, `tc`
 /// columns (`tw` = 1).
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct Tile {
     pub th: usize,
     pub tw: usize,
@@ -38,7 +38,7 @@ impl Tile {
 /// selection as an optimization that cyclic partitions would deadlock
 /// (§IV); with acyclic subgraphs the tuner picks per-group layouts and
 /// pays explicit conversion costs at group boundaries.
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum Layout {
     /// channels-last: channel contraction vectorizes (pw/conv/matmul).
     Nhwc,
@@ -46,7 +46,7 @@ pub enum Layout {
     Nchw,
 }
 
-#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub enum GroupKind {
     /// Only simple operators.
     Simple,
@@ -61,7 +61,7 @@ pub enum GroupKind {
     Joint,
 }
 
-#[derive(Clone, Debug, PartialEq, Eq, Hash)]
+#[derive(Clone, Debug, PartialEq, Eq, Hash, PartialOrd, Ord)]
 pub struct FusionGroup {
     /// Member ops in topological order (ids into the *original* graph).
     pub ops: Vec<NodeId>,
@@ -77,7 +77,11 @@ pub struct FusionGroup {
     pub layout: Layout,
 }
 
-#[derive(Clone, Debug, PartialEq, Eq)]
+// `Ord` is structural (derived, field order) and carries no semantic
+// meaning: the TuningDb uses it only as a deterministic tie-break when
+// two entries for one key have bit-equal latency, so the merged db is a
+// pure function of the entry set regardless of insertion order.
+#[derive(Clone, Debug, PartialEq, Eq, PartialOrd, Ord)]
 pub struct Schedule {
     pub groups: Vec<FusionGroup>,
 }

@@ -1,0 +1,274 @@
+//! Crash/corruption fault injection for the sharded TuningDb, and the
+//! incremental-recompile contract (PR 8):
+//!
+//! - a torn (truncated) shard, a wrong-version shard, a mis-labeled
+//!   shard, and a coverage-invalid shard each surface as a
+//!   [`ShardFault`] naming the shard file — while every healthy shard
+//!   still loads; `quarantine` moves the evidence aside so the next
+//!   load is clean
+//! - an incremental recompile of an unmodified model retunes zero
+//!   classes and reproduces the previous plan's durable content
+//!   byte-for-byte
+//! - a one-block edit retunes exactly the classes whose fingerprint
+//!   the edit changed (computed independently from the stage layer),
+//!   and the spliced plan is byte-identical to a cold full recompile
+//!   against the same db
+
+use std::path::Path;
+
+use ago::coordinator::{
+    compile_with_db, incremental_recompile, plan, stages, CompileConfig,
+    DbEntry, ShardStore, TuningDb,
+};
+use ago::device::DeviceProfile;
+use ago::graph::OpKind;
+use ago::models::{build, InputShape, ModelId};
+use ago::tuner::schedule::{FusionGroup, GroupKind, Layout, Schedule, Tile};
+
+/// A valid synthetic entry: one group covering `0..n_ops`.
+fn entry(fp: u64, latency: f64) -> DbEntry {
+    let n_ops = 1 + (fp % 3) as usize;
+    DbEntry {
+        device: "kirin990".to_string(),
+        variant: "ago".to_string(),
+        fingerprint: fp,
+        n_ops,
+        schedule: Schedule {
+            groups: vec![FusionGroup {
+                ops: (0..n_ops).collect(),
+                kind: GroupKind::Simple,
+                tile: Tile { th: 4, tw: 4, tc: 8 },
+                vec: 4,
+                unroll: 2,
+                threads: 2,
+                layout: Layout::Nhwc,
+            }],
+        },
+        latency,
+        evals: 7,
+    }
+}
+
+/// Seed a K=4 store with two entries per shard (top fingerprint byte
+/// 0/64/128/192 maps to shard 0/1/2/3).
+fn seeded_store(dir: &Path) -> (ShardStore, TuningDb) {
+    let store = ShardStore::new(dir, 4);
+    let mut db = TuningDb::new();
+    for (si, b) in [0u64, 64, 128, 192].into_iter().enumerate() {
+        for i in 1..3u64 {
+            db.record(entry(
+                (b << 56) | i,
+                1e-3 + si as f64 * 1e-5 + i as f64 * 1e-7,
+            ));
+        }
+    }
+    store.save(&db).unwrap();
+    (store, db)
+}
+
+/// The db restricted to top-bytes NOT in `dropped`.
+fn without(db: &TuningDb, dropped: &[u64]) -> TuningDb {
+    let mut out = TuningDb::new();
+    for e in db.entries() {
+        if !dropped.contains(&(e.fingerprint >> 56)) {
+            out.record(e.clone());
+        }
+    }
+    out
+}
+
+#[test]
+fn torn_shard_is_quarantined_and_the_rest_load() {
+    let dir = std::env::temp_dir().join("ago_fleet_faults_torn");
+    std::fs::remove_dir_all(&dir).ok();
+    let (store, db) = seeded_store(&dir);
+    // tear shard 1 mid-write (what a crash before the atomic rename
+    // could never produce — but a full disk, a kill -9 on a pre-atomic
+    // writer, or a copy truncation can)
+    let victim = store.shard_path(1);
+    let text = std::fs::read_to_string(&victim).unwrap();
+    std::fs::write(&victim, &text[..text.len() / 2]).unwrap();
+    let (merged, faults) = store.load_merged();
+    assert_eq!(faults.len(), 1, "{faults:?}");
+    assert!(
+        faults[0].path.contains("shard-001-of-004"),
+        "fault must name the shard file: {}",
+        faults[0].path
+    );
+    assert!(!faults[0].reason.is_empty());
+    let expect = without(&db, &[64]);
+    assert_eq!(
+        merged.to_json().pretty(),
+        expect.to_json().pretty(),
+        "healthy shards must load despite the torn one"
+    );
+    // quarantine moves the evidence aside; the next load is clean
+    let moved = store.quarantine(&faults);
+    assert_eq!(moved.len(), 1);
+    assert!(moved[0].contains("quarantined"), "{}", moved[0]);
+    assert!(!victim.exists(), "torn shard still in place");
+    assert!(Path::new(&moved[0]).exists(), "evidence deleted, not moved");
+    let (merged2, faults2) = store.load_merged();
+    assert!(faults2.is_empty(), "{faults2:?}");
+    assert_eq!(merged2.to_json().pretty(), expect.to_json().pretty());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn untrusted_shards_fault_with_named_diagnostics() {
+    let dir = std::env::temp_dir().join("ago_fleet_faults_untrusted");
+    std::fs::remove_dir_all(&dir).ok();
+    let (store, db) = seeded_store(&dir);
+    // shard 0: wrong db version
+    std::fs::write(
+        store.shard_path(0),
+        r#"{"version": 1, "shard": 0, "of": 4, "entries": []}"#,
+    )
+    .unwrap();
+    // shard 2: header does not match the file name
+    std::fs::write(
+        store.shard_path(2),
+        r#"{"version": 2, "shard": 3, "of": 4, "entries": []}"#,
+    )
+    .unwrap();
+    // shard 3: coverage-invalid entry (claims far more ops than its
+    // schedule covers) — surgical edit of the healthy file
+    let text = std::fs::read_to_string(store.shard_path(3)).unwrap();
+    assert!(text.contains("\"n_ops\": "), "unexpected shard layout");
+    std::fs::write(
+        store.shard_path(3),
+        text.replacen("\"n_ops\": ", "\"n_ops\": 9", 1),
+    )
+    .unwrap();
+    let (merged, faults) = store.load_merged();
+    // faults arrive in file-name order: 000, 002, 003
+    assert_eq!(faults.len(), 3, "{faults:?}");
+    assert!(faults[0].path.contains("shard-000-of-004"));
+    assert!(
+        faults[0].reason.contains("version"),
+        "wrong-version reason: {}",
+        faults[0].reason
+    );
+    assert!(faults[1].path.contains("shard-002-of-004"));
+    assert!(
+        faults[1].reason.contains("does not match file name"),
+        "mis-label reason: {}",
+        faults[1].reason
+    );
+    assert!(faults[2].path.contains("shard-003-of-004"));
+    assert!(
+        faults[2].reason.contains("cover"),
+        "coverage reason: {}",
+        faults[2].reason
+    );
+    // only the untouched shard 1 contributes entries
+    let expect = without(&db, &[0, 128, 192]);
+    assert_eq!(merged.to_json().pretty(), expect.to_json().pretty());
+    // quarantining all three leaves a clean store
+    let moved = store.quarantine(&faults);
+    assert_eq!(moved.len(), 3);
+    let (merged2, faults2) = store.load_merged();
+    assert!(faults2.is_empty(), "{faults2:?}");
+    assert_eq!(merged2.to_json().pretty(), expect.to_json().pretty());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+fn cfg() -> CompileConfig {
+    CompileConfig {
+        budget: 300,
+        workers: 2,
+        ..CompileConfig::new(DeviceProfile::kirin990())
+    }
+}
+
+#[test]
+fn incremental_of_unmodified_model_retunes_zero_and_is_identical() {
+    let g = build(ModelId::Sqn, InputShape::Small);
+    let base = cfg();
+    let mut db = TuningDb::new();
+    let m0 = compile_with_db(&g, &base, &mut db);
+    let path = std::env::temp_dir().join("ago_fleet_faults_sqn.plan.json");
+    let pstr = path.to_str().unwrap();
+    plan::save(&m0, "SQN", "kirin990", pstr).unwrap();
+    let prev = plan::load(pstr).unwrap();
+    let out = incremental_recompile(&g, &base, &mut db, &prev);
+    assert_eq!(out.report.retuned, 0, "unmodified model retuned classes");
+    assert_eq!(out.report.spliced, m0.n_classes, "every class must splice");
+    assert_eq!(out.report.changed_subgraphs, 0);
+    assert!(out.report.identical, "unmodified model must be identical");
+    // the durable plan content is reproduced byte-for-byte (provenance
+    // fields like tuned_tasks legitimately differ between the original
+    // and the warm recompile; they do not survive a load)
+    let lp = plan::from_json(&out.plan).unwrap();
+    assert_eq!(
+        plan::loaded_to_json(&lp).pretty(),
+        plan::loaded_to_json(&prev).pretty(),
+        "recompile drifted from the previous plan"
+    );
+    std::fs::remove_file(pstr).ok();
+}
+
+#[test]
+fn one_block_edit_retunes_exactly_the_new_classes() {
+    let base = cfg();
+    let g = build(ModelId::Mbn, InputShape::Small);
+    let mut db = TuningDb::new();
+    let m0 = compile_with_db(&g, &base, &mut db);
+    let path = std::env::temp_dir().join("ago_fleet_faults_mbn.plan.json");
+    let pstr = path.to_str().unwrap();
+    plan::save(&m0, "MBN", "kirin990", pstr).unwrap();
+    let prev = plan::load(pstr).unwrap();
+    // one-block edit: a pointwise conv becomes a 3x3 Conv2d — still
+    // shape-preserving at stride 1, but a different op kind with 9x the
+    // work, so exactly the classes whose subgraph contains this node
+    // get a new fingerprint (and a genuinely different cost surface —
+    // a 1x1 conv would price identically to the pointwise op and could
+    // tune to the very same schedule)
+    let mut g2 = build(ModelId::Mbn, InputShape::Small);
+    let idx = g2
+        .nodes
+        .iter()
+        .position(|n| matches!(n.kind, OpKind::Pointwise))
+        .expect("MBN has a pointwise op");
+    g2.nodes[idx].kind = OpKind::Conv2d { kh: 3, kw: 3, stride: 1 };
+    let db_before = db.clone();
+    let out = incremental_recompile(&g2, &base, &mut db, &prev);
+    // the expected retune set, derived independently through the stage
+    // layer: classes of the edited graph whose representative
+    // fingerprint is absent from the pre-edit db (ambiguous classes
+    // always retune)
+    let ps = stages::partition_stage(&g2, out.model.partition.clone());
+    let ds = stages::dedup_stage(&g2, &ps, base.budget);
+    let expected = ds
+        .classes
+        .iter()
+        .filter(|c| {
+            let cf = ps.canon[c.rep].as_ref().expect("non-empty subgraph");
+            ds.ambiguous.contains(&cf.fingerprint)
+                || db_before
+                    .lookup("kirin990", base.variant.tag(), cf.fingerprint)
+                    .is_none()
+        })
+        .count();
+    assert!(expected >= 1, "the edit did not change any fingerprint");
+    assert_eq!(
+        out.report.retuned, expected,
+        "retuned classes != classes with new fingerprints"
+    );
+    assert_eq!(out.report.spliced, out.model.n_classes - expected);
+    assert!(
+        out.report.spliced > 0,
+        "untouched classes must splice from the db, not retune"
+    );
+    assert!(!out.report.identical);
+    // the spliced plan is byte-identical to a cold full recompile
+    // against the same db — same code path, but pinned, not assumed
+    let mut db_cold = db_before.clone();
+    let cold = compile_with_db(&g2, &base, &mut db_cold);
+    assert_eq!(
+        plan::to_json(&cold, "MBN", "kirin990").pretty(),
+        out.plan.pretty(),
+        "incremental and cold recompile diverged"
+    );
+    std::fs::remove_file(pstr).ok();
+}

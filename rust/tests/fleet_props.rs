@@ -1,0 +1,286 @@
+//! Fleet farm determinism properties (PR 8):
+//!
+//! - `fleet_compile` over one zoo produces byte-identical merged-db and
+//!   plan bytes at ANY worker count — parallelism changes wall-clock
+//!   only, like every other layer.
+//! - The sharded store is layout-transparent: saving one db at K ∈
+//!   {1, 4, 16} and re-merging yields the same bytes, and saving at a
+//!   new K over an old layout reshards in place.
+//! - Job order (shuffles, duplicates) never changes the outcome: the
+//!   fleet canonicalizes its job list.
+//! - Concurrent savers UNION: N real threads writing overlapping dbs
+//!   into one store lose nothing, and the merged result equals the
+//!   order-free fold of every entry written.
+//! - A warm rerun over an unchanged zoo leaves the db bytes unchanged
+//!   and hits every class.
+
+use ago::coordinator::{
+    fleet_compile, plan, CompileConfig, DbEntry, FleetJob, ShardStore,
+    TuningDb,
+};
+use ago::device::DeviceProfile;
+use ago::models::{InputShape, ModelId};
+use ago::tuner::schedule::{FusionGroup, GroupKind, Layout, Schedule, Tile};
+
+fn zoo() -> Vec<FleetJob> {
+    vec![
+        FleetJob {
+            model: ModelId::Mbn,
+            shape: InputShape::Small,
+            device: DeviceProfile::kirin990(),
+        },
+        FleetJob {
+            model: ModelId::Sqn,
+            shape: InputShape::Small,
+            device: DeviceProfile::kirin990(),
+        },
+        FleetJob {
+            model: ModelId::Mbn,
+            shape: InputShape::Small,
+            device: DeviceProfile::qsd810(),
+        },
+    ]
+}
+
+fn base_cfg(workers: usize) -> CompileConfig {
+    CompileConfig {
+        budget: 240,
+        workers,
+        ..CompileConfig::new(DeviceProfile::kirin990())
+    }
+}
+
+/// Run the fleet and serialize everything comparable: (merged db bytes,
+/// per-job plan bytes in canonical job order).
+fn run(jobs: &[FleetJob], workers: usize) -> (String, Vec<String>) {
+    let mut db = TuningDb::new();
+    let out = fleet_compile(jobs, &base_cfg(workers), &mut db);
+    let plans = out
+        .jobs
+        .iter()
+        .zip(&out.models)
+        .map(|(j, m)| {
+            plan::to_json(m, j.model.name(), j.device.name).pretty()
+        })
+        .collect();
+    (db.to_json().pretty(), plans)
+}
+
+#[test]
+fn fleet_bytes_independent_of_worker_count() {
+    let (db1, plans1) = run(&zoo(), 1);
+    let (db4, plans4) = run(&zoo(), 4);
+    assert_eq!(db1, db4, "merged db bytes depend on worker count");
+    assert_eq!(plans1, plans4, "plan bytes depend on worker count");
+}
+
+#[test]
+fn fleet_bytes_independent_of_job_order_and_duplicates() {
+    let jobs = zoo();
+    let mut shuffled = vec![
+        jobs[2].clone(),
+        jobs[0].clone(),
+        jobs[1].clone(),
+        jobs[0].clone(), // duplicate: must collapse, not recompile
+    ];
+    let (db_a, plans_a) = run(&jobs, 2);
+    let (db_b, plans_b) = run(&shuffled, 2);
+    assert_eq!(db_a, db_b, "merged db bytes depend on job order");
+    assert_eq!(plans_a, plans_b, "plan bytes depend on job order");
+    // and the canonical job list itself ignores the input order
+    shuffled.rotate_left(1);
+    let (db_c, _) = run(&shuffled, 2);
+    assert_eq!(db_a, db_c);
+}
+
+#[test]
+fn warm_rerun_hits_everything_and_preserves_db_bytes() {
+    // BT's builder ignores the input shape, so BT@small and BT@middle
+    // are two distinct fleet jobs over IDENTICAL graphs: every class of
+    // the second is a ledger hit on the first — a guaranteed cross-job
+    // dedup case (and a real exercise of cross-graph isomorphism
+    // verification, since the anchor lives in a different Graph).
+    let mut jobs = zoo();
+    jobs.push(FleetJob {
+        model: ModelId::Bt,
+        shape: InputShape::Small,
+        device: DeviceProfile::kirin990(),
+    });
+    jobs.push(FleetJob {
+        model: ModelId::Bt,
+        shape: InputShape::Middle,
+        device: DeviceProfile::kirin990(),
+    });
+    let mut db = TuningDb::new();
+    let cold = fleet_compile(&jobs, &base_cfg(2), &mut db);
+    assert!(cold.stats.ledger_tasks > 0, "cold run must tune something");
+    assert!(
+        cold.stats.fleet_hits > 0,
+        "assemble phase must splice from the ledger"
+    );
+    assert_eq!(
+        cold.stats.ambiguous, 0,
+        "zoo unexpectedly has ambiguous fingerprints"
+    );
+    assert!(
+        cold.stats.ledger_tasks < cold.stats.classes,
+        "no cross-compile dedup: {} tasks for {} class instances",
+        cold.stats.ledger_tasks,
+        cold.stats.classes
+    );
+    // the two BT jobs must assemble to byte-identical plans
+    let bt: Vec<usize> = cold
+        .jobs
+        .iter()
+        .enumerate()
+        .filter(|(_, j)| j.model == ModelId::Bt)
+        .map(|(i, _)| i)
+        .collect();
+    assert_eq!(bt.len(), 2);
+    assert_eq!(
+        plan::to_json(&cold.models[bt[0]], "BT", "kirin990").pretty(),
+        plan::to_json(&cold.models[bt[1]], "BT", "kirin990").pretty(),
+        "identical graphs assembled to different plans"
+    );
+    let bytes_cold = db.to_json().pretty();
+    let warm = fleet_compile(&jobs, &base_cfg(2), &mut db);
+    assert_eq!(
+        warm.stats.ledger_tasks, 0,
+        "warm rerun must tune nothing new"
+    );
+    assert_eq!(
+        warm.stats.prior_hits, cold.stats.ledger_tasks,
+        "every key the cold run tuned must be a prior hit warm"
+    );
+    assert_eq!(
+        warm.stats.hit_rate, 1.0,
+        "warm rerun must hit every class: {:?}",
+        warm.stats
+    );
+    assert_eq!(
+        bytes_cold,
+        db.to_json().pretty(),
+        "warm rerun changed db bytes"
+    );
+    // plans are byte-stable across the rerun too
+    for (a, b) in cold.models.iter().zip(&warm.models) {
+        assert_eq!(
+            plan::to_json(a, "m", "d").pretty(),
+            plan::to_json(b, "m", "d").pretty()
+        );
+    }
+}
+
+#[test]
+fn shard_layout_is_transparent() {
+    let (db_bytes, _) = run(&zoo()[..1], 2);
+    let db = TuningDb::from_json(
+        &ago::util::Json::parse(&db_bytes).unwrap(),
+    )
+    .unwrap();
+    let base = std::env::temp_dir().join("ago_fleet_props_layout");
+    std::fs::remove_dir_all(&base).ok();
+    for k in [1usize, 4, 16] {
+        let store = ShardStore::new(base.join(format!("k{k}")), k);
+        store.save(&db).unwrap();
+        let (merged, faults) = store.load_merged();
+        assert!(faults.is_empty(), "unexpected faults: {faults:?}");
+        assert_eq!(
+            merged.to_json().pretty(),
+            db_bytes,
+            "shard count {k} changed merged bytes"
+        );
+    }
+    // resharding: save at K=8 over the K=4 layout folds and replaces it
+    let dir = base.join("k4");
+    let re = ShardStore::new(&dir, 8);
+    re.save(&TuningDb::new()).unwrap();
+    let (merged, faults) = re.load_merged();
+    assert!(faults.is_empty(), "{faults:?}");
+    assert_eq!(merged.to_json().pretty(), db_bytes);
+    let leftovers: Vec<String> = std::fs::read_dir(&dir)
+        .unwrap()
+        .filter_map(|e| e.ok())
+        .map(|e| e.file_name().to_string_lossy().into_owned())
+        .filter(|n| n.contains("-of-004"))
+        .collect();
+    assert!(leftovers.is_empty(), "old layout not consumed: {leftovers:?}");
+    std::fs::remove_dir_all(&base).ok();
+}
+
+/// A valid synthetic entry: one group covering `0..n_ops`.
+fn entry(device: &str, fp: u64, latency: f64, evals: usize) -> DbEntry {
+    let n_ops = 1 + (fp % 3) as usize;
+    DbEntry {
+        device: device.to_string(),
+        variant: "ago".to_string(),
+        fingerprint: fp,
+        n_ops,
+        schedule: Schedule {
+            groups: vec![FusionGroup {
+                ops: (0..n_ops).collect(),
+                kind: GroupKind::Simple,
+                tile: Tile { th: 4, tw: 4, tc: 8 },
+                vec: 4,
+                unroll: 2,
+                threads: 2,
+                layout: Layout::Nhwc,
+            }],
+        },
+        latency,
+        evals,
+    }
+}
+
+#[test]
+fn concurrent_savers_union() {
+    let dir = std::env::temp_dir().join("ago_fleet_props_concurrent");
+    std::fs::remove_dir_all(&dir).ok();
+    // 8 writers, overlapping keys (same fp from two writers with
+    // different latencies exercises the min-resolution under racing)
+    let writer_dbs: Vec<TuningDb> = (0..8u64)
+        .map(|w| {
+            let mut db = TuningDb::new();
+            for i in 0..6u64 {
+                // high bits spread fingerprints across the shard space;
+                // writers 2k and 2k+1 write the SAME six keys with
+                // different latencies, so racing savers must resolve by
+                // the total order, not by who wrote last
+                let fp = (((w / 2) * 6 + i) << 56) | i;
+                db.record(entry(
+                    if (w / 2) % 2 == 0 { "kirin990" } else { "qsd810" },
+                    fp,
+                    1e-3 + (w as f64) * 1e-4,
+                    10 + w as usize,
+                ));
+            }
+            db
+        })
+        .collect();
+    let mut reference = TuningDb::new();
+    for db in &writer_dbs {
+        for e in db.entries() {
+            reference.record(e.clone());
+        }
+    }
+    let handles: Vec<_> = writer_dbs
+        .into_iter()
+        .map(|db| {
+            let dir = dir.clone();
+            std::thread::spawn(move || {
+                ShardStore::new(&dir, 4).save(&db).unwrap();
+            })
+        })
+        .collect();
+    for h in handles {
+        h.join().unwrap();
+    }
+    let (merged, faults) = ShardStore::new(&dir, 4).load_merged();
+    assert!(faults.is_empty(), "{faults:?}");
+    assert_eq!(
+        merged.to_json().pretty(),
+        reference.to_json().pretty(),
+        "concurrent saves lost or reordered entries"
+    );
+    std::fs::remove_dir_all(&dir).ok();
+}

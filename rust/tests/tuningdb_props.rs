@@ -200,6 +200,68 @@ fn garbage_files_are_errors() {
 }
 
 #[test]
+fn truncated_file_is_a_hard_error_naming_the_path() {
+    // regression for the pre-atomic-save era: a crash mid-`save` could
+    // leave a truncated db file. `load_or_new` must distinguish MISSING
+    // (fresh db) from UNPARSEABLE (hard error with the path and a parse
+    // diagnostic) — silently starting empty would discard the tuning
+    // history and mask the corruption.
+    let mut rng = Rng::new(0x7ac8);
+    let mut db = TuningDb::new();
+    db.record(random_entry(&mut rng));
+    db.record(random_entry(&mut rng));
+    let text = db.to_json().pretty();
+    let path = std::env::temp_dir().join("ago_tdb_truncated.json");
+    std::fs::write(&path, &text[..text.len() / 2]).unwrap();
+    let p = path.to_str().unwrap();
+    let err = TuningDb::load_or_new(p).unwrap_err();
+    let msg = format!("{err:#}");
+    assert!(msg.contains(p), "diagnostic must name the path: {msg}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn resolved_db_is_a_pure_function_of_the_entry_set() {
+    // the fleet merge contract: for ANY multiset of entries, recording
+    // them in ANY order yields byte-identical serialized state — the
+    // per-key resolution is a total order (latency bits, n_ops,
+    // schedule, evals desc), never insertion order
+    forall(60, |rng| {
+        // a handful of keys, several contenders per key — same latency
+        // ties included (truncated to 3 decimals) to force the
+        // structural tie-break to act
+        let mut entries = Vec::new();
+        for _ in 0..rng.range(1, 5) {
+            let proto = random_entry(rng);
+            for _ in 0..rng.range(1, 6) {
+                let mut e = proto.clone();
+                e.schedule = random_schedule(rng, e.n_ops);
+                e.latency = (rng.f64() * 8.0).floor() * 1e-3 + 1e-6;
+                e.evals = rng.range(1, 1000);
+                entries.push(e);
+            }
+        }
+        let mut reference: Option<String> = None;
+        for _ in 0..4 {
+            rng.shuffle(&mut entries);
+            let mut db = TuningDb::new();
+            for e in &entries {
+                db.record(e.clone());
+            }
+            let text = db.to_json().pretty();
+            match &reference {
+                None => reference = Some(text),
+                Some(r) => ensure!(
+                    *r == text,
+                    "db bytes depend on insertion order"
+                ),
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
 fn record_keeps_lower_latency_under_any_insertion_order() {
     forall(60, |rng| {
         // n entries sharing one key with distinct latencies, inserted in
