@@ -1,0 +1,168 @@
+//! Learned cost-model bench: the PR acceptance scenario, measured.
+//!
+//! Builds a transfer corpus by compiling the seed zoo at Small AND
+//! Large on kirin990 (so the Middle-shape arms below are an
+//! INTERPOLATION task for the model, not an extrapolation), then
+//! compiles the zoo at Middle two ways against clones of that corpus:
+//! a baseline arm (`learned: false` — every Middle class tunes cold,
+//! its fingerprints are new) and a learned arm (`learned: true` — the
+//! corpus-fit model warm-seeds each class from its nearest tuned
+//! relative in feature space, gated never-worse by the probe margin).
+//!
+//! Gates, every run (`--quick` only shrinks the budget):
+//!   - the learned arm spends <= 75% of the baseline arm's schedule
+//!     evaluations (the ISSUE's ">= 25% fewer evals" acceptance)
+//!   - per model, learned total_latency <= baseline * 1.01 (1% is the
+//!     search's own improvement resolution — plans never worse)
+//!   - at least one class actually took a learned seed (else the eval
+//!     gate would be vacuously comparing identical cold runs)
+//!   - `--learned` against an EMPTY db is byte-identical to the
+//!     unlearned compile, plan and db both (the flag is inert without
+//!     a corpus), at K = 1 and K = 4
+//!   - learned plan + db bytes are identical at 1 and 4 workers
+//!
+//! Writes `BENCH_learned.json` next to the other BENCH records.
+
+use std::time::Instant;
+
+use ago::coordinator::{compile_with_db, plan, CompileConfig, TuningDb};
+use ago::device::DeviceProfile;
+use ago::models::{build, InputShape, ModelId};
+use ago::util::json::{num, obj, s};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let budget = if quick { 400 } else { 1000 };
+    let dev = DeviceProfile::kirin990();
+    let cfg = |learned: bool, workers: usize| CompileConfig {
+        budget,
+        workers,
+        learned,
+        ..CompileConfig::new(dev.clone())
+    };
+
+    // ---- corpus: zoo at Small + Large (the model's training set) ----
+    let t0 = Instant::now();
+    let mut corpus = TuningDb::new();
+    for shape in [InputShape::Small, InputShape::Large] {
+        for model in ModelId::all() {
+            let g = build(model, shape);
+            compile_with_db(&g, &cfg(false, 0), &mut corpus);
+        }
+    }
+    println!(
+        "corpus: {} entries from {} compiles in {:.2}s",
+        corpus.len(),
+        2 * ModelId::all().len(),
+        t0.elapsed().as_secs_f64()
+    );
+
+    // ---- two arms over the zoo at Middle, against corpus clones ----
+    let run_arm = |learned: bool| {
+        let mut db = corpus.clone();
+        let mut evals = 0usize;
+        let mut seeds = 0usize;
+        let mut lats = Vec::new();
+        let t0 = Instant::now();
+        for model in ModelId::all() {
+            let g = build(model, InputShape::Middle);
+            let m = compile_with_db(&g, &cfg(learned, 0), &mut db);
+            evals += m.total_evals;
+            seeds += m.learned_seeds;
+            lats.push((model.name(), m.total_latency));
+        }
+        (evals, seeds, lats, t0.elapsed().as_secs_f64())
+    };
+    let (base_evals, base_seeds, base_lats, base_secs) = run_arm(false);
+    let (lrn_evals, lrn_seeds, lrn_lats, lrn_secs) = run_arm(true);
+    assert_eq!(base_seeds, 0, "unlearned arm took learned seeds");
+    println!(
+        "evals: baseline {base_evals}, learned {lrn_evals} \
+         ({:.0}% — {lrn_seeds} NN-seeded classes)",
+        100.0 * lrn_evals as f64 / base_evals.max(1) as f64
+    );
+
+    // ---- acceptance gates ----
+    assert!(
+        lrn_seeds > 0,
+        "no class took a learned seed: the arms are identical cold runs"
+    );
+    assert!(
+        lrn_evals as f64 <= 0.75 * base_evals as f64,
+        "learned arm spent {lrn_evals} evals, needs <= 75% of baseline \
+         {base_evals}"
+    );
+    for ((name, b), (_, l)) in base_lats.iter().zip(&lrn_lats) {
+        assert!(
+            *l <= b * 1.01,
+            "{name}: learned latency {l} worse than baseline {b}"
+        );
+        println!("  {name}: baseline {b:.6}s, learned {l:.6}s");
+    }
+
+    // ---- inertness: --learned with an empty db is byte-identical ----
+    for k in [1usize, 4] {
+        let g = build(ModelId::Mbn, InputShape::Small);
+        let mk = |learned: bool| {
+            let c = CompileConfig {
+                partition_candidates: k,
+                ..cfg(learned, 2)
+            };
+            let mut db = TuningDb::new();
+            let m = compile_with_db(&g, &c, &mut db);
+            assert_eq!(m.learned_seeds, 0, "seeded with no corpus at K={k}");
+            (
+                plan::to_json(&m, "mbn", dev.name).pretty(),
+                db.to_json().pretty(),
+            )
+        };
+        let (p0, d0) = mk(false);
+        let (p1, d1) = mk(true);
+        assert_eq!(p0, p1, "empty-db --learned changed plan bytes at K={k}");
+        assert_eq!(d0, d1, "empty-db --learned changed db bytes at K={k}");
+    }
+
+    // ---- determinism: learned plan/db bytes at 1 vs 4 workers ----
+    let g = build(ModelId::Mbn, InputShape::Middle);
+    let mk = |workers: usize| {
+        let mut db = corpus.clone();
+        let m = compile_with_db(&g, &cfg(true, workers), &mut db);
+        (
+            plan::to_json(&m, "mbn", dev.name).pretty(),
+            db.to_json().pretty(),
+        )
+    };
+    let (p1, d1) = mk(1);
+    let (p4, d4) = mk(4);
+    assert_eq!(p1, p4, "learned plan bytes depend on worker count");
+    assert_eq!(d1, d4, "learned db bytes depend on worker count");
+    println!("byte gates: empty-db inertness + worker independence OK");
+
+    let record = obj(vec![
+        ("bench", s("perf_learned")),
+        ("quick", num(if quick { 1.0 } else { 0.0 })),
+        ("models", s("all/middle")),
+        ("budget", num(budget as f64)),
+        ("corpus_entries", num(corpus.len() as f64)),
+        ("baseline_evals", num(base_evals as f64)),
+        ("learned_evals", num(lrn_evals as f64)),
+        (
+            "eval_ratio",
+            num(lrn_evals as f64 / base_evals.max(1) as f64),
+        ),
+        ("learned_seeds", num(lrn_seeds as f64)),
+        ("baseline_secs", num(base_secs)),
+        ("learned_secs", num(lrn_secs)),
+        (
+            "latency_ratio_worst",
+            num(base_lats
+                .iter()
+                .zip(&lrn_lats)
+                .map(|((_, b), (_, l))| l / b)
+                .fold(0.0f64, f64::max)),
+        ),
+    ]);
+    std::fs::write("BENCH_learned.json", record.pretty())
+        .expect("write BENCH_learned.json");
+    println!("wrote BENCH_learned.json");
+}

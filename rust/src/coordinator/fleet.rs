@@ -50,7 +50,7 @@
 
 use std::collections::{BTreeMap, HashSet};
 
-use crate::costmodel::PricingContext;
+use crate::costmodel::{ClassFeatures, PricingContext};
 use crate::device::DeviceProfile;
 use crate::graph::fingerprint::verify_isomorphism_cross;
 use crate::graph::Graph;
@@ -62,8 +62,9 @@ use crate::util::ThreadPool;
 
 use super::plan::{self, LoadedPlan};
 use super::stages::{
-    canon_to_ids, dedup_stage, ids_to_canon, partition_stage,
-    run_class_search, DedupStage, PartitionStage,
+    canon_to_ids, dedup_stage, ids_to_canon, learned_fit, learned_nn_seed,
+    partition_stage, run_class_search, DedupStage, PartitionStage,
+    PROBE_MARGIN,
 };
 use super::{
     compile_with_db, CompileConfig, CompiledModel, DbEntry, Frontend,
@@ -307,13 +308,25 @@ pub fn fleet_compile(
     // the same cross-device seeding sequential compiles get. Within a
     // wave, seeds are resolved sequentially against the frozen db, then
     // the searches fan out over the shared pool.
+    //
+    // Under `--learned`, classes with NO ancestry anywhere (lookup_any
+    // misses — a structure the corpus has never seen on any device) try
+    // the nearest-neighbor transfer instead of tuning cold, under the
+    // same probe-margin gate the per-compile path applies. The model is
+    // fit ONCE from the pre-run corpus so every wave ranks neighbors
+    // against the same coefficients.
+    let model = if base.learned {
+        learned_fit(db, base.variant)
+    } else {
+        None
+    };
     for (dev, tasks) in &waves {
         let items: Vec<(usize, usize, usize, Option<Schedule>)> = tasks
             .iter()
             .map(|t| {
                 let prep = &preps[t.job];
                 let cf = prep.ps.canon[t.rep].as_ref().unwrap();
-                let initial = db.lookup_any(vtag, t.fp).and_then(|e| {
+                let mut initial = db.lookup_any(vtag, t.fp).and_then(|e| {
                     if e.n_ops != cf.order.len() {
                         return None;
                     }
@@ -321,6 +334,27 @@ pub fn fleet_compile(
                     s.revalidate_legality(&prep.g);
                     Some(s)
                 });
+                if initial.is_none() {
+                    if let Some(m) = &model {
+                        let ctx = PricingContext::new_fused(
+                            &prep.g,
+                            &jobs[t.job].device,
+                            base.fused,
+                        );
+                        let (seed, gate_evals) = learned_nn_seed(
+                            &prep.g,
+                            m,
+                            db,
+                            &jobs[t.job].device,
+                            vtag,
+                            cf,
+                            PROBE_MARGIN,
+                            &ctx,
+                        );
+                        stats.ledger_evals += gate_evals;
+                        initial = seed;
+                    }
+                }
                 (t.job, t.rep, t.budget, initial)
             })
             .collect();
@@ -357,6 +391,7 @@ pub fn fleet_compile(
                 schedule: canonical,
                 latency,
                 evals,
+                features: ClassFeatures::from_view(&preps[t.job].g, &cf.order),
             });
             stats.ledger_evals += evals;
         }

@@ -36,7 +36,11 @@ pub use fleet::{
     fleet_compile, incremental_recompile, FleetJob, FleetOutcome, FleetStats,
     IncrementalOutcome, IncrementalReport,
 };
-pub use stages::{PartitionSearch, PROBE_MARGIN, PROBE_SALT};
+pub use stages::{
+    adaptive_margin, learned_fit, learned_stage_score,
+    select_stage_with_margin, PartitionSearch, LEARNED_PRUNE_RATIO,
+    PROBE_MARGIN, PROBE_SALT,
+};
 pub use tuningdb::sharded::{ShardFault, ShardStore};
 pub use tuningdb::{DbEntry, TuningDb};
 
@@ -46,14 +50,15 @@ use crate::costmodel::PricingContext;
 use crate::device::DeviceProfile;
 use crate::graph::{Graph, Partition};
 use crate::partition::{
-    candidates, relay_partition, Candidate, ClusterConfig, PartitionReport,
+    candidates, learned_candidates, relay_partition, Candidate,
+    ClusterConfig, PartitionReport, LEARNED_EXTRA,
 };
 use crate::tuner::schedule::Schedule;
 use crate::util::ThreadPool;
 
 use stages::{
-    dedup_stage, emit_stage, partition_stage, probe_stage, select_stage,
-    tune_stage, PartitionStage,
+    dedup_stage, emit_stage, partition_stage, probe_stage, tune_stage,
+    PartitionStage,
 };
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -145,6 +150,18 @@ pub struct CompileConfig {
     /// changes search trajectories, so plans differ from (and are gated
     /// never-worse-than, in `benches/perf_kernels`) the cold path.
     pub probe_seed: bool,
+    /// Learned cost-model assist (`ago compile --learned`): fit the
+    /// [`crate::costmodel::LearnedModel`] from the TuningDb corpus at
+    /// compile start and use it to (a) extend the K > 1 partition sweep
+    /// with model-ranked Td proposals and prune hopeless candidates
+    /// before probing, (b) launch full-tune tasks heaviest-predicted
+    /// first, and (c) warm-seed classes with no db ancestry from their
+    /// nearest tuned relative in feature space — gated never-worse by
+    /// the probe margin. Off by default; also inert when the corpus is
+    /// below the model's minimum ([`crate::costmodel::learned`]), so
+    /// `--learned` against an empty db reproduces the unlearned plan
+    /// bytes exactly (gated in `benches/perf_learned`).
+    pub learned: bool,
 }
 
 impl CompileConfig {
@@ -160,6 +177,7 @@ impl CompileConfig {
             partition_candidates: 1,
             fused: false,
             probe_seed: false,
+            learned: false,
         }
     }
 }
@@ -189,6 +207,10 @@ pub struct CompiledModel {
     /// Classes whose schedule was adopted from the TuningDb without
     /// search (exact same-device hits).
     pub db_hits: usize,
+    /// Classes warm-seeded by the learned nearest-neighbor transfer
+    /// (`--learned` only; compile-time diagnostic like
+    /// `cache_hit_rate` — NOT serialized into the plan).
+    pub learned_seeds: usize,
     /// `db_hits / n_classes` (0.0 when the model has no subgraphs).
     pub class_hit_rate: f64,
     pub report: PartitionReport,
@@ -290,6 +312,14 @@ pub fn compile_with_db(
     cfg: &CompileConfig,
     db: &mut TuningDb,
 ) -> CompiledModel {
+    // ---- Learned model fit (--learned; None below the corpus floor,
+    // which keeps every learned code path inert) ----
+    let model = if cfg.learned {
+        learned_fit(db, cfg.variant)
+    } else {
+        None
+    };
+
     // ---- Partition stage (frontend / candidate sweep) ----
     let k = cfg.partition_candidates.max(1);
     let cluster_base = match &cfg.frontend {
@@ -305,11 +335,22 @@ pub fn compile_with_db(
             None
         }
     };
-    let cands: Vec<Candidate> = match cluster_base {
+    let mut cands: Vec<Candidate> = match cluster_base {
         None => Vec::new(),
         // k = 1 yields exactly the base candidate (one cluster() run) —
         // the generator's own degenerate case, not a hand-rolled copy
-        Some(base) => candidates(g, base, k),
+        Some(base) => match &model {
+            // learned proposal: append model-ranked Td candidates
+            // beyond the fixed sweep (candidate 0 stays the base)
+            Some(m) if k > 1 => {
+                let score = |c: &Candidate| {
+                    let pstage = partition_stage(g, c.partition.clone());
+                    learned_stage_score(g, m, &pstage, &cfg.device)
+                };
+                learned_candidates(g, base, k, LEARNED_EXTRA, &score)
+            }
+            _ => candidates(g, base, k),
+        },
     };
     let mut cand_stages: Vec<PartitionStage> = match &cfg.frontend {
         Frontend::Relay => vec![partition_stage(g, relay_partition(g))],
@@ -318,6 +359,43 @@ pub fn compile_with_db(
             .map(|c| partition_stage(g, c.partition.clone()))
             .collect(),
     };
+
+    // ---- Learned pruning (--learned, K > 1): drop candidates the
+    // model prices hopelessly above the best prediction, so the probe
+    // budget concentrates on plausible partitions. Candidate 0 (the
+    // base config) is immune — the Select stage's never-worse margin is
+    // anchored on it.
+    let mut pruned = 0usize;
+    let mut learned_scores: Option<Vec<f64>> = None;
+    if let Some(m) = &model {
+        if cand_stages.len() > 1 {
+            let scores: Vec<f64> = cand_stages
+                .iter()
+                .map(|pstage| learned_stage_score(g, m, pstage, &cfg.device))
+                .collect();
+            let best = scores.iter().copied().fold(f64::INFINITY, f64::min);
+            let keep: Vec<bool> = scores
+                .iter()
+                .enumerate()
+                .map(|(i, &s)| i == 0 || s <= best * LEARNED_PRUNE_RATIO)
+                .collect();
+            pruned = keep.iter().filter(|&&kp| !kp).count();
+            if pruned > 0 {
+                let mut it = keep.iter().copied();
+                cands.retain(|_| it.next().unwrap());
+                let mut it = keep.iter().copied();
+                cand_stages.retain(|_| it.next().unwrap());
+            }
+            learned_scores = Some(
+                scores
+                    .iter()
+                    .zip(&keep)
+                    .filter(|&(_, &kp)| kp)
+                    .map(|(&s, _)| s)
+                    .collect(),
+            );
+        }
+    }
 
     // ONE pool for every scheduling level: probe tasks and class tasks
     // fan out across it, and inside each task the generational tuner's
@@ -342,7 +420,11 @@ pub fn compile_with_db(
     let (chosen, partition_search, winner_dedup, probe_seeds) =
         if cand_stages.len() > 1 {
             let mut probe = probe_stage(g, cfg, &cand_stages, &ctx, &pool);
-            let chosen = select_stage(&probe.scores);
+            // per-model displacement margin from the probe-score spread
+            // (PROBE_MARGIN floor: tight sweeps reproduce the fixed-
+            // margin selection exactly)
+            let margin = adaptive_margin(&probe.scores);
+            let chosen = select_stage_with_margin(&probe.scores, margin);
             let wd = probe.dedups.swap_remove(chosen);
             let search = PartitionSearch {
                 n_candidates: cand_stages.len(),
@@ -353,6 +435,9 @@ pub fn compile_with_db(
                 probe_scores: probe.scores,
                 probe_evals: probe.evals,
                 probe_tasks: probe.tasks,
+                margin,
+                pruned,
+                learned_scores: learned_scores.take(),
             };
             // probe-informed full tune: the winner's cold classes resume
             // from their probe-winning schedules (opt-in)
@@ -362,6 +447,11 @@ pub fn compile_with_db(
             (0, None, None, None)
         };
     let ps = cand_stages.swap_remove(chosen);
+    // the NN transfer gate reuses the Select stage's margin; K = 1
+    // compiles (no probe sweep) fall back to the fixed floor
+    let tune_margin = partition_search
+        .as_ref()
+        .map_or(PROBE_MARGIN, |s| s.margin);
 
     // ---- Dedup (full budget) + FullTune + Emit ----
     // class structure is budget-independent, so the winner's probe-time
@@ -372,8 +462,18 @@ pub fn compile_with_db(
         None => dedup_stage(g, &ps, cfg.budget),
     };
     let t_tuning = Instant::now();
-    let ts =
-        tune_stage(g, cfg, db, &ps, &ds, probe_seeds.as_ref(), &ctx, &pool);
+    let ts = tune_stage(
+        g,
+        cfg,
+        db,
+        &ps,
+        &ds,
+        probe_seeds.as_ref(),
+        model.as_ref(),
+        tune_margin,
+        &ctx,
+        &pool,
+    );
     emit_stage(g, cfg, db, ps, &ds, ts, t_tuning, partition_search)
 }
 

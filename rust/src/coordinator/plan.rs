@@ -142,25 +142,35 @@ pub fn to_json(m: &CompiledModel, model_name: &str, device: &str) -> Json {
     // their exact bytes. Probe scores are raw seconds — like
     // subgraph_latency_s, a ms conversion is not an f64 identity.
     if let Some(se) = &m.partition_search {
-        fields.push((
-            "partition_search",
-            obj(vec![
-                ("n_candidates", num(se.n_candidates as f64)),
-                ("chosen", num(se.chosen as f64)),
-                ("chosen_label", s(&se.chosen_label)),
-                ("chosen_config", se.chosen_config.to_json()),
-                (
-                    "labels",
-                    arr(se.labels.iter().map(|l| s(l)).collect()),
-                ),
-                (
-                    "probe_scores_s",
-                    arr(se.probe_scores.iter().map(|&p| num(p)).collect()),
-                ),
-                ("probe_evals", num(se.probe_evals as f64)),
-                ("probe_tasks", num(se.probe_tasks as f64)),
-            ]),
-        ));
+        let mut pfields = vec![
+            ("n_candidates", num(se.n_candidates as f64)),
+            ("chosen", num(se.chosen as f64)),
+            ("chosen_label", s(&se.chosen_label)),
+            ("chosen_config", se.chosen_config.to_json()),
+            ("labels", arr(se.labels.iter().map(|l| s(l)).collect())),
+            (
+                "probe_scores_s",
+                arr(se.probe_scores.iter().map(|&p| num(p)).collect()),
+            ),
+            ("probe_evals", num(se.probe_evals as f64)),
+            ("probe_tasks", num(se.probe_tasks as f64)),
+            // Select-stage displacement margin actually used (adaptive:
+            // derived from probe-score variance, floored at the fixed
+            // 20%) and how many candidates the learned model pruned
+            // before probing (0 unless --learned)
+            ("margin", num(se.margin)),
+            ("pruned", num(se.pruned as f64)),
+        ];
+        // model-predicted cost per surviving candidate, aligned with
+        // `labels`; only present under --learned so existing searched
+        // plans keep their exact bytes
+        if let Some(ls) = &se.learned_scores {
+            pfields.push((
+                "learned_scores_s",
+                arr(ls.iter().map(|&p| num(p)).collect()),
+            ));
+        }
+        fields.push(("partition_search", obj(pfields)));
     }
     // per-subgraph compute patterns: only present for fused compiles
     // (`ago compile --fused`), so unfused plans — the default, and every

@@ -56,8 +56,10 @@
 use std::collections::{HashMap, HashSet};
 
 use crate::costmodel::{
-    CostEvaluator, EvalStats, MemoCache, MemoEvaluator, PricingContext,
+    ClassFeatures, CostEvaluator, EvalStats, LearnedModel, MemoCache,
+    MemoEvaluator, PricingContext, TrainRow,
 };
+use crate::device::DeviceProfile;
 use crate::graph::fingerprint::{
     canonical_form, verify_isomorphism, CanonicalForm,
 };
@@ -400,17 +402,51 @@ pub fn probe_stage(
 /// (first minimum on ties), but a non-baseline winner must beat the
 /// baseline by [`PROBE_MARGIN`]. An empty score list selects 0.
 pub fn select_stage(scores: &[f64]) -> usize {
+    select_stage_with_margin(scores, PROBE_MARGIN)
+}
+
+/// [`select_stage`] with an explicit displacement margin (the driver
+/// passes [`adaptive_margin`]'s choice; [`PROBE_MARGIN`] reproduces the
+/// historical fixed-margin behavior bit for bit).
+pub fn select_stage_with_margin(scores: &[f64], margin: f64) -> usize {
     let mut i_min = 0;
     for i in 1..scores.len() {
         if scores[i] < scores[i_min] {
             i_min = i;
         }
     }
-    if i_min != 0 && scores[i_min] < scores[0] * (1.0 - PROBE_MARGIN) {
+    if i_min != 0 && scores[i_min] < scores[0] * (1.0 - margin) {
         i_min
     } else {
         0
     }
+}
+
+/// Per-model displacement margin derived from the probe-score spread
+/// (carried PR 5 follow-on). The calibration behind [`PROBE_MARGIN`]
+/// showed probe error scales with how differently the candidates score:
+/// tightly clustered scores mean the shared-class cancellation is doing
+/// its job and 20% is already conservative, while a widely dispersed
+/// sweep (coefficient of variation above 0.5) means the probe is
+/// comparing apples to oranges and a switch needs a deeper discount.
+/// The fixed 20% stays as the FLOOR; the margin is capped at 40% so a
+/// pathological spread can never make displacement impossible. Fewer
+/// than 3 scores have no usable variance — fixed margin. Deterministic:
+/// fixed-order sums over the score vector, no data-dependent branches
+/// beyond the clamps.
+pub fn adaptive_margin(scores: &[f64]) -> f64 {
+    if scores.len() < 3 {
+        return PROBE_MARGIN;
+    }
+    let n = scores.len() as f64;
+    let mean = scores.iter().sum::<f64>() / n;
+    if !(mean > 0.0) || !mean.is_finite() {
+        return PROBE_MARGIN;
+    }
+    let var =
+        scores.iter().map(|s| (s - mean) * (s - mean)).sum::<f64>() / n;
+    let cv = var.sqrt() / mean;
+    (PROBE_MARGIN + (cv - 0.5).max(0.0) * 0.2).min(0.40)
 }
 
 /// Provenance of a cost-guided partition choice, recorded on the
@@ -430,6 +466,118 @@ pub struct PartitionSearch {
     pub probe_scores: Vec<f64>,
     pub probe_evals: usize,
     pub probe_tasks: usize,
+    /// Displacement margin the Select stage actually applied (the
+    /// [`adaptive_margin`] of the probe scores; [`PROBE_MARGIN`] floor).
+    pub margin: f64,
+    /// Learned-proposal candidates dropped before probing (model score
+    /// beyond the prune ratio). 0 without `--learned`.
+    pub pruned: usize,
+    /// Learned-model predicted latency per candidate, index-aligned
+    /// with `probe_scores`. `Some` only when a model ranked the sweep.
+    pub learned_scores: Option<Vec<f64>>,
+}
+
+// ---------------------------------------------------------------------------
+// Learned cost model plumbing (--learned)
+// ---------------------------------------------------------------------------
+
+/// Candidates whose model-predicted plan latency exceeds the best
+/// prediction by more than this ratio are dropped before probing
+/// (candidate 0 is immune). Deliberately loose: the model ranks well
+/// but its absolute error is ln-scale, so only order-of-magnitude
+/// losers are pruned.
+pub const LEARNED_PRUNE_RATIO: f64 = 2.0;
+
+/// Fit the learned latency predictor from every db entry of this
+/// variant (all devices — the device descriptor is part of the feature
+/// vector, so cross-device corpora sharpen rather than pollute the
+/// fit). Returns `None` below the minimum corpus size; every consumer
+/// treats `None` as "feature inert".
+pub fn learned_fit(db: &TuningDb, variant: Variant) -> Option<LearnedModel> {
+    let vtag = variant.tag();
+    let rows: Vec<TrainRow> = db
+        .entries()
+        .filter(|e| e.variant == vtag)
+        .map(|e| TrainRow {
+            device: e.device.clone(),
+            fingerprint: e.fingerprint,
+            n_ops: e.n_ops,
+            latency: e.latency,
+            features: e.features.clone(),
+        })
+        .collect();
+    LearnedModel::fit(&rows)
+}
+
+/// Model-predicted whole-plan latency of a candidate partition: the sum
+/// of per-subgraph predictions plus the same dispatch term the probe
+/// scorer charges. Used to RANK candidates (probing order / pruning),
+/// never to pick winners — selection stays on measured probe scores.
+pub fn learned_stage_score(
+    g: &Graph,
+    model: &LearnedModel,
+    ps: &PartitionStage,
+    device: &DeviceProfile,
+) -> f64 {
+    let mut total = 0.0f64;
+    for cf in ps.canon.iter().flatten() {
+        let f = ClassFeatures::from_view(g, &cf.order);
+        total += model.predict(device.name, cf.order.len(), &f);
+    }
+    total + ps.partition.n_groups as f64 * device.dispatch_us * 1e-6
+}
+
+/// Cross-device transfer: find the nearest db entry in standardized
+/// class-feature space (any device, same variant and op count) and
+/// offer its schedule as a warm seed — but only when pricing the seed
+/// on THIS device confirms the model's prediction within `margin` (the
+/// same never-worse discipline the probe Select stage applies). The
+/// returned eval count (0 or 1) is the pricing spent on the gate and is
+/// charged to the class whether or not the seed is accepted.
+///
+/// Determinism: the scan iterates [`TuningDb::entries`] in its BTreeMap
+/// key order with strict-`<` improvement, so ties resolve to the first
+/// (device, variant, fingerprint) key — a pure function of db contents.
+#[allow(clippy::too_many_arguments)]
+pub(crate) fn learned_nn_seed(
+    g: &Graph,
+    model: &LearnedModel,
+    db: &TuningDb,
+    device: &DeviceProfile,
+    vtag: &str,
+    cf: &CanonicalForm,
+    margin: f64,
+    ctx: &PricingContext,
+) -> (Option<Schedule>, usize) {
+    let qf = ClassFeatures::from_view(g, &cf.order);
+    let mut best: Option<(f64, &DbEntry)> = None;
+    for e in db.entries() {
+        if e.variant != vtag || e.n_ops != cf.order.len() {
+            continue;
+        }
+        let d = model.class_distance(cf.order.len(), &qf, e.n_ops, &e.features);
+        match &best {
+            Some((bd, _)) if *bd <= d => {}
+            _ => best = Some((d, e)),
+        }
+    }
+    let Some((_, e)) = best else {
+        return (None, 0);
+    };
+    let to_rep: HashMap<NodeId, NodeId> = canon_to_ids(cf);
+    let Some(mut s) = e.schedule.remap(&to_rep) else {
+        return (None, 0);
+    };
+    s.revalidate_legality(g);
+    let mut shard = ctx.new_shard();
+    let priced = ctx.price_schedule(&s, None, &mut shard);
+    let predicted = model.predict(device.name, cf.order.len(), &qf);
+    if priced.is_finite() && priced <= predicted * (1.0 + margin) {
+        (Some(s), 1)
+    } else {
+        // seed failed the never-worse gate: tune cold, keep the receipt
+        (None, 1)
+    }
 }
 
 // ---------------------------------------------------------------------------
@@ -472,6 +620,9 @@ pub struct TuneStage {
     pub results: Vec<ClassResult>,
     /// Classes whose schedule was adopted from the TuningDb.
     pub db_hits: usize,
+    /// Classes warm-seeded by the learned nearest-neighbor transfer
+    /// (seed accepted by the probe-margin gate). 0 without `--learned`.
+    pub learned_seeds: usize,
 }
 
 /// Run ONE class's schedule search exactly as the FullTune stage does:
@@ -522,6 +673,17 @@ pub(crate) fn run_class_search(
 /// from its winner instead of a random population. Db entries still
 /// outrank probe seeds (a full-budget winner beats a probe winner), and
 /// ambiguous fingerprints stay cold as always.
+///
+/// `learned` (`Some` only under `--learned` with a fit model) adds two
+/// behaviors, both inert when `None` so plan bytes reproduce the
+/// unlearned pipeline exactly: (a) classes that would otherwise tune
+/// COLD try a [`learned_nn_seed`] cross-device transfer, gated by
+/// `margin`; (b) full-tune tasks launch in predicted-latency-descending
+/// order, so the heaviest classes hit the pool first and the schedule's
+/// tail shrinks. The reorder cannot change any result bit: each class
+/// task is keyed by `class_idx` and seeded by its representative id,
+/// and the emit stage folds results by class index.
+#[allow(clippy::too_many_arguments)]
 pub fn tune_stage(
     g: &Graph,
     cfg: &CompileConfig,
@@ -529,11 +691,15 @@ pub fn tune_stage(
     ps: &PartitionStage,
     ds: &DedupStage,
     probe_seeds: Option<&HashMap<u64, (Schedule, usize)>>,
+    learned: Option<&LearnedModel>,
+    margin: f64,
     ctx: &PricingContext,
     pool: &ThreadPool,
 ) -> TuneStage {
     let mut db_hits = 0usize;
-    let tasks: Vec<(usize, SubgraphView, usize, usize, ClassMode)> = ds
+    let mut learned_seeds = 0usize;
+    type Task = (usize, SubgraphView, usize, usize, ClassMode, usize, u64);
+    let mut tasks: Vec<Task> = ds
         .classes
         .iter()
         .enumerate()
@@ -557,6 +723,9 @@ pub fn tune_stage(
                     .and_then(|(s, n_ops)| remap_canonical(s, *n_ops))
             };
             let vtag = cfg.variant.tag();
+            // evals spent deciding the mode (the NN gate's pricing),
+            // charged to the class so total_evals stays honest
+            let mut extra = 0usize;
             let mode = if ds.ambiguous.contains(&cf.fingerprint) {
                 ClassMode::Cold
             } else if !cfg.warm_start {
@@ -576,17 +745,46 @@ pub fn tune_stage(
                 ClassMode::Warm(s)
             } else if let Some(s) = probe_seed() {
                 ClassMode::Warm(s)
+            } else if let Some(model) = learned {
+                // no ancestry for this structure anywhere: ask the
+                // model for its nearest tuned relative (any device)
+                let (seed, gate_evals) = learned_nn_seed(
+                    g, model, db, &cfg.device, vtag, cf, margin, ctx,
+                );
+                extra = gate_evals;
+                match seed {
+                    Some(s) => {
+                        learned_seeds += 1;
+                        ClassMode::Warm(s)
+                    }
+                    None => ClassMode::Cold,
+                }
             } else {
                 ClassMode::Cold
             };
-            (ci, ps.views[cl.rep].clone(), cl.budget, cl.rep, mode)
+            // sort key for the learned launch order: predicted latency
+            // bits (positive finite f64s order like their bit patterns)
+            let pred_bits = learned
+                .map(|m| {
+                    let f = ClassFeatures::from_view(g, &cf.order);
+                    m.predict(cfg.device.name, cf.order.len(), &f).to_bits()
+                })
+                .unwrap_or(0);
+            (ci, ps.views[cl.rep].clone(), cl.budget, cl.rep, mode, extra,
+             pred_bits)
         })
         .collect();
+    if learned.is_some() {
+        // heaviest predicted classes first (ties by class index); pure
+        // function of (db, graph, config), so identical at any worker
+        // count — and emit folds by class_idx, so bytes cannot move
+        tasks.sort_by(|a, b| b.6.cmp(&a.6).then(a.0.cmp(&b.0)));
+    }
 
     let variant = cfg.variant;
     let seed = cfg.seed;
     let results: Vec<ClassResult> =
-        pool.scoped_map(tasks, |(ci, view, budget, rep, mode)| {
+        pool.scoped_map(tasks, |(ci, view, budget, rep, mode, extra, _)| {
             let initial = match mode {
                 ClassMode::Hit(s) => {
                     // exact hit: one pricing evaluation, no search
@@ -620,12 +818,12 @@ pub fn tune_stage(
                 class_idx: ci,
                 best,
                 latency,
-                evals,
+                evals: evals + extra,
                 stats,
                 searched: true,
             }
         });
-    TuneStage { results, db_hits }
+    TuneStage { results, db_hits, learned_seeds }
 }
 
 // ---------------------------------------------------------------------------
@@ -681,6 +879,10 @@ pub fn emit_stage(
                 schedule: canonical.clone(),
                 latency: r.latency,
                 evals: r.evals,
+                // graph-derived features (v3): the learned model's
+                // training row for this class, exact where a v2
+                // migration could only backfill
+                features: ClassFeatures::from_view(g, &cf_rep.order),
             });
         }
         schedules[cl.rep] = r.best;
@@ -730,6 +932,7 @@ pub fn emit_stage(
         n_classes,
         tuned_tasks,
         db_hits: ts.db_hits,
+        learned_seeds: ts.learned_seeds,
         class_hit_rate: if n_classes > 0 {
             ts.db_hits as f64 / n_classes as f64
         } else {
@@ -784,5 +987,29 @@ mod tests {
         assert_eq!(select_stage(&[1.0, 0.5, 0.5]), 1);
         // exactly at the margin boundary: not strictly below, stay
         assert_eq!(select_stage(&[1.0, 1.0 - PROBE_MARGIN]), 0);
+    }
+
+    #[test]
+    fn adaptive_margin_floors_caps_and_degenerates() {
+        // too few scores, or degenerate means: fixed margin
+        assert_eq!(adaptive_margin(&[]), PROBE_MARGIN);
+        assert_eq!(adaptive_margin(&[1.0, 2.0]), PROBE_MARGIN);
+        assert_eq!(adaptive_margin(&[0.0, 0.0, 0.0]), PROBE_MARGIN);
+        assert_eq!(adaptive_margin(&[-1.0, 1.0, 0.0]), PROBE_MARGIN);
+        // tight cluster (cv << 0.5): stays on the floor, so the PR 5
+        // calibration (and its never-worse tier-1 test) is unchanged
+        assert_eq!(adaptive_margin(&[1.0, 1.01, 0.99]), PROBE_MARGIN);
+        // the 0.73x displacement gap from the cost-guided-selection
+        // tier-1 scenario still clears any margin this sweep produces
+        let m = adaptive_margin(&[1.0, 0.73, 0.95]);
+        assert!(0.73 < 1.0 - m, "margin {m} would block a 27% win");
+        // wild dispersion: grows past the floor but caps at 0.40
+        let wide = adaptive_margin(&[1.0, 10.0, 100.0, 0.1]);
+        assert!(wide > PROBE_MARGIN);
+        assert!(wide <= 0.40 + 1e-12);
+        // the margin actually gates: a 25% win displaces at the floor
+        // but not under a 0.30 margin
+        assert_eq!(select_stage_with_margin(&[1.0, 0.75], PROBE_MARGIN), 1);
+        assert_eq!(select_stage_with_margin(&[1.0, 0.75], 0.30), 0);
     }
 }

@@ -29,6 +29,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::costmodel::learned::ClassFeatures;
 use crate::tuner::schedule::Schedule;
 use crate::util::json::{arr, num, obj, s, Json};
 
@@ -79,6 +80,11 @@ pub struct DbEntry {
     pub latency: f64,
     /// Search evaluations spent to find it.
     pub evals: usize,
+    /// Class feature vector (v3): lets the learned cost model train on
+    /// and nearest-neighbor-search the corpus without re-deriving
+    /// graphs. Entries loaded from a v2 db get a deterministic
+    /// [`ClassFeatures::backfill`] from the stored schedule.
+    pub features: ClassFeatures,
 }
 
 #[derive(Clone, Debug, Default)]
@@ -153,8 +159,9 @@ impl TuningDb {
 
     pub fn to_json(&self) -> Json {
         obj(vec![
-            // version 2: latency_s (raw seconds) replaced latency_ms
-            ("version", num(2.0)),
+            // version 3: per-entry class features for the learned cost
+            // model (v2 stored none; v1 stored latency_ms)
+            ("version", num(3.0)),
             (
                 "entries",
                 arr(self.entries.values().map(entry_to_json).collect()),
@@ -164,13 +171,17 @@ impl TuningDb {
 
     pub fn from_json(j: &Json) -> Result<TuningDb> {
         // a version field, when present, must be ours: v1 stored
-        // latency_ms, and failing per-entry would blame the wrong field
+        // latency_ms, and failing per-entry would blame the wrong field.
+        // v2 (no feature metadata) still loads warm — entries without a
+        // "features" key get a deterministic backfill from the stored
+        // schedule in `entry_from_json`, so migration is transparent and
+        // the next save writes v3.
         if let Some(v) = j.get("version").and_then(|v| v.as_usize()) {
-            if v != 2 {
+            if v != 2 && v != 3 {
                 return Err(anyhow!(
                     "unsupported tuning db version {v} (this build reads \
-                     v2, which stores latency_s in raw seconds); re-tune \
-                     or migrate the db"
+                     v2/v3, which store latency_s in raw seconds); \
+                     re-tune or migrate the db"
                 ));
             }
         }
@@ -221,19 +232,31 @@ impl TuningDb {
 /// Total-order rank of an entry under its (device, variant, fingerprint)
 /// key: latency first — non-negative finite f64, so the raw bit pattern
 /// is order-preserving — then op count, the schedule's structural `Ord`,
-/// and finally evals DESCENDING (more search evidence ranks better).
-/// Descending matters: a warm compile re-records every db hit as
-/// (same latency, same schedule, evals=1), and that must never displace
-/// the original tuned entry — warm recompiles leave db bytes unchanged.
+/// evals DESCENDING (more search evidence ranks better), and finally the
+/// v3 feature bits. Descending evals matter: a warm compile re-records
+/// every db hit as (same latency, same schedule, evals=1), and that must
+/// never displace the original tuned entry — warm recompiles leave db
+/// bytes unchanged. Features rank BELOW evals for the same reason: a
+/// migrated v2 entry carries backfilled features, and a warm re-record
+/// with graph-derived features must not flip-flop the stored bytes.
 /// Equal ranks cover every serialized non-key field, so rank-equal
 /// entries are byte-identical on disk and "keep the old one" loses no
 /// information.
-fn entry_rank(e: &DbEntry) -> (u64, usize, &Schedule, std::cmp::Reverse<usize>) {
+type EntryRank<'a> = (
+    u64,
+    usize,
+    &'a Schedule,
+    std::cmp::Reverse<usize>,
+    (usize, u64, u64, u64, usize),
+);
+
+fn entry_rank(e: &DbEntry) -> EntryRank<'_> {
     (
         e.latency.to_bits(),
         e.n_ops,
         &e.schedule,
         std::cmp::Reverse(e.evals),
+        e.features.rank_key(),
     )
 }
 
@@ -250,6 +273,7 @@ fn entry_to_json(e: &DbEntry) -> Json {
         // exactly and re-serialization is byte-identical
         ("latency_s", num(e.latency)),
         ("evals", num(e.evals as f64)),
+        ("features", e.features.to_json()),
         (
             "schedule",
             arr(e.schedule.groups.iter().map(group_to_json).collect()),
@@ -307,6 +331,16 @@ fn entry_from_json(j: &Json) -> Result<DbEntry> {
             ))
         }
     };
+    // v3 entries carry features; v2 entries don't — backfill them
+    // deterministically from the schedule so old dbs stay warm. A
+    // PRESENT-but-malformed features object is corruption, not a
+    // version difference, and fails loudly like any other bad field.
+    let features = match j.get("features") {
+        Some(f) => ClassFeatures::from_json(f).ok_or_else(|| {
+            anyhow!("db entry {fp_hex} has malformed features")
+        })?,
+        None => ClassFeatures::backfill(&schedule, n_ops),
+    };
     Ok(DbEntry {
         device,
         variant,
@@ -315,6 +349,7 @@ fn entry_from_json(j: &Json) -> Result<DbEntry> {
         schedule,
         latency,
         evals: j.get("evals").and_then(|e| e.as_usize()).unwrap_or(0),
+        features,
     })
 }
 
@@ -324,24 +359,27 @@ mod tests {
     use crate::tuner::schedule::{FusionGroup, GroupKind, Layout, Tile};
 
     fn entry(device: &str, fp: u64, lat: f64) -> DbEntry {
+        let schedule = Schedule {
+            groups: vec![FusionGroup {
+                ops: vec![0, 1],
+                kind: GroupKind::Epilogue,
+                tile: Tile { th: 4, tw: 4, tc: 8 },
+                vec: 8,
+                unroll: 4,
+                threads: 2,
+                layout: Layout::Nhwc,
+            }],
+        };
+        let features = ClassFeatures::backfill(&schedule, 2);
         DbEntry {
             device: device.to_string(),
             variant: "ago".to_string(),
             fingerprint: fp,
             n_ops: 2,
-            schedule: Schedule {
-                groups: vec![FusionGroup {
-                    ops: vec![0, 1],
-                    kind: GroupKind::Epilogue,
-                    tile: Tile { th: 4, tw: 4, tc: 8 },
-                    vec: 8,
-                    unroll: 4,
-                    threads: 2,
-                    layout: Layout::Nhwc,
-                }],
-            },
+            schedule,
             latency: lat,
             evals: 100,
+            features,
         }
     }
 
@@ -434,6 +472,89 @@ mod tests {
         let v1 = r#"{"version": 1, "entries": []}"#;
         let err = TuningDb::from_json(&Json::parse(v1).unwrap()).unwrap_err();
         assert!(err.to_string().contains("version 1"), "{err:#}");
+    }
+
+    /// Satellite regression: a v2 db (no feature metadata) must keep
+    /// loading WARM — entries stay usable, features are backfilled
+    /// deterministically from the stored schedule, and the next save
+    /// writes a stable v3.
+    #[test]
+    fn v2_db_loads_warm_with_backfilled_features() {
+        let v2 = r#"{"version": 2, "entries": [{"device": "kirin990",
+            "variant": "ago", "fingerprint": "002a", "n_ops": 2,
+            "latency_s": 0.002, "evals": 40,
+            "schedule": [{"ops": [0, 1], "kind": "epilogue",
+                          "tile": [4, 4, 8]}]}]}"#;
+        let db = TuningDb::from_json(&Json::parse(v2).unwrap()).unwrap();
+        let e = db.lookup("kirin990", "ago", 0x2a).expect("warm entry");
+        assert_eq!(e.evals, 40);
+        assert_eq!(
+            e.features,
+            ClassFeatures::backfill(&e.schedule, e.n_ops),
+            "backfill must be the deterministic schedule-derived one"
+        );
+        // migrated save is v3 with features, and re-loading it is
+        // byte-stable (migration happens exactly once)
+        let v3_text = db.to_json().pretty();
+        assert!(v3_text.contains("\"version\": 3"));
+        assert!(v3_text.contains("\"features\""));
+        let again =
+            TuningDb::from_json(&Json::parse(&v3_text).unwrap()).unwrap();
+        assert_eq!(again.to_json().pretty(), v3_text);
+    }
+
+    /// Mixed-version corpus: v3 entries (with features) and v2 entries
+    /// (without) merge into one db; present-but-malformed features are
+    /// corruption, not a version difference.
+    #[test]
+    fn mixed_version_entries_merge_and_bad_features_fail() {
+        let mut db = TuningDb::new();
+        let native = entry("kirin990", 7, 1.0);
+        db.record(native.clone());
+        let v3_text = db.to_json().pretty();
+        let v2 = r#"{"version": 2, "entries": [{"device": "qsd810",
+            "variant": "ago", "fingerprint": "0009", "n_ops": 1,
+            "latency_s": 0.004, "evals": 9,
+            "schedule": [{"ops": [0], "kind": "simple",
+                          "tile": [2, 2, 4]}]}]}"#;
+        let old = TuningDb::from_json(&Json::parse(v2).unwrap()).unwrap();
+        let mut merged =
+            TuningDb::from_json(&Json::parse(&v3_text).unwrap()).unwrap();
+        for e in old.entries() {
+            merged.record(e.clone());
+        }
+        assert_eq!(merged.len(), 2);
+        assert_eq!(
+            merged.lookup("kirin990", "ago", 7).unwrap().features,
+            native.features
+        );
+        // malformed features object: hard error naming the entry
+        let bad = r#"{"version": 3, "entries": [{"device": "d",
+            "variant": "ago", "fingerprint": "ff", "n_ops": 1,
+            "latency_s": 0.001, "evals": 1,
+            "features": {"n_complex": 1},
+            "schedule": [{"ops": [0], "kind": "simple",
+                          "tile": [1, 1, 1]}]}]}"#;
+        let err =
+            TuningDb::from_json(&Json::parse(bad).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("malformed features"), "{err:#}");
+    }
+
+    /// A truncated db file (crash before atomic save existed, torn
+    /// copy, ...) must fail loudly with the path — never load as a
+    /// silently-smaller db.
+    #[test]
+    fn truncated_db_file_fails_loudly() {
+        let mut db = TuningDb::new();
+        db.record(entry("kirin990", 9, 1.0));
+        db.record(entry("qsd810", 11, 2.0));
+        let text = db.to_json().pretty();
+        let path = std::env::temp_dir().join("ago_tuningdb_truncated.json");
+        let path = path.to_str().unwrap();
+        std::fs::write(path, &text[..text.len() / 2]).unwrap();
+        let err = TuningDb::load(path).unwrap_err();
+        assert!(err.to_string().contains("tuning db"), "{err:#}");
+        std::fs::remove_file(path).ok();
     }
 
     #[test]

@@ -5,7 +5,7 @@
 //! Layout: entries are bucketed by fingerprint prefix — shard index
 //! `(fp >> 56) * K / 256`, monotone in the fingerprint's top byte and
 //! exact for any K ≤ 256 — into files named `shard-III-of-KKK.json`.
-//! Each shard is the v2 db schema plus a `{shard, of}` header, written
+//! Each shard is the v3 db schema plus a `{shard, of}` header, written
 //! atomically via temp-file + rename ([`super::write_atomic`]) under a
 //! per-shard lock file, and merged with the shard's previous contents at
 //! write time, so concurrent writers union instead of clobbering.
@@ -170,8 +170,8 @@ impl ShardStore {
                 header("of"),
             ));
         }
-        // the v2 entry schema and per-entry coverage validation are the
-        // flat db's, verbatim
+        // the entry schema (v3, with v2 backfill migration) and
+        // per-entry coverage validation are the flat db's, verbatim
         let db = TuningDb::from_json(&j)?;
         for e in db.entries() {
             let want = shard_of(e.fingerprint, k);
@@ -261,7 +261,7 @@ impl ShardStore {
                 merged.record(e);
             }
             let text = obj(vec![
-                ("version", num(2.0)),
+                ("version", num(3.0)),
                 ("shard", num(shard as f64)),
                 ("of", num(self.k as f64)),
                 (

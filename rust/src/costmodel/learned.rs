@@ -1,0 +1,563 @@
+//! Learned latency model over the TuningDb corpus (tentpole of the
+//! learned-tuning PR; direction from Transferable Graph Optimizers,
+//! arxiv 2010.12438).
+//!
+//! The TuningDb accumulates (device, variant, fingerprint) → schedule +
+//! predicted latency across every compile and fleet run. This module
+//! treats that corpus as a training set for a features→latency
+//! predictor and gives the compiler three levers beyond exact
+//! fingerprint hits:
+//!   (a) rank extra Td-region candidates in `partition::candidates`,
+//!   (b) rank/reorder probe and full-tune work in `coordinator::stages`,
+//!   (c) transfer warm seeds across devices by nearest-neighbor search
+//!       in class-feature space (gated never-worse by the probe margin).
+//!
+//! DETERMINISM CONTRACT — the model participates in plan bytes, so the
+//! fit must be a pure function of the corpus at any worker count:
+//!   - rows are sorted internally by (device, fingerprint, n_ops,
+//!     latency bits) before any accumulation, so insertion order and
+//!     shard layout cannot reach the arithmetic;
+//!   - the fit is closed-form ridge regression on the normal equations
+//!     A = XᵀX + λI, solved by fixed-pivot-order Gauss-Jordan. A is
+//!     symmetric positive definite (ridge on every non-intercept dim,
+//!     row count on the intercept), so every pivot is strictly positive
+//!     in exact arithmetic — no partial pivoting, no data-dependent row
+//!     swaps, no iteration;
+//!   - all sums run in the sorted row order with fixed dimension order.
+//! Same corpus → same model bits → same downstream decisions.
+//!
+//! The target is log-latency: schedule latencies span ~6 decades across
+//! shapes and devices, and the consumers only need reliable ORDERING
+//! plus a coarse magnitude for the never-worse gate.
+
+use crate::device::DeviceProfile;
+use crate::graph::Graph;
+use crate::kernels::{classify_ops, Pattern};
+use crate::partition::{node_weight, WeightParams};
+use crate::tuner::schedule::{GroupKind, Schedule};
+use crate::util::json::{num, obj, s, Json};
+
+/// Per-class feature dimensions (shared by graphs and db entries).
+pub const CLASS_DIM: usize = 9;
+/// Device-descriptor dimensions appended for the latency fit.
+pub const DEVICE_DIM: usize = 4;
+/// Full feature-vector width.
+pub const DIM: usize = CLASS_DIM + DEVICE_DIM;
+const D1: usize = DIM + 1; // + intercept
+
+/// Below this corpus size the fit is noise; `fit` returns `None` and
+/// every consumer falls back to exact-hit-only behavior.
+pub const MIN_TRAIN: usize = 8;
+const RIDGE: f64 = 1e-3;
+
+/// Structural features of one subgraph class, computed over the
+/// CANONICAL member order so every member of a class (in any graph)
+/// produces identical bits. Persisted per entry in the v3 TuningDb.
+#[derive(Clone, Debug, PartialEq)]
+pub struct ClassFeatures {
+    /// Number of complex (reduction-carrying) ops.
+    pub n_complex: usize,
+    /// Fraction of data-movement ops (reshape/transpose family).
+    pub move_frac: f64,
+    /// Mean ln(1 + Eq.(1) weight): tuning-complexity scale.
+    pub mean_log_w: f64,
+    /// Mean ln(1 + output element count): tensor-size scale. This is
+    /// the feature that extrapolates across input shapes — latency is
+    /// ~linear in element count, so log-latency is ~linear here.
+    pub mean_log_elems: f64,
+    /// Compute pattern of the whole op set (`kernels::classify_ops`).
+    pub pattern: Pattern,
+}
+
+impl ClassFeatures {
+    /// Features of a concrete op set. `ops` MUST be the class's
+    /// canonical order (e.g. `CanonicalForm::order`) so the f64
+    /// accumulation order — and therefore the bits — match across
+    /// members, graphs, and worker counts.
+    pub fn from_view(g: &Graph, ops: &[usize]) -> ClassFeatures {
+        let n = ops.len().max(1);
+        let p = WeightParams::default();
+        let mut n_complex = 0usize;
+        let mut n_move = 0usize;
+        let mut sum_log_w = 0.0f64;
+        let mut sum_log_e = 0.0f64;
+        for &v in ops {
+            let node = g.node(v);
+            if node.kind.is_complex() {
+                n_complex += 1;
+            }
+            if node.kind.is_data_movement() {
+                n_move += 1;
+            }
+            sum_log_w += (1.0 + node_weight(g, v, p)).ln();
+            sum_log_e += (1.0 + node.out_shape.numel() as f64).ln();
+        }
+        ClassFeatures {
+            n_complex,
+            move_frac: n_move as f64 / n as f64,
+            mean_log_w: sum_log_w / n as f64,
+            mean_log_elems: sum_log_e / n as f64,
+            pattern: classify_ops(g, ops),
+        }
+    }
+
+    /// Deterministic backfill for v2 db entries, which stored no
+    /// feature metadata. Only the schedule and op count survive in a v2
+    /// entry, so this is a structural PLACEHOLDER (group kinds proxy
+    /// complex-op count, tile volumes proxy the size scales), not a
+    /// reconstruction: good enough to keep old entries usable as
+    /// exact-hit warm starts and rankable by the model, and — being a
+    /// pure function of the stored bytes — identical on every load.
+    pub fn backfill(schedule: &Schedule, n_ops: usize) -> ClassFeatures {
+        let mut n_complex = 0usize;
+        let mut sum_log_w = 0.0f64;
+        let mut sum_log_e = 0.0f64;
+        for grp in &schedule.groups {
+            n_complex += match grp.kind {
+                GroupKind::Simple => 0,
+                GroupKind::Epilogue | GroupKind::Joint => 1,
+                GroupKind::Intensive => 2,
+            };
+            let e = grp.tile.elems() as f64;
+            sum_log_w += (1.0 + e).ln();
+            sum_log_e += (1.0 + e * grp.threads as f64).ln();
+        }
+        let ng = schedule.groups.len().max(1) as f64;
+        let n_complex = n_complex.min(n_ops);
+        ClassFeatures {
+            n_complex,
+            move_frac: 0.0,
+            mean_log_w: sum_log_w / ng,
+            mean_log_elems: sum_log_e / ng,
+            pattern: if n_complex == 0 {
+                Pattern::Streaming
+            } else if n_ops > n_complex {
+                Pattern::Pipeline
+            } else {
+                Pattern::Stencil
+            },
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        obj(vec![
+            ("mean_log_elems", num(self.mean_log_elems)),
+            ("mean_log_w", num(self.mean_log_w)),
+            ("move_frac", num(self.move_frac)),
+            ("n_complex", num(self.n_complex as f64)),
+            ("pattern", s(self.pattern.name())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Option<ClassFeatures> {
+        let f = |k: &str| j.get(k).and_then(Json::as_f64);
+        Some(ClassFeatures {
+            n_complex: j.get("n_complex").and_then(Json::as_usize)?,
+            move_frac: f("move_frac")?,
+            mean_log_w: f("mean_log_w")?,
+            mean_log_elems: f("mean_log_elems")?,
+            pattern: Pattern::parse(j.get("pattern")?.as_str()?)?,
+        })
+    }
+
+    /// Total-order key covering every serialized field (f64s by bits),
+    /// for `TuningDb::entry_rank`'s "rank-equal ⇒ byte-identical"
+    /// invariant.
+    pub fn rank_key(&self) -> (usize, u64, u64, u64, usize) {
+        (
+            self.n_complex,
+            self.move_frac.to_bits(),
+            self.mean_log_w.to_bits(),
+            self.mean_log_elems.to_bits(),
+            self.pattern.index(),
+        )
+    }
+}
+
+/// One training example extracted from a TuningDb entry. Kept as a
+/// plain struct so `costmodel` stays below `coordinator` in the module
+/// DAG — the coordinator flattens its db into rows, not the reverse.
+#[derive(Clone, Debug)]
+pub struct TrainRow {
+    pub device: String,
+    pub fingerprint: u64,
+    pub n_ops: usize,
+    /// Recorded best predicted latency, seconds.
+    pub latency: f64,
+    pub features: ClassFeatures,
+}
+
+/// Raw (unstandardized) feature vector: class dims 0..CLASS_DIM, then
+/// device descriptors. Unknown devices contribute zeros — the class
+/// dims still rank candidates on the same hardware.
+fn phi(device: &str, n_ops: usize, f: &ClassFeatures) -> [f64; DIM] {
+    let mut x = [0.0f64; DIM];
+    let n = n_ops.max(1) as f64;
+    x[0] = (1.0 + n).ln();
+    x[1] = f.n_complex as f64 / n;
+    x[2] = f.move_frac;
+    x[3] = f.mean_log_w;
+    x[4] = f.mean_log_elems;
+    x[5 + f.pattern.index()] = 1.0; // one-hot, 4 patterns
+    if let Some(d) = DeviceProfile::by_name(device) {
+        x[CLASS_DIM] = d.peak_gflops().max(1.0).ln();
+        x[CLASS_DIM + 1] = d.dram_gbps.max(1.0).ln();
+        x[CLASS_DIM + 2] = (d.cores.max(1) as f64).ln();
+        x[CLASS_DIM + 3] = (d.l2.size_bytes.max(1) as f64).ln();
+    }
+    x
+}
+
+/// Closed-form ridge fit of ln(latency) on standardized features.
+#[derive(Clone, Debug)]
+pub struct LearnedModel {
+    mean: [f64; DIM],
+    /// Per-dim standard deviation; 0.0 marks a constant (dropped) dim.
+    scale: [f64; DIM],
+    /// `weights[0]` is the intercept, `weights[1 + i]` multiplies
+    /// standardized dim `i`.
+    weights: [f64; D1],
+    pub n_train: usize,
+    /// FNV over the sorted training rows: two models fit from the same
+    /// corpus share it regardless of row order or worker count.
+    pub corpus_key: u64,
+}
+
+impl LearnedModel {
+    /// Fit the corpus. Returns `None` below [`MIN_TRAIN`] rows or if
+    /// the normal equations lose positive definiteness to rounding
+    /// (degenerate corpus) — consumers then behave exactly as today.
+    pub fn fit(rows: &[TrainRow]) -> Option<LearnedModel> {
+        if rows.len() < MIN_TRAIN {
+            return None;
+        }
+        // iteration-order freedom: sort before ANY arithmetic
+        let mut sorted: Vec<&TrainRow> = rows.iter().collect();
+        sorted.sort_by(|a, b| {
+            (a.device.as_str(), a.fingerprint, a.n_ops, a.latency.to_bits())
+                .cmp(&(
+                    b.device.as_str(),
+                    b.fingerprint,
+                    b.n_ops,
+                    b.latency.to_bits(),
+                ))
+        });
+        let n = sorted.len();
+        let mut key = 0xcbf2_9ce4_8422_2325u64;
+        for r in &sorted {
+            fnv(&mut key, r.device.as_bytes());
+            fnv(&mut key, &[0xff]);
+            fnv(&mut key, &r.fingerprint.to_le_bytes());
+            fnv(&mut key, &(r.n_ops as u64).to_le_bytes());
+            fnv(&mut key, &r.latency.to_bits().to_le_bytes());
+            let (nc, mf, mw, me, pi) = r.features.rank_key();
+            fnv(&mut key, &(nc as u64).to_le_bytes());
+            fnv(&mut key, &mf.to_le_bytes());
+            fnv(&mut key, &mw.to_le_bytes());
+            fnv(&mut key, &me.to_le_bytes());
+            fnv(&mut key, &(pi as u64).to_le_bytes());
+        }
+
+        let xs: Vec<[f64; DIM]> = sorted
+            .iter()
+            .map(|r| phi(&r.device, r.n_ops, &r.features))
+            .collect();
+        let ys: Vec<f64> =
+            sorted.iter().map(|r| r.latency.max(1e-12).ln()).collect();
+
+        let mut mean = [0.0f64; DIM];
+        for x in &xs {
+            for i in 0..DIM {
+                mean[i] += x[i];
+            }
+        }
+        for m in &mut mean {
+            *m /= n as f64;
+        }
+        let mut scale = [0.0f64; DIM];
+        for x in &xs {
+            for i in 0..DIM {
+                let d = x[i] - mean[i];
+                scale[i] += d * d;
+            }
+        }
+        for sc in &mut scale {
+            let sd = (*sc / n as f64).sqrt();
+            *sc = if sd > 1e-9 { sd } else { 0.0 };
+        }
+
+        // normal equations over [1, z_1..z_DIM]
+        let mut a = [[0.0f64; D1]; D1];
+        let mut b = [0.0f64; D1];
+        for (x, &y) in xs.iter().zip(&ys) {
+            let mut z = [0.0f64; D1];
+            z[0] = 1.0;
+            for i in 0..DIM {
+                z[1 + i] = if scale[i] > 0.0 {
+                    (x[i] - mean[i]) / scale[i]
+                } else {
+                    0.0
+                };
+            }
+            for r in 0..D1 {
+                b[r] += z[r] * y;
+                for c in 0..D1 {
+                    a[r][c] += z[r] * z[c];
+                }
+            }
+        }
+        let lambda = RIDGE * n as f64;
+        for i in 1..D1 {
+            a[i][i] += lambda;
+        }
+        let weights = solve_spd(&mut a, &mut b)?;
+        Some(LearnedModel {
+            mean,
+            scale,
+            weights,
+            n_train: n,
+            corpus_key: key,
+        })
+    }
+
+    /// Predicted latency in seconds for a class on a device. The
+    /// exponent is clamped so a wild extrapolation can never produce
+    /// inf/NaN (which would poison JSON provenance and comparisons).
+    pub fn predict(
+        &self,
+        device: &str,
+        n_ops: usize,
+        f: &ClassFeatures,
+    ) -> f64 {
+        let x = phi(device, n_ops, f);
+        let mut y = self.weights[0];
+        for i in 0..DIM {
+            if self.scale[i] > 0.0 {
+                y += self.weights[1 + i] * (x[i] - self.mean[i])
+                    / self.scale[i];
+            }
+        }
+        y.clamp(-60.0, 60.0).exp()
+    }
+
+    /// Squared distance between two classes in the STANDARDIZED class
+    /// subspace (device dims excluded — the whole point of transfer is
+    /// crossing devices). Dims constant over the corpus carry no
+    /// information and are skipped.
+    pub fn class_distance(
+        &self,
+        a_ops: usize,
+        a: &ClassFeatures,
+        b_ops: usize,
+        b: &ClassFeatures,
+    ) -> f64 {
+        let xa = phi("", a_ops, a);
+        let xb = phi("", b_ops, b);
+        let mut d = 0.0f64;
+        for i in 0..CLASS_DIM {
+            if self.scale[i] > 0.0 {
+                let z = (xa[i] - xb[i]) / self.scale[i];
+                d += z * z;
+            }
+        }
+        d
+    }
+
+    /// Digest of the full model state (for determinism tests: bit-equal
+    /// models ⇒ equal fingerprints, and any coefficient drift shows).
+    pub fn fingerprint(&self) -> u64 {
+        let mut h = 0xcbf2_9ce4_8422_2325u64;
+        fnv(&mut h, &(self.n_train as u64).to_le_bytes());
+        fnv(&mut h, &self.corpus_key.to_le_bytes());
+        for v in self.mean.iter().chain(&self.scale).chain(&self.weights) {
+            fnv(&mut h, &v.to_bits().to_le_bytes());
+        }
+        h
+    }
+}
+
+fn fnv(h: &mut u64, bytes: &[u8]) {
+    for &b in bytes {
+        *h ^= b as u64;
+        *h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+}
+
+/// Gauss-Jordan elimination in FIXED pivot order (0, 1, ..). Valid only
+/// for symmetric positive definite systems, where every pivot is
+/// strictly positive; returns `None` if rounding ever degenerates one.
+fn solve_spd(
+    a: &mut [[f64; D1]; D1],
+    b: &mut [f64; D1],
+) -> Option<[f64; D1]> {
+    for p in 0..D1 {
+        let piv = a[p][p];
+        if !(piv > 1e-12) {
+            return None;
+        }
+        let inv = 1.0 / piv;
+        for c in 0..D1 {
+            a[p][c] *= inv;
+        }
+        b[p] *= inv;
+        for r in 0..D1 {
+            if r == p {
+                continue;
+            }
+            let f = a[r][p];
+            if f == 0.0 {
+                continue;
+            }
+            for c in 0..D1 {
+                a[r][c] -= f * a[p][c];
+            }
+            b[r] -= f * b[p];
+        }
+    }
+    Some(*b)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn feat(
+        n_complex: usize,
+        mlw: f64,
+        mle: f64,
+        pattern: Pattern,
+    ) -> ClassFeatures {
+        ClassFeatures {
+            n_complex,
+            move_frac: 0.0,
+            mean_log_w: mlw,
+            mean_log_elems: mle,
+            pattern,
+        }
+    }
+
+    /// Synthetic corpus with a clean log-linear law:
+    /// ln(latency) = mean_log_elems + 0.2 * mean_log_w - 14.
+    fn corpus() -> Vec<TrainRow> {
+        let mut rows = Vec::new();
+        for (i, dev) in ["kirin990", "qsd810"].iter().enumerate() {
+            for k in 0..8u64 {
+                let mle = 6.0 + k as f64;
+                let mlw = 2.0 + (k % 4) as f64;
+                let pat = if k % 2 == 0 {
+                    Pattern::Pipeline
+                } else {
+                    Pattern::Stencil
+                };
+                rows.push(TrainRow {
+                    device: dev.to_string(),
+                    fingerprint: 0x1000 + k * 7 + i as u64,
+                    n_ops: 2 + (k % 3) as usize,
+                    latency: (mle + 0.2 * mlw - 14.0).exp(),
+                    features: feat(1 + (k % 2) as usize, mlw, mle, pat),
+                });
+            }
+        }
+        rows
+    }
+
+    #[test]
+    fn fit_is_insertion_order_free() {
+        let rows = corpus();
+        let m1 = LearnedModel::fit(&rows).expect("fit");
+        let mut rev = rows.clone();
+        rev.reverse();
+        let m2 = LearnedModel::fit(&rev).expect("fit");
+        // interleave a third order
+        let mut inter: Vec<TrainRow> = Vec::new();
+        for i in 0..rows.len() {
+            let j = (i * 7) % rows.len();
+            inter.push(rows[j].clone());
+        }
+        // (i*7)%16 visits every index once for 16 rows
+        assert_eq!(inter.len(), rows.len());
+        let m3 = LearnedModel::fit(&inter).expect("fit");
+        assert_eq!(m1.fingerprint(), m2.fingerprint());
+        assert_eq!(m1.fingerprint(), m3.fingerprint());
+        assert_eq!(m1.corpus_key, m3.corpus_key);
+    }
+
+    #[test]
+    fn fit_recovers_size_ordering_and_extrapolates() {
+        let m = LearnedModel::fit(&corpus()).expect("fit");
+        let small = feat(1, 3.0, 7.0, Pattern::Pipeline);
+        let big = feat(1, 3.0, 12.0, Pattern::Pipeline);
+        let ps = m.predict("kirin990", 3, &small);
+        let pb = m.predict("kirin990", 3, &big);
+        assert!(pb > ps * 2.0, "size must dominate: {pb} !>> {ps}");
+        // beyond the training range (max mle = 13): still monotone
+        let huge = feat(1, 3.0, 16.0, Pattern::Pipeline);
+        assert!(m.predict("kirin990", 3, &huge) > pb);
+        // predictions are finite and positive even far out
+        let wild = feat(9, 50.0, 80.0, Pattern::Streaming);
+        let p = m.predict("nodevice", 40, &wild);
+        assert!(p.is_finite() && p > 0.0);
+    }
+
+    #[test]
+    fn small_corpus_returns_none() {
+        let rows: Vec<TrainRow> =
+            corpus().into_iter().take(MIN_TRAIN - 1).collect();
+        assert!(LearnedModel::fit(&rows).is_none());
+    }
+
+    #[test]
+    fn class_distance_prefers_nearer_class() {
+        let m = LearnedModel::fit(&corpus()).expect("fit");
+        let q = feat(1, 3.0, 9.0, Pattern::Pipeline);
+        let near = feat(1, 3.0, 9.5, Pattern::Pipeline);
+        let far = feat(2, 6.0, 13.0, Pattern::Stencil);
+        assert_eq!(m.class_distance(3, &q, 3, &q), 0.0);
+        assert!(
+            m.class_distance(3, &q, 3, &near)
+                < m.class_distance(3, &q, 3, &far)
+        );
+    }
+
+    #[test]
+    fn features_json_roundtrip_is_exact() {
+        let f = feat(2, 3.125, 9.875, Pattern::Reduction);
+        let back = ClassFeatures::from_json(&f.to_json()).expect("parse");
+        assert_eq!(f, back);
+        // and through actual text (bit-exact f64 via shortest round-trip)
+        let f2 = ClassFeatures {
+            move_frac: 1.0 / 3.0,
+            mean_log_w: 0.1 + 0.2, // not exactly 0.3
+            ..f
+        };
+        let text = f2.to_json().pretty();
+        let parsed = Json::parse(&text).expect("json");
+        let back2 = ClassFeatures::from_json(&parsed).expect("parse");
+        assert_eq!(f2.move_frac.to_bits(), back2.move_frac.to_bits());
+        assert_eq!(f2.mean_log_w.to_bits(), back2.mean_log_w.to_bits());
+        assert!(ClassFeatures::from_json(&obj(vec![])).is_none());
+    }
+
+    #[test]
+    fn backfill_is_deterministic_and_bounded() {
+        use crate::tuner::schedule::{FusionGroup, Layout, Tile};
+        let sch = Schedule {
+            groups: vec![FusionGroup {
+                ops: vec![0, 1],
+                kind: GroupKind::Intensive,
+                tile: Tile { th: 4, tw: 4, tc: 8 },
+                vec: 8,
+                unroll: 4,
+                threads: 2,
+                layout: Layout::Nhwc,
+            }],
+        };
+        let a = ClassFeatures::backfill(&sch, 2);
+        let b = ClassFeatures::backfill(&sch, 2);
+        assert_eq!(a, b);
+        assert!(a.n_complex <= 2);
+        assert_eq!(a.pattern, Pattern::Stencil); // 2 ops, 2 "complex"
+        let c = ClassFeatures::backfill(&sch, 5);
+        assert_eq!(c.pattern, Pattern::Pipeline);
+    }
+}

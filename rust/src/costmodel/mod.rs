@@ -19,11 +19,13 @@
 //! trace-driven cache simulator (`simulator`).
 
 pub mod evaluator;
+pub mod learned;
 
 pub use evaluator::{
     CostEvaluator, DirectEvaluator, EvalStats, GroupKey, MemoCache,
     MemoEvaluator, MemoShard, PricingContext,
 };
+pub use learned::{ClassFeatures, LearnedModel, TrainRow};
 
 use crate::device::DeviceProfile;
 use crate::graph::{Graph, NodeId, OpKind};

@@ -79,6 +79,8 @@ fn main() {
                  \x20         [--plans-out DIR] [--merged-out db.json] \\\n\
                  \x20         [--stats-out stats.json] [--workers 0] \\\n\
                  \x20         [--seed N] [--variant ago|ni|nr] \\\n\
+                 \x20         [--learned (corpus cost model warm-seeds \\\n\
+                 \x20          unseen classes)] \\\n\
                  \x20         [--incremental (diff each model against its \\\n\
                  \x20          previous plan in --plans-out: splice \\\n\
                  \x20          unchanged classes, retune new ones)] \\\n\
@@ -93,6 +95,9 @@ fn main() {
                  \x20         [--fused (single-pass pricing + pattern \\\n\
                  \x20          tags in the plan)] [--probe-seed (seed \\\n\
                  \x20          the full tune from probe winners, K>1)] \\\n\
+                 \x20         [--learned (fit the tuning-db cost model: \\\n\
+                 \x20          ranked partition proposals + cross-device \\\n\
+                 \x20          warm seeds; inert on small corpora)] \\\n\
                  \x20         [--baselines] [--tuning-db db.json] [--cold]\n\
                  partition --model mvt --shape large\n\
                  serve     --plans dir [--models mbn,sqn --shape small \\\n\
@@ -173,6 +178,9 @@ fn cmd_compile(args: &Args) -> i32 {
         // --probe-seed: seed the winner's full tune from the probe
         // stage's best schedules (only acts when K > 1)
         probe_seed: args.has_flag("probe-seed"),
+        // --learned: corpus-fit cost model ranks partition candidates
+        // and warm-seeds classes with no db ancestry
+        learned: args.has_flag("learned"),
     };
     log::info!(
         "compiling {mname}/{sname} for {} (budget {budget}, {:?})",
@@ -349,6 +357,9 @@ fn cmd_fleet(args: &Args) -> i32 {
         seed: args.get_u64("seed", 0xA60),
         variant: Variant::parse(args.get_or("variant", "ago"))
             .unwrap_or(Variant::Ago),
+        // --learned: ledger classes with no ancestry warm-seed from
+        // their nearest corpus neighbor (probe-margin gated)
+        learned: args.has_flag("learned"),
         ..CompileConfig::new(devices[0].clone())
     };
 

@@ -115,6 +115,72 @@ pub fn candidates(g: &Graph, base: ClusterConfig, k: usize) -> Vec<Candidate> {
     out
 }
 
+/// How many model-ranked learned proposals `--learned` appends beyond
+/// the fixed sweep (see [`learned_candidates`]).
+pub const LEARNED_EXTRA: usize = 2;
+
+/// The learned-proposal Td grid: off-grid scales interleaved between
+/// the fixed sweep's powers of sqrt(2), so proposals explore partitions
+/// the sweep cannot reach. Coarse-only for the same measured reason as
+/// [`SPECS`].
+const LEARNED_SPECS: [(&str, f64); 6] = [
+    ("learned td*1.19", 1.19),
+    ("learned td*1.68", 1.68),
+    ("learned td*2.38", 2.38),
+    ("learned td*3.36", 3.36),
+    ("learned td*4.76", 4.76),
+    ("learned td*6.73", 6.73),
+];
+
+/// [`candidates`] plus up to `extra` learned Td proposals, ranked by
+/// `score` (the coordinator passes the learned model's whole-plan
+/// latency prediction) — best-predicted first, spec order on ties. The
+/// proposal pool stays in the BASE weight family: Td is the dimension
+/// the model sees through the class features, while weight-param
+/// excursions remain the fixed sweep's job. Proposals duplicating any
+/// earlier assignment are dropped, so the result length is a cap.
+///
+/// Purity: for a fixed `score` function the output is a pure function
+/// of (graph, base, k, extra) — no RNG, stable sort with a spec-index
+/// tiebreak — which the `--learned` byte-determinism gates rely on.
+pub fn learned_candidates(
+    g: &Graph,
+    base: ClusterConfig,
+    k: usize,
+    extra: usize,
+    score: &dyn Fn(&Candidate) -> f64,
+) -> Vec<Candidate> {
+    let mut out = candidates(g, base, k);
+    if extra == 0 || g.is_empty() {
+        return out;
+    }
+    let mut seen: Vec<Vec<usize>> =
+        out.iter().map(|c| c.partition.assign.clone()).collect();
+    let q0 = Quotient::singletons(g);
+    let gw0 = node_weights(g, base.weights);
+    let mut pool: Vec<(usize, f64, Candidate)> = Vec::new();
+    for (si, &(label, scale)) in LEARNED_SPECS.iter().enumerate() {
+        let td = scale * base.td;
+        let mut q = q0.clone();
+        let mut gw = gw0.clone();
+        cluster_core(&mut q, &mut gw, td);
+        let partition = q.to_partition(g);
+        if seen.iter().any(|a| *a == partition.assign) {
+            continue;
+        }
+        seen.push(partition.assign.clone());
+        let cand = Candidate {
+            label,
+            config: ClusterConfig { td, weights: base.weights },
+            partition,
+        };
+        pool.push((si, score(&cand), cand));
+    }
+    pool.sort_by(|a, b| a.1.total_cmp(&b.1).then(a.0.cmp(&b.0)));
+    out.extend(pool.into_iter().take(extra).map(|(_, _, c)| c));
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -216,5 +282,53 @@ mod tests {
         let cands = candidates(&g, ClusterConfig::default(), 4);
         assert_eq!(cands.len(), 1);
         assert_eq!(cands[0].partition.n_groups, 0);
+        // the learned generator degrades to the same lone candidate
+        let lc =
+            learned_candidates(&g, ClusterConfig::default(), 4, 2, &|_| 1.0);
+        assert_eq!(lc.len(), 1);
+    }
+
+    #[test]
+    fn learned_candidates_extend_ranked_and_distinct() {
+        let g = build(ModelId::Mbn, InputShape::Small);
+        let base = ClusterConfig::adaptive(&g);
+        // rank by group count: fewer groups = better "prediction"
+        let score = |c: &Candidate| c.partition.n_groups as f64;
+        let cands = learned_candidates(&g, base, 4, 2, &score);
+        let fixed = candidates(&g, base, 4);
+        // the fixed sweep is a verbatim prefix
+        assert!(cands.len() >= fixed.len());
+        assert!(cands.len() <= fixed.len() + 2);
+        for (a, b) in fixed.iter().zip(&cands) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.partition.assign, b.partition.assign);
+        }
+        // appended proposals are labeled as learned, still distinct,
+        // acyclic covers, and ranked by the score function
+        let extra = &cands[fixed.len()..];
+        for c in extra {
+            assert!(c.label.starts_with("learned td*"), "{}", c.label);
+            assert!(c.partition.is_cover(&g));
+            assert!(c.partition.is_acyclic(&g));
+        }
+        for w in extra.windows(2) {
+            assert!(score(&w[0]) <= score(&w[1]));
+        }
+        for (i, a) in cands.iter().enumerate() {
+            for b in &cands[i + 1..] {
+                assert_ne!(a.partition.assign, b.partition.assign);
+            }
+        }
+        // purity: same inputs, same output
+        let again = learned_candidates(&g, base, 4, 2, &score);
+        assert_eq!(again.len(), cands.len());
+        for (a, b) in cands.iter().zip(&again) {
+            assert_eq!(a.label, b.label);
+            assert_eq!(a.config, b.config);
+            assert_eq!(a.partition.assign, b.partition.assign);
+        }
+        // extra = 0 is exactly the fixed sweep
+        let none = learned_candidates(&g, base, 4, 0, &score);
+        assert_eq!(none.len(), fixed.len());
     }
 }

@@ -10,7 +10,9 @@ pub mod relay;
 pub mod report;
 pub mod weight;
 
-pub use candidates::{candidates, Candidate};
+pub use candidates::{
+    candidates, learned_candidates, Candidate, LEARNED_EXTRA,
+};
 pub use cluster::{cluster, cluster_core, ClusterConfig};
 pub use relay::relay_partition;
 pub use report::PartitionReport;

@@ -28,24 +28,27 @@ use ago::tuner::schedule::{FusionGroup, GroupKind, Layout, Schedule, Tile};
 /// A valid synthetic entry: one group covering `0..n_ops`.
 fn entry(fp: u64, latency: f64) -> DbEntry {
     let n_ops = 1 + (fp % 3) as usize;
+    let schedule = Schedule {
+        groups: vec![FusionGroup {
+            ops: (0..n_ops).collect(),
+            kind: GroupKind::Simple,
+            tile: Tile { th: 4, tw: 4, tc: 8 },
+            vec: 4,
+            unroll: 2,
+            threads: 2,
+            layout: Layout::Nhwc,
+        }],
+    };
+    let features = ago::costmodel::ClassFeatures::backfill(&schedule, n_ops);
     DbEntry {
         device: "kirin990".to_string(),
         variant: "ago".to_string(),
         fingerprint: fp,
         n_ops,
-        schedule: Schedule {
-            groups: vec![FusionGroup {
-                ops: (0..n_ops).collect(),
-                kind: GroupKind::Simple,
-                tile: Tile { th: 4, tw: 4, tc: 8 },
-                vec: 4,
-                unroll: 2,
-                threads: 2,
-                layout: Layout::Nhwc,
-            }],
-        },
+        schedule,
         latency,
         evals: 7,
+        features,
     }
 }
 

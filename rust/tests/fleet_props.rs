@@ -211,24 +211,27 @@ fn shard_layout_is_transparent() {
 /// A valid synthetic entry: one group covering `0..n_ops`.
 fn entry(device: &str, fp: u64, latency: f64, evals: usize) -> DbEntry {
     let n_ops = 1 + (fp % 3) as usize;
+    let schedule = Schedule {
+        groups: vec![FusionGroup {
+            ops: (0..n_ops).collect(),
+            kind: GroupKind::Simple,
+            tile: Tile { th: 4, tw: 4, tc: 8 },
+            vec: 4,
+            unroll: 2,
+            threads: 2,
+            layout: Layout::Nhwc,
+        }],
+    };
+    let features = ago::costmodel::ClassFeatures::backfill(&schedule, n_ops);
     DbEntry {
         device: device.to_string(),
         variant: "ago".to_string(),
         fingerprint: fp,
         n_ops,
-        schedule: Schedule {
-            groups: vec![FusionGroup {
-                ops: (0..n_ops).collect(),
-                kind: GroupKind::Simple,
-                tile: Tile { th: 4, tw: 4, tc: 8 },
-                vec: 4,
-                unroll: 2,
-                threads: 2,
-                layout: Layout::Nhwc,
-            }],
-        },
+        schedule,
         latency,
         evals,
+        features,
     }
 }
 

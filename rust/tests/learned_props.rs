@@ -1,0 +1,205 @@
+//! Integration properties for the learned cost model (`--learned`,
+//! PR 9): corpus-pure fits, byte-determinism at any worker count,
+//! inertness without a corpus, pure ranked-candidate provenance, and
+//! never-worse warm seeding at the plan level.
+//!
+//! The closed-form per-feature properties (insertion-order-free fits,
+//! exact feature JSON round-trips, backfill determinism) live as unit
+//! tests in `costmodel::learned`; these tests exercise the same
+//! contracts through the full compile pipeline.
+
+use ago::coordinator::{
+    compile_with_db, learned_fit, plan, CompileConfig, TuningDb, Variant,
+    PROBE_MARGIN,
+};
+use ago::device::DeviceProfile;
+use ago::models::{build, InputShape, ModelId};
+use ago::util::Json;
+
+/// A training corpus: three Small-shape models on kirin990. Enough
+/// classes to clear the model's minimum corpus size.
+fn corpus(budget: usize, workers: usize) -> TuningDb {
+    let mut db = TuningDb::new();
+    let cfg = CompileConfig {
+        budget,
+        workers,
+        ..CompileConfig::new(DeviceProfile::kirin990())
+    };
+    for m in [ModelId::Mbn, ModelId::Sqn, ModelId::Sfn] {
+        let g = build(m, InputShape::Small);
+        compile_with_db(&g, &cfg, &mut db);
+    }
+    db
+}
+
+#[test]
+fn fit_is_a_pure_function_of_the_corpus() {
+    // worker count changes nothing about the corpus, hence nothing
+    // about the fit: same model fingerprint, coefficient for
+    // coefficient
+    let db1 = corpus(500, 1);
+    let db4 = corpus(500, 4);
+    assert_eq!(
+        db1.to_json().pretty(),
+        db4.to_json().pretty(),
+        "corpus bytes depend on worker count"
+    );
+    let m1 = learned_fit(&db1, Variant::Ago).expect("corpus above minimum");
+    let m4 = learned_fit(&db4, Variant::Ago).expect("corpus above minimum");
+    assert_eq!(m1.fingerprint(), m4.fingerprint());
+    // a JSON round trip of the db (BTreeMap reorder, text re-parse)
+    // cannot move the fit either
+    let text = db1.to_json().pretty();
+    let back = TuningDb::from_json(&Json::parse(&text).unwrap()).unwrap();
+    let mb = learned_fit(&back, Variant::Ago).expect("round trip kept corpus");
+    assert_eq!(mb.fingerprint(), m1.fingerprint());
+    // the ablation variants have no entries in this corpus: no fit,
+    // and every learned consumer stays inert rather than borrowing
+    // cross-variant schedules
+    assert!(learned_fit(&db1, Variant::AgoNi).is_none());
+}
+
+#[test]
+fn learned_plan_and_db_bytes_are_worker_independent() {
+    let base = corpus(500, 2);
+    assert!(learned_fit(&base, Variant::Ago).is_some());
+    let mk = |workers: usize| {
+        let cfg = CompileConfig {
+            budget: 500,
+            workers,
+            learned: true,
+            ..CompileConfig::new(DeviceProfile::kirin990())
+        };
+        let g = build(ModelId::Mbn, InputShape::Middle);
+        let mut db = base.clone();
+        let m = compile_with_db(&g, &cfg, &mut db);
+        (
+            plan::to_json(&m, "mbn", "kirin990").pretty(),
+            db.to_json().pretty(),
+        )
+    };
+    let (p1, d1) = mk(1);
+    let (p4, d4) = mk(4);
+    let (p8, d8) = mk(8);
+    assert_eq!(p1, p4, "learned plan bytes depend on worker count (1 vs 4)");
+    assert_eq!(p1, p8, "learned plan bytes depend on worker count (1 vs 8)");
+    assert_eq!(d1, d4, "learned db bytes depend on worker count (1 vs 4)");
+    assert_eq!(d1, d8, "learned db bytes depend on worker count (1 vs 8)");
+}
+
+#[test]
+fn learned_without_corpus_is_byte_inert() {
+    // --learned against an empty db must reproduce the unlearned
+    // compile exactly: no corpus, no model, no behavioral change
+    let g = build(ModelId::Sqn, InputShape::Small);
+    let mk = |learned: bool| {
+        let cfg = CompileConfig {
+            budget: 500,
+            workers: 2,
+            learned,
+            ..CompileConfig::new(DeviceProfile::kirin990())
+        };
+        let mut db = TuningDb::new();
+        let m = compile_with_db(&g, &cfg, &mut db);
+        assert_eq!(m.learned_seeds, 0);
+        (
+            plan::to_json(&m, "sqn", "kirin990").pretty(),
+            db.to_json().pretty(),
+        )
+    };
+    let (p0, d0) = mk(false);
+    let (p1, d1) = mk(true);
+    assert_eq!(p0, p1, "empty-db --learned changed plan bytes");
+    assert_eq!(d0, d1, "empty-db --learned changed db bytes");
+}
+
+#[test]
+fn ranked_candidates_and_provenance_are_pure() {
+    let base = corpus(500, 2);
+    assert!(learned_fit(&base, Variant::Ago).is_some());
+    let mk = || {
+        let cfg = CompileConfig {
+            budget: 600,
+            workers: 2,
+            learned: true,
+            partition_candidates: 4,
+            ..CompileConfig::new(DeviceProfile::kirin990())
+        };
+        let g = build(ModelId::Mbn, InputShape::Small);
+        let mut db = base.clone();
+        compile_with_db(&g, &cfg, &mut db)
+    };
+    let a = mk();
+    let se = a.partition_search.as_ref().expect("provenance for K>1");
+    // the adaptive margin is reported, floored, and capped
+    assert!(se.margin >= PROBE_MARGIN);
+    assert!(se.margin <= 0.40 + 1e-12);
+    // learned scores align with the surviving candidates
+    let ls = se.learned_scores.as_ref().expect("model ranked this sweep");
+    assert_eq!(ls.len(), se.probe_scores.len());
+    assert_eq!(ls.len(), se.labels.len());
+    assert!(ls.iter().all(|v| v.is_finite() && *v > 0.0));
+    // plan JSON carries the new provenance fields
+    let pj = plan::to_json(&a, "mbn", "kirin990").pretty();
+    assert!(pj.contains("\"margin\""));
+    assert!(pj.contains("\"pruned\""));
+    assert!(pj.contains("\"learned_scores_s\""));
+    // purity: the ranked sweep and everything downstream of it repeat
+    // bit for bit
+    let b = mk();
+    let sb = b.partition_search.as_ref().unwrap();
+    assert_eq!(se.labels, sb.labels);
+    assert_eq!(se.probe_scores, sb.probe_scores);
+    assert_eq!(se.learned_scores, sb.learned_scores);
+    assert_eq!(se.margin, sb.margin);
+    assert_eq!(se.pruned, sb.pruned);
+    assert_eq!(a.schedules, b.schedules);
+
+    // an UNLEARNED K>1 compile reports the margin but no learned
+    // fields beyond `pruned: 0`
+    let cfg = CompileConfig {
+        budget: 600,
+        workers: 2,
+        partition_candidates: 4,
+        ..CompileConfig::new(DeviceProfile::kirin990())
+    };
+    let g = build(ModelId::Mbn, InputShape::Small);
+    let plain = compile_with_db(&g, &cfg, &mut TuningDb::new());
+    let sp = plain.partition_search.as_ref().unwrap();
+    assert_eq!(sp.pruned, 0);
+    assert!(sp.learned_scores.is_none());
+    let qj = plan::to_json(&plain, "mbn", "kirin990").pretty();
+    assert!(qj.contains("\"margin\""));
+    assert!(!qj.contains("learned_scores_s"));
+}
+
+#[test]
+fn learned_compile_is_never_worse_at_the_plan_level() {
+    // the transfer gate's whole point: whatever the NN seed does to
+    // the search trajectory, the emitted plan must not regress beyond
+    // the search's own 1% improvement resolution
+    let base = corpus(500, 2);
+    let mk = |learned: bool| {
+        let cfg = CompileConfig {
+            budget: 500,
+            workers: 2,
+            learned,
+            ..CompileConfig::new(DeviceProfile::kirin990())
+        };
+        let g = build(ModelId::Mbn, InputShape::Middle);
+        let mut db = base.clone();
+        compile_with_db(&g, &cfg, &mut db)
+    };
+    let cold = mk(false);
+    let warm = mk(true);
+    assert_eq!(cold.learned_seeds, 0);
+    assert!(
+        warm.total_latency <= cold.total_latency * 1.01,
+        "learned {} worse than baseline {}",
+        warm.total_latency,
+        cold.total_latency
+    );
+    // whatever the gate decided, the accounting is consistent: seeds
+    // never exceed the class count
+    assert!(warm.learned_seeds <= warm.n_classes);
+}

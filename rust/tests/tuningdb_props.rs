@@ -10,6 +10,7 @@
 //!   order
 
 use ago::coordinator::{DbEntry, TuningDb};
+use ago::costmodel::ClassFeatures;
 use ago::ensure;
 use ago::tuner::schedule::{FusionGroup, GroupKind, Layout, Schedule, Tile};
 use ago::util::propkit::forall;
@@ -47,16 +48,21 @@ fn random_schedule(rng: &mut Rng, n_ops: usize) -> Schedule {
 
 fn random_entry(rng: &mut Rng) -> DbEntry {
     let n_ops = rng.range(1, 8);
+    let schedule = random_schedule(rng, n_ops);
+    // backfilled features exercise the v3 field with values a real
+    // migration would produce (exact graph features need a graph)
+    let features = ClassFeatures::backfill(&schedule, n_ops);
     DbEntry {
         device: rng.choose(&["kirin990", "qsd810"]).to_string(),
         variant: rng.choose(&["ago", "ago-ni", "ago-nr"]).to_string(),
         fingerprint: rng.next_u64(),
         n_ops,
-        schedule: random_schedule(rng, n_ops),
+        schedule,
         // an arbitrary f64 in a realistic latency range; raw-seconds
         // storage must survive it bit-for-bit, nice decimals or not
         latency: rng.f64() * 1e-2 + f64::MIN_POSITIVE,
         evals: rng.range(1, 100_000),
+        features,
     }
 }
 
