@@ -1,0 +1,181 @@
+//! Hybrid backend-dispatch bench: the PR acceptance scenario, measured.
+//!
+//! Compiles the seed zoo at Small on both reference SoCs two ways — a
+//! pure-tuned arm (`hybrid: false`) and a hybrid arm (`hybrid: true`,
+//! Select racing the hand-library price against the tuned price per
+//! class) — then replays the hybrid arm's handlib receipts through a
+//! fresh compile to measure the FullTune budget the prune rule skips.
+//!
+//! Gates, every run (`--quick` only shrinks the budget):
+//!   - per (model, device), hybrid total_latency <= pure-tuned (the two
+//!     arms share the search trajectory bit for bit, so the comparison
+//!     is exact — no tolerance needed) and strictly better somewhere
+//!   - at least one class across the sweep dispatches to the hand
+//!     library (else the arms are identical and the bench is vacuous)
+//!   - adopting the handlib receipts skips search outright: the
+//!     receipt-seeded recompile reports saved_evals > 0 and searches
+//!     only the non-library classes
+//!   - hybrid plan + db bytes are identical at 1 and 4 workers
+//!
+//! Writes `BENCH_hybrid.json` next to the other BENCH records.
+
+use std::time::Instant;
+
+use ago::coordinator::{
+    compile_with_db, plan, CompileConfig, TuningDb, HANDLIB_VARIANT,
+};
+use ago::device::DeviceProfile;
+use ago::models::{build, InputShape, ModelId};
+use ago::util::json::{num, obj, s};
+
+fn main() {
+    let quick = std::env::args().any(|a| a == "--quick");
+    let budget = if quick { 300 } else { 900 };
+    let devices = [DeviceProfile::kirin990(), DeviceProfile::qsd810()];
+    let cfg = |dev: &DeviceProfile, hybrid: bool, workers: usize| {
+        CompileConfig {
+            budget,
+            workers,
+            hybrid,
+            ..CompileConfig::new(dev.clone())
+        }
+    };
+
+    // ---- two arms over the zoo at Small on both SoCs ----
+    // every compile runs COLD (fresh db): with no seed to prune against,
+    // the hybrid arm's searches are bit-identical to the tuned arm's and
+    // the never-worse comparison below is exact, not statistical. The
+    // hybrid arm's db entries are merged into one accumulator so the
+    // prune scenario after the gates can replay its handlib receipts.
+    let run_arm = |hybrid: bool| {
+        let mut merged = TuningDb::new();
+        let mut evals = 0usize;
+        let mut handlib = 0usize;
+        let mut lats = Vec::new();
+        let t0 = Instant::now();
+        for dev in &devices {
+            for model in ModelId::all() {
+                let g = build(model, InputShape::Small);
+                let mut db = TuningDb::new();
+                let m = compile_with_db(&g, &cfg(dev, hybrid, 0), &mut db);
+                for e in db.entries() {
+                    merged.record(e.clone());
+                }
+                evals += m.total_evals;
+                handlib += m.handlib_classes;
+                lats.push((model.name(), dev.name, m.total_latency));
+            }
+        }
+        (merged, evals, handlib, lats, t0.elapsed().as_secs_f64())
+    };
+    let (_tdb, tuned_evals, tuned_handlib, tuned_lats, tuned_secs) =
+        run_arm(false);
+    let (hdb, hyb_evals, handlib_classes, hyb_lats, hyb_secs) = run_arm(true);
+    assert_eq!(tuned_handlib, 0, "pure-tuned arm dispatched to the library");
+
+    // ---- never-worse gates ----
+    let mut strictly_better = 0usize;
+    for ((name, dev, t), (_, _, h)) in tuned_lats.iter().zip(&hyb_lats) {
+        assert!(
+            h <= t,
+            "{name}/{dev}: hybrid latency {h} worse than pure-tuned {t}"
+        );
+        if h < t {
+            strictly_better += 1;
+        }
+        println!("  {name}/{dev}: tuned {t:.6}s, hybrid {h:.6}s");
+    }
+    assert!(
+        handlib_classes > 0,
+        "no class dispatched to the hand library: the arms are identical"
+    );
+    assert!(
+        strictly_better > 0,
+        "hybrid never strictly improved a plan despite {handlib_classes} \
+         handlib classes"
+    );
+    println!(
+        "hybrid: {handlib_classes} handlib class(es), strictly better on \
+         {strictly_better}/{} sweeps",
+        hyb_lats.len()
+    );
+
+    // ---- prune accounting: receipts skip FullTune outright ----
+    // a handlib entry without a tuned sibling is the pruned-class marker;
+    // seed a fresh db with only the receipts and recompile the sweep —
+    // every previously-dispatched class is adopted without search and its
+    // FullTune budget is reported saved
+    let mut lib_only = TuningDb::new();
+    for e in hdb.entries().filter(|e| e.variant == HANDLIB_VARIANT) {
+        lib_only.record(e.clone());
+    }
+    let mut saved_evals = 0usize;
+    let mut adopted = 0usize;
+    for dev in &devices {
+        for model in ModelId::all() {
+            let g = build(model, InputShape::Small);
+            let mut db = lib_only.clone();
+            let m = compile_with_db(&g, &cfg(dev, true, 0), &mut db);
+            saved_evals += m.saved_evals;
+            adopted += m.handlib_classes;
+            assert!(
+                m.tuned_tasks + m.handlib_classes >= m.n_classes,
+                "{}/{}: classes neither searched nor adopted",
+                model.name(),
+                dev.name
+            );
+        }
+    }
+    assert!(
+        saved_evals > 0,
+        "receipt-seeded recompile saved no FullTune evals \
+         ({adopted} adopted classes)"
+    );
+    println!(
+        "pruning: {adopted} adopted class(es) saved {saved_evals} FullTune \
+         evals on the receipt-seeded sweep"
+    );
+
+    // ---- determinism: hybrid plan/db bytes at 1 vs 4 workers ----
+    let g = build(ModelId::Sqn, InputShape::Small);
+    let dev = &devices[0];
+    let mk = |workers: usize| {
+        let mut db = TuningDb::new();
+        let m = compile_with_db(&g, &cfg(dev, true, workers), &mut db);
+        (
+            plan::to_json(&m, "sqn", dev.name).pretty(),
+            db.to_json().pretty(),
+        )
+    };
+    let (p1, d1) = mk(1);
+    let (p4, d4) = mk(4);
+    assert_eq!(p1, p4, "hybrid plan bytes depend on worker count");
+    assert_eq!(d1, d4, "hybrid db bytes depend on worker count");
+    println!("byte gates: worker independence OK");
+
+    let record = obj(vec![
+        ("bench", s("perf_hybrid")),
+        ("quick", num(if quick { 1.0 } else { 0.0 })),
+        ("models", s("all/small x kirin990,qsd810")),
+        ("budget", num(budget as f64)),
+        ("tuned_evals", num(tuned_evals as f64)),
+        ("hybrid_evals", num(hyb_evals as f64)),
+        ("handlib_classes", num(handlib_classes as f64)),
+        ("strictly_better", num(strictly_better as f64)),
+        ("adopted_classes", num(adopted as f64)),
+        ("saved_evals", num(saved_evals as f64)),
+        ("tuned_secs", num(tuned_secs)),
+        ("hybrid_secs", num(hyb_secs)),
+        (
+            "latency_ratio_worst",
+            num(tuned_lats
+                .iter()
+                .zip(&hyb_lats)
+                .map(|((_, _, t), (_, _, h))| h / t)
+                .fold(0.0f64, f64::max)),
+        ),
+    ]);
+    std::fs::write("BENCH_hybrid.json", record.pretty())
+        .expect("write BENCH_hybrid.json");
+    println!("wrote BENCH_hybrid.json");
+}

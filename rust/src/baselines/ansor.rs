@@ -25,7 +25,6 @@ pub fn ansor_compile(
     seed: u64,
 ) -> CompiledModel {
     let cfg = CompileConfig {
-        device: dev.clone(),
         budget,
         frontend: Frontend::Relay,
         // AgoNi on Relay partitions = conventional fusion only (a Relay
@@ -33,9 +32,7 @@ pub fn ansor_compile(
         // the tuner from ever classifying a group as Intensive)
         variant: Variant::AgoNi,
         seed,
-        workers: 0,
-        warm_start: true,
-        partition_candidates: 1,
+        ..CompileConfig::new(dev.clone())
     };
     compile(g, &cfg)
 }

@@ -41,9 +41,11 @@ fn is_typical(g: &Graph, v: usize) -> bool {
     }
 }
 
-/// Fixed expert schedule for one Relay-style subgraph.
-fn fixed_schedule(g: &Graph, view: &SubgraphView, dev: &DeviceProfile) -> Schedule {
-    let ops = view.order.clone();
+/// Fixed expert knobs for one library kernel: the body of the per-
+/// subgraph schedule, factored over an explicit op list so
+/// [`library_schedule`] can build multi-kernel implementations of
+/// subgraphs the Relay frontend would never produce.
+fn expert_group(g: &Graph, ops: Vec<usize>, dev: &DeviceProfile) -> FusionGroup {
     let out = &g.node(*ops.last().unwrap()).out_shape;
     let typical = ops.iter().all(|&v| is_typical(g, v));
     let tile = if out.rank() == 4 {
@@ -71,7 +73,7 @@ fn fixed_schedule(g: &Graph, view: &SubgraphView, dev: &DeviceProfile) -> Schedu
     } else {
         Layout::Nhwc
     };
-    let grp = FusionGroup {
+    FusionGroup {
         kind: classify(g, &ops, false),
         tile,
         vec: if typical { 8 } else { 4 },
@@ -79,8 +81,46 @@ fn fixed_schedule(g: &Graph, view: &SubgraphView, dev: &DeviceProfile) -> Schedu
         threads: dev.cores,
         layout,
         ops,
-    };
-    Schedule { groups: vec![grp] }
+    }
+}
+
+/// Fixed expert schedule for one Relay-style subgraph.
+fn fixed_schedule(g: &Graph, view: &SubgraphView, dev: &DeviceProfile) -> Schedule {
+    Schedule { groups: vec![expert_group(g, view.order.clone(), dev)] }
+}
+
+/// The library's implementation of ONE arbitrary subgraph, as the hybrid
+/// backend prices it: the view's topo order is segmented greedily into
+/// library-expressible kernels — at most one complex op per group, with
+/// simple producers/epilogues riding along, exactly the fusion ceiling
+/// the module docs state — and each segment gets the same fixed expert
+/// knobs [`handlib_compile`] ships. On a Relay-style subgraph (≤ 1
+/// complex op) this is a single group, identical to the baseline's
+/// schedule. Pure function of (graph, view, device): the hybrid
+/// pipeline's determinism leans on that.
+pub fn library_schedule(
+    g: &Graph,
+    view: &SubgraphView,
+    dev: &DeviceProfile,
+) -> Schedule {
+    let mut segs: Vec<Vec<usize>> = Vec::new();
+    let mut cur_has_complex = false;
+    for &v in &view.order {
+        let complex = g.node(v).kind.is_complex();
+        if segs.is_empty() || (complex && cur_has_complex) {
+            segs.push(vec![v]);
+            cur_has_complex = complex;
+        } else {
+            segs.last_mut().unwrap().push(v);
+            cur_has_complex |= complex;
+        }
+    }
+    Schedule {
+        groups: segs
+            .into_iter()
+            .map(|ops| expert_group(g, ops, dev))
+            .collect(),
+    }
 }
 
 /// Compile the whole graph: Relay partitions + fixed schedules. Returns
@@ -135,6 +175,40 @@ mod tests {
         let _a = g.add(OpKind::Pointwise, "pw7", s7, 31, &[i]);
         assert!(is_typical(&g, 1));
         assert!(!is_typical(&g, 2));
+    }
+
+    #[test]
+    fn library_schedule_generalizes_fixed_schedule() {
+        let dev = DeviceProfile::kirin990();
+        let g = build(ModelId::Mbn, InputShape::Small);
+        // on Relay subgraphs (≤ 1 complex op) the generalized builder
+        // reproduces the baseline's single-group schedule exactly
+        let p = relay_partition(&g);
+        for v in &SubgraphView::all(&g, &p) {
+            if v.is_empty() {
+                continue;
+            }
+            assert_eq!(library_schedule(&g, v, &dev), fixed_schedule(&g, v, &dev));
+        }
+        // on ANY subgraph: every op exactly once, in view order, and
+        // never more than one complex op per kernel (the library's
+        // fusion ceiling)
+        let whole = crate::graph::Partition::from_assignment(vec![0; g.len()]);
+        for v in &SubgraphView::all(&g, &whole) {
+            let s = library_schedule(&g, v, &dev);
+            let flat: Vec<usize> =
+                s.groups.iter().flat_map(|gr| gr.ops.clone()).collect();
+            assert_eq!(flat, v.order);
+            for grp in &s.groups {
+                let c = grp
+                    .ops
+                    .iter()
+                    .filter(|&&op| g.node(op).kind.is_complex())
+                    .count();
+                assert!(c <= 1, "library group with {c} complex ops");
+            }
+            assert!(s.groups.len() > 1, "whole-model view must segment");
+        }
     }
 
     #[test]

@@ -14,4 +14,4 @@ pub mod ansor;
 pub mod handlib;
 
 pub use ansor::ansor_compile;
-pub use handlib::handlib_compile;
+pub use handlib::{handlib_compile, library_schedule};

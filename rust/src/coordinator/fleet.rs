@@ -63,8 +63,8 @@ use crate::util::ThreadPool;
 use super::plan::{self, LoadedPlan};
 use super::stages::{
     canon_to_ids, dedup_stage, ids_to_canon, learned_fit, learned_nn_seed,
-    partition_stage, run_class_search, DedupStage, PartitionStage,
-    PROBE_MARGIN,
+    library_price, partition_stage, run_class_search, DedupStage,
+    PartitionStage, HANDLIB_VARIANT, HYBRID_PRUNE_RATIO, PROBE_MARGIN,
 };
 use super::{
     compile_with_db, CompileConfig, CompiledModel, DbEntry, Frontend,
@@ -165,6 +165,11 @@ pub struct FleetStats {
     /// Ledger tasks tuned this run — the unique structures across the
     /// whole zoo that were not already known.
     pub ledger_tasks: usize,
+    /// Of those, tasks `--hybrid` pruned from search entirely: the
+    /// hand-library price beat the tuned side's best evidence by
+    /// [`HYBRID_PRUNE_RATIO`], so the ledger recorded a
+    /// [`HANDLIB_VARIANT`] entry and spent no search budget.
+    pub ledger_pruned: usize,
     /// Search evaluations spent by the ledger.
     pub ledger_evals: usize,
     /// Σ per-job `db_hits` in the assemble phase (classes spliced from
@@ -187,6 +192,7 @@ impl FleetStats {
             ("ambiguous", num(self.ambiguous as f64)),
             ("prior_hits", num(self.prior_hits as f64)),
             ("ledger_tasks", num(self.ledger_tasks as f64)),
+            ("ledger_pruned", num(self.ledger_pruned as f64)),
             ("ledger_evals", num(self.ledger_evals as f64)),
             ("fleet_hits", num(self.fleet_hits as f64)),
             ("tuned_tasks", num(self.tuned_tasks as f64)),
@@ -321,26 +327,85 @@ pub fn fleet_compile(
         None
     };
     for (dev, tasks) in &waves {
-        let items: Vec<(usize, usize, usize, Option<Schedule>)> = tasks
-            .iter()
-            .map(|t| {
-                let prep = &preps[t.job];
-                let cf = prep.ps.canon[t.rep].as_ref().unwrap();
-                let mut initial = db.lookup_any(vtag, t.fp).and_then(|e| {
-                    if e.n_ops != cf.order.len() {
-                        return None;
+        // Resolve every task sequentially against the frozen db — the
+        // warm seed, and under `--hybrid` the library price plus the
+        // prune decision — BEFORE the searches fan out, so the outcome
+        // is a pure function of (db, jobs, config) at any worker count.
+        // `Some` = pruned: the hand-library price beat the PRICED warm
+        // seed (or the learned model's prediction) by
+        // [`HYBRID_PRUNE_RATIO`], the same rule the per-compile
+        // FullTune stage applies.
+        let mut pruned: Vec<Option<(Schedule, f64, usize)>> =
+            Vec::with_capacity(tasks.len());
+        let mut items: Vec<(usize, usize, usize, Option<Schedule>)> =
+            Vec::new();
+        for t in tasks {
+            let prep = &preps[t.job];
+            let cf = prep.ps.canon[t.rep].as_ref().unwrap();
+            let ctx = PricingContext::new_fused(
+                &prep.g,
+                &jobs[t.job].device,
+                base.fused,
+            );
+            // evals spent deciding (library pricing, seed pricing, NN
+            // gate), charged to the ledger so its totals stay honest
+            let mut spent = 0usize;
+            let lib = base.hybrid.then(|| {
+                let jcfg = job_config(base, &jobs[t.job]);
+                let lp = library_price(
+                    &prep.g,
+                    &jcfg,
+                    db,
+                    Some(cf),
+                    &prep.ps.views[t.rep],
+                    &ctx,
+                );
+                spent += lp.evals;
+                (lp.schedule, lp.latency)
+            });
+            let mut initial = db.lookup_any(vtag, t.fp).and_then(|e| {
+                if e.n_ops != cf.order.len() {
+                    return None;
+                }
+                let mut s = e.schedule.remap(&canon_to_ids(cf))?;
+                s.revalidate_legality(&prep.g);
+                Some(s)
+            });
+            // the warm seed gives the tuned side a measurable
+            // reference: a decisively cheaper library prunes the task
+            let mut prune = None;
+            if let (Some((ls, ll)), Some(s)) = (&lib, &initial) {
+                if ll.is_finite() {
+                    let mut shard = ctx.new_shard();
+                    let seed_lat = ctx.price_schedule(s, None, &mut shard);
+                    spent += 1;
+                    if ll * HYBRID_PRUNE_RATIO <= seed_lat {
+                        prune = Some((ls.clone(), *ll, spent));
                     }
-                    let mut s = e.schedule.remap(&canon_to_ids(cf))?;
-                    s.revalidate_legality(&prep.g);
-                    Some(s)
-                });
-                if initial.is_none() {
-                    if let Some(m) = &model {
-                        let ctx = PricingContext::new_fused(
-                            &prep.g,
-                            &jobs[t.job].device,
-                            base.fused,
-                        );
+                }
+            }
+            if prune.is_none() && initial.is_none() {
+                if let Some(m) = &model {
+                    // no ancestry anywhere: the model's prediction is
+                    // the tuned side's best evidence, checked BEFORE
+                    // the NN gate so a pruned task spends nothing on a
+                    // seed it would discard
+                    let f = ClassFeatures::from_view(&prep.g, &cf.order);
+                    let pred = m.predict(
+                        jobs[t.job].device.name,
+                        cf.order.len(),
+                        &f,
+                    );
+                    let lib_wins = lib.as_ref().map_or(false, |(_, ll)| {
+                        ll.is_finite()
+                            && pred.is_finite()
+                            && ll * HYBRID_PRUNE_RATIO <= pred
+                    });
+                    if lib_wins {
+                        let (ls, ll) =
+                            lib.clone().expect("lib_wins saw the price");
+                        prune = Some((ls, ll, spent));
+                    } else {
                         let (seed, gate_evals) = learned_nn_seed(
                             &prep.g,
                             m,
@@ -351,13 +416,17 @@ pub fn fleet_compile(
                             PROBE_MARGIN,
                             &ctx,
                         );
-                        stats.ledger_evals += gate_evals;
+                        spent += gate_evals;
                         initial = seed;
                     }
                 }
-                (t.job, t.rep, t.budget, initial)
-            })
-            .collect();
+            }
+            stats.ledger_evals += spent;
+            if prune.is_none() {
+                items.push((t.job, t.rep, t.budget, initial));
+            }
+            pruned.push(prune);
+        }
         let tuned: Vec<(Schedule, f64, usize)> =
             pool.scoped_map(items, |(ji, rep, budget, initial)| {
                 let prep = &preps[ji];
@@ -378,22 +447,56 @@ pub fn fleet_compile(
                 );
                 (best, latency, evals)
             });
-        for (t, (best, latency, evals)) in tasks.iter().zip(tuned) {
+        let mut tuned = tuned.into_iter();
+        for (t, p) in tasks.iter().zip(&pruned) {
             let cf = preps[t.job].ps.canon[t.rep].as_ref().unwrap();
-            let canonical = best
-                .remap(&ids_to_canon(cf))
-                .expect("schedule ops are subgraph members");
-            db.record(DbEntry {
-                device: dev.to_string(),
-                variant: vtag.to_string(),
-                fingerprint: t.fp,
-                n_ops: cf.order.len(),
-                schedule: canonical,
-                latency,
-                evals,
-                features: ClassFeatures::from_view(&preps[t.job].g, &cf.order),
-            });
-            stats.ledger_evals += evals;
+            match p {
+                // Pruned: record ONLY the handlib-namespace price. The
+                // ABSENT tuned entry beside it is the durable receipt
+                // that a hybrid compile pruned this class — phase-3
+                // per-job compiles (and any later warm compile) adopt
+                // the library outright instead of re-searching.
+                Some((s, latency, evals)) => {
+                    let canonical = s
+                        .remap(&ids_to_canon(cf))
+                        .expect("schedule ops are subgraph members");
+                    db.record(DbEntry {
+                        device: dev.to_string(),
+                        variant: HANDLIB_VARIANT.to_string(),
+                        fingerprint: t.fp,
+                        n_ops: cf.order.len(),
+                        schedule: canonical,
+                        latency: *latency,
+                        evals: *evals,
+                        features: ClassFeatures::from_view(
+                            &preps[t.job].g,
+                            &cf.order,
+                        ),
+                    });
+                    stats.ledger_pruned += 1;
+                }
+                None => {
+                    let (best, latency, evals) =
+                        tuned.next().expect("one search per unpruned task");
+                    let canonical = best
+                        .remap(&ids_to_canon(cf))
+                        .expect("schedule ops are subgraph members");
+                    db.record(DbEntry {
+                        device: dev.to_string(),
+                        variant: vtag.to_string(),
+                        fingerprint: t.fp,
+                        n_ops: cf.order.len(),
+                        schedule: canonical,
+                        latency,
+                        evals,
+                        features: ClassFeatures::from_view(
+                            &preps[t.job].g,
+                            &cf.order,
+                        ),
+                    });
+                    stats.ledger_evals += evals;
+                }
+            }
         }
         stats.ledger_tasks += tasks.len();
     }

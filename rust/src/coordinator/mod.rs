@@ -38,8 +38,8 @@ pub use fleet::{
 };
 pub use stages::{
     adaptive_margin, learned_fit, learned_stage_score,
-    select_stage_with_margin, PartitionSearch, LEARNED_PRUNE_RATIO,
-    PROBE_MARGIN, PROBE_SALT,
+    select_stage_with_margin, Backend, PartitionSearch, HANDLIB_VARIANT,
+    HYBRID_PRUNE_RATIO, LEARNED_PRUNE_RATIO, PROBE_MARGIN, PROBE_SALT,
 };
 pub use tuningdb::sharded::{ShardFault, ShardStore};
 pub use tuningdb::{DbEntry, TuningDb};
@@ -162,6 +162,17 @@ pub struct CompileConfig {
     /// `--learned` against an empty db reproduces the unlearned plan
     /// bytes exactly (gated in `benches/perf_learned`).
     pub learned: bool,
+    /// Hybrid per-class backend dispatch (`ago compile --hybrid`):
+    /// price every class's hand-library implementation
+    /// ([`crate::baselines::library_schedule`]) through the same
+    /// [`PricingContext`] as the tuned schedules, let the probe scores
+    /// and the final per-class compare pick the cheaper backend under
+    /// the Select margin, prune classes the library dominates by
+    /// [`stages::HYBRID_PRUNE_RATIO`] from FullTune entirely, and tag
+    /// every subgraph's backend in the plan. Off by default: plans
+    /// carry no `backends` field and goldens keep their exact bytes
+    /// (gated in `benches/perf_hybrid` and `tests/hybrid_props`).
+    pub hybrid: bool,
 }
 
 impl CompileConfig {
@@ -178,6 +189,7 @@ impl CompileConfig {
             fused: false,
             probe_seed: false,
             learned: false,
+            hybrid: false,
         }
     }
 }
@@ -224,6 +236,19 @@ pub struct CompiledModel {
     /// `patterns` field; absent for unfused compiles so their plan bytes
     /// are unchanged.
     pub patterns: Option<Vec<crate::kernels::Pattern>>,
+    /// Per-subgraph execution backend, indexed by subgraph id. `Some`
+    /// iff the compile raced the hand library per class
+    /// ([`CompileConfig::hybrid`]) — serialized as the plan's `backends`
+    /// field; absent otherwise so legacy plan bytes are unchanged.
+    pub backends: Option<Vec<Backend>>,
+    /// Classes dispatched to the hand library (`--hybrid` only; 0
+    /// otherwise).
+    pub handlib_classes: usize,
+    /// FullTune schedule evaluations NOT spent because the library
+    /// dominated the class decisively and the search was pruned
+    /// ([`stages::HYBRID_PRUNE_RATIO`]). Compile provenance, serialized
+    /// under the plan's `hybrid` object when `--hybrid` is on.
+    pub saved_evals: usize,
 }
 
 impl CompiledModel {
@@ -319,6 +344,22 @@ pub fn compile_with_db(
     } else {
         None
     };
+    compile_with_model(g, cfg, db, model)
+}
+
+/// [`compile_with_db`] with a caller-supplied [`LearnedModel`] instead
+/// of an in-place corpus fit. This is the entry point for processes
+/// whose db holds no training corpus but which have a PERSISTED model
+/// (e.g. `ago serve --hot-swap` recompiles loading the fleet's
+/// [`ShardStore::load_model`]): the model steers candidate ranking,
+/// warm seeds, and hybrid pruning exactly as a fresh fit would.
+/// `None` behaves as a plain non-learned compile.
+pub fn compile_with_model(
+    g: &Graph,
+    cfg: &CompileConfig,
+    db: &mut TuningDb,
+    model: Option<crate::costmodel::LearnedModel>,
+) -> CompiledModel {
 
     // ---- Partition stage (frontend / candidate sweep) ----
     let k = cfg.partition_candidates.max(1);

@@ -11,6 +11,7 @@ use crate::kernels::Pattern;
 use crate::tuner::schedule::{FusionGroup, GroupKind, Layout, Schedule, Tile};
 use crate::util::json::{arr, num, obj, s, Json};
 
+use super::stages::Backend;
 use super::CompiledModel;
 
 fn kind_str(k: GroupKind) -> &'static str {
@@ -182,6 +183,23 @@ pub fn to_json(m: &CompiledModel, model_name: &str, device: &str) -> Json {
             arr(pats.iter().map(|p| s(p.name())).collect()),
         ));
     }
+    // per-subgraph execution backends: only present for hybrid compiles
+    // (`ago compile --hybrid`), so non-hybrid plans keep their exact
+    // bytes. The counters beside it are compile provenance (like
+    // total_evals: a function of the compile's inputs, dropped on load).
+    if let Some(bks) = &m.backends {
+        fields.push((
+            "backends",
+            arr(bks.iter().map(|b| s(b.name())).collect()),
+        ));
+        fields.push((
+            "hybrid",
+            obj(vec![
+                ("handlib_classes", num(m.handlib_classes as f64)),
+                ("saved_evals", num(m.saved_evals as f64)),
+            ]),
+        ));
+    }
     obj(fields)
 }
 
@@ -224,6 +242,12 @@ pub fn loaded_to_json(p: &LoadedPlan) -> Json {
             arr(pats.iter().map(|p| s(p.name())).collect()),
         ));
     }
+    if let Some(bks) = &p.backends {
+        fields.push((
+            "backends",
+            arr(bks.iter().map(|b| s(b.name())).collect()),
+        ));
+    }
     obj(fields)
 }
 
@@ -254,6 +278,13 @@ pub struct LoadedPlan {
     /// weight-vs-activation traffic per pattern in `SimProfile`; plans
     /// without the field serve through the legacy arithmetic unchanged.
     pub patterns: Option<Vec<Pattern>>,
+    /// Per-subgraph execution backend tags, present iff the plan came
+    /// from a hybrid compile (`--hybrid`). `SimProfile` prices
+    /// handlib-tagged subgraphs from the library's weight split, and
+    /// `PjrtExecutor` routes them through the hand-library program
+    /// chain (per-op fallback); plans without the field execute every
+    /// subgraph on the tuned backend unchanged.
+    pub backends: Option<Vec<Backend>>,
 }
 
 pub fn from_json(j: &Json) -> Result<LoadedPlan> {
@@ -329,6 +360,31 @@ pub fn from_json(j: &Json) -> Result<LoadedPlan> {
             )
         }
     };
+    let backends = match j.get("backends") {
+        None => None,
+        Some(b) => {
+            let names = b
+                .as_arr()
+                .ok_or_else(|| anyhow!("backends must be an array"))?;
+            if names.len() != partition.n_groups {
+                return Err(anyhow!(
+                    "plan has {} backends for {} subgraphs",
+                    names.len(),
+                    partition.n_groups
+                ));
+            }
+            Some(
+                names
+                    .iter()
+                    .map(|v| {
+                        v.as_str()
+                            .and_then(Backend::parse)
+                            .ok_or_else(|| anyhow!("unknown backend {v:?}"))
+                    })
+                    .collect::<Result<Vec<_>>>()?,
+            )
+        }
+    };
     Ok(LoadedPlan {
         model: j
             .get("model")
@@ -349,6 +405,7 @@ pub fn from_json(j: &Json) -> Result<LoadedPlan> {
             .unwrap_or(0.0),
         partition_search: j.get("partition_search").cloned(),
         patterns,
+        backends,
     })
 }
 

@@ -55,6 +55,7 @@
 
 use std::collections::{HashMap, HashSet};
 
+use crate::baselines::library_schedule;
 use crate::costmodel::{
     ClassFeatures, CostEvaluator, EvalStats, LearnedModel, MemoCache,
     MemoEvaluator, PricingContext, TrainRow,
@@ -303,9 +304,19 @@ pub fn probe_stage(
     let mut by_fp: HashMap<u64, Vec<usize>> = HashMap::new();
     // per candidate: (task index, member count) per class, in class order
     let mut refs: Vec<Vec<(usize, usize)>> = Vec::with_capacity(k);
-    let mut dedups: Vec<DedupStage> = Vec::with_capacity(k);
-    for (ci, ps) in cands.iter().enumerate() {
-        let ds = dedup_stage(g, ps, pool_budget);
+    // Speculative dedup (carried PR 5 follow-on): every candidate's
+    // class discovery — the isomorphism-verification-heavy half of the
+    // Dedup stage — fans out over the shared pool concurrently, since
+    // any candidate could win Select and only the winner's structure
+    // survives (re-pooled at full budget by the driver via
+    // `with_budget`). `dedup_stage` is a pure function per candidate
+    // and `scoped_map` preserves submission order, so the serial
+    // registration below — and every byte after it — is unchanged.
+    let dedups: Vec<DedupStage> = pool.scoped_map(
+        (0..k).collect::<Vec<_>>(),
+        |ci| dedup_stage(g, &cands[ci], pool_budget),
+    );
+    for (ci, (ps, ds)) in cands.iter().zip(&dedups).enumerate() {
         let mut r = Vec::with_capacity(ds.classes.len());
         for cl in &ds.classes {
             let cf = ps.canon[cl.rep].as_ref().unwrap();
@@ -339,7 +350,6 @@ pub fn probe_stage(
             r.push((t, cl.members.len()));
         }
         refs.push(r);
-        dedups.push(ds);
     }
     let variant = cfg.variant;
     let seed = cfg.seed;
@@ -365,12 +375,37 @@ pub fn probe_stage(
             );
             (r.best_latency, r.evals, r.best)
         });
-    let evals = tuned.iter().map(|t| t.1).sum();
+    let mut evals: usize = tuned.iter().map(|t| t.1).sum();
+    // --hybrid: Select must compare candidates under the execution the
+    // winner will actually get, where any class may dispatch to the
+    // hand library. Price each unique task's library implementation
+    // (serially — one eval each; a pure function of the view, so the
+    // scores stay bit-identical at any worker count) and let each class
+    // contribute min(tuned, library) to its candidates' scores.
+    let lib: Option<Vec<f64>> = cfg.hybrid.then(|| {
+        tasks
+            .iter()
+            .map(|t| {
+                let s = library_schedule(
+                    g,
+                    &cands[t.cand].views[t.rep],
+                    &cfg.device,
+                );
+                evals += 1;
+                let mut shard = ctx.new_shard();
+                ctx.price_schedule(&s, None, &mut shard)
+            })
+            .collect()
+    });
+    let class_lat = |t: usize| match &lib {
+        Some(l) if l[t].is_finite() && l[t] < tuned[t].0 => l[t],
+        _ => tuned[t].0,
+    };
     let scores = refs
         .iter()
         .enumerate()
         .map(|(ci, r)| {
-            r.iter().map(|&(t, m)| tuned[t].0 * m as f64).sum::<f64>()
+            r.iter().map(|&(t, m)| class_lat(t) * m as f64).sum::<f64>()
                 + cands[ci].partition.n_groups as f64
                     * cfg.device.dispatch_us
                     * 1e-6
@@ -581,6 +616,130 @@ pub(crate) fn learned_nn_seed(
 }
 
 // ---------------------------------------------------------------------------
+// Hybrid backend dispatch (--hybrid)
+// ---------------------------------------------------------------------------
+
+/// Execution backend of one subgraph, decided per equivalence class by
+/// the FullTune stage under `--hybrid` (always [`Backend::Tuned`]
+/// otherwise). Plans carry one tag per subgraph; execution honors it.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum Backend {
+    /// The searched schedule from the tuner pipeline.
+    Tuned,
+    /// The hand-library implementation (`baselines::handlib`), adopted
+    /// when its price beats the tuned schedule under the displacement
+    /// margin.
+    Handlib,
+}
+
+impl Backend {
+    pub const ALL: [Backend; 2] = [Backend::Tuned, Backend::Handlib];
+
+    /// Stable plan-JSON tag.
+    pub fn name(self) -> &'static str {
+        match self {
+            Backend::Tuned => "tuned",
+            Backend::Handlib => "handlib",
+        }
+    }
+
+    pub fn parse(t: &str) -> Option<Backend> {
+        Backend::ALL.into_iter().find(|b| b.name() == t)
+    }
+}
+
+/// TuningDb variant namespace for hand-library prices: a hybrid compile
+/// records one entry per (device, [`HANDLIB_VARIANT`], fingerprint)
+/// holding the canonical library schedule and its price, so warm
+/// compiles adopt the price instead of re-pricing — and a handlib entry
+/// with no tuned sibling is the durable receipt of a prune decision
+/// (see [`tune_stage`]). The firewall the db already enforces between
+/// variants keeps these entries invisible to every tuned lookup.
+pub const HANDLIB_VARIANT: &str = "handlib";
+
+/// A class is pruned from FullTune entirely — zero search budget spent —
+/// when the library price beats the best tuned-side evidence (a PRICED
+/// warm seed, or the learned model's prediction) by this ratio.
+/// Deliberately decisive, same family as [`LEARNED_PRUNE_RATIO`]:
+/// search almost never improves 2x over a warm seed, so a pruned
+/// class's hypothetical tune could not plausibly have beaten the
+/// library.
+pub const HYBRID_PRUNE_RATIO: f64 = 2.0;
+
+/// The hand library's implementation of one class and its price.
+pub(crate) struct LibraryPrice {
+    /// Library schedule in the REPRESENTATIVE subgraph's node ids.
+    pub schedule: Schedule,
+    pub latency: f64,
+    /// Pricing evaluations spent (0 when a recorded price was adopted).
+    pub evals: usize,
+}
+
+/// Price one class's hand-library implementation through the same
+/// [`PricingContext`] every tuned schedule is priced by — memoized,
+/// fused-aware under `--fused`, bit-deterministic at any worker count.
+/// Warm compiles skip the pricing when the [`HANDLIB_VARIANT`]
+/// namespace already records this (device, fingerprint) — but ONLY when
+/// the stored canonical schedule is byte-equal to the one this view
+/// builds: the price is a pure function of the schedule, so equality
+/// makes the skip bit-safe, and any mismatch (or an ambiguous
+/// fingerprint, `cf = None`) prices fresh.
+pub(crate) fn library_price(
+    g: &Graph,
+    cfg: &CompileConfig,
+    db: &TuningDb,
+    cf: Option<&CanonicalForm>,
+    view: &SubgraphView,
+    ctx: &PricingContext,
+) -> LibraryPrice {
+    let schedule = library_schedule(g, view, &cfg.device);
+    if let Some(cf) = cf {
+        if cfg.warm_start {
+            if let Some(e) =
+                db.lookup(cfg.device.name, HANDLIB_VARIANT, cf.fingerprint)
+            {
+                if e.n_ops == cf.order.len() && e.latency.is_finite() {
+                    if let Some(canon) = schedule.remap(&ids_to_canon(cf)) {
+                        if canon == e.schedule {
+                            return LibraryPrice {
+                                schedule,
+                                latency: e.latency,
+                                evals: 0,
+                            };
+                        }
+                    }
+                }
+            }
+        }
+    }
+    let mut shard = ctx.new_shard();
+    let latency = ctx.price_schedule(&schedule, None, &mut shard);
+    LibraryPrice { schedule, latency, evals: 1 }
+}
+
+/// Final per-class backend choice: the library displaces the tuned
+/// result only when its price clears `margin` — the same never-worse
+/// displacement discipline [`select_stage_with_margin`] applies to
+/// partition candidates (the driver passes [`adaptive_margin`]'s
+/// choice). The tuned winner is preserved on the result so the emit
+/// stage still records it in the tuned db namespace.
+fn hybrid_compare(
+    mut r: ClassResult,
+    lib: Option<(Schedule, f64)>,
+    margin: f64,
+) -> ClassResult {
+    if let Some((s, l)) = lib {
+        if l.is_finite() && l < r.latency * (1.0 - margin) {
+            let tuned_best = std::mem::replace(&mut r.best, s);
+            r.tuned = Some((tuned_best, r.latency));
+            r.latency = l;
+            r.backend = Backend::Handlib;
+        }
+    }
+    r
+}
+
+// ---------------------------------------------------------------------------
 // Stage 5: FullTune
 // ---------------------------------------------------------------------------
 
@@ -593,6 +752,12 @@ enum ClassMode {
     Warm(Schedule),
     /// Exact same-device hit: adopt the stored schedule, skip search.
     Hit(Schedule),
+    /// `--hybrid` adopted the hand-library implementation without any
+    /// search: the library price decisively dominates the tuned
+    /// evidence ([`HYBRID_PRUNE_RATIO`]), or an earlier hybrid compile
+    /// recorded the prune decision. Carries the library schedule
+    /// (representative ids) and its price.
+    Library(Schedule, f64),
 }
 
 /// Position maps between a canonical form and concrete node ids.
@@ -607,13 +772,29 @@ pub(crate) fn ids_to_canon(cf: &CanonicalForm) -> HashMap<NodeId, NodeId> {
 /// One tuned class, in class-index order.
 pub struct ClassResult {
     pub class_idx: usize,
-    /// Best schedule in the REPRESENTATIVE's node ids.
+    /// The schedule every member of the class dispatches, in the
+    /// REPRESENTATIVE's node ids — the search winner, or the library
+    /// implementation when `backend` is [`Backend::Handlib`].
     pub best: Schedule,
     pub latency: f64,
     pub evals: usize,
     pub stats: EvalStats,
-    /// False for exact TuningDb hits (no search ran).
+    /// False for exact TuningDb hits and library-pruned classes (no
+    /// search ran).
     pub searched: bool,
+    /// Backend the class executes on ([`Backend::Tuned`] always, unless
+    /// `--hybrid` dispatched it to the hand library).
+    pub backend: Backend,
+    /// True iff `--hybrid` pruned this class from FullTune entirely:
+    /// the library dominated the tuned evidence by
+    /// [`HYBRID_PRUNE_RATIO`], no search ran, and no tuned result
+    /// exists. The skipped budget is reported as saved evals.
+    pub pruned: bool,
+    /// The tuned winner, kept when the final backend compare dispatched
+    /// the class to the library even though a search (or db hit) ran —
+    /// the emit stage records it in the tuned db namespace so the work
+    /// is never thrown away.
+    pub tuned: Option<(Schedule, f64)>,
 }
 
 pub struct TuneStage {
@@ -698,7 +879,16 @@ pub fn tune_stage(
 ) -> TuneStage {
     let mut db_hits = 0usize;
     let mut learned_seeds = 0usize;
-    type Task = (usize, SubgraphView, usize, usize, ClassMode, usize, u64);
+    type Task = (
+        usize,
+        SubgraphView,
+        usize,
+        usize,
+        ClassMode,
+        usize,
+        u64,
+        Option<(Schedule, f64)>,
+    );
     let mut tasks: Vec<Task> = ds
         .classes
         .iter()
@@ -706,6 +896,7 @@ pub fn tune_stage(
         .map(|(ci, cl)| {
             let cf = ps.canon[cl.rep].as_ref().unwrap();
             let to_rep = canon_to_ids(cf);
+            let ambiguous = ds.ambiguous.contains(&cf.fingerprint);
             let remap_canonical = |s: &Schedule, n_ops: usize| {
                 if n_ops != cf.order.len() {
                     return None; // fingerprint collision across sizes
@@ -723,14 +914,48 @@ pub fn tune_stage(
                     .and_then(|(s, n_ops)| remap_canonical(s, *n_ops))
             };
             let vtag = cfg.variant.tag();
-            // evals spent deciding the mode (the NN gate's pricing),
-            // charged to the class so total_evals stays honest
+            // evals spent deciding the mode (the NN gate's pricing, the
+            // hybrid library/reference pricing), charged to the class
+            // so total_evals stays honest
             let mut extra = 0usize;
-            let mode = if ds.ambiguous.contains(&cf.fingerprint) {
+            // --hybrid: price this class's library implementation up
+            // front — the mode decision below can prune the search on
+            // it, and the task closure runs the final backend compare
+            // against it
+            let lib = cfg.hybrid.then(|| {
+                let lp = library_price(
+                    g,
+                    cfg,
+                    db,
+                    (!ambiguous).then_some(cf),
+                    &ps.views[cl.rep],
+                    ctx,
+                );
+                extra += lp.evals;
+                (lp.schedule, lp.latency)
+            });
+            // a warm seed gives the tuned side a measurable reference:
+            // when the library dominates the PRICED seed decisively,
+            // the class skips FullTune entirely
+            let prune_or_warm = |s: Schedule, extra: &mut usize| {
+                if let Some((ls, ll)) = &lib {
+                    if ll.is_finite() {
+                        let mut shard = ctx.new_shard();
+                        let seed_lat =
+                            ctx.price_schedule(&s, None, &mut shard);
+                        *extra += 1;
+                        if ll * HYBRID_PRUNE_RATIO <= seed_lat {
+                            return ClassMode::Library(ls.clone(), *ll);
+                        }
+                    }
+                }
+                ClassMode::Warm(s)
+            };
+            let mode = if ambiguous {
                 ClassMode::Cold
             } else if !cfg.warm_start {
                 match probe_seed() {
-                    Some(s) => ClassMode::Warm(s),
+                    Some(s) => prune_or_warm(s, &mut extra),
                     None => ClassMode::Cold,
                 }
             } else if let Some(s) = db
@@ -739,25 +964,54 @@ pub fn tune_stage(
             {
                 db_hits += 1;
                 ClassMode::Hit(s)
+            } else if cfg.hybrid
+                && db
+                    .lookup(cfg.device.name, HANDLIB_VARIANT, cf.fingerprint)
+                    .map_or(false, |e| e.n_ops == cf.order.len())
+            {
+                // a handlib price with no tuned entry beside it is the
+                // durable receipt of an earlier hybrid compile pruning
+                // this class on this device: adopt the library
+                // outright, exactly as a tuned Hit skips search
+                let (s, l) =
+                    lib.clone().expect("--hybrid priced the library");
+                ClassMode::Library(s, l)
             } else if let Some(s) =
                 db.lookup_any(vtag, cf.fingerprint).and_then(remap_entry)
             {
-                ClassMode::Warm(s)
+                prune_or_warm(s, &mut extra)
             } else if let Some(s) = probe_seed() {
-                ClassMode::Warm(s)
+                prune_or_warm(s, &mut extra)
             } else if let Some(model) = learned {
-                // no ancestry for this structure anywhere: ask the
-                // model for its nearest tuned relative (any device)
-                let (seed, gate_evals) = learned_nn_seed(
-                    g, model, db, &cfg.device, vtag, cf, margin, ctx,
-                );
-                extra = gate_evals;
-                match seed {
-                    Some(s) => {
-                        learned_seeds += 1;
-                        ClassMode::Warm(s)
+                // no ancestry for this structure anywhere: the model's
+                // prediction is the tuned side's best evidence, checked
+                // BEFORE the NN gate so a pruned class spends nothing
+                // on a seed it would discard
+                let f = ClassFeatures::from_view(g, &cf.order);
+                let pred =
+                    model.predict(cfg.device.name, cf.order.len(), &f);
+                match &lib {
+                    Some((ls, ll))
+                        if ll.is_finite()
+                            && pred.is_finite()
+                            && ll * HYBRID_PRUNE_RATIO <= pred =>
+                    {
+                        ClassMode::Library(ls.clone(), *ll)
                     }
-                    None => ClassMode::Cold,
+                    _ => {
+                        let (seed, gate_evals) = learned_nn_seed(
+                            g, model, db, &cfg.device, vtag, cf, margin,
+                            ctx,
+                        );
+                        extra += gate_evals;
+                        match seed {
+                            Some(s) => {
+                                learned_seeds += 1;
+                                ClassMode::Warm(s)
+                            }
+                            None => ClassMode::Cold,
+                        }
+                    }
                 }
             } else {
                 ClassMode::Cold
@@ -771,7 +1025,7 @@ pub fn tune_stage(
                 })
                 .unwrap_or(0);
             (ci, ps.views[cl.rep].clone(), cl.budget, cl.rep, mode, extra,
-             pred_bits)
+             pred_bits, lib)
         })
         .collect();
     if learned.is_some() {
@@ -783,21 +1037,45 @@ pub fn tune_stage(
 
     let variant = cfg.variant;
     let seed = cfg.seed;
-    let results: Vec<ClassResult> =
-        pool.scoped_map(tasks, |(ci, view, budget, rep, mode, extra, _)| {
+    let results: Vec<ClassResult> = pool.scoped_map(
+        tasks,
+        |(ci, view, budget, rep, mode, extra, _, lib)| {
             let initial = match mode {
-                ClassMode::Hit(s) => {
-                    // exact hit: one pricing evaluation, no search
-                    let mut shard = ctx.new_shard();
-                    let lat = ctx.price_schedule(&s, None, &mut shard);
+                ClassMode::Library(s, lat) => {
+                    // pruned from FullTune: the library IS the class
+                    // result; `extra` is the pricing actually spent
+                    // deciding that
                     return ClassResult {
                         class_idx: ci,
                         best: s,
                         latency: lat,
-                        evals: 1,
-                        stats: shard.stats,
+                        evals: extra,
+                        stats: EvalStats::default(),
                         searched: false,
+                        backend: Backend::Handlib,
+                        pruned: true,
+                        tuned: None,
                     };
+                }
+                ClassMode::Hit(s) => {
+                    // exact hit: one pricing evaluation, no search
+                    let mut shard = ctx.new_shard();
+                    let lat = ctx.price_schedule(&s, None, &mut shard);
+                    return hybrid_compare(
+                        ClassResult {
+                            class_idx: ci,
+                            best: s,
+                            latency: lat,
+                            evals: 1 + extra,
+                            stats: shard.stats,
+                            searched: false,
+                            backend: Backend::Tuned,
+                            pruned: false,
+                            tuned: None,
+                        },
+                        lib,
+                        margin,
+                    );
                 }
                 ClassMode::Warm(initial) => Some(initial),
                 ClassMode::Cold => None,
@@ -814,15 +1092,23 @@ pub fn tune_stage(
                 ctx,
                 pool,
             );
-            ClassResult {
-                class_idx: ci,
-                best,
-                latency,
-                evals: evals + extra,
-                stats,
-                searched: true,
-            }
-        });
+            hybrid_compare(
+                ClassResult {
+                    class_idx: ci,
+                    best,
+                    latency,
+                    evals: evals + extra,
+                    stats,
+                    searched: true,
+                    backend: Backend::Tuned,
+                    pruned: false,
+                    tuned: None,
+                },
+                lib,
+                margin,
+            )
+        },
+    );
     TuneStage { results, db_hits, learned_seeds }
 }
 
@@ -855,12 +1141,29 @@ pub fn emit_stage(
     // the same pricing mode the class tunes used, so member latencies
     // are comparable to their class winners' prices
     let mut member_eval = MemoEvaluator::new_fused(g, &cfg.device, cfg.fused);
+    // per-subgraph backend tags (`--hybrid` only; `None` keeps legacy
+    // plan bytes) and the hybrid provenance counters
+    let mut backends = cfg.hybrid.then(|| vec![Backend::Tuned; n]);
+    let mut handlib_classes = 0usize;
+    let mut saved_evals = 0usize;
     for r in ts.results {
         let cl = &ds.classes[r.class_idx];
         let cf_rep = ps.canon[cl.rep].as_ref().unwrap();
         total_evals += r.evals;
         stats.merge(&r.stats);
         tuned_tasks += usize::from(r.searched);
+        if r.backend == Backend::Handlib {
+            handlib_classes += 1;
+            if let Some(b) = backends.as_mut() {
+                for &m in &cl.members {
+                    b[m] = Backend::Handlib;
+                }
+            }
+        }
+        if r.pruned {
+            // the search budget this class never spent
+            saved_evals += cl.budget;
+        }
         // record the winner in canonical-index space: it applies to any
         // isomorphic subgraph, here and in later compiles — unless the
         // fingerprint is ambiguous (two verified classes collided on
@@ -871,19 +1174,51 @@ pub fn emit_stage(
             .remap(&ids_to_canon(cf_rep))
             .expect("schedule ops are subgraph members");
         if !ds.ambiguous.contains(&cf_rep.fingerprint) {
-            db.record(DbEntry {
-                device: cfg.device.name.to_string(),
-                variant: cfg.variant.tag().to_string(),
-                fingerprint: cf_rep.fingerprint,
-                n_ops: cf_rep.order.len(),
-                schedule: canonical.clone(),
-                latency: r.latency,
-                evals: r.evals,
-                // graph-derived features (v3): the learned model's
-                // training row for this class, exact where a v2
-                // migration could only backfill
-                features: ClassFeatures::from_view(g, &cf_rep.order),
-            });
+            // the tuned winner (when a hit or search produced one)
+            // records under the compile variant exactly as before; a
+            // library-PRUNED class has no tuned result to record
+            let tuned_entry = match (&r.tuned, r.backend) {
+                (Some((s, l)), _) => Some((
+                    s.remap(&ids_to_canon(cf_rep))
+                        .expect("schedule ops are subgraph members"),
+                    *l,
+                )),
+                (None, Backend::Tuned) => {
+                    Some((canonical.clone(), r.latency))
+                }
+                (None, Backend::Handlib) => None,
+            };
+            if let Some((schedule, latency)) = tuned_entry {
+                db.record(DbEntry {
+                    device: cfg.device.name.to_string(),
+                    variant: cfg.variant.tag().to_string(),
+                    fingerprint: cf_rep.fingerprint,
+                    n_ops: cf_rep.order.len(),
+                    schedule,
+                    latency,
+                    evals: r.evals,
+                    // graph-derived features (v3): the learned model's
+                    // training row for this class, exact where a v2
+                    // migration could only backfill
+                    features: ClassFeatures::from_view(g, &cf_rep.order),
+                });
+            }
+            if r.backend == Backend::Handlib {
+                // the library price under its own namespace: later
+                // hybrid compiles adopt it instead of re-pricing, and
+                // a handlib entry with no tuned sibling marks a pruned
+                // class (the [`tune_stage`] Library-adopt rule)
+                db.record(DbEntry {
+                    device: cfg.device.name.to_string(),
+                    variant: HANDLIB_VARIANT.to_string(),
+                    fingerprint: cf_rep.fingerprint,
+                    n_ops: cf_rep.order.len(),
+                    schedule: canonical.clone(),
+                    latency: r.latency,
+                    evals: r.evals,
+                    features: ClassFeatures::from_view(g, &cf_rep.order),
+                });
+            }
         }
         schedules[cl.rep] = r.best;
         lats[cl.rep] = r.latency;
@@ -941,6 +1276,9 @@ pub fn emit_stage(
         report: ps.report,
         partition_search,
         patterns,
+        backends,
+        handlib_classes,
+        saved_evals,
     }
 }
 

@@ -29,6 +29,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 
 use anyhow::{anyhow, Context, Result};
 
+use crate::costmodel::LearnedModel;
 use crate::util::json::{arr, num, obj, Json};
 
 use super::{entry_to_json, write_atomic, TuningDb};
@@ -281,6 +282,36 @@ impl ShardStore {
         Ok(())
     }
 
+    /// Path of the persisted learned model beside the shards. The file
+    /// name does not parse as a shard ([`parse_shard_name`] rejects
+    /// it), so the model is invisible to shard loading, resharding,
+    /// and quarantine.
+    pub fn model_path(&self) -> PathBuf {
+        self.dir.join("learned-model.json")
+    }
+
+    /// Persist a fitted [`LearnedModel`] beside the shards (atomic,
+    /// like a shard write), so a later process that cannot refit — e.g.
+    /// `ago serve --hot-swap`, whose background recompiles run against
+    /// a fresh in-memory db — starts from these coefficients.
+    pub fn save_model(&self, m: &LearnedModel) -> Result<()> {
+        std::fs::create_dir_all(&self.dir)
+            .with_context(|| format!("creating {}", self.dir.display()))?;
+        let path = self.model_path();
+        let spath = path
+            .to_str()
+            .ok_or_else(|| anyhow!("non-utf8 path {}", path.display()))?;
+        write_atomic(spath, &m.to_json().pretty())
+    }
+
+    /// Load the persisted model, if present and parseable. A missing or
+    /// malformed file is `None`, not an error: the model is a
+    /// warm-start accelerant, never load-bearing.
+    pub fn load_model(&self) -> Option<LearnedModel> {
+        let text = std::fs::read_to_string(self.model_path()).ok()?;
+        LearnedModel::from_json(&Json::parse(&text).ok()?)
+    }
+
     /// Rename faulted shard files aside (`<file>.quarantined-<nonce>`)
     /// so reloads stop tripping on them and saves cannot overwrite the
     /// evidence. Returns the new paths, in input order.
@@ -325,6 +356,40 @@ mod tests {
         // clamped: k = 0 behaves as 1, k > 256 as 256
         assert_eq!(shard_of(u64::MAX, 0), 0);
         assert_eq!(shard_of(u64::MAX, 1000), 255);
+    }
+
+    #[test]
+    fn model_persists_beside_the_shards_and_never_faults() {
+        let dir = std::env::temp_dir().join("ago_shard_model_roundtrip");
+        std::fs::remove_dir_all(&dir).ok();
+        let st = ShardStore::new(&dir, 4);
+        // absent file: None, not an error
+        assert!(st.load_model().is_none());
+        let rows: Vec<crate::costmodel::TrainRow> = (0..12u64)
+            .map(|k| crate::costmodel::TrainRow {
+                device: "kirin990".into(),
+                fingerprint: 0x9000 + k * 3,
+                n_ops: 2 + (k % 3) as usize,
+                latency: (k as f64 + 1.0) * 1e-4,
+                features: crate::costmodel::ClassFeatures::backfill(
+                    &crate::tuner::schedule::Schedule { groups: vec![] },
+                    2,
+                ),
+            })
+            .collect();
+        let m = LearnedModel::fit(&rows).expect("fit");
+        st.save_model(&m).expect("save");
+        let back = st.load_model().expect("load");
+        assert_eq!(m.fingerprint(), back.fingerprint());
+        // the model file is invisible to shard loading: no fault, no
+        // entries
+        let (db, faults) = st.load_merged();
+        assert!(faults.is_empty(), "model file must not fault: {faults:?}");
+        assert!(db.is_empty());
+        // a torn model file degrades to None, never an error
+        std::fs::write(st.model_path(), "{ torn").unwrap();
+        assert!(st.load_model().is_none());
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

@@ -35,7 +35,7 @@ use crate::graph::Graph;
 use crate::kernels::{classify_ops, Pattern};
 use crate::partition::{node_weight, WeightParams};
 use crate::tuner::schedule::{GroupKind, Schedule};
-use crate::util::json::{num, obj, s, Json};
+use crate::util::json::{arr, num, obj, s, Json};
 
 /// Per-class feature dimensions (shared by graphs and db entries).
 pub const CLASS_DIM: usize = 9;
@@ -363,6 +363,54 @@ impl LearnedModel {
         d
     }
 
+    /// Serialize the full model state for persistence beside a sharded
+    /// tuning db, so a process that cannot refit (e.g. `ago serve
+    /// --hot-swap`, whose recompiles run against a fresh db) starts
+    /// from the fleet's fitted coefficients. The JSON writer emits
+    /// shortest-round-trip f64s, so `from_json(to_json(m))` reproduces
+    /// `m.fingerprint()` bit-for-bit (pinned in tests).
+    pub fn to_json(&self) -> Json {
+        let nums = |v: &[f64]| arr(v.iter().map(|&x| num(x)).collect());
+        obj(vec![
+            ("corpus_key", s(&format!("{:016x}", self.corpus_key))),
+            ("mean", nums(&self.mean)),
+            ("n_train", num(self.n_train as f64)),
+            ("scale", nums(&self.scale)),
+            ("weights", nums(&self.weights)),
+        ])
+    }
+
+    /// Parse a persisted model. `None` on any structural mismatch —
+    /// including arrays of the wrong width, so a model fitted by a
+    /// build with different [`DIM`] is rejected rather than misread.
+    pub fn from_json(j: &Json) -> Option<LearnedModel> {
+        let nums = |k: &str| -> Option<Vec<f64>> {
+            j.get(k)?.as_arr()?.iter().map(Json::as_f64).collect()
+        };
+        let fill = |v: Vec<f64>, out: &mut [f64]| -> Option<()> {
+            if v.len() != out.len() {
+                return None;
+            }
+            out.copy_from_slice(&v);
+            Some(())
+        };
+        let mut m = LearnedModel {
+            mean: [0.0; DIM],
+            scale: [0.0; DIM],
+            weights: [0.0; D1],
+            n_train: j.get("n_train").and_then(Json::as_usize)?,
+            corpus_key: u64::from_str_radix(
+                j.get("corpus_key")?.as_str()?,
+                16,
+            )
+            .ok()?,
+        };
+        fill(nums("mean")?, &mut m.mean)?;
+        fill(nums("scale")?, &mut m.scale)?;
+        fill(nums("weights")?, &mut m.weights)?;
+        Some(m)
+    }
+
     /// Digest of the full model state (for determinism tests: bit-equal
     /// models ⇒ equal fingerprints, and any coefficient drift shows).
     pub fn fingerprint(&self) -> u64 {
@@ -536,6 +584,32 @@ mod tests {
         assert_eq!(f2.move_frac.to_bits(), back2.move_frac.to_bits());
         assert_eq!(f2.mean_log_w.to_bits(), back2.mean_log_w.to_bits());
         assert!(ClassFeatures::from_json(&obj(vec![])).is_none());
+    }
+
+    #[test]
+    fn model_json_roundtrip_reproduces_the_fingerprint() {
+        let m = LearnedModel::fit(&corpus()).expect("fit");
+        // through actual text: the shortest-round-trip writer must
+        // preserve every coefficient bit
+        let text = m.to_json().pretty();
+        let back = LearnedModel::from_json(&Json::parse(&text).expect("json"))
+            .expect("parse");
+        assert_eq!(m.fingerprint(), back.fingerprint());
+        assert_eq!(m.n_train, back.n_train);
+        assert_eq!(m.corpus_key, back.corpus_key);
+        // and the parsed model predicts identically
+        let q = feat(1, 3.0, 9.0, Pattern::Pipeline);
+        assert_eq!(
+            m.predict("kirin990", 3, &q).to_bits(),
+            back.predict("kirin990", 3, &q).to_bits()
+        );
+        // wrong-width arrays (a different DIM) are rejected, not misread
+        let mut j = m.to_json();
+        if let Json::Obj(o) = &mut j {
+            o.insert("mean".into(), arr(vec![num(1.0)]));
+        }
+        assert!(LearnedModel::from_json(&j).is_none());
+        assert!(LearnedModel::from_json(&obj(vec![])).is_none());
     }
 
     #[test]

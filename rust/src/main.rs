@@ -12,8 +12,9 @@ use std::sync::Arc;
 
 use ago::baselines::{ansor_compile, handlib_compile};
 use ago::coordinator::{
-    compile_with_db, fleet_compile, incremental_recompile, CompileConfig,
-    FleetJob, Frontend, ShardStore, TuningDb, Variant,
+    compile_with_db, compile_with_model, fleet_compile,
+    incremental_recompile, learned_fit, CompileConfig, FleetJob, Frontend,
+    ShardStore, TuningDb, Variant,
 };
 use ago::device::DeviceProfile;
 use ago::graph::Graph;
@@ -81,6 +82,8 @@ fn main() {
                  \x20         [--seed N] [--variant ago|ni|nr] \\\n\
                  \x20         [--learned (corpus cost model warm-seeds \\\n\
                  \x20          unseen classes)] \\\n\
+                 \x20         [--hybrid (ledger races hand-library vs \\\n\
+                 \x20          tuned per class; plans carry backend tags)] \\\n\
                  \x20         [--incremental (diff each model against its \\\n\
                  \x20          previous plan in --plans-out: splice \\\n\
                  \x20          unchanged classes, retune new ones)] \\\n\
@@ -98,6 +101,9 @@ fn main() {
                  \x20         [--learned (fit the tuning-db cost model: \\\n\
                  \x20          ranked partition proposals + cross-device \\\n\
                  \x20          warm seeds; inert on small corpora)] \\\n\
+                 \x20         [--hybrid (race tuned schedules against the \\\n\
+                 \x20          hand library per class: plans carry backend \\\n\
+                 \x20          tags, decisive wins skip FullTune)] \\\n\
                  \x20         [--baselines] [--tuning-db db.json] [--cold]\n\
                  partition --model mvt --shape large\n\
                  serve     --plans dir [--models mbn,sqn --shape small \\\n\
@@ -111,8 +117,9 @@ fn main() {
                  \x20          bursty trace on a simulated clock) \\\n\
                  \x20          --slo-ms 50 --policy rr|edf|edf-shed \\\n\
                  \x20          --hot-swap (background recompile + atomic \\\n\
-                 \x20          plan swap) --swap-margin 0.2 \\\n\
-                 \x20          --swap-budget 1600]\n\
+                 \x20          plan swap; with --db-dir, recompiles start \\\n\
+                 \x20          from the persisted learned model) \\\n\
+                 \x20          --swap-margin 0.2 --swap-budget 1600]\n\
                  run       --artifacts artifacts [--program NAME | --demo]"
             );
             2
@@ -181,6 +188,10 @@ fn cmd_compile(args: &Args) -> i32 {
         // --learned: corpus-fit cost model ranks partition candidates
         // and warm-seeds classes with no db ancestry
         learned: args.has_flag("learned"),
+        // --hybrid: race the tuned schedule against the hand library
+        // per class; winners are tagged in the plan, decisive library
+        // wins prune the class from FullTune entirely
+        hybrid: args.has_flag("hybrid"),
     };
     log::info!(
         "compiling {mname}/{sname} for {} (budget {budget}, {:?})",
@@ -227,6 +238,13 @@ fn cmd_compile(args: &Args) -> i32 {
     );
     println!("{}", out.report.summary("partition"));
     println!("{}", out.report.patterns_line());
+    if out.backends.is_some() {
+        println!(
+            "hybrid: {} of {} classes dispatched to handlib, \
+             {} search evals saved by pruning",
+            out.handlib_classes, out.n_classes, out.saved_evals
+        );
+    }
     if let Some(se) = &out.partition_search {
         println!(
             "partition search: {} candidates probed ({} unique tasks, \
@@ -360,6 +378,10 @@ fn cmd_fleet(args: &Args) -> i32 {
         // --learned: ledger classes with no ancestry warm-seed from
         // their nearest corpus neighbor (probe-margin gated)
         learned: args.has_flag("learned"),
+        // --hybrid: ledger tasks price the hand library too; decisive
+        // library wins are pruned from search and recorded in the
+        // handlib db namespace, per-job plans carry backend tags
+        hybrid: args.has_flag("hybrid"),
         ..CompileConfig::new(devices[0].clone())
     };
 
@@ -512,6 +534,12 @@ fn cmd_fleet(args: &Args) -> i32 {
             st.hit_rate * 100.0,
             t0.elapsed().as_secs_f64()
         );
+        if base.hybrid {
+            println!(
+                "  hybrid: {} ledger task(s) pruned to the hand library",
+                st.ledger_pruned
+            );
+        }
         for (job, m) in out.jobs.iter().zip(&out.models) {
             println!(
                 "  {:26} {:3} subgraphs, {:3} classes, {:3} db hits, \
@@ -558,6 +586,10 @@ fn cmd_fleet(args: &Args) -> i32 {
                             ("n_classes", num(m.n_classes as f64)),
                             ("db_hits", num(m.db_hits as f64)),
                             ("tuned_tasks", num(m.tuned_tasks as f64)),
+                            (
+                                "handlib_classes",
+                                num(m.handlib_classes as f64),
+                            ),
                         ])
                     })
                     .collect()),
@@ -577,6 +609,24 @@ fn cmd_fleet(args: &Args) -> i32 {
             db.len(),
             store.shards()
         );
+        // --learned: persist the POST-run fit beside the shards, so a
+        // later process that cannot refit (serve --hot-swap recompiles
+        // run against a fresh in-memory db) starts from this corpus
+        if base.learned {
+            if let Some(m) = learned_fit(&db, base.variant) {
+                if let Err(e) = store.save_model(&m) {
+                    eprintln!("failed to write learned model: {e:#}");
+                    return 1;
+                }
+                println!(
+                    "learned model written to {} ({} rows, corpus \
+                     {:016x})",
+                    store.model_path().display(),
+                    m.n_train,
+                    m.corpus_key
+                );
+            }
+        }
     }
     // --merged-out: one flat file with the merged db — the canonical
     // byte-comparison artifact (CI diffs it across worker/shard counts)
@@ -769,7 +819,7 @@ fn cmd_serve(args: &Args) -> i32 {
         // (--shape/--device also steer --hot-swap recompiles); accepting
         // them silently would let a user believe their tuning history
         // was in play when it was not
-        for flag in ["tuning-db", "db-dir", "budget"] {
+        for flag in ["tuning-db", "budget"] {
             if args.get(flag).is_some() {
                 eprintln!(
                     "warning: --{flag} has no effect without --models \
@@ -777,8 +827,10 @@ fn cmd_serve(args: &Args) -> i32 {
                 );
             }
         }
+        // --db-dir DOES act with --hot-swap: recompiles load the
+        // persisted learned model beside the shards
         if !args.has_flag("hot-swap") {
-            for flag in ["device", "shape"] {
+            for flag in ["device", "shape", "db-dir"] {
                 if args.get(flag).is_some() {
                     eprintln!(
                         "warning: --{flag} has no effect without \
@@ -839,6 +891,20 @@ fn cmd_serve(args: &Args) -> i32 {
                         (m.clone(), d)
                     })
                     .collect();
+            // a learned model persisted beside the sharded db (by
+            // `ago fleet --learned --db-dir`) steers the recompiles:
+            // they run against a fresh in-memory db, so without the
+            // persisted fit they could never benefit from the corpus
+            let learned = args.get("db-dir").and_then(|d| {
+                ShardStore::new(d, args.get_usize("shards", 4)).load_model()
+            });
+            if let Some(m) = &learned {
+                println!(
+                    "hot-swap recompiles start from the persisted \
+                     learned model ({} rows, corpus {:016x})",
+                    m.n_train, m.corpus_key
+                );
+            }
             let recompile = move |model: &str| -> Option<
                 ago::coordinator::plan::LoadedPlan,
             > {
@@ -851,7 +917,8 @@ fn cmd_serve(args: &Args) -> i32 {
                 };
                 let g = build(id, shape);
                 let mut db = TuningDb::new();
-                let m = compile_with_db(&g, &cfg, &mut db);
+                let m =
+                    compile_with_model(&g, &cfg, &mut db, learned.clone());
                 let j = ago::coordinator::plan::to_json(
                     &m,
                     id.name(),

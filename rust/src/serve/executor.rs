@@ -24,10 +24,11 @@ use std::time::Instant;
 use anyhow::{anyhow, Context, Result};
 
 use crate::coordinator::plan::LoadedPlan;
+use crate::coordinator::Backend;
 use crate::device::DeviceProfile;
 use crate::graph::fingerprint::Fnv;
 use crate::kernels::Pattern;
-use crate::runtime::{Engine, TensorData};
+use crate::runtime::{Engine, GroupChain, TensorData};
 use crate::simulator::trace::tensor_walk;
 use crate::simulator::Hierarchy;
 use crate::util::rng::splitmix64;
@@ -67,6 +68,17 @@ pub const WEIGHT_FRACTION: f64 = 0.7;
 /// subgraphs, bit-for-bit.
 pub const STREAMING_WEIGHT_FRACTION: f64 = 0.2;
 
+/// [`WEIGHT_FRACTION`] for subgraphs a hybrid compile dispatched to the
+/// hand library (`plan.backends`): library kernels ship prepacked,
+/// cache-blocked weight layouts (the XNNPACK model — weights are packed
+/// once at init), so a larger share of their latency is the batch-shared
+/// weight traffic a deep batch amortizes. The backend tag wins over a
+/// pattern tag on the same subgraph (the library's packing applies
+/// regardless of compute pattern). Plans without backend tags — every
+/// non-hybrid plan — keep the legacy split for all subgraphs, bit for
+/// bit.
+pub const HANDLIB_WEIGHT_FRACTION: f64 = 0.8;
+
 /// Sampled weight-tile footprint cap: 8192 f32 elements = 32 KiB, an L1/
 /// L2-resident tile on both device profiles. The simulator walks one tile
 /// cold and once warm; the measured cycle ratio is the amortization
@@ -100,18 +112,22 @@ impl SimProfile {
         let mut act_s = Vec::with_capacity(n);
         let mut warm_ratio = Vec::with_capacity(n);
         for (i, &lat) in plan.subgraph_latency.iter().enumerate() {
-            // pattern-tagged plans (fused compiles) split by compute
-            // pattern; untagged plans reproduce the legacy arithmetic
-            let frac = match plan
-                .patterns
-                .as_ref()
-                .and_then(|p| p.get(i))
-                .copied()
-            {
-                Some(Pattern::Streaming) | Some(Pattern::Reduction) => {
-                    STREAMING_WEIGHT_FRACTION
+            // backend-tagged plans (hybrid compiles) price handlib
+            // subgraphs from the library model's split; pattern-tagged
+            // plans (fused compiles) split by compute pattern; untagged
+            // plans reproduce the legacy arithmetic
+            let backend =
+                plan.backends.as_ref().and_then(|b| b.get(i)).copied();
+            let frac = if backend == Some(Backend::Handlib) {
+                HANDLIB_WEIGHT_FRACTION
+            } else {
+                match plan.patterns.as_ref().and_then(|p| p.get(i)).copied()
+                {
+                    Some(Pattern::Streaming) | Some(Pattern::Reduction) => {
+                        STREAMING_WEIGHT_FRACTION
+                    }
+                    _ => WEIGHT_FRACTION,
                 }
-                _ => WEIGHT_FRACTION,
             };
             let w = frac * lat;
             // w + a recovers lat to within one ulp (exactly, by
@@ -290,6 +306,28 @@ impl Executor for PjrtExecutor {
         batch: &[Request],
     ) -> Result<Vec<Response>> {
         let chain = self.chain_for(&plan.model)?;
+        // Hybrid plans route through the hand-library program chain:
+        // each catalog program prefers its `handlib_`-prefixed library
+        // build when the catalog ships one, with the generic per-op
+        // program as fallback — the same catalog-membership dispatch
+        // (and bit-identical fallback, see `Engine::run_group_chain`)
+        // the PR 6 fused group chains use. Plans without handlib tags
+        // take the legacy `run_chain` path untouched.
+        let handlib: Option<Vec<GroupChain>> = plan
+            .plan
+            .backends
+            .as_ref()
+            .filter(|b| b.iter().any(|&t| t == Backend::Handlib))
+            .map(|_| {
+                chain
+                    .names
+                    .iter()
+                    .map(|n| GroupChain {
+                        fused: Some(format!("handlib_{n}")),
+                        stages: vec![n.clone()],
+                    })
+                    .collect()
+            });
         let mut engine = self.engine.lock().expect("engine mutex");
         let k = batch.len();
         let mut out = Vec::with_capacity(k);
@@ -297,11 +335,15 @@ impl Executor for PjrtExecutor {
             let mut rng = Rng::new(r.seed);
             let x = TensorData::random(&chain.input_shape, &mut rng);
             let t0 = Instant::now();
-            let (y, _) = engine
-                .run_chain(&chain.names, x, r.seed)
-                .with_context(|| {
-                    format!("request {} on model {}", r.id, plan.model)
-                })?;
+            let (y, _) = match &handlib {
+                Some(groups) => engine
+                    .run_group_chain(groups, x, r.seed)
+                    .map(|(y, _, d)| (y, d)),
+                None => engine.run_chain(&chain.names, x, r.seed),
+            }
+            .with_context(|| {
+                format!("request {} on model {}", r.id, plan.model)
+            })?;
             let latency_s = t0.elapsed().as_secs_f64();
             let mut h = Fnv::new();
             for v in &y.data {
@@ -385,6 +427,41 @@ mod tests {
         st.patterns = Some(vec![Pattern::Stencil, Pattern::Pipeline]);
         let st = reg.register(st).unwrap();
         assert_eq!(st.sim.batch_seconds(16), plain.sim.batch_seconds(16));
+    }
+
+    #[test]
+    fn backend_tags_shift_the_split_toward_shared_weights() {
+        let mut reg = PlanRegistry::new();
+        let plain = registered("P", &[30.0, 90.0]);
+        let mut lp = toy_plan("H", "kirin990", &[30.0, 90.0]);
+        lp.backends = Some(vec![Backend::Handlib, Backend::Tuned]);
+        let tagged = reg.register(lp).unwrap();
+        // a single request prices the same either way: the split moves
+        // time between the shared and per-request buckets, not the total
+        let t1 = tagged.sim.batch_seconds(1);
+        let p1 = plain.sim.batch_seconds(1);
+        assert!((t1 - p1).abs() < 1e-12, "batch-1 {t1} vs {p1}");
+        // prepacked library weights mean MORE batch-shared traffic, so a
+        // deep batch of a handlib-tagged plan amortizes better
+        assert!(
+            tagged.sim.batch_seconds(16) < plain.sim.batch_seconds(16),
+            "handlib tags must amortize more across a batch"
+        );
+        // the backend tag outranks a pattern tag on the same subgraph
+        let mut both = toy_plan("B", "kirin990", &[30.0, 90.0]);
+        both.patterns = Some(vec![Pattern::Streaming, Pattern::Streaming]);
+        both.backends = Some(vec![Backend::Handlib, Backend::Handlib]);
+        let both = reg.register(both).unwrap();
+        let mut libs = toy_plan("C", "kirin990", &[30.0, 90.0]);
+        libs.backends = Some(vec![Backend::Handlib, Backend::Handlib]);
+        let libs = reg.register(libs).unwrap();
+        assert_eq!(both.sim.batch_seconds(16), libs.sim.batch_seconds(16));
+        // all-tuned tags reproduce the untagged arithmetic to the bit
+        // (the compat contract, like the absence of tags)
+        let mut tn = toy_plan("T", "kirin990", &[30.0, 90.0]);
+        tn.backends = Some(vec![Backend::Tuned, Backend::Tuned]);
+        let tn = reg.register(tn).unwrap();
+        assert_eq!(tn.sim.batch_seconds(16), plain.sim.batch_seconds(16));
     }
 
     #[test]

@@ -257,6 +257,7 @@ pub(crate) mod testutil {
             total_latency_ms: 0.0,
             partition_search: None,
             patterns: None,
+            backends: None,
         }
     }
 }

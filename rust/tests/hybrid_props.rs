@@ -1,0 +1,225 @@
+//! Properties of hybrid per-class backend dispatch (`--hybrid`):
+//! plan-format round trips and validation, byte-compatibility of the
+//! default path, worker-count bit-identity, the never-worse guarantee
+//! against the pure-tuned compile, and the warm prune receipt in the
+//! TuningDb's handlib namespace.
+
+use ago::coordinator::plan::{self, LoadedPlan};
+use ago::coordinator::{
+    compile, compile_with_db, Backend, CompileConfig, TuningDb,
+    HANDLIB_VARIANT,
+};
+use ago::device::DeviceProfile;
+use ago::models::{build, InputShape, ModelId};
+use ago::util::json::Json;
+
+fn cfg(budget: usize, workers: usize) -> CompileConfig {
+    CompileConfig {
+        budget,
+        workers,
+        ..CompileConfig::new(DeviceProfile::kirin990())
+    }
+}
+
+fn hybrid(budget: usize, workers: usize) -> CompileConfig {
+    CompileConfig { hybrid: true, ..cfg(budget, workers) }
+}
+
+fn plan_text(m: &ago::coordinator::CompiledModel, name: &str) -> String {
+    plan::to_json(m, name, "kirin990").pretty()
+}
+
+#[test]
+fn hybrid_plan_roundtrips_and_tags_every_subgraph() {
+    let g = build(ModelId::Sqn, InputShape::Small);
+    let m = compile(&g, &hybrid(400, 2));
+    let bks = m.backends.as_ref().expect("--hybrid tags the plan");
+    assert_eq!(bks.len(), m.partition.n_groups);
+    let text = plan_text(&m, "sqn");
+    assert!(text.contains("\"backends\""));
+    assert!(text.contains("\"hybrid\""));
+    let back = plan::from_json(&Json::parse(&text).unwrap()).unwrap();
+    assert_eq!(back.backends.as_ref(), Some(bks));
+    // loaded_to_json drops the compile-only `hybrid` counters but keeps
+    // the tags, and reaches a fixed point on the first serialization
+    let once = plan::loaded_to_json(&back).pretty();
+    assert!(once.contains("\"backends\""));
+    assert!(!once.contains("\"hybrid\""));
+    let twice = plan::loaded_to_json(
+        &plan::from_json(&Json::parse(&once).unwrap()).unwrap(),
+    )
+    .pretty();
+    assert_eq!(once, twice, "hybrid plan round trip not byte-stable");
+}
+
+#[test]
+fn rejects_bad_backend_tags() {
+    let sched = r#"[[{"ops": [0], "kind": "simple", "tile": [1, 1, 1]}]]"#;
+    // wrong length
+    assert!(plan::from_json(
+        &Json::parse(&format!(
+            r#"{{"assign": [0], "schedules": {sched},
+                "subgraph_latency_s": [0.001],
+                "backends": ["tuned", "handlib"]}}"#
+        ))
+        .unwrap()
+    )
+    .is_err());
+    // unknown backend name
+    assert!(plan::from_json(
+        &Json::parse(&format!(
+            r#"{{"assign": [0], "schedules": {sched},
+                "subgraph_latency_s": [0.001],
+                "backends": ["cuda"]}}"#
+        ))
+        .unwrap()
+    )
+    .is_err());
+    // not an array
+    assert!(plan::from_json(
+        &Json::parse(&format!(
+            r#"{{"assign": [0], "schedules": {sched},
+                "subgraph_latency_s": [0.001],
+                "backends": "handlib"}}"#
+        ))
+        .unwrap()
+    )
+    .is_err());
+    // valid tags parse
+    let ok: LoadedPlan = plan::from_json(
+        &Json::parse(&format!(
+            r#"{{"assign": [0], "schedules": {sched},
+                "subgraph_latency_s": [0.001],
+                "backends": ["handlib"]}}"#
+        ))
+        .unwrap(),
+    )
+    .unwrap();
+    assert_eq!(ok.backends, Some(vec![Backend::Handlib]));
+}
+
+#[test]
+fn hybrid_off_is_byte_identical_to_legacy() {
+    // the flag default must keep every existing plan and db byte: a
+    // non-hybrid compile after this PR == a non-hybrid compile before it
+    let g = build(ModelId::Mbn, InputShape::Small);
+    let mk = |hybrid_on: bool| {
+        let c = CompileConfig { hybrid: hybrid_on, ..cfg(400, 2) };
+        let mut db = TuningDb::new();
+        let m = compile_with_db(&g, &c, &mut db);
+        (plan_text(&m, "mbn"), db.to_json().pretty())
+    };
+    let (off_plan, off_db) = mk(false);
+    assert!(!off_plan.contains("backends"));
+    assert!(!off_db.contains(HANDLIB_VARIANT));
+    // and identical across repeated runs (the golden-bytes property the
+    // emission gating protects)
+    let (again_plan, again_db) = mk(false);
+    assert_eq!(off_plan, again_plan);
+    assert_eq!(off_db, again_db);
+    // hybrid ON must not change the plan's tuned content where the
+    // tuned backend wins everywhere — but whatever it decides, the OFF
+    // path's bytes never move; this is the compatibility contract
+    let (on_plan, on_db) = mk(true);
+    assert!(on_plan.contains("\"backends\""));
+    assert!(on_db.contains(HANDLIB_VARIANT) || !on_plan.contains("handlib"));
+}
+
+#[test]
+fn hybrid_bytes_are_worker_count_invariant() {
+    // --hybrid adds pricing (library + reference) on the sequential
+    // mode-decision path; plan AND db bytes must still be identical at
+    // any worker count
+    let g = build(ModelId::Sqn, InputShape::Small);
+    let mk = |workers: usize| {
+        let mut db = TuningDb::new();
+        let m = compile_with_db(&g, &hybrid(500, workers), &mut db);
+        (plan_text(&m, "sqn"), db.to_json().pretty())
+    };
+    let (p1, d1) = mk(1);
+    let (p4, d4) = mk(4);
+    let (p8, d8) = mk(8);
+    assert_eq!(p1, p4, "hybrid plan bytes depend on worker count");
+    assert_eq!(p1, p8, "hybrid plan bytes depend on worker count");
+    assert_eq!(d1, d4, "hybrid db bytes depend on worker count");
+    assert_eq!(d1, d8, "hybrid db bytes depend on worker count");
+}
+
+#[test]
+fn hybrid_is_never_worse_than_pure_tuned_on_the_zoo() {
+    // the Select-margin displacement discipline: per model, the hybrid
+    // plan's predicted latency can only improve on the pure-tuned plan
+    // (modulo pricing noise — none exists, both arms share the cost
+    // model, so the comparison is exact)
+    for model in ModelId::all() {
+        let g = build(model, InputShape::Small);
+        let tuned = compile(&g, &cfg(400, 2));
+        let hyb = compile(&g, &hybrid(400, 2));
+        assert!(
+            hyb.total_latency <= tuned.total_latency,
+            "{}: hybrid {} > tuned {}",
+            model.name(),
+            hyb.total_latency,
+            tuned.total_latency
+        );
+        // provenance is consistent: handlib classes are counted iff
+        // some subgraph carries the tag
+        let tagged = hyb
+            .backends
+            .as_ref()
+            .unwrap()
+            .iter()
+            .filter(|&&b| b == Backend::Handlib)
+            .count();
+        assert_eq!(tagged > 0, hyb.handlib_classes > 0, "{}", model.name());
+    }
+}
+
+#[test]
+fn handlib_receipts_warm_start_and_prune_later_compiles() {
+    let g = build(ModelId::Mbn, InputShape::Small);
+    let mut db = TuningDb::new();
+    let first = compile_with_db(&g, &hybrid(800, 2), &mut db);
+    // every dispatched class leaves a receipt in the handlib namespace
+    // (Mbn's classes are unambiguous — the warm-compile tests pin that)
+    let handlib_entries = db
+        .entries()
+        .filter(|e| e.variant == HANDLIB_VARIANT)
+        .count();
+    assert_eq!(
+        handlib_entries > 0,
+        first.handlib_classes > 0,
+        "handlib namespace must mirror dispatched classes"
+    );
+    // a cold default compile has no seed to prune against: the flag can
+    // only displace via the Select comparison, never skip FullTune
+    assert_eq!(first.saved_evals, 0);
+    // warm identical recompile decides identically, searches nothing,
+    // and moves no db bytes
+    let before = db.to_json().pretty();
+    let second = compile_with_db(&g, &hybrid(800, 2), &mut db);
+    assert_eq!(first.handlib_classes, second.handlib_classes);
+    assert_eq!(first.backends, second.backends);
+    assert_eq!(first.total_latency.to_bits(), second.total_latency.to_bits());
+    assert_eq!(second.tuned_tasks, 0, "warm hybrid recompile re-searched");
+    assert_eq!(before, db.to_json().pretty());
+    // a handlib receipt WITHOUT a tuned sibling is the pruned-class
+    // marker: seed a fresh db with only the handlib namespace and the
+    // compiler must adopt those classes outright — no search, budget
+    // reported as saved
+    if first.handlib_classes > 0 {
+        let mut lib_only = TuningDb::new();
+        for e in db.entries().filter(|e| e.variant == HANDLIB_VARIANT) {
+            lib_only.record(e.clone());
+        }
+        let third = compile_with_db(&g, &hybrid(800, 2), &mut lib_only);
+        assert_eq!(third.handlib_classes, first.handlib_classes);
+        assert!(third.saved_evals > 0, "adopted classes must report savings");
+        assert_eq!(
+            third.tuned_tasks,
+            third.n_classes - third.handlib_classes,
+            "exactly the non-library classes get searched"
+        );
+        assert_eq!(third.backends, first.backends);
+    }
+}

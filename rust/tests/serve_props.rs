@@ -67,6 +67,7 @@ fn toy_plan(model: &str, device: &str, lats_us: &[f64]) -> LoadedPlan {
         total_latency_ms: 0.0,
         partition_search: None,
         patterns: None,
+        backends: None,
     }
 }
 
